@@ -1,0 +1,91 @@
+//! End-to-end validation driver (DESIGN.md: "one example MUST exercise
+//! the full system on a real small workload").
+//!
+//! Runs the complete three-layer stack on synth-arxiv: Rust
+//! preprocessing (PPR + partitioning + caching) feeds the AOT-lowered
+//! JAX/Pallas GCN train step for a few hundred steps, logging the loss
+//! curve, then compares IBMB inference against the exact full-graph
+//! forward pass and against the Cluster-GCN baseline — the paper's
+//! headline per-epoch-speed and accuracy claims in miniature.
+//!
+//! Run with: `cargo run --release --example e2e_train [--epochs N]`
+//! The run recorded in EXPERIMENTS.md §E2E used the defaults.
+
+use ibmb::cli::Args;
+use ibmb::config::ExpScale;
+use ibmb::experiments::runner::{self, Env};
+use ibmb::inference::fullgraph;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let mut scale = ExpScale {
+        dataset_factor: args.get_f64("scale", 0.4),
+        epochs: args.get_usize("epochs", 30),
+        seeds: 1,
+    };
+    if args.flag("full") {
+        scale.dataset_factor = 1.0;
+        scale.epochs = 60;
+    }
+    let mut env = Env::load()?;
+    let ds = runner::dataset("synth-arxiv", &scale, 0);
+    println!(
+        "== E2E: synth-arxiv @ {} nodes, {} train nodes, GCN-3L-64h ==",
+        ds.graph.num_nodes(),
+        ds.splits.train.len()
+    );
+
+    let mut total_steps = 0usize;
+    println!("-- training with node-wise IBMB --");
+    let res = runner::train_once(&mut env, &ds, "gcn", "node-wise IBMB", &scale, 0)?;
+    for r in &res.history {
+        println!(
+            "epoch {:3}  t={:6.2}s  train_loss={:.4}  val_loss={:.4}  val_acc={:.3}",
+            r.epoch, r.wall_s, r.train_loss, r.val_loss, r.val_acc
+        );
+        total_steps += 1;
+    }
+    println!(
+        "preprocess {:.2}s | {:.3}s/epoch | prefetch overlap {:.2} | {} epochs",
+        res.preprocess_s, res.mean_epoch_s, res.overlap_ratio, res.epochs_run
+    );
+
+    println!("-- training with Cluster-GCN (baseline) --");
+    let base = runner::train_once(&mut env, &ds, "gcn", "Cluster-GCN", &scale, 0)?;
+    println!(
+        "Cluster-GCN: preprocess {:.2}s | {:.3}s/epoch | best val acc {:.1}%",
+        base.preprocess_s,
+        base.mean_epoch_s,
+        base.best_val_acc * 100.0
+    );
+
+    println!("-- inference --");
+    let rep = runner::infer_once(
+        &mut env, &ds, "gcn", &res.state, "node-wise IBMB", None,
+        &ds.splits.test, 0,
+    )?;
+    let fb = fullgraph::full_graph_inference(
+        &res.meta_train, &res.state, &ds, &ds.splits.test,
+    );
+    println!(
+        "IBMB inference:      acc {:.1}% in {:.3}s",
+        rep.accuracy * 100.0,
+        rep.seconds
+    );
+    println!(
+        "full-batch (exact):  acc {:.1}% in {:.3}s  ({:.0}x slower)",
+        fb.accuracy * 100.0,
+        fb.seconds,
+        fb.seconds / rep.seconds.max(1e-9)
+    );
+    println!(
+        "headline: IBMB best val acc {:.1}% vs Cluster-GCN {:.1}%; \
+         per-epoch {:.3}s vs {:.3}s",
+        res.best_val_acc * 100.0,
+        base.best_val_acc * 100.0,
+        res.mean_epoch_s,
+        base.mean_epoch_s
+    );
+    let _ = total_steps;
+    Ok(())
+}

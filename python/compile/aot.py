@@ -1,0 +1,189 @@
+"""AOT compile path: lower L2 train/infer steps to HLO text + manifest.
+
+Runs ONCE via ``make artifacts``. For every (model x batch-bucket) it
+lowers the fused train step and the infer step to **HLO text** (not a
+serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md) and records the interface contract in
+``artifacts/manifest.json`` for the Rust runtime:
+
+  * positional input/output order (DESIGN.md §6),
+  * the flat parameter layout (name, shape, offset) so Rust can run
+    Glorot init host-side,
+  * the static hyperparameters baked into the artifact.
+
+Usage:
+  python -m compile.aot --out ../artifacts [--models gcn,gat,sage]
+                        [--buckets 256,512,1024,2048] [--report]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+TRAIN_INPUTS = [
+    "params", "adam_m", "adam_v", "step", "lr", "seed",
+    "x", "adj", "labels", "mask",
+]
+TRAIN_OUTPUTS = ["params", "adam_m", "adam_v", "loss", "correct", "mask_count"]
+INFER_INPUTS = ["params", "x", "adj", "labels", "mask"]
+INFER_OUTPUTS = ["loss", "correct", "mask_count"]
+GRAD_INPUTS = ["params", "seed", "x", "adj", "labels", "mask"]
+GRAD_OUTPUTS = ["grads", "loss", "correct", "mask_count"]
+
+IO_BY_KIND = {
+    "train": (TRAIN_INPUTS, TRAIN_OUTPUTS),
+    "infer": (INFER_INPUTS, INFER_OUTPUTS),
+    "grad": (GRAD_INPUTS, GRAD_OUTPUTS),
+}
+
+DEFAULT_MODELS = ["gcn", "gat", "sage"]
+DEFAULT_BUCKETS = [256, 512, 1024, 2048]
+
+
+def artifact_id(model: str, kind: str, n_pad: int) -> str:
+    return f"{model}_{kind}_n{n_pad}"
+
+
+def lower_one(cfg: M.ModelConfig, kind: str) -> str:
+    step = {
+        "train": M.make_train_step,
+        "infer": M.make_infer_step,
+        "grad": M.make_grad_step,
+    }[kind](cfg)
+    lowered = jax.jit(step).lower(*M.example_args(cfg, kind))
+    return to_hlo_text(lowered)
+
+
+def param_spec_entries(cfg: M.ModelConfig):
+    entries = []
+    off = 0
+    for name, shape in M.param_specs(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        entries.append(
+            {"name": name, "shape": list(shape), "offset": off, "size": n}
+        )
+        off += n
+    return entries
+
+
+def hlo_report(text: str) -> dict:
+    """Crude fusion/op audit of the lowered module (L2 perf signal)."""
+    ops = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        lhs = lhs.strip().removeprefix("ROOT ").strip()
+        # instruction lines look like "name.N = f32[...]{...} op(...)"
+        if not lhs or " " in lhs:
+            continue
+        parts = rhs.strip().split(" ", 1)
+        if len(parts) < 2:
+            continue
+        op = parts[1].split("(", 1)[0].strip()
+        if not op or " " in op or "[" in op:
+            continue
+        ops[op] = ops.get(op, 0) + 1
+    return ops
+
+
+def entry_param_count(text: str) -> int:
+    """Number of parameters of the ENTRY computation."""
+    in_entry, n = False, 0
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if in_entry and "parameter(" in line:
+            n += 1
+    return n
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+
+    models = [m for m in args.models.split(",") if m]
+    buckets = [int(b) for b in args.buckets.split(",") if b]
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+    t_all = time.time()
+    for mdl in models:
+        for n_pad in buckets:
+            cfg = M.ModelConfig(model=mdl, n_pad=n_pad)
+            for kind in ("train", "infer", "grad"):
+                aid = artifact_id(mdl, kind, n_pad)
+                t0 = time.time()
+                text = lower_one(cfg, kind)
+                path = f"{aid}.hlo.txt"
+                with open(os.path.join(args.out, path), "w") as f:
+                    f.write(text)
+                entry = {
+                    "id": aid,
+                    "model": mdl,
+                    "kind": kind,
+                    "n_pad": n_pad,
+                    "feat": cfg.feat,
+                    "classes": cfg.classes,
+                    "hidden": cfg.hidden,
+                    "layers": cfg.layers,
+                    "heads": cfg.heads,
+                    "dropout": cfg.dropout,
+                    "weight_decay": cfg.weight_decay,
+                    "param_count": M.param_count(cfg),
+                    "inputs": IO_BY_KIND[kind][0],
+                    "outputs": IO_BY_KIND[kind][1],
+                    "params": param_spec_entries(cfg),
+                    "path": path,
+                }
+                manifest["artifacts"].append(entry)
+                msg = (
+                    f"[aot] {aid}: {len(text) / 1e6:.2f} MB HLO text "
+                    f"in {time.time() - t0:.1f}s"
+                )
+                print(msg, file=sys.stderr)
+                if args.report:
+                    ops = hlo_report(text)
+                    top = sorted(ops.items(), key=lambda kv: -kv[1])[:12]
+                    print(f"  ops: {dict(top)}", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"[aot] wrote {len(manifest['artifacts'])} artifacts "
+        f"in {time.time() - t_all:.1f}s -> {args.out}/manifest.json",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

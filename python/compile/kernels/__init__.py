@@ -1,0 +1,2 @@
+"""L1 Pallas kernels: spmm (aggregation), attention (GAT), layernorm (fused LN+ReLU), ref (jnp oracles)."""
+from . import attention, layernorm, ref, spmm  # noqa: F401

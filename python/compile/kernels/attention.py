@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: masked dense-block GAT attention.
+
+CUDA GAT implementations do a per-edge segment softmax. On TPU (DESIGN.md
+§Hardware-Adaptation) the IBMB batch is a dense-padded block, so the edge
+softmax becomes *masked dense attention* -- the canonical TPU attention
+shape: scores for the full ``(bm, N)`` row tile are built from broadcast
+per-node logits, non-edges are masked to -1e9, rows are softmax-normalized
+with the usual max-subtraction, and the resulting attention tile contracts
+against the value block on the MXU.
+
+Grid: ``(N/bm,)`` row tiles. Per step the kernel holds the ``(bm, N)``
+score tile, the ``(1, N)`` destination logits, the ``(bm, 1)`` source
+logits, the ``(bm, N)`` mask tile and the ``(N, Dh)`` value block in VMEM:
+at N=2048, bm=128, Dh=16 that is ~2.2 MiB -- one double-buffered stream
+fits comfortably.
+
+Backward recomputes the attention weights from the (cheap) residuals in
+jnp and is attached via ``jax.custom_vjp``; the heavy products in the
+backward (``attn^T @ g``) reuse the Pallas matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .spmm import _PROFILE, matmul_pallas
+
+# Row-tile size: 128 on TPU (VMEM-bounded); bucket-sized under
+# interpret (grid steps are interpreted — see spmm.py profile note).
+BM = 128 if _PROFILE == "tpu" else 2048
+
+
+def _attn_kernel(ssrc_ref, sdst_ref, mask_ref, v_ref, o_ref):
+    scores = ssrc_ref[...] + sdst_ref[...]
+    scores = jnp.where(scores >= 0, scores, ref.LEAKY_SLOPE * scores)
+    scores = jnp.where(mask_ref[...] > 0, scores, ref.MASK_NEG)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(
+        attn, v_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def masked_attention_pallas(
+    s_src: jax.Array,
+    s_dst: jax.Array,
+    mask: jax.Array,
+    v: jax.Array,
+    *,
+    bm: int = BM,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused masked softmax-attention row-block kernel (forward only).
+
+    Shapes: s_src ``[N, 1]``, s_dst ``[1, N]``, mask ``[N, N]``,
+    v ``[N, Dh]`` -> out ``[N, Dh]``.
+    """
+    n = mask.shape[0]
+    dh = v.shape[1]
+    bm_ = min(bm, _ceil_to(n, 8))
+    np_ = _ceil_to(n, bm_)
+    if np_ != n:
+        # Pad rows only; padded rows attend over the original columns and
+        # are sliced off. Column padding would perturb real softmax rows,
+        # so callers (the L2 models) always supply bucket-aligned blocks.
+        s_src = jnp.pad(s_src, ((0, np_ - n), (0, 0)))
+        mask = jnp.pad(mask, ((0, np_ - n), (0, 0)))
+    out = pl.pallas_call(
+        _attn_kernel,
+        grid=(np_ // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((bm_, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, dh), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, dh), jnp.float32),
+        interpret=interpret,
+    )(s_src, s_dst, mask, v)
+    return out[:n]
+
+
+@jax.custom_vjp
+def masked_attention(s_src, s_dst, mask, v):
+    """Differentiable masked GAT attention (Pallas forward)."""
+    return masked_attention_pallas(s_src, s_dst, mask, v)
+
+
+def _fwd(s_src, s_dst, mask, v):
+    return masked_attention_pallas(s_src, s_dst, mask, v), (
+        s_src,
+        s_dst,
+        mask,
+        v,
+    )
+
+
+def _bwd(res, g):
+    s_src, s_dst, mask, v = res
+    # Recompute the attention matrix (cheap residuals, standard
+    # rematerialization trade) rather than shipping an [N, N] residual
+    # through the autodiff graph.
+    attn = ref.masked_attention_weights_ref(s_src, s_dst, mask)
+    d_v = matmul_pallas(attn.T, g)
+    d_attn = matmul_pallas(g, v.T)
+    # Softmax VJP: dS = attn * (d_attn - sum_j attn * d_attn).
+    d_scores = attn * (d_attn - jnp.sum(attn * d_attn, axis=-1, keepdims=True))
+    # Through the mask (non-edges contribute nothing) and the LeakyReLU.
+    raw = s_src + s_dst
+    lrelu_grad = jnp.where(raw >= 0, 1.0, ref.LEAKY_SLOPE)
+    d_raw = jnp.where(mask > 0, d_scores * lrelu_grad, 0.0)
+    d_src = jnp.sum(d_raw, axis=1, keepdims=True)
+    d_dst = jnp.sum(d_raw, axis=0, keepdims=True)
+    return d_src, d_dst, jnp.zeros_like(mask), d_v
+
+
+masked_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: fused row-wise LayerNorm + ReLU.
+
+Every GNN layer in the paper's models ends in LayerNorm -> ReLU -> dropout.
+Fusing the normalization and activation into one row-tiled kernel saves a
+full HBM round-trip of the activation block per layer: the ``(bm, F)`` row
+tile is normalized, scaled, shifted, and rectified while resident in VMEM.
+
+Grid: ``(M/bm,)`` row tiles; gamma/beta are broadcast ``(1, F)`` blocks that
+stay pinned in VMEM across the whole grid. VMEM footprint at the default
+``bm=128`` and F=64..128: <= 128 KiB including the output tile.
+
+Backward is analytic (standard LayerNorm VJP composed with the ReLU gate),
+implemented in jnp and attached via ``jax.custom_vjp``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spmm import _PROFILE
+
+# Row-tile size per profile (see spmm.py).
+BM = 128 if _PROFILE == "tpu" else 2048
+EPS = 1e-5
+
+
+def _ln_relu_kernel(x_ref, g_ref, b_ref, o_ref, *, relu: bool, eps: float):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mean
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    y = xc * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "bm", "eps", "interpret")
+)
+def layernorm_relu_pallas(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    relu: bool = True,
+    bm: int = BM,
+    eps: float = EPS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused LayerNorm(+ReLU) over rows of ``x`` (Pallas forward only)."""
+    m, f = x.shape
+    bm_ = min(bm, _ceil_to(m, 8))
+    mp = _ceil_to(m, bm_)
+    x_p = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    out = pl.pallas_call(
+        functools.partial(_ln_relu_kernel, relu=relu, eps=eps),
+        grid=(mp // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, f), jnp.float32),
+        interpret=interpret,
+    )(x_p, gamma.reshape(1, f), beta.reshape(1, f))
+    return out[:m]
+
+
+def _make(relu: bool):
+    @jax.custom_vjp
+    def ln(x, gamma, beta):
+        return layernorm_relu_pallas(x, gamma, beta, relu=relu)
+
+    def fwd(x, gamma, beta):
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        xc = x - mean
+        var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+        rstd = jax.lax.rsqrt(var + EPS)
+        xhat = xc * rstd
+        y = xhat * gamma + beta
+        out = jnp.maximum(y, 0.0) if relu else y
+        return out, (xhat, rstd, gamma, y)
+
+    def bwd(res, g):
+        xhat, rstd, gamma, y = res
+        if relu:
+            g = g * (y > 0)
+        f = xhat.shape[-1]
+        d_gamma = jnp.sum(g * xhat, axis=0)
+        d_beta = jnp.sum(g, axis=0)
+        gx = g * gamma
+        # Standard LayerNorm input gradient.
+        d_x = rstd * (
+            gx
+            - jnp.mean(gx, axis=-1, keepdims=True)
+            - xhat * jnp.mean(gx * xhat, axis=-1, keepdims=True)
+        )
+        del f
+        return d_x, d_gamma, d_beta
+
+    ln.defvjp(fwd, bwd)
+    return ln
+
+
+layernorm_relu = _make(relu=True)
+layernorm = _make(relu=False)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+is checked against its oracle by ``python/tests/test_kernels.py`` (pytest +
+hypothesis sweeps over shapes). The oracles are also used as the analytic
+building blocks of the custom-VJP backward passes, so training gradients
+are exact by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.2  # GAT's LeakyReLU negative slope (Velickovic et al.).
+MASK_NEG = -1e9    # additive mask value for non-edges.
+
+
+def spmm_ref(adj: jax.Array, h: jax.Array) -> jax.Array:
+    """Dense-block neighborhood aggregation oracle: ``adj @ h``.
+
+    ``adj`` is the (normalized, zero-padded) dense adjacency block of an
+    IBMB mini-batch, ``h`` the node embedding block.
+    """
+    return jnp.dot(adj, h, preferred_element_type=jnp.float32)
+
+
+def layernorm_relu_ref(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    relu: bool = True,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Row-wise LayerNorm followed by an optional ReLU."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    out = (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def masked_attention_ref(
+    s_src: jax.Array,
+    s_dst: jax.Array,
+    mask: jax.Array,
+    v: jax.Array,
+) -> jax.Array:
+    """Masked single-head GAT attention oracle.
+
+    score[i, j] = LeakyReLU(s_src[i] + s_dst[j]) for edges (mask > 0),
+    -1e9 otherwise; rows are softmax-normalized and applied to ``v``.
+
+    Args:
+      s_src: ``[N, 1]`` per-node source attention logits (a_src . (h W)).
+      s_dst: ``[1, N]`` per-node destination attention logits.
+      mask:  ``[N, N]`` adjacency pattern (> 0 where an edge exists).
+      v:     ``[N, Dh]`` per-head value matrix.
+    """
+    scores = s_src + s_dst
+    scores = jnp.where(scores >= 0, scores, LEAKY_SLOPE * scores)
+    scores = jnp.where(mask > 0, scores, MASK_NEG)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return jnp.dot(attn, v, preferred_element_type=jnp.float32)
+
+
+def masked_attention_weights_ref(
+    s_src: jax.Array, s_dst: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """The softmax-normalized attention matrix (used by the custom VJP)."""
+    scores = s_src + s_dst
+    scores = jnp.where(scores >= 0, scores, LEAKY_SLOPE * scores)
+    scores = jnp.where(mask > 0, scores, MASK_NEG)
+    return jax.nn.softmax(scores, axis=-1)

@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: VMEM-tiled dense-block SpMM (neighborhood aggregation).
+
+The paper's CUDA hot-spot is per-edge gather/scatter aggregation. On TPU we
+re-think it (DESIGN.md §Hardware-Adaptation): IBMB batches are small, dense,
+local subgraphs, so the aggregation ``adj @ h`` over the zero-padded dense
+adjacency block is a tiled matmul that feeds the MXU systolic array.
+
+The grid is ``(M/bm, N/bn, K/bk)``; the output block is revisited along the
+``k`` axis and used as the accumulator, which is the classic Pallas matmul
+schedule: each ``(bm, bk)`` tile of ``adj`` and ``(bk, bn)`` tile of ``h``
+stream HBM->VMEM once, and the MXU contracts them into the resident
+``(bm, bn)`` accumulator.
+
+VMEM footprint per step (defaults, f32):
+  adj tile 128x128 (64 KiB) + h tile 128x128 (64 KiB) + acc 128x128
+  (64 KiB) = 192 KiB, x2 for double buffering < 0.4 MiB -- far below the
+  ~16 MiB VMEM budget, leaving room for the fused LN kernel of the same
+  layer. See DESIGN.md §8 for the MXU utilization estimate.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO.
+
+A ``jax.custom_vjp`` wrapper makes the kernel differentiable so the L2
+train step can ``jax.grad`` through it: d_h = adj^T @ g and (unused but
+structurally required) d_adj = 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-size profiles (EXPERIMENTS.md §Perf):
+#   tpu — 128x128 MXU-aligned tiles, <=0.4 MiB VMEM/step double-buffered;
+#         the schedule a real TPU wants.
+#   cpu — interpret-mode profile: grid iterations are *interpreted* (one
+#         HLO while-loop step each, with carried-buffer copies), so the
+#         CPU path minimizes grid steps with bucket-sized tiles. Same
+#         kernel structure, different tiling constants — exactly the
+#         retune a Pallas kernel gets per backend.
+# Selected once at lowering time via IBMB_KERNEL_PROFILE (default cpu).
+import os
+
+_PROFILE = os.environ.get("IBMB_KERNEL_PROFILE", "cpu")
+if _PROFILE == "tpu":
+    BM, BK, BN = 128, 128, 128
+else:
+    BM, BK, BN = 2048, 2048, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """One grid step: accumulate a (bm, bk) x (bk, bn) product into o."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled Pallas matmul ``a @ b`` with automatic zero-padding.
+
+    Zero padding is exact for matmul, so arbitrary shapes are supported;
+    the kernel itself always sees block-aligned operands.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    bm_, bk_, bn_ = min(bm, _ceil_to(m, 8)), min(bk, _ceil_to(k, 8)), min(bn, _ceil_to(n, 8))
+    mp, kp, np_ = _ceil_to(m, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+    a_p, b_p = _pad_to(a, mp, kp), _pad_to(b, kp, np_)
+    nk = kp // bk_
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def spmm(adj: jax.Array, h: jax.Array) -> jax.Array:
+    """Differentiable dense-block aggregation ``adj @ h`` (Pallas forward)."""
+    return matmul_pallas(adj, h)
+
+
+def _spmm_fwd(adj, h):
+    return matmul_pallas(adj, h), (adj, h)
+
+
+def _spmm_bwd(res, g):
+    adj, _h = res
+    # The adjacency is batch data, never differentiated; a zero cotangent
+    # keeps XLA from materializing g @ h^T.
+    d_adj = jnp.zeros_like(adj)
+    d_h = matmul_pallas(adj.T, g)
+    return d_adj, d_h
+
+
+spmm.defvjp(_spmm_fwd, _spmm_bwd)

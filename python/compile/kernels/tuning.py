@@ -1,0 +1,107 @@
+"""L1 kernel tuning: VMEM footprint + MXU-utilization estimates per
+block shape (DESIGN.md §8).
+
+``interpret=True`` timings are CPU-numpy timings and NOT a TPU proxy, so
+this tool optimizes kernel *structure*: for each candidate tiling of the
+dense-block SpMM it reports
+
+  * VMEM bytes resident per grid step (tiles + accumulator, x2 for
+    double buffering),
+  * arithmetic intensity (FLOPs per HBM byte moved),
+  * MXU alignment (tiles multiple of 128x128 feed the systolic array
+    without padding waste).
+
+Run:  python -m compile.kernels.tuning [--n 1024] [--f 64]
+The shipped defaults in spmm.py (bm=bk=bn=128) are the Pareto point this
+sweep selects for the artifact buckets (256..2048 x 64).
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+
+def analyze(n: int, k: int, f: int, bm: int, bk: int, bn: int) -> dict:
+    """Static analysis of one (bm, bk, bn) tiling for [n,k] @ [k,f]."""
+    bn_eff = min(bn, f)
+    # VMEM per step: a-tile + b-tile + out-accumulator (f32)
+    vmem = 4 * (bm * bk + bk * bn_eff + bm * bn_eff)
+    vmem_db = 2 * vmem  # double buffered
+    grid = (
+        math.ceil(n / bm) * math.ceil(f / bn_eff) * math.ceil(k / bk)
+    )
+    # HBM traffic: each a-tile loaded once per (i, k) x all j; b-tile per
+    # (k, j) x all i; out written once per (i, j)
+    loads = (
+        math.ceil(n / bm) * math.ceil(k / bk) * math.ceil(f / bn_eff)
+        * (bm * bk + bk * bn_eff)
+        + math.ceil(n / bm) * math.ceil(f / bn_eff) * bm * bn_eff
+    ) * 4
+    flops = 2 * n * k * f
+    intensity = flops / loads
+    mxu_aligned = bm % 128 == 0 and bk % 128 == 0
+    return {
+        "bm": bm,
+        "bk": bk,
+        "bn": bn_eff,
+        "grid_steps": grid,
+        "vmem_per_step_kib": vmem_db / 1024,
+        "arith_intensity": intensity,
+        "mxu_aligned": mxu_aligned,
+    }
+
+
+def sweep(n: int, f: int) -> list[dict]:
+    out = []
+    seen = set()
+    for bm in (32, 64, 128, 256):
+        for bk in (32, 64, 128, 256):
+            for bn in (32, 64, 128):
+                if bm > n or bk > n:
+                    continue
+                r = analyze(n, n, f, bm, bk, bn)
+                key = (r["bm"], r["bk"], r["bn"])
+                if key in seen:
+                    continue
+                seen.add(key)
+                # VMEM budget ~16 MiB; keep well under half for fusion
+                if r["vmem_per_step_kib"] > 6 * 1024:
+                    continue
+                out.append(r)
+    # frontier order: MXU alignment first, then arithmetic intensity,
+    # then smaller VMEM (leaves headroom for the fused LN kernel)
+    out.sort(
+        key=lambda r: (
+            -r["mxu_aligned"],
+            -r["arith_intensity"],
+            r["vmem_per_step_kib"],
+        )
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--f", type=int, default=64)
+    args = ap.parse_args()
+    rows = sweep(args.n, args.f)
+    print(
+        f"{'bm':>4} {'bk':>4} {'bn':>4} {'steps':>7} "
+        f"{'VMEM KiB':>9} {'FLOP/B':>7} {'MXU':>4}"
+    )
+    for r in rows[:12]:
+        print(
+            f"{r['bm']:>4} {r['bk']:>4} {r['bn']:>4} {r['grid_steps']:>7} "
+            f"{r['vmem_per_step_kib']:>9.0f} {r['arith_intensity']:>7.1f} "
+            f"{'yes' if r['mxu_aligned'] else 'no':>4}"
+        )
+    best = rows[0]
+    print(
+        f"\nselected: bm={best['bm']} bk={best['bk']} bn={best['bn']} "
+        f"(shipped default in spmm.py)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,326 @@
+"""L2: the paper's GNN models (GCN / GAT / GraphSAGE) in JAX.
+
+Forward passes call the L1 Pallas kernels (spmm / masked_attention /
+layernorm_relu); the backward pass flows through their custom VJPs. The
+exported train step fuses forward, backward, masked cross-entropy and the
+Adam update into ONE pure function over a *flat* parameter vector:
+
+    train_step(flat, m, v, step, lr, seed, x, adj, labels, mask)
+        -> (flat', m', v', loss, correct, mask_count)
+
+so the Rust coordinator threads exactly three state buffers and never
+re-enters Python. The infer step is
+
+    infer_step(flat, x, adj, labels, mask) -> (loss, correct, mask_count)
+
+Batch interchange format (DESIGN.md §6): ``x [N_pad, F]`` node features,
+``adj [N_pad, N_pad]`` sym-normalized dense adjacency block (zero rows for
+padding), ``labels [N_pad] i32``, ``mask [N_pad] f32`` marking the
+*output* nodes of the batch -- the distinction at the heart of IBMB: loss
+and accuracy are computed only on output nodes, auxiliary nodes merely
+provide message-passing context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import masked_attention
+from .kernels.layernorm import layernorm_relu
+from .kernels.spmm import spmm
+
+Params = Dict[str, jax.Array]
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model hyperparameters (paper App. B, scaled to this testbed)."""
+
+    model: str = "gcn"  # gcn | gat | sage
+    n_pad: int = 1024  # padded batch bucket
+    feat: int = 64
+    hidden: int = 64
+    classes: int = 10
+    layers: int = 3
+    heads: int = 4  # GAT only
+    dropout: float = 0.3
+    weight_decay: float = 1e-4  # L2, as the paper uses for GCN
+
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        dims = []
+        d_in = self.feat
+        for l in range(self.layers):
+            d_out = self.classes if l == self.layers - 1 else self.hidden
+            dims.append((d_in, d_out))
+            d_in = d_out
+        return dims
+
+
+# --------------------------------------------------------------------------
+# Parameter specs and (un)flattening. The flat layout is the AOT interface
+# contract with the Rust side; the manifest records (name, shape, offset).
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    for l, (d_in, d_out) in enumerate(cfg.layer_dims()):
+        last = l == cfg.layers - 1
+        if cfg.model == "gcn":
+            specs.append((f"l{l}.w", (d_in, d_out)))
+            specs.append((f"l{l}.b", (d_out,)))
+        elif cfg.model == "sage":
+            # [h ‖ Âh] concat aggregator.
+            specs.append((f"l{l}.w", (2 * d_in, d_out)))
+            specs.append((f"l{l}.b", (d_out,)))
+        elif cfg.model == "gat":
+            heads = 1 if last else cfg.heads
+            dh = d_out if last else d_out // cfg.heads
+            specs.append((f"l{l}.w", (d_in, heads * dh)))
+            specs.append((f"l{l}.b", (heads * dh,)))
+            specs.append((f"l{l}.a_src", (heads, dh)))
+            specs.append((f"l{l}.a_dst", (heads, dh)))
+        else:
+            raise ValueError(f"unknown model {cfg.model!r}")
+        if not last:
+            specs.append((f"l{l}.ln_g", (d_out,)))
+            specs.append((f"l{l}.ln_b", (d_out,)))
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_specs(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def unflatten(cfg: ModelConfig, flat: jax.Array) -> Params:
+    params: Params = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        params[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return params
+
+
+def flatten(cfg: ModelConfig, params: Params) -> jax.Array:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_specs(cfg)]
+    )
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> jax.Array:
+    """Glorot-uniform init of the flat vector (python tests + parity checks;
+    the Rust side reimplements this layout-identically)."""
+    parts = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".w"):
+            limit = jnp.sqrt(6.0 / (shape[0] + shape[1]))
+            parts.append(
+                jax.random.uniform(sub, shape, minval=-limit, maxval=limit)
+            )
+        elif name.endswith((".a_src", ".a_dst")):
+            limit = jnp.sqrt(6.0 / (shape[0] * shape[1] + 1))
+            parts.append(
+                jax.random.uniform(sub, shape, minval=-limit, maxval=limit)
+            )
+        elif name.endswith(".ln_g"):
+            parts.append(jnp.ones(shape))
+        else:  # biases, ln_b
+            parts.append(jnp.zeros(shape))
+    return jnp.concatenate([p.reshape(-1) for p in parts]).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Forward passes.
+# --------------------------------------------------------------------------
+
+
+def _dropout(h: jax.Array, rate: float, key: jax.Array) -> jax.Array:
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, h.shape)
+    return jnp.where(mask, h / keep, 0.0)
+
+
+def _gcn_layer(p: Params, l: int, h: jax.Array, adj: jax.Array) -> jax.Array:
+    agg = spmm(adj, h)  # Â h — the L1 hot-spot
+    return agg @ p[f"l{l}.w"] + p[f"l{l}.b"]
+
+
+def _sage_layer(p: Params, l: int, h: jax.Array, adj: jax.Array) -> jax.Array:
+    agg = spmm(adj, h)
+    return jnp.concatenate([h, agg], axis=-1) @ p[f"l{l}.w"] + p[f"l{l}.b"]
+
+
+def _gat_layer(
+    cfg: ModelConfig, p: Params, l: int, h: jax.Array, adj: jax.Array
+) -> jax.Array:
+    last = l == cfg.layers - 1
+    heads = 1 if last else cfg.heads
+    w = p[f"l{l}.w"]
+    dh = w.shape[1] // heads
+    hw = (h @ w).reshape(h.shape[0], heads, dh)
+    outs = []
+    for hd in range(heads):
+        hw_h = hw[:, hd, :]
+        s_src = (hw_h @ p[f"l{l}.a_src"][hd]).reshape(-1, 1)
+        s_dst = (hw_h @ p[f"l{l}.a_dst"][hd]).reshape(1, -1)
+        outs.append(masked_attention(s_src, s_dst, adj, hw_h))
+    out = jnp.concatenate(outs, axis=-1)
+    return out + p[f"l{l}.b"]
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,
+    adj: jax.Array,
+    *,
+    train: bool,
+    seed: jax.Array | None = None,
+) -> jax.Array:
+    """Run the model; returns logits ``[N_pad, classes]``."""
+    h = x
+    key = jax.random.PRNGKey(seed) if train else None
+    for l in range(cfg.layers):
+        if cfg.model == "gcn":
+            h = _gcn_layer(params, l, h, adj)
+        elif cfg.model == "sage":
+            h = _sage_layer(params, l, h, adj)
+        else:
+            h = _gat_layer(cfg, params, l, h, adj)
+        if l != cfg.layers - 1:
+            h = layernorm_relu(
+                h, params[f"l{l}.ln_g"], params[f"l{l}.ln_b"]
+            )
+            if train and cfg.dropout > 0.0:
+                key, sub = jax.random.split(key)
+                h = _dropout(h, cfg.dropout, sub)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Loss / metrics and the exported steps.
+# --------------------------------------------------------------------------
+
+
+def loss_and_metrics(
+    cfg: ModelConfig,
+    flat: jax.Array,
+    x: jax.Array,
+    adj: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    *,
+    train: bool,
+    seed: jax.Array | None = None,
+):
+    params = unflatten(cfg, flat)
+    logits = forward(cfg, params, x, adj, train=train, seed=seed)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    msum = jnp.sum(mask)
+    loss = jnp.sum(ce * mask) / jnp.maximum(msum, 1.0)
+    preds = jnp.argmax(logits, axis=-1).astype(labels.dtype)
+    correct = jnp.sum((preds == labels).astype(jnp.float32) * mask)
+    return loss, (correct, msum)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Build the fused fwd+bwd+Adam step for AOT lowering."""
+
+    def train_step(flat, m, v, step, lr, seed, x, adj, labels, mask):
+        def loss_fn(p):
+            return loss_and_metrics(
+                cfg, p, x, adj, labels, mask, train=True, seed=seed
+            )
+
+        (loss, (correct, msum)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(flat)
+        if cfg.weight_decay > 0.0:
+            grads = grads + cfg.weight_decay * flat
+        m_new = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+        v_new = ADAM_B2 * v + (1.0 - ADAM_B2) * jnp.square(grads)
+        m_hat = m_new / (1.0 - ADAM_B1**step)
+        v_hat = v_new / (1.0 - ADAM_B2**step)
+        flat_new = flat - lr * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS)
+        return flat_new, m_new, v_new, loss, correct, msum
+
+    return train_step
+
+
+def make_grad_step(cfg: ModelConfig):
+    """Forward+backward WITHOUT the optimizer — used by the Rust side's
+    gradient-accumulation mode (paper Fig. 8): grads from several batches
+    are summed host-side and applied by a host Adam."""
+
+    def grad_step(flat, seed, x, adj, labels, mask):
+        def loss_fn(p):
+            return loss_and_metrics(
+                cfg, p, x, adj, labels, mask, train=True, seed=seed
+            )
+
+        (loss, (correct, msum)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(flat)
+        if cfg.weight_decay > 0.0:
+            grads = grads + cfg.weight_decay * flat
+        return grads, loss, correct, msum
+
+    return grad_step
+
+
+def make_infer_step(cfg: ModelConfig):
+    def infer_step(flat, x, adj, labels, mask):
+        loss, (correct, msum) = loss_and_metrics(
+            cfg, flat, x, adj, labels, mask, train=False
+        )
+        return loss, correct, msum
+
+    return infer_step
+
+
+def example_args(cfg: ModelConfig, kind: str):
+    """ShapeDtypeStructs matching the exported step's positional inputs."""
+    f32 = jnp.float32
+    n = cfg.n_pad
+    p = param_count(cfg)
+    sd = jax.ShapeDtypeStruct
+    batch = [
+        sd((n, cfg.feat), f32),  # x
+        sd((n, n), f32),  # adj
+        sd((n,), jnp.int32),  # labels
+        sd((n,), f32),  # mask
+    ]
+    if kind == "train":
+        return [
+            sd((p,), f32),  # flat params
+            sd((p,), f32),  # adam m
+            sd((p,), f32),  # adam v
+            sd((), f32),  # step (1-based, for bias correction)
+            sd((), f32),  # lr
+            sd((), jnp.int32),  # dropout seed
+            *batch,
+        ]
+    if kind == "infer":
+        return [sd((p,), f32), *batch]
+    if kind == "grad":
+        return [sd((p,), f32), sd((), jnp.int32), *batch]
+    raise ValueError(kind)

@@ -1,0 +1,88 @@
+"""AOT path: lowering produces parseable HLO text and a manifest whose
+interface contract (input order, flat layout) matches the model code."""
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return M.ModelConfig(model="gcn", n_pad=64, feat=16, hidden=32,
+                         classes=5, layers=2)
+
+
+def test_lower_train_produces_hlo_text(small_cfg):
+    text = aot.lower_one(small_cfg, "train")
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # fused Adam means the train step has exactly one entry computation
+    assert text.count("ENTRY") == 1
+
+
+def test_lower_infer_is_smaller_than_train(small_cfg):
+    train = aot.lower_one(small_cfg, "train")
+    infer = aot.lower_one(small_cfg, "infer")
+    assert len(infer) < len(train)  # no backward, no Adam
+
+
+def test_hlo_entry_parameter_count_matches_contract(small_cfg):
+    text = aot.lower_one(small_cfg, "train")
+    # params, m, v, step, lr, seed, x, adj, labels, mask
+    assert aot.entry_param_count(text) == len(aot.TRAIN_INPUTS)
+    infer = aot.lower_one(small_cfg, "infer")
+    assert aot.entry_param_count(infer) == len(aot.INFER_INPUTS)
+
+
+def test_hlo_report_counts_ops(small_cfg):
+    text = aot.lower_one(small_cfg, "infer")
+    ops = aot.hlo_report(text)
+    assert ops, "expected a non-empty op histogram"
+    assert any("dot" in op for op in ops), ops
+
+
+def test_param_spec_entries_offsets(small_cfg):
+    entries = aot.param_spec_entries(small_cfg)
+    off = 0
+    for e in entries:
+        assert e["offset"] == off
+        n = 1
+        for d in e["shape"]:
+            n *= d
+        assert e["size"] == n
+        off += n
+    assert off == M.param_count(small_cfg)
+
+
+def test_artifact_id_is_stable():
+    assert aot.artifact_id("gcn", "train", 256) == "gcn_train_n256"
+
+
+def test_shipped_manifest_consistent_with_model_code():
+    """If `make artifacts` already ran, audit the real manifest."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    assert len(arts) >= 2
+    for a in arts:
+        cfg = M.ModelConfig(model=a["model"], n_pad=a["n_pad"],
+                            feat=a["feat"], classes=a["classes"],
+                            hidden=a["hidden"], layers=a["layers"],
+                            heads=a["heads"])
+        assert a["param_count"] == M.param_count(cfg), a["id"]
+        specs = M.param_specs(cfg)
+        assert len(a["params"]) == len(specs)
+        for got, (name, shape) in zip(a["params"], specs):
+            assert got["name"] == name
+            assert tuple(got["shape"]) == tuple(shape)
+        hlo = os.path.join(os.path.dirname(path), a["path"])
+        assert os.path.exists(hlo), a["path"]
+        assert a["inputs"] == aot.IO_BY_KIND[a["kind"]][0]

@@ -1,0 +1,60 @@
+"""Kernel-tuning analysis sanity + grad-step correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.kernels.tuning import analyze, sweep
+
+
+def test_analyze_vmem_scales_with_tiles():
+    small = analyze(1024, 1024, 64, 32, 32, 32)
+    big = analyze(1024, 1024, 64, 256, 256, 64)
+    assert big["vmem_per_step_kib"] > small["vmem_per_step_kib"]
+    assert small["grid_steps"] > big["grid_steps"]
+
+
+def test_sweep_prefers_mxu_aligned_shapes():
+    rows = sweep(1024, 64)
+    assert rows, "sweep empty"
+    assert rows[0]["mxu_aligned"]
+    assert rows[0]["vmem_per_step_kib"] <= 1024
+    # the shipped TPU-profile tiling (128x128) is on the frontier:
+    # MXU-aligned and within the top few by intensity
+    top = [(r["bm"], r["bk"]) for r in rows[:6]]
+    assert (128, 128) in top, top
+
+
+def test_sweep_respects_vmem_budget():
+    for r in sweep(2048, 64):
+        assert r["vmem_per_step_kib"] <= 6 * 1024
+
+
+def test_grad_step_matches_train_step_direction():
+    """The grad artifact's gradient must equal the fused train step's
+    effective first-step Adam direction (sign-wise) and magnitude at
+    step 1 with zero moments."""
+    cfg = M.ModelConfig(model="gcn", n_pad=32, feat=8, hidden=16,
+                        classes=4, layers=2, dropout=0.0)
+    flat = M.init_params(cfg, jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(1)
+    x = jax.random.normal(k, (32, 8))
+    adj = jnp.eye(32)
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (32,), 0, 4)
+    mask = jnp.ones(32)
+
+    grads, loss_g, corr_g, msum_g = M.make_grad_step(cfg)(
+        flat, jnp.int32(3), x, adj, labels, mask)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    flat2, m2, v2, loss_t, corr_t, msum_t = M.make_train_step(cfg)(
+        flat, m, v, jnp.float32(1.0), jnp.float32(1e-3), jnp.int32(3),
+        x, adj, labels, mask)
+    assert float(loss_g) == float(loss_t)
+    assert float(corr_g) == float(corr_t)
+    # with zero moments at t=1, m_hat = grads, v_hat = grads^2
+    np.testing.assert_allclose(m2, 0.1 * grads, rtol=1e-5, atol=1e-8)
+    expected = flat - 1e-3 * grads / (jnp.abs(grads) + M.ADAM_EPS)
+    np.testing.assert_allclose(flat2, expected, rtol=1e-4, atol=1e-6)
+    assert bool(jnp.isfinite(grads).all())
+    assert float(msum_g) == float(msum_t) == 32.0

@@ -1,0 +1,9 @@
+//! Bench target regenerating the paper's fig7 (see DESIGN.md §5).
+//! Smoke scale by default; pass `--full` for the EXPERIMENTS.md scale.
+fn main() -> anyhow::Result<()> {
+    let args = ibmb::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale = ibmb::config::ExpScale::from_args(
+        &args.flags.iter().map(|f| format!("--{f}")).collect::<Vec<_>>(),
+    );
+    ibmb::experiments::fig7::run(&scale, &args)
+}

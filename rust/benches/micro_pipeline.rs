@@ -1,0 +1,131 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf profile):
+//! push-PPR throughput, batch-wise power-iteration PPR, METIS
+//! partitioning, densification, the prefetch-overlap ratio, and a
+//! single fused train step per bucket.
+
+use ibmb::batching::{BatchCache, BatchGenerator, DenseBatch, NodeWiseIbmb};
+use ibmb::bench_harness::{secs, time_it, Table};
+use ibmb::config::preset_for;
+use ibmb::datasets::{sbm, spec_by_name};
+use ibmb::partition::metis::{partition_graph, MetisConfig};
+use ibmb::ppr::power::{batch_ppr, PowerConfig};
+use ibmb::ppr::push::{push_ppr, PushConfig, PushWorkspace};
+use ibmb::runtime::ModelState;
+use ibmb::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let spec = spec_by_name("synth-arxiv").unwrap().scaled(0.5);
+    let ds = sbm::generate(&spec, 1);
+    let n = ds.graph.num_nodes();
+    println!("dataset: {} nodes, {} edges", n, ds.graph.num_edges());
+    let mut table = Table::new(&["hot path", "mean (s)", "p95 (s)", "throughput"]);
+
+    // push-PPR per root
+    let mut ws = PushWorkspace::new(n);
+    let mut root = 0u32;
+    let s = time_it(20, 200, || {
+        root = (root + 37) % n as u32;
+        push_ppr(&ds.graph, root, &PushConfig::default(), &mut ws)
+    });
+    table.row(&[
+        "push PPR / root".into(),
+        secs(s.mean),
+        secs(s.p95),
+        format!("{:.0} roots/s", 1.0 / s.mean),
+    ]);
+
+    // batch-wise power PPR
+    let roots: Vec<u32> = ds.splits.train[..128.min(ds.splits.train.len())].to_vec();
+    let s = time_it(2, 10, || {
+        batch_ppr(&ds.graph, &roots, &PowerConfig::default())
+    });
+    table.row(&[
+        "power PPR / 128-root batch".into(),
+        secs(s.mean),
+        secs(s.p95),
+        format!("{:.1} batches/s", 1.0 / s.mean),
+    ]);
+
+    // METIS partition
+    let mut rng = Rng::new(2);
+    let s = time_it(1, 5, || {
+        partition_graph(&ds.graph, 16, &MetisConfig::default(), &mut rng)
+    });
+    table.row(&[
+        "METIS 16-way".into(),
+        secs(s.mean),
+        secs(s.p95),
+        format!("{:.2} Medges/s", ds.graph.num_edges() as f64 / s.mean / 1e6),
+    ]);
+
+    // densification
+    let p = preset_for(&ds.name);
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: p.aux_per_output,
+        max_outputs_per_batch: p.outputs_per_batch,
+        node_budget: p.node_budget,
+        ..Default::default()
+    };
+    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+    let bucket = cache
+        .max_batch_nodes()
+        .next_power_of_two()
+        .clamp(256, 2048);
+    let mut dense = DenseBatch::zeros(bucket, ds.feat_dim);
+    let mut i = 0;
+    let s = time_it(5, 100, || {
+        cache.densify_into(&ds, i % cache.len(), &mut dense);
+        i += 1;
+    });
+    table.row(&[
+        format!("densify into n{bucket}"),
+        secs(s.mean),
+        secs(s.p95),
+        format!("{:.0} batches/s", 1.0 / s.mean),
+    ]);
+
+    // fused train step per bucket (needs artifacts)
+    match ibmb::experiments::runner::Env::load() {
+        Ok(mut env) => {
+            for bucket in env.rt.manifest.buckets("gcn", "train") {
+                let meta = env
+                    .rt
+                    .manifest
+                    .find("gcn", "train", bucket)
+                    .unwrap()
+                    .clone();
+                env.rt.executable(&meta.id)?;
+                let mut state = ModelState::init(&meta, 3);
+                let mut dense = DenseBatch::zeros(meta.n_pad, meta.feat);
+                // a bucket-sized batch (budget-matched generator)
+                let mut bgen = NodeWiseIbmb {
+                    aux_per_output: p.aux_per_output,
+                    max_outputs_per_batch: bucket / 8,
+                    node_budget: bucket,
+                    ..Default::default()
+                };
+                let bcache = BatchCache::build(&bgen.generate(
+                    &ds,
+                    &ds.splits.train,
+                    &mut rng,
+                ));
+                bcache.densify_into(&ds, 0, &mut dense);
+                let s = time_it(2, 10, || {
+                    env.rt
+                        .train_step(&meta, &mut state, &dense, 1e-3, 1)
+                        .unwrap()
+                });
+                table.row(&[
+                    format!("fused train step n{bucket}"),
+                    secs(s.mean),
+                    secs(s.p95),
+                    format!("{:.1} steps/s", 1.0 / s.mean),
+                ]);
+            }
+        }
+        Err(e) => eprintln!("skipping PJRT micro-bench: {e:#}"),
+    }
+
+    table.print("micro_pipeline — L3 hot paths");
+    Ok(())
+}

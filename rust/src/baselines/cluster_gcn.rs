@@ -1,0 +1,128 @@
+//! Cluster-GCN (Chiang et al. 2019).
+//!
+//! The METIS partition *is* the batch: outputs are the output nodes in
+//! the part, auxiliary nodes are simply all other nodes of the part.
+//! No influence-based selection — the paper's §2 notes this "does not
+//! select the most relevant auxiliary nodes and cannot ignore
+//! irrelevant parts of the graph", which is exactly what our Fig. 4 /
+//! Table 7 reproductions show (slow on small label rates, boundary
+//! accuracy loss).
+
+use crate::batching::batch::CachedBatch;
+use crate::batching::BatchGenerator;
+use crate::datasets::Dataset;
+use crate::graph::induced_subgraph;
+use crate::partition::metis::{partition_graph, MetisConfig};
+use crate::util::Rng;
+
+/// Cluster-GCN batching.
+#[derive(Debug, Clone)]
+pub struct ClusterGcn {
+    /// Number of graph partitions == batches (paper: same as
+    /// batch-wise IBMB, Table 1).
+    pub num_batches: usize,
+    pub metis: MetisConfig,
+}
+
+impl Default for ClusterGcn {
+    fn default() -> Self {
+        ClusterGcn {
+            num_batches: 8,
+            metis: MetisConfig::default(),
+        }
+    }
+}
+
+impl BatchGenerator for ClusterGcn {
+    fn name(&self) -> &'static str {
+        "Cluster-GCN"
+    }
+
+    fn generate(
+        &mut self,
+        ds: &Dataset,
+        out_nodes: &[u32],
+        rng: &mut Rng,
+    ) -> Vec<CachedBatch> {
+        let part = partition_graph(&ds.graph, self.num_batches, &self.metis, rng);
+        let out_set: std::collections::HashSet<u32> =
+            out_nodes.iter().copied().collect();
+        let mut parts: Vec<Vec<u32>> = vec![Vec::new(); self.num_batches];
+        for (u, &p) in part.iter().enumerate() {
+            parts[p as usize].push(u as u32);
+        }
+        parts
+            .into_iter()
+            .filter_map(|members| {
+                // outputs first, then the rest of the partition
+                let mut outputs: Vec<u32> = members
+                    .iter()
+                    .copied()
+                    .filter(|v| out_set.contains(v))
+                    .collect();
+                if outputs.is_empty() {
+                    return None;
+                }
+                let n_out = outputs.len();
+                outputs.extend(
+                    members.iter().copied().filter(|v| !out_set.contains(v)),
+                );
+                let sg = induced_subgraph(&ds.graph, &outputs);
+                Some(CachedBatch {
+                    nodes: sg.nodes,
+                    num_outputs: n_out,
+                    edges: sg.edges,
+                    weights: sg.weights,
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{sbm, DatasetSpec};
+
+    #[test]
+    fn covers_outputs_once_and_uses_whole_parts() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 120);
+        let mut g = ClusterGcn {
+            num_batches: 5,
+            ..Default::default()
+        };
+        let out = ds.splits.train.clone();
+        let mut rng = Rng::new(12);
+        let batches = g.generate(&ds, &out, &mut rng);
+        let total_out: usize = batches.iter().map(|b| b.num_outputs).sum();
+        assert_eq!(total_out, out.len());
+        // every node of the graph appears in exactly one batch:
+        // Cluster-GCN is global
+        let total_nodes: usize = batches.iter().map(|b| b.num_nodes()).sum();
+        assert_eq!(total_nodes, ds.graph.num_nodes());
+        for b in &batches {
+            assert!(b.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn small_label_rate_still_pays_for_whole_graph() {
+        // the key contrast with IBMB (paper Fig. 4)
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 121);
+        let out: Vec<u32> = ds.splits.train[..4].to_vec();
+        let mut g = ClusterGcn {
+            num_batches: 4,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(13);
+        let batches = g.generate(&ds, &out, &mut rng);
+        let total_nodes: usize = batches.iter().map(|b| b.num_nodes()).sum();
+        // drags in whole partitions (~N/num_batches nodes each) despite
+        // having only 4 output nodes
+        assert!(
+            total_nodes > 25 * out.len(),
+            "{total_nodes} nodes for {} outputs",
+            out.len()
+        );
+    }
+}

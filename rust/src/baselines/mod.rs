@@ -1,0 +1,110 @@
+//! The five baseline mini-batching methods from the paper's evaluation
+//! (§5), implemented from scratch against the same [`BatchGenerator`]
+//! interface so every method feeds the same AOT-compiled executables:
+//!
+//! * [`neighbor_sampling`] — GraphSAGE-style per-layer fanout sampling
+//!   (Hamilton et al. 2017). Stochastic, resampled per epoch.
+//! * [`ladies`] — Layer-Dependent Importance Sampling (Zou et al. 2019).
+//!   Stochastic, layer-wise shared samples.
+//! * [`graphsaint`] — GraphSAINT-RW random-walk subgraph sampling
+//!   (Zeng et al. 2020). Stochastic, global.
+//! * [`cluster_gcn`] — Cluster-GCN (Chiang et al. 2019): METIS partition
+//!   *is* the batch; no influence-based auxiliary selection.
+//! * [`shadow`] — shaDow (Zeng et al. 2021): per-output PPR subgraphs
+//!   stacked independently (shared nodes are duplicated — its
+//!   characteristic inefficiency).
+//!
+//! `full-batch` inference lives in [`crate::inference::fullgraph`] as an
+//! exact sparse forward pass.
+
+pub mod cluster_gcn;
+pub mod graphsaint;
+pub mod ladies;
+pub mod neighbor_sampling;
+pub mod shadow;
+
+pub use cluster_gcn::ClusterGcn;
+pub use graphsaint::GraphSaintRw;
+pub use ladies::Ladies;
+pub use neighbor_sampling::NeighborSampling;
+pub use shadow::Shadow;
+
+use crate::batching::BatchGenerator;
+
+/// All method constructors by name — the experiment drivers' registry.
+/// `aux_k` is each method's main budget knob, mapped to its natural
+/// meaning (fanout, walk count, PPR k, ...).
+pub fn by_name(
+    name: &str,
+    aux_k: usize,
+    num_batches: usize,
+    node_budget: usize,
+) -> Option<Box<dyn BatchGenerator>> {
+    use crate::batching::{fixed_random::FixedRandomBatches, BatchWiseIbmb, NodeWiseIbmb};
+    let g: Box<dyn BatchGenerator> = match name {
+        "node-wise IBMB" => Box::new(NodeWiseIbmb {
+            aux_per_output: aux_k,
+            max_outputs_per_batch: node_budget / (1 + aux_k / 4).max(1),
+            node_budget,
+            ..Default::default()
+        }),
+        "batch-wise IBMB" => Box::new(BatchWiseIbmb {
+            num_batches,
+            node_budget,
+            ..Default::default()
+        }),
+        "fixed random" => Box::new(FixedRandomBatches {
+            aux_per_output: aux_k,
+            num_batches,
+            node_budget,
+            ..Default::default()
+        }),
+        "neighbor sampling" => Box::new(NeighborSampling {
+            fanouts: vec![aux_k.max(2) / 2 + 1; 3],
+            num_batches,
+            node_budget,
+        }),
+        "LADIES" => Box::new(Ladies {
+            nodes_per_layer: aux_k * 24,
+            num_batches,
+            node_budget,
+        }),
+        "GraphSAINT-RW" => Box::new(GraphSaintRw {
+            walk_length: 2,
+            num_steps: num_batches,
+            roots_per_batch: (node_budget / 3).max(8),
+            node_budget,
+        }),
+        "Cluster-GCN" => Box::new(ClusterGcn {
+            num_batches,
+            ..Default::default()
+        }),
+        "shaDow" => Box::new(Shadow {
+            aux_per_output: aux_k,
+            node_budget,
+            ..Default::default()
+        }),
+        _ => return None,
+    };
+    Some(g)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_knows_all_methods() {
+        for name in [
+            "node-wise IBMB",
+            "batch-wise IBMB",
+            "fixed random",
+            "neighbor sampling",
+            "LADIES",
+            "GraphSAINT-RW",
+            "Cluster-GCN",
+            "shaDow",
+        ] {
+            assert!(super::by_name(name, 8, 4, 512).is_some(), "{name}");
+        }
+        assert!(super::by_name("bogus", 8, 4, 512).is_none());
+    }
+}

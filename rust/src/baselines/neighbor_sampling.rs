@@ -1,0 +1,144 @@
+//! Neighbor sampling (GraphSAGE, Hamilton et al. 2017).
+//!
+//! Per epoch: shuffle output nodes into batches, then BFS outward for
+//! `L` layers sampling at most `fanouts[l]` neighbors per frontier node.
+//! The union of sampled nodes forms the batch subgraph. The per-epoch
+//! resampling and the random data access it causes are exactly the
+//! overhead IBMB's precomputed cache eliminates (paper Table 7:
+//! neighbor sampling is accurate but "extremely slow").
+
+use std::collections::HashSet;
+
+use crate::batching::batch::CachedBatch;
+use crate::batching::BatchGenerator;
+use crate::datasets::Dataset;
+use crate::graph::induced_subgraph;
+use crate::partition::random::random_partition;
+use crate::util::Rng;
+
+/// GraphSAGE-style sampler.
+#[derive(Debug, Clone)]
+pub struct NeighborSampling {
+    /// Neighbors sampled per node, one entry per GNN layer
+    /// (paper Table 3, e.g. [6, 5, 5] for GCN/arxiv).
+    pub fanouts: Vec<usize>,
+    pub num_batches: usize,
+    pub node_budget: usize,
+}
+
+impl BatchGenerator for NeighborSampling {
+    fn name(&self) -> &'static str {
+        "neighbor sampling"
+    }
+    fn is_fixed(&self) -> bool {
+        false
+    }
+
+    fn generate(
+        &mut self,
+        ds: &Dataset,
+        out_nodes: &[u32],
+        rng: &mut Rng,
+    ) -> Vec<CachedBatch> {
+        let partition = random_partition(out_nodes, self.num_batches, rng);
+        partition
+            .iter()
+            .map(|outputs| {
+                let mut selected: Vec<u32> = outputs.clone();
+                let mut in_set: HashSet<u32> =
+                    outputs.iter().copied().collect();
+                let mut frontier: Vec<u32> = outputs.clone();
+                for &fanout in &self.fanouts {
+                    let mut next = Vec::new();
+                    for &u in &frontier {
+                        let nbrs = ds.graph.neighbors(u);
+                        let take = fanout.min(nbrs.len());
+                        for idx in rng.sample_distinct(nbrs.len(), take) {
+                            let v = nbrs[idx];
+                            if in_set.insert(v) {
+                                if selected.len() >= self.node_budget {
+                                    break;
+                                }
+                                selected.push(v);
+                                next.push(v);
+                            }
+                        }
+                        if selected.len() >= self.node_budget {
+                            break;
+                        }
+                    }
+                    frontier = next;
+                    if selected.len() >= self.node_budget {
+                        break;
+                    }
+                }
+                let sg = induced_subgraph(&ds.graph, &selected);
+                CachedBatch {
+                    nodes: sg.nodes,
+                    num_outputs: outputs.len(),
+                    edges: sg.edges,
+                    weights: sg.weights,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{sbm, DatasetSpec};
+
+    fn run(fanouts: Vec<usize>) -> (Dataset, Vec<CachedBatch>) {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 90);
+        let mut g = NeighborSampling {
+            fanouts,
+            num_batches: 5,
+            node_budget: 400,
+        };
+        let out = ds.splits.train.clone();
+        let mut rng = Rng::new(6);
+        let b = g.generate(&ds, &out, &mut rng);
+        (ds, b)
+    }
+
+    #[test]
+    fn covers_outputs_and_validates() {
+        let (ds, batches) = run(vec![4, 4, 4]);
+        let total: usize = batches.iter().map(|b| b.num_outputs).sum();
+        assert_eq!(total, ds.splits.train.len());
+        for b in &batches {
+            assert!(b.validate().is_ok());
+            assert!(b.num_nodes() <= 400);
+        }
+    }
+
+    #[test]
+    fn resamples_every_epoch() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 91);
+        let mut g = NeighborSampling {
+            fanouts: vec![3, 3],
+            num_batches: 4,
+            node_budget: 400,
+        };
+        let out = ds.splits.train.clone();
+        let mut rng = Rng::new(7);
+        let a = g.generate(&ds, &out, &mut rng);
+        let b = g.generate(&ds, &out, &mut rng);
+        assert!(!g.is_fixed());
+        let nodes =
+            |bs: &[CachedBatch]| bs.iter().flat_map(|b| b.nodes.clone()).collect::<Vec<_>>();
+        assert_ne!(nodes(&a), nodes(&b));
+    }
+
+    #[test]
+    fn bigger_fanout_bigger_batches() {
+        let (_, small) = run(vec![2, 2]);
+        let (_, big) = run(vec![8, 8]);
+        let avg = |bs: &[CachedBatch]| {
+            bs.iter().map(|b| b.num_nodes()).sum::<usize>() as f64
+                / bs.len() as f64
+        };
+        assert!(avg(&big) > avg(&small));
+    }
+}

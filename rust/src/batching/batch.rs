@@ -1,0 +1,222 @@
+//! Batch representations and densification.
+//!
+//! [`CachedBatch`] is the compact cached form (node ids + local edges);
+//! [`DenseBatch`] is the padded buffer set matching the AOT artifact's
+//! batch interchange format (DESIGN.md §6). Densification — feature
+//! generation, adjacency fill, padding — happens on the prefetch thread
+//! so the execute thread only ever hands ready buffers to PJRT.
+
+use crate::datasets::Dataset;
+
+/// A generated mini-batch in compact form.
+///
+/// `nodes` holds global ids with the **output nodes first**
+/// (`nodes[..num_outputs]`); `edges`/`weights` are the induced subgraph
+/// in local ids with global symmetric-normalization weights.
+#[derive(Debug, Clone)]
+pub struct CachedBatch {
+    pub nodes: Vec<u32>,
+    pub num_outputs: usize,
+    pub edges: Vec<(u32, u32)>,
+    pub weights: Vec<f32>,
+}
+
+impl CachedBatch {
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+    pub fn output_nodes(&self) -> &[u32] {
+        &self.nodes[..self.num_outputs]
+    }
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes.len() * 4 + self.edges.len() * 8 + self.weights.len() * 4
+    }
+
+    /// Structural sanity (tests + debug assertions in the loader).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.nodes.len() as u32;
+        if self.num_outputs > self.nodes.len() {
+            return Err("num_outputs exceeds nodes".into());
+        }
+        if self.edges.len() != self.weights.len() {
+            return Err("edges/weights length mismatch".into());
+        }
+        for &(s, d) in &self.edges {
+            if s >= n || d >= n {
+                return Err(format!("edge ({s},{d}) out of range {n}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether node ids are unique (true for IBMB/Cluster-GCN/sampling
+    /// batches; false by design for shaDow's stacked subgraphs).
+    pub fn has_unique_nodes(&self) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        self.nodes.iter().all(|&u| seen.insert(u))
+    }
+}
+
+/// Padded buffers in the artifact's layout: `x [n_pad * feat]`,
+/// `adj [n_pad * n_pad]` (row-major, `adj[d * n_pad + s]` so that
+/// `adj @ h` aggregates *into* destination rows), `labels`, `mask`.
+#[derive(Debug, Clone)]
+pub struct DenseBatch {
+    pub n_pad: usize,
+    pub feat: usize,
+    pub x: Vec<f32>,
+    pub adj: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub num_real: usize,
+    pub num_outputs: usize,
+}
+
+impl DenseBatch {
+    /// Allocate zeroed buffers for a bucket.
+    pub fn zeros(n_pad: usize, feat: usize) -> DenseBatch {
+        DenseBatch {
+            n_pad,
+            feat,
+            x: vec![0.0; n_pad * feat],
+            adj: vec![0.0; n_pad * n_pad],
+            labels: vec![0; n_pad],
+            mask: vec![0.0; n_pad],
+            num_real: 0,
+            num_outputs: 0,
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.x.len() * 4 + self.adj.len() * 4 + self.labels.len() * 4 + self.mask.len() * 4
+    }
+}
+
+/// Fill `dense` from a cached batch: streamed features, zero-padded
+/// normalized adjacency, labels, output mask. Buffers are fully
+/// overwritten (zeroing only what the previous batch touched).
+pub fn densify(ds: &Dataset, batch: &CachedBatch, dense: &mut DenseBatch) {
+    let n = batch.num_nodes();
+    assert!(
+        n <= dense.n_pad,
+        "batch of {n} nodes exceeds bucket {}",
+        dense.n_pad
+    );
+    assert_eq!(ds.feat_dim, dense.feat);
+    let n_pad = dense.n_pad;
+
+    // Zero the region the *previous* occupant used (cheaper than a full
+    // clear when batches are much smaller than the bucket).
+    let prev = dense.num_real.max(n);
+    dense.adj[..prev * n_pad].iter_mut().for_each(|v| *v = 0.0);
+    dense.x[..prev * dense.feat].iter_mut().for_each(|v| *v = 0.0);
+    dense.mask[..prev].iter_mut().for_each(|v| *v = 0.0);
+    dense.labels[..prev].iter_mut().for_each(|v| *v = 0);
+
+    for (i, &u) in batch.nodes.iter().enumerate() {
+        ds.node_features_into(u, &mut dense.x[i * dense.feat..(i + 1) * dense.feat]);
+        dense.labels[i] = ds.labels[u as usize] as i32;
+    }
+    for i in 0..batch.num_outputs {
+        dense.mask[i] = 1.0;
+    }
+    // adj[dst][src] = w  =>  (adj @ h)[dst] = sum_src w * h[src]
+    for (&(s, d), &w) in batch.edges.iter().zip(&batch.weights) {
+        dense.adj[d as usize * n_pad + s as usize] = w;
+    }
+    dense.num_real = n;
+    dense.num_outputs = batch.num_outputs;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{sbm, DatasetSpec};
+    use crate::graph::induced_subgraph;
+
+    fn tiny_ds() -> Dataset {
+        sbm::generate(&DatasetSpec::tiny_for_tests(), 40)
+    }
+
+    fn batch_from(ds: &Dataset, nodes: &[u32], n_out: usize) -> CachedBatch {
+        let sg = induced_subgraph(&ds.graph, nodes);
+        CachedBatch {
+            nodes: sg.nodes,
+            num_outputs: n_out,
+            edges: sg.edges,
+            weights: sg.weights,
+        }
+    }
+
+    #[test]
+    fn densify_layout_is_correct() {
+        let ds = tiny_ds();
+        let b = batch_from(&ds, &[5, 6, 7, 100], 2);
+        let mut d = DenseBatch::zeros(16, ds.feat_dim);
+        densify(&ds, &b, &mut d);
+        assert_eq!(d.num_real, 4);
+        assert_eq!(d.num_outputs, 2);
+        assert_eq!(&d.mask[..4], &[1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(d.labels[0], ds.labels[5] as i32);
+        // self loop weight at (0,0)
+        let w00 = d.adj[0];
+        assert!((w00 - ds.graph.norm_weight(5, 5)).abs() < 1e-7);
+        // features match the streamed generator
+        let mut want = vec![0.0; ds.feat_dim];
+        ds.node_features_into(6, &mut want);
+        assert_eq!(&d.x[ds.feat_dim..2 * ds.feat_dim], &want[..]);
+    }
+
+    #[test]
+    fn densify_clears_previous_occupant() {
+        let ds = tiny_ds();
+        let big = batch_from(&ds, &(0u32..12).collect::<Vec<_>>(), 12);
+        let small = batch_from(&ds, &[300, 301], 1);
+        let mut d = DenseBatch::zeros(16, ds.feat_dim);
+        densify(&ds, &big, &mut d);
+        densify(&ds, &small, &mut d);
+        // everything beyond the small batch must be zero again
+        assert!(d.mask[2..].iter().all(|&m| m == 0.0));
+        assert!(d.labels[2..].iter().all(|&l| l == 0));
+        for r in 2..16 {
+            assert!(
+                d.adj[r * 16..(r + 1) * 16].iter().all(|&v| v == 0.0),
+                "row {r} dirty"
+            );
+        }
+        // columns of padding region in live rows must be zero too
+        for r in 0..2 {
+            assert!(d.adj[r * 16 + 2..(r + 1) * 16].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_batches() {
+        let ds = tiny_ds();
+        let mut b = batch_from(&ds, &[1, 2, 3], 1);
+        assert!(b.validate().is_ok());
+        b.edges.push((9, 0));
+        b.weights.push(0.1);
+        assert!(b.validate().is_err());
+        let dup = CachedBatch {
+            nodes: vec![1, 1],
+            num_outputs: 1,
+            edges: vec![],
+            weights: vec![],
+        };
+        assert!(dup.validate().is_ok()); // duplicates are legal (shaDow)
+        assert!(!dup.has_unique_nodes());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds bucket")]
+    fn densify_rejects_oversized_batch() {
+        let ds = tiny_ds();
+        let b = batch_from(&ds, &(0u32..20).collect::<Vec<_>>(), 4);
+        let mut d = DenseBatch::zeros(16, ds.feat_dim);
+        densify(&ds, &b, &mut d);
+    }
+}

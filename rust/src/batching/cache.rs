@@ -1,0 +1,204 @@
+//! Contiguous batch cache — the computational heart of the paper's
+//! training speedup (§4 "Computational advantages"): "we can then cache
+//! each mini-batch in consecutive blocks of memory, thereby ...
+//! circumventing expensive random data accesses."
+//!
+//! All batches live in four flat arenas (nodes, edge sources, edge
+//! destinations, weights) with per-batch offsets, so iterating an epoch
+//! is a single forward scan over memory. [`BatchCache::densify_into`]
+//! reads straight from the arenas into the padded buffers without
+//! materializing intermediate structures.
+
+use super::batch::{CachedBatch, DenseBatch};
+use crate::datasets::Dataset;
+
+/// Immutable arena-packed batch set.
+#[derive(Debug, Clone)]
+pub struct BatchCache {
+    nodes: Vec<u32>,
+    edge_src: Vec<u32>,
+    edge_dst: Vec<u32>,
+    weights: Vec<f32>,
+    /// `node_off[i]..node_off[i+1]` is batch i's node range.
+    node_off: Vec<usize>,
+    /// `edge_off[i]..edge_off[i+1]` is batch i's edge range.
+    edge_off: Vec<usize>,
+    num_outputs: Vec<usize>,
+}
+
+impl BatchCache {
+    /// Pack generated batches into contiguous arenas.
+    pub fn build(batches: &[CachedBatch]) -> BatchCache {
+        let total_nodes: usize = batches.iter().map(|b| b.num_nodes()).sum();
+        let total_edges: usize = batches.iter().map(|b| b.num_edges()).sum();
+        let mut c = BatchCache {
+            nodes: Vec::with_capacity(total_nodes),
+            edge_src: Vec::with_capacity(total_edges),
+            edge_dst: Vec::with_capacity(total_edges),
+            weights: Vec::with_capacity(total_edges),
+            node_off: Vec::with_capacity(batches.len() + 1),
+            edge_off: Vec::with_capacity(batches.len() + 1),
+            num_outputs: Vec::with_capacity(batches.len()),
+        };
+        c.node_off.push(0);
+        c.edge_off.push(0);
+        for b in batches {
+            debug_assert!(b.validate().is_ok());
+            c.nodes.extend_from_slice(&b.nodes);
+            for (&(s, d), &w) in b.edges.iter().zip(&b.weights) {
+                c.edge_src.push(s);
+                c.edge_dst.push(d);
+                c.weights.push(w);
+            }
+            c.node_off.push(c.nodes.len());
+            c.edge_off.push(c.edge_src.len());
+            c.num_outputs.push(b.num_outputs);
+        }
+        c
+    }
+
+    pub fn len(&self) -> usize {
+        self.num_outputs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn num_nodes(&self, i: usize) -> usize {
+        self.node_off[i + 1] - self.node_off[i]
+    }
+    pub fn num_edges(&self, i: usize) -> usize {
+        self.edge_off[i + 1] - self.edge_off[i]
+    }
+    pub fn num_outputs(&self, i: usize) -> usize {
+        self.num_outputs[i]
+    }
+    pub fn batch_nodes(&self, i: usize) -> &[u32] {
+        &self.nodes[self.node_off[i]..self.node_off[i + 1]]
+    }
+    pub fn output_nodes(&self, i: usize) -> &[u32] {
+        &self.nodes[self.node_off[i]..self.node_off[i] + self.num_outputs[i]]
+    }
+
+    /// Largest batch node count — picks the artifact bucket.
+    pub fn max_batch_nodes(&self) -> usize {
+        (0..self.len()).map(|i| self.num_nodes(i)).max().unwrap_or(0)
+    }
+
+    /// Total arena bytes (Table 6 main-memory accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes.len() * 4
+            + self.edge_src.len() * 4
+            + self.edge_dst.len() * 4
+            + self.weights.len() * 4
+            + (self.node_off.len() + self.edge_off.len() + self.num_outputs.len()) * 8
+    }
+
+    /// Densify batch `i` straight out of the arenas (no intermediate
+    /// allocation — prefetch-thread hot path).
+    pub fn densify_into(&self, ds: &Dataset, i: usize, dense: &mut DenseBatch) {
+        let nodes = self.batch_nodes(i);
+        let n = nodes.len();
+        assert!(n <= dense.n_pad, "batch {i}: {n} > bucket {}", dense.n_pad);
+        let n_pad = dense.n_pad;
+        let prev = dense.num_real.max(n);
+        dense.adj[..prev * n_pad].iter_mut().for_each(|v| *v = 0.0);
+        dense.x[..prev * dense.feat].iter_mut().for_each(|v| *v = 0.0);
+        dense.mask[..prev].iter_mut().for_each(|v| *v = 0.0);
+        dense.labels[..prev].iter_mut().for_each(|v| *v = 0);
+
+        for (li, &u) in nodes.iter().enumerate() {
+            ds.node_features_into(
+                u,
+                &mut dense.x[li * dense.feat..(li + 1) * dense.feat],
+            );
+            dense.labels[li] = ds.labels[u as usize] as i32;
+        }
+        for m in dense.mask.iter_mut().take(self.num_outputs[i]) {
+            *m = 1.0;
+        }
+        let (es, ee) = (self.edge_off[i], self.edge_off[i + 1]);
+        for e in es..ee {
+            let (s, d) = (self.edge_src[e] as usize, self.edge_dst[e] as usize);
+            dense.adj[d * n_pad + s] = self.weights[e];
+        }
+        dense.num_real = n;
+        dense.num_outputs = self.num_outputs[i];
+    }
+
+    /// Owned copy of batch `i` (tests / non-hot-path consumers).
+    pub fn to_cached(&self, i: usize) -> CachedBatch {
+        let (es, ee) = (self.edge_off[i], self.edge_off[i + 1]);
+        CachedBatch {
+            nodes: self.batch_nodes(i).to_vec(),
+            num_outputs: self.num_outputs[i],
+            edges: (es..ee)
+                .map(|e| (self.edge_src[e], self.edge_dst[e]))
+                .collect(),
+            weights: self.weights[es..ee].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::batch::densify;
+    use crate::batching::{BatchGenerator, NodeWiseIbmb};
+    use crate::datasets::{sbm, DatasetSpec};
+    use crate::util::Rng;
+
+    fn build() -> (Dataset, Vec<CachedBatch>, BatchCache) {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 80);
+        let mut g = NodeWiseIbmb {
+            aux_per_output: 6,
+            max_outputs_per_batch: 30,
+            node_budget: 200,
+            ..Default::default()
+        };
+        let out = ds.splits.train.clone();
+        let mut rng = Rng::new(5);
+        let batches = g.generate(&ds, &out, &mut rng);
+        let cache = BatchCache::build(&batches);
+        (ds, batches, cache)
+    }
+
+    #[test]
+    fn roundtrips_batches_exactly() {
+        let (_, batches, cache) = build();
+        assert_eq!(cache.len(), batches.len());
+        for (i, b) in batches.iter().enumerate() {
+            let got = cache.to_cached(i);
+            assert_eq!(got.nodes, b.nodes);
+            assert_eq!(got.num_outputs, b.num_outputs);
+            assert_eq!(got.edges, b.edges);
+            assert_eq!(got.weights, b.weights);
+        }
+    }
+
+    #[test]
+    fn densify_into_matches_direct_densify() {
+        let (ds, batches, cache) = build();
+        let bucket = cache.max_batch_nodes().next_power_of_two().max(16);
+        let mut a = DenseBatch::zeros(bucket, ds.feat_dim);
+        let mut b = DenseBatch::zeros(bucket, ds.feat_dim);
+        for i in 0..cache.len() {
+            cache.densify_into(&ds, i, &mut a);
+            densify(&ds, &batches[i], &mut b);
+            assert_eq!(a.x, b.x, "batch {i} x");
+            assert_eq!(a.adj, b.adj, "batch {i} adj");
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.mask, b.mask);
+            assert_eq!(a.num_real, b.num_real);
+        }
+    }
+
+    #[test]
+    fn memory_accounting_is_consistent() {
+        let (_, batches, cache) = build();
+        let loose: usize = batches.iter().map(|b| b.memory_bytes()).sum();
+        // arena holds same payload (+ offsets overhead)
+        assert!(cache.memory_bytes() >= loose);
+        assert!(cache.memory_bytes() < loose + 64 * (batches.len() + 2));
+    }
+}

@@ -1,0 +1,203 @@
+//! Batch-cache disk persistence.
+//!
+//! The paper: "preprocessing rarely needs to be re-run. Instead, its
+//! result can be saved to disk and re-used for training different
+//! models." This module serializes the arena-packed [`BatchCache`] to a
+//! flat binary file so one preprocessing pass serves every model and
+//! every seed. Format (little endian):
+//!
+//! ```text
+//! magic "IBMBCACH" | u64 batches | u64 nodes | u64 edges
+//! | u64 node_off[batches+1] | u64 edge_off[batches+1]
+//! | u64 num_outputs[batches]
+//! | u32 nodes[nodes] | u32 edge_src[edges] | u32 edge_dst[edges]
+//! | f32 weights[edges]
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::CachedBatch;
+use super::cache::BatchCache;
+
+const MAGIC: &[u8; 8] = b"IBMBCACH";
+
+/// Serialize a cache to disk.
+pub fn save(cache: &BatchCache, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    w.write_all(MAGIC)?;
+    let b = cache.len();
+    let total_nodes: usize = (0..b).map(|i| cache.num_nodes(i)).sum();
+    let total_edges: usize = (0..b).map(|i| cache.num_edges(i)).sum();
+    for v in [b as u64, total_nodes as u64, total_edges as u64] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    let mut off = 0u64;
+    w.write_all(&off.to_le_bytes())?;
+    for i in 0..b {
+        off += cache.num_nodes(i) as u64;
+        w.write_all(&off.to_le_bytes())?;
+    }
+    off = 0;
+    w.write_all(&off.to_le_bytes())?;
+    for i in 0..b {
+        off += cache.num_edges(i) as u64;
+        w.write_all(&off.to_le_bytes())?;
+    }
+    for i in 0..b {
+        w.write_all(&(cache.num_outputs(i) as u64).to_le_bytes())?;
+    }
+    for i in 0..b {
+        for &u in cache.batch_nodes(i) {
+            w.write_all(&u.to_le_bytes())?;
+        }
+    }
+    // edges via to_cached views (src then dst then weights, per batch
+    // order so offsets line up)
+    let mut all: Vec<CachedBatch> = Vec::with_capacity(b);
+    for i in 0..b {
+        all.push(cache.to_cached(i));
+    }
+    for cb in &all {
+        for &(s, _) in &cb.edges {
+            w.write_all(&s.to_le_bytes())?;
+        }
+    }
+    for cb in &all {
+        for &(_, d) in &cb.edges {
+            w.write_all(&d.to_le_bytes())?;
+        }
+    }
+    for cb in &all {
+        for &wt in &cb.weights {
+            w.write_all(&wt.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_u64s(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
+    let mut buf = vec![0u8; n * 8];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Load a cache previously written by [`save`].
+pub fn load(path: &Path) -> Result<BatchCache> {
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic");
+    }
+    let head = read_u64s(&mut r, 3)?;
+    let (b, total_nodes, total_edges) =
+        (head[0] as usize, head[1] as usize, head[2] as usize);
+    let node_off = read_u64s(&mut r, b + 1)?;
+    let edge_off = read_u64s(&mut r, b + 1)?;
+    let num_outputs = read_u64s(&mut r, b)?;
+    if node_off.last().copied() != Some(total_nodes as u64)
+        || edge_off.last().copied() != Some(total_edges as u64)
+    {
+        bail!("{path:?}: inconsistent offsets");
+    }
+    let nodes = read_u32s(&mut r, total_nodes)?;
+    let edge_src = read_u32s(&mut r, total_edges)?;
+    let edge_dst = read_u32s(&mut r, total_edges)?;
+    let mut wbuf = vec![0u8; total_edges * 4];
+    r.read_exact(&mut wbuf)?;
+    let weights: Vec<f32> = wbuf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    // rebuild through CachedBatch (validates ranges on the way)
+    let mut batches = Vec::with_capacity(b);
+    for i in 0..b {
+        let (ns, ne) = (node_off[i] as usize, node_off[i + 1] as usize);
+        let (es, ee) = (edge_off[i] as usize, edge_off[i + 1] as usize);
+        let cb = CachedBatch {
+            nodes: nodes[ns..ne].to_vec(),
+            num_outputs: num_outputs[i] as usize,
+            edges: edge_src[es..ee]
+                .iter()
+                .zip(&edge_dst[es..ee])
+                .map(|(&s, &d)| (s, d))
+                .collect(),
+            weights: weights[es..ee].to_vec(),
+        };
+        if let Err(e) = cb.validate() {
+            bail!("{path:?}: batch {i}: {e}");
+        }
+        batches.push(cb);
+    }
+    Ok(BatchCache::build(&batches))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{BatchGenerator, NodeWiseIbmb};
+    use crate::datasets::{sbm, DatasetSpec};
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 150);
+        let mut gen = NodeWiseIbmb {
+            aux_per_output: 6,
+            max_outputs_per_batch: 40,
+            node_budget: 256,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(15);
+        let cache =
+            BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+        let dir = std::env::temp_dir().join("ibmb_cache_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.bin");
+        save(&cache, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), cache.len());
+        for i in 0..cache.len() {
+            let a = cache.to_cached(i);
+            let b = loaded.to_cached(i);
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.num_outputs, b.num_outputs);
+            assert_eq!(a.edges, b.edges);
+            assert_eq!(a.weights, b.weights);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let dir = std::env::temp_dir().join("ibmb_cache_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"IBMBCACHgarbage").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, b"WRONGMAG").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,146 @@
+//! "Fixed random" ablation (Fig. 6) / "IBMB, rand batch." (Fig. 2):
+//! influence-based auxiliary selection with *random* output batching.
+//! Isolates the contribution of output-node partitioning — these
+//! batches lose the neighborhood-sharing synergy and are therefore
+//! bigger (less overlap) and converge more slowly.
+
+use std::collections::HashMap;
+
+use super::batch::CachedBatch;
+use super::BatchGenerator;
+use crate::datasets::Dataset;
+use crate::graph::induced_subgraph;
+use crate::partition::random::random_partition;
+use crate::ppr::push::{push_ppr, PushConfig, PushWorkspace};
+use crate::ppr::topk::top_k_indices;
+use crate::util::Rng;
+
+/// Random output batching + node-wise top-k PPR auxiliary selection.
+#[derive(Debug, Clone)]
+pub struct FixedRandomBatches {
+    pub aux_per_output: usize,
+    pub num_batches: usize,
+    pub node_budget: usize,
+    pub push: PushConfig,
+}
+
+impl Default for FixedRandomBatches {
+    fn default() -> Self {
+        FixedRandomBatches {
+            aux_per_output: 16,
+            num_batches: 8,
+            node_budget: 2048,
+            push: PushConfig::default(),
+        }
+    }
+}
+
+impl BatchGenerator for FixedRandomBatches {
+    fn name(&self) -> &'static str {
+        "fixed random"
+    }
+
+    fn generate(
+        &mut self,
+        ds: &Dataset,
+        out_nodes: &[u32],
+        rng: &mut Rng,
+    ) -> Vec<CachedBatch> {
+        let partition = random_partition(out_nodes, self.num_batches, rng);
+        let mut ws = PushWorkspace::new(ds.graph.num_nodes());
+        partition
+            .iter()
+            .map(|outputs| {
+                let out_set: HashMap<u32, ()> =
+                    outputs.iter().map(|&o| (o, ())).collect();
+                let mut score: HashMap<u32, f32> = HashMap::new();
+                for &o in outputs {
+                    let ppr = push_ppr(&ds.graph, o, &self.push, &mut ws);
+                    for t in
+                        top_k_indices(&ppr.scores, self.aux_per_output + 1)
+                    {
+                        let v = ppr.nodes[t];
+                        if !out_set.contains_key(&v) {
+                            *score.entry(v).or_insert(0.0) += ppr.scores[t];
+                        }
+                    }
+                }
+                let mut cands: Vec<(u32, f32)> = score.into_iter().collect();
+                cands.sort_by(|a, b| {
+                    b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+                });
+                cands.truncate(
+                    self.node_budget.saturating_sub(outputs.len()),
+                );
+                let mut nodes = outputs.clone();
+                nodes.extend(cands.iter().map(|&(v, _)| v));
+                let sg = induced_subgraph(&ds.graph, &nodes);
+                CachedBatch {
+                    nodes: sg.nodes,
+                    num_outputs: outputs.len(),
+                    edges: sg.edges,
+                    weights: sg.weights,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::NodeWiseIbmb;
+    use crate::datasets::{sbm, DatasetSpec};
+
+    #[test]
+    fn covers_outputs_and_validates() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 70);
+        let out = ds.splits.train.clone();
+        let mut g = FixedRandomBatches {
+            num_batches: 6,
+            node_budget: 400,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(3);
+        let batches = g.generate(&ds, &out, &mut rng);
+        let total: usize = batches.iter().map(|b| b.num_outputs).sum();
+        assert_eq!(total, out.len());
+        for b in &batches {
+            assert!(b.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn random_batches_have_less_aux_overlap_than_ibmb() {
+        // The synergy claim of §3.2: locality-partitioned outputs share
+        // auxiliary nodes, random ones do not => random batches need
+        // more total nodes for the same k.
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 71);
+        let out = ds.splits.train.clone();
+        let mut rng = Rng::new(4);
+        let mut ibmb = NodeWiseIbmb {
+            aux_per_output: 8,
+            max_outputs_per_batch: 50,
+            node_budget: 4096,
+            ..Default::default()
+        };
+        let ibmb_batches = ibmb.generate(&ds, &out, &mut rng);
+        let nb = ibmb_batches.len().max(1);
+        let mut rand = FixedRandomBatches {
+            aux_per_output: 8,
+            num_batches: nb,
+            node_budget: 4096,
+            ..Default::default()
+        };
+        let rand_batches = rand.generate(&ds, &out, &mut rng);
+        let total = |bs: &[CachedBatch]| {
+            bs.iter().map(|b| b.num_nodes()).sum::<usize>()
+        };
+        assert!(
+            total(&rand_batches) as f64 > total(&ibmb_batches) as f64 * 1.1,
+            "random {} vs ibmb {}",
+            total(&rand_batches),
+            total(&ibmb_batches)
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Mini-batch generation: the paper's core contribution (L3).
+//!
+//! A mini-batch is (1) a set of *output* nodes whose predictions this
+//! batch computes, (2) a set of *auxiliary* nodes providing
+//! message-passing context, and (3) the induced subgraph over both.
+//! Generators implement [`BatchGenerator`]; IBMB variants precompute a
+//! fixed batch set once ([`BatchGenerator::is_fixed`]) which the
+//! training loop stores in a contiguous [`cache::BatchCache`], while
+//! stochastic baselines resample per epoch.
+
+pub mod batch;
+pub mod cache;
+pub mod cache_io;
+pub mod fixed_random;
+pub mod ibmb_batch;
+pub mod ibmb_node;
+
+pub use batch::{densify, CachedBatch, DenseBatch};
+pub use cache::BatchCache;
+pub use ibmb_batch::BatchWiseIbmb;
+pub use ibmb_node::NodeWiseIbmb;
+
+use crate::datasets::Dataset;
+use crate::util::Rng;
+
+/// A mini-batch generation method (IBMB variant or baseline).
+pub trait BatchGenerator {
+    /// Display name used in experiment tables.
+    fn name(&self) -> &'static str;
+
+    /// Whether batches are fixed after preprocessing (cacheable) or
+    /// resampled every epoch.
+    fn is_fixed(&self) -> bool {
+        true
+    }
+
+    /// Generate the batch set for `out_nodes`. For fixed methods this is
+    /// the (expensive) preprocessing step, run once; for stochastic
+    /// methods it is called per epoch.
+    fn generate(
+        &mut self,
+        ds: &Dataset,
+        out_nodes: &[u32],
+        rng: &mut Rng,
+    ) -> Vec<CachedBatch>;
+}
+
+/// Pick the smallest artifact bucket that fits `n` nodes.
+pub fn bucket_for(n: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [256, 512, 1024, 2048];
+        assert_eq!(bucket_for(10, &buckets), Some(256));
+        assert_eq!(bucket_for(256, &buckets), Some(256));
+        assert_eq!(bucket_for(257, &buckets), Some(512));
+        assert_eq!(bucket_for(4096, &buckets), None);
+    }
+}

@@ -1,0 +1,108 @@
+//! Bench harness (criterion is unavailable offline): warmup + repeated
+//! timed runs with mean/std/percentiles, plus aligned table printing for
+//! the paper-style output every bench target emits.
+
+use crate::util::stats::Summary;
+use crate::util::Timer;
+
+/// Time `f` with `warmup` untimed runs and `reps` timed runs.
+pub fn time_it<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        let _ = f();
+        times.push(t.elapsed_s());
+    }
+    Summary::of(&times)
+}
+
+/// Aligned console table matching the paper's row format.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:width$}  ", c, width = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// `mean ± std` cell formatting, paper style.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.1} ± {std:.1}")
+}
+
+/// Seconds cell with adaptive precision.
+pub fn secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.1}")
+    } else {
+        format!("{s:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_reps() {
+        let mut calls = 0;
+        let s = time_it(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(pm(72.55, 0.24), "72.5 ± 0.2");
+        assert_eq!(secs(0.1234), "0.123");
+        assert_eq!(secs(12.34), "12.3");
+        assert_eq!(secs(1234.0), "1234");
+    }
+
+    #[test]
+    fn table_rows_must_match_headers() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test");
+    }
+}

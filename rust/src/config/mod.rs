@@ -1,0 +1,59 @@
+//! Experiment configuration: method hyperparameter presets per dataset
+//! (the paper's Tables 1–4, mapped to our scaled-down synthetic
+//! datasets) and the common experiment-scale knobs shared by the
+//! benches (`--full` vs smoke scale).
+
+pub mod presets;
+
+pub use presets::{preset_for, MethodPreset};
+
+/// Global experiment scale.
+#[derive(Debug, Clone)]
+pub struct ExpScale {
+    /// Dataset node-count multiplier (1.0 = full synthetic scale).
+    pub dataset_factor: f64,
+    /// Training epochs for convergence experiments.
+    pub epochs: usize,
+    /// Independent seeds per configuration (paper: 10).
+    pub seeds: usize,
+}
+
+impl ExpScale {
+    /// The fast default used by `cargo bench` (CI-friendly).
+    pub fn smoke() -> ExpScale {
+        ExpScale {
+            dataset_factor: 0.12,
+            epochs: 12,
+            seeds: 2,
+        }
+    }
+    /// The scale recorded in EXPERIMENTS.md (`--full`).
+    pub fn full() -> ExpScale {
+        ExpScale {
+            dataset_factor: 1.0,
+            epochs: 60,
+            seeds: 3,
+        }
+    }
+    /// Select from CLI args.
+    pub fn from_args(args: &[String]) -> ExpScale {
+        if args.iter().any(|a| a == "--full") {
+            ExpScale::full()
+        } else {
+            ExpScale::smoke()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_selection() {
+        let s = ExpScale::from_args(&["--full".to_string()]);
+        assert_eq!(s.dataset_factor, 1.0);
+        let s = ExpScale::from_args(&[]);
+        assert!(s.dataset_factor < 1.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Named dataset presets mirroring the paper's four benchmarks at a
+//! scale this CPU testbed can sweep (DESIGN.md §3). All share
+//! `feat = 64`, `classes = 10` so one artifact set serves every dataset.
+
+/// Generator parameters for a synthetic planted-partition dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub nodes: usize,
+    /// Communities are arranged on a ring; labels are `community % classes`.
+    pub communities: usize,
+    pub classes: usize,
+    pub feat_dim: usize,
+    /// Target average degree (before self loops).
+    pub avg_degree: f64,
+    /// Fraction of edges that stay inside the community.
+    pub p_intra: f64,
+    /// Fraction of edges that go to a ring-adjacent community
+    /// (creates locality structure beyond the community itself).
+    pub p_adjacent: f64,
+    /// Degree-correction Pareto shape; smaller = heavier tail.
+    pub degree_tail: f64,
+    /// Gaussian feature noise scale (class-mean magnitude is 1).
+    pub noise: f32,
+    /// Split fractions (train, val); test is the remainder.
+    pub train_frac: f64,
+    pub val_frac: f64,
+}
+
+impl DatasetSpec {
+    /// Uniform scale-down of the node count (benches' smoke mode).
+    pub fn scaled(&self, factor: f64) -> DatasetSpec {
+        let mut s = self.clone();
+        s.nodes = ((s.nodes as f64 * factor) as usize).max(64);
+        s
+    }
+
+    /// A minimal spec for unit tests.
+    pub fn tiny_for_tests() -> DatasetSpec {
+        DatasetSpec {
+            name: "tiny",
+            nodes: 600,
+            communities: 12,
+            classes: 4,
+            feat_dim: 16,
+            avg_degree: 8.0,
+            p_intra: 0.7,
+            p_adjacent: 0.2,
+            degree_tail: 2.5,
+            noise: 1.0,
+            train_frac: 0.5,
+            val_frac: 0.15,
+        }
+    }
+}
+
+/// synth-arxiv — stands in for ogbn-arxiv (169k nodes, deg ~13,
+/// 54 % train labels): moderate size, high label rate.
+pub const SYNTH_ARXIV: DatasetSpec = DatasetSpec {
+    name: "synth-arxiv",
+    nodes: 24_000,
+    communities: 60,
+    classes: 10,
+    feat_dim: 64,
+    avg_degree: 8.0,
+    p_intra: 0.65,
+    p_adjacent: 0.25,
+    degree_tail: 2.5,
+    noise: 2.8,
+    train_frac: 0.54,
+    val_frac: 0.18,
+};
+
+/// synth-products — stands in for ogbn-products (2.4M nodes, deg ~50,
+/// 8 % train labels): larger, denser, low label rate.
+pub const SYNTH_PRODUCTS: DatasetSpec = DatasetSpec {
+    name: "synth-products",
+    nodes: 60_000,
+    communities: 150,
+    classes: 10,
+    feat_dim: 64,
+    avg_degree: 12.0,
+    p_intra: 0.7,
+    p_adjacent: 0.22,
+    degree_tail: 2.0,
+    noise: 2.8,
+    train_frac: 0.08,
+    val_frac: 0.02,
+};
+
+/// synth-reddit — stands in for Reddit (233k nodes, deg ~490 downsampled
+/// to 8 by the paper; we use a dense-but-tractable 24): very dense.
+pub const SYNTH_REDDIT: DatasetSpec = DatasetSpec {
+    name: "synth-reddit",
+    nodes: 16_000,
+    communities: 40,
+    classes: 10,
+    feat_dim: 64,
+    avg_degree: 24.0,
+    p_intra: 0.75,
+    p_adjacent: 0.18,
+    degree_tail: 2.2,
+    noise: 2.6,
+    train_frac: 0.66,
+    val_frac: 0.10,
+};
+
+/// synth-papers — stands in for ogbn-papers100M (111M nodes, 1.1 % train
+/// labels): the "huge graph, tiny label rate" regime where IBMB's
+/// output-node scaling dominates.
+pub const SYNTH_PAPERS: DatasetSpec = DatasetSpec {
+    name: "synth-papers",
+    nodes: 200_000,
+    communities: 500,
+    classes: 10,
+    feat_dim: 64,
+    avg_degree: 6.0,
+    p_intra: 0.65,
+    p_adjacent: 0.25,
+    degree_tail: 2.0,
+    noise: 2.8,
+    train_frac: 0.011,
+    val_frac: 0.004,
+};
+
+pub const ALL_DATASETS: [&DatasetSpec; 4] = [
+    &SYNTH_ARXIV,
+    &SYNTH_PRODUCTS,
+    &SYNTH_REDDIT,
+    &SYNTH_PAPERS,
+];
+
+/// Look up a preset by name.
+pub fn spec_by_name(name: &str) -> Option<&'static DatasetSpec> {
+    ALL_DATASETS.iter().copied().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        assert!(spec_by_name("synth-arxiv").is_some());
+        assert!(spec_by_name("synth-papers").is_some());
+        assert!(spec_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_specs_share_model_interface() {
+        for s in ALL_DATASETS {
+            assert_eq!(s.feat_dim, 64);
+            assert_eq!(s.classes, 10);
+            assert!(s.train_frac + s.val_frac < 1.0);
+            assert!(s.p_intra + s.p_adjacent <= 1.0);
+        }
+    }
+
+    #[test]
+    fn scaled_changes_nodes_only() {
+        let s = SYNTH_PAPERS.scaled(0.1);
+        assert_eq!(s.nodes, 20_000);
+        assert_eq!(s.classes, SYNTH_PAPERS.classes);
+    }
+}

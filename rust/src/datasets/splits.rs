@@ -1,0 +1,97 @@
+//! Train/validation/test node splits.
+//!
+//! Also provides the label-rate subsampling used by the paper's Fig. 4
+//! ("we reduce the label rate by sub-sampling the training nodes").
+
+use crate::util::Rng;
+
+/// Disjoint node-id splits.
+#[derive(Debug, Clone)]
+pub struct Splits {
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+impl Splits {
+    pub fn memory_bytes(&self) -> usize {
+        (self.train.len() + self.val.len() + self.test.len()) * 4
+    }
+
+    /// Subsample the training set to `frac` of its size (Fig. 4's
+    /// label-rate sweep). Deterministic given the rng seed.
+    pub fn with_train_fraction(&self, frac: f64, rng: &mut Rng) -> Splits {
+        let k = ((self.train.len() as f64 * frac).round() as usize)
+            .clamp(1, self.train.len());
+        let idx = rng.sample_distinct(self.train.len(), k);
+        let mut train: Vec<u32> = idx.iter().map(|&i| self.train[i]).collect();
+        train.sort_unstable();
+        Splits {
+            train,
+            val: self.val.clone(),
+            test: self.test.clone(),
+        }
+    }
+}
+
+/// Random disjoint splits over `n` nodes.
+pub fn make_splits(n: usize, train_frac: f64, val_frac: f64, rng: &mut Rng) -> Splits {
+    let mut ids: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut ids);
+    let n_train = (n as f64 * train_frac).round() as usize;
+    let n_val = (n as f64 * val_frac).round() as usize;
+    let mut train = ids[..n_train].to_vec();
+    let mut val = ids[n_train..n_train + n_val].to_vec();
+    let mut test = ids[n_train + n_val..].to_vec();
+    train.sort_unstable();
+    val.sort_unstable();
+    test.sort_unstable();
+    Splits { train, val, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_are_disjoint_and_cover() {
+        let mut rng = Rng::new(1);
+        let s = make_splits(1000, 0.5, 0.2, &mut rng);
+        assert_eq!(s.train.len(), 500);
+        assert_eq!(s.val.len(), 200);
+        assert_eq!(s.test.len(), 300);
+        let mut all: Vec<u32> = s
+            .train
+            .iter()
+            .chain(&s.val)
+            .chain(&s.test)
+            .copied()
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 1000);
+    }
+
+    #[test]
+    fn train_fraction_subsamples_only_train() {
+        let mut rng = Rng::new(2);
+        let s = make_splits(1000, 0.5, 0.2, &mut rng);
+        let sub = s.with_train_fraction(0.1, &mut rng);
+        assert_eq!(sub.train.len(), 50);
+        assert_eq!(sub.val, s.val);
+        assert_eq!(sub.test, s.test);
+        // subsample is a subset of the original train set
+        assert!(sub.train.iter().all(|u| s.train.binary_search(u).is_ok()));
+    }
+
+    #[test]
+    fn fraction_clamps() {
+        let mut rng = Rng::new(3);
+        let s = make_splits(100, 0.3, 0.1, &mut rng);
+        assert_eq!(s.train.len(), 30);
+        let sub = s.with_train_fraction(0.0, &mut rng);
+        assert_eq!(sub.train.len(), 1);
+        let full = s.with_train_fraction(2.0, &mut rng);
+        assert_eq!(full.train.len(), 30);
+    }
+}

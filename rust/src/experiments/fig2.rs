@@ -1,0 +1,93 @@
+//! Fig. 2 — inference accuracy vs time per method, sweeping the
+//! computational budget (aux/sampled nodes) at a fixed bucket budget.
+//! One pretrained model per setting is evaluated by every method, as in
+//! the paper ("the same pretrained model and varying computational
+//! budgets").
+
+use anyhow::Result;
+
+use super::runner::{self, Env};
+use crate::bench_harness::{secs, Table};
+use crate::cli::Args;
+use crate::config::ExpScale;
+use crate::inference::fullgraph;
+use crate::util::Rng;
+
+pub const SWEEP_METHODS: [&str; 5] = [
+    "node-wise IBMB",
+    "batch-wise IBMB",
+    "fixed random", // "IBMB, rand batch." in the paper's Fig. 2
+    "neighbor sampling",
+    "shaDow",
+];
+
+pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
+    let mut env = Env::load()?;
+    let ds_name = args.get_or("dataset", "synth-arxiv");
+    let model = args.get_or("model", "gcn");
+    let ds = runner::dataset(ds_name, scale, 1);
+    eprintln!(
+        "[fig2] {ds_name} ({} nodes), model {model}: pretraining…",
+        ds.graph.num_nodes()
+    );
+    let trained =
+        runner::train_once(&mut env, &ds, model, "node-wise IBMB", scale, 1)?;
+
+    let budgets = [4usize, 8, 16, 32];
+    let mut table = Table::new(&[
+        "method",
+        "aux budget",
+        "test acc (%)",
+        "time (s)",
+        "batches",
+    ]);
+    for method in SWEEP_METHODS {
+        for &b in &budgets {
+            let rep = runner::infer_once(
+                &mut env,
+                &ds,
+                model,
+                &trained.state,
+                method,
+                Some(b),
+                &ds.splits.test,
+                7,
+            )?;
+            table.row(&[
+                method.to_string(),
+                b.to_string(),
+                format!("{:.1}", rep.accuracy * 100.0),
+                secs(rep.seconds),
+                rep.batches.to_string(),
+            ]);
+        }
+    }
+    // full-batch (exact sparse host inference) reference row
+    let t = crate::util::Timer::start();
+    let meta = env
+        .rt
+        .manifest
+        .bucket_meta(model, "infer", 1)
+        .unwrap()
+        .clone();
+    let fb = fullgraph::full_graph_inference(
+        &meta,
+        &trained.state,
+        &ds,
+        &ds.splits.test,
+    );
+    let _ = t;
+    table.row(&[
+        "full-batch (exact)".into(),
+        "-".into(),
+        format!("{:.1}", fb.accuracy * 100.0),
+        secs(fb.seconds),
+        "1".into(),
+    ]);
+    table.print(&format!(
+        "Fig. 2 — inference accuracy vs time ({ds_name}, {model})"
+    ));
+    // Pareto check: IBMB should dominate the top-left corner
+    let _ = Rng::new(0);
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Fig. 3 — training convergence: validation accuracy vs wall-clock
+//! time per method. Prints each method's convergence curve (log-time
+//! series) plus the time-to-target summary the paper's "up to 17x
+//! faster convergence" claim is read from.
+
+use anyhow::Result;
+
+use super::runner::{self, Env, MAIN_METHODS};
+use crate::bench_harness::{secs, Table};
+use crate::cli::Args;
+use crate::config::ExpScale;
+
+pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
+    let mut env = Env::load()?;
+    let ds_name = args.get_or("dataset", "synth-arxiv");
+    let model = args.get_or("model", "gcn");
+    let ds = runner::dataset(ds_name, scale, 2);
+    eprintln!(
+        "[fig3] {ds_name} ({} nodes), model {model}, {} epochs",
+        ds.graph.num_nodes(),
+        scale.epochs
+    );
+
+    let mut results = Vec::new();
+    for method in MAIN_METHODS {
+        let mut accs = Vec::new();
+        let mut t_to = Vec::new();
+        let mut per_epoch = Vec::new();
+        let mut curve: Vec<(f64, f64)> = Vec::new();
+        for seed in 0..scale.seeds as u64 {
+            let res =
+                runner::train_once(&mut env, &ds, model, method, scale, seed)?;
+            accs.push(res.best_val_acc * 100.0);
+            per_epoch.push(res.mean_epoch_s);
+            if seed == 0 {
+                curve = res
+                    .history
+                    .iter()
+                    .map(|r| (r.wall_s, r.val_acc * 100.0))
+                    .collect();
+            }
+            if let Some(t) = runner::time_to_accuracy(&res, 0.60) {
+                t_to.push(t);
+            }
+        }
+        results.push((method, accs, t_to, per_epoch, curve));
+    }
+
+    let mut table = Table::new(&[
+        "method",
+        "best val acc (%)",
+        "per-epoch (s)",
+        "time to 60% (s)",
+    ]);
+    for (method, accs, t_to, per_epoch, curve) in &results {
+        use crate::util::stats::{mean, std_dev};
+        table.row(&[
+            method.to_string(),
+            crate::bench_harness::pm(mean(accs), std_dev(accs)),
+            secs(mean(per_epoch)),
+            if t_to.is_empty() {
+                "-".into()
+            } else {
+                secs(mean(t_to))
+            },
+        ]);
+        // convergence series (seed 0) for plotting
+        let pts: Vec<String> = curve
+            .iter()
+            .map(|(t, a)| format!("({t:.2}s,{a:.1}%)"))
+            .collect();
+        eprintln!("[fig3] {method}: {}", pts.join(" "));
+    }
+    table.print(&format!(
+        "Fig. 3 — training convergence ({ds_name}, {model})"
+    ));
+    Ok(())
+}

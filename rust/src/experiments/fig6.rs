@@ -1,0 +1,57 @@
+//! Fig. 6 — output-node partitioning ablation: node-wise IBMB vs
+//! batch-wise IBMB vs fixed random batches (same influence-based aux
+//! selection everywhere). Both IBMB partitions should converge faster
+//! and higher than random batching.
+
+use anyhow::Result;
+
+use super::runner::{self, Env};
+use crate::bench_harness::{secs, Table};
+use crate::cli::Args;
+use crate::config::ExpScale;
+
+const METHODS: [&str; 3] =
+    ["node-wise IBMB", "batch-wise IBMB", "fixed random"];
+
+pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
+    let mut env = Env::load()?;
+    let ds_name = args.get_or("dataset", "synth-arxiv");
+    let model = args.get_or("model", "gcn");
+    let ds = runner::dataset(ds_name, scale, 6);
+
+    let mut table = Table::new(&[
+        "partitioning",
+        "best val acc (%)",
+        "per-epoch (s)",
+        "time to 60% (s)",
+    ]);
+    for method in METHODS {
+        use crate::util::stats::{mean, std_dev};
+        let mut accs = Vec::new();
+        let mut t60 = Vec::new();
+        let mut pe = Vec::new();
+        for seed in 0..scale.seeds as u64 {
+            let res =
+                runner::train_once(&mut env, &ds, model, method, scale, seed)?;
+            accs.push(res.best_val_acc * 100.0);
+            pe.push(res.mean_epoch_s);
+            if let Some(t) = runner::time_to_accuracy(&res, 0.60) {
+                t60.push(t);
+            }
+        }
+        table.row(&[
+            method.to_string(),
+            crate::bench_harness::pm(mean(&accs), std_dev(&accs)),
+            secs(mean(&pe)),
+            if t60.is_empty() {
+                "-".into()
+            } else {
+                secs(mean(&t60))
+            },
+        ]);
+    }
+    table.print(&format!(
+        "Fig. 6 — partitioning ablation ({ds_name}, {model})"
+    ));
+    Ok(())
+}

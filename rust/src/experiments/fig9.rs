@@ -1,0 +1,48 @@
+//! Fig. 9 (appendix) — the pretraining method does not change the
+//! Fig. 2 findings: models trained with GraphSAINT-RW instead of
+//! node-wise IBMB produce the same method ranking at inference.
+
+use anyhow::Result;
+
+use super::runner::{self, Env};
+use crate::bench_harness::{secs, Table};
+use crate::cli::Args;
+use crate::config::ExpScale;
+
+pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
+    let mut env = Env::load()?;
+    let ds_name = args.get_or("dataset", "synth-arxiv");
+    let model = args.get_or("model", "gcn");
+    let ds = runner::dataset(ds_name, scale, 9);
+    eprintln!("[fig9] pretraining with GraphSAINT-RW…");
+    let trained =
+        runner::train_once(&mut env, &ds, model, "GraphSAINT-RW", scale, 9)?;
+
+    let mut table = Table::new(&[
+        "inference method",
+        "test acc (%)",
+        "time (s)",
+    ]);
+    for method in super::fig2::SWEEP_METHODS {
+        let rep = runner::infer_once(
+            &mut env,
+            &ds,
+            model,
+            &trained.state,
+            method,
+            None,
+            &ds.splits.test,
+            9,
+        )?;
+        table.row(&[
+            method.to_string(),
+            format!("{:.1}", rep.accuracy * 100.0),
+            secs(rep.seconds),
+        ]);
+    }
+    table.print(&format!(
+        "Fig. 9 — inference ranking with GraphSAINT-pretrained model \
+         ({ds_name}, {model})"
+    ));
+    Ok(())
+}

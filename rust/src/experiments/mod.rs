@@ -1,0 +1,19 @@
+//! Experiment drivers — one module per paper table/figure (DESIGN.md §5
+//! experiment index). Every module exposes `run(&ExpScale, &Args)` and
+//! prints rows/series in the paper's shape; the `rust/benches/*`
+//! targets are thin wrappers around these.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod runner;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+
+pub use runner::Env;

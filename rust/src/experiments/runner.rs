@@ -1,0 +1,131 @@
+//! Shared experiment plumbing: runtime discovery, dataset construction,
+//! method instantiation from presets, and the train/infer one-liners the
+//! per-figure drivers compose.
+
+use anyhow::{Context, Result};
+
+use crate::baselines;
+use crate::batching::{BatchCache, BatchGenerator};
+use crate::config::{preset_for, ExpScale};
+use crate::datasets::{sbm, spec_by_name, Dataset};
+use crate::inference::{infer_with_batches, InferReport};
+use crate::runtime::{ModelState, Runtime};
+use crate::training::{train, TrainConfig, TrainResult};
+use crate::util::Rng;
+
+/// The methods of the paper's main comparison, in table order.
+pub const MAIN_METHODS: [&str; 7] = [
+    "neighbor sampling",
+    "LADIES",
+    "GraphSAINT-RW",
+    "shaDow",
+    "Cluster-GCN",
+    "batch-wise IBMB",
+    "node-wise IBMB",
+];
+
+/// Shared experiment environment.
+pub struct Env {
+    pub rt: Runtime,
+}
+
+impl Env {
+    /// Locate `artifacts/` (env `IBMB_ARTIFACTS` overrides) and start
+    /// the PJRT runtime.
+    pub fn load() -> Result<Env> {
+        let dir = std::env::var("IBMB_ARTIFACTS").unwrap_or_else(|_| {
+            // tolerate running from target subdirs
+            for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+                if std::path::Path::new(cand).join("manifest.json").exists() {
+                    return cand.to_string();
+                }
+            }
+            "artifacts".to_string()
+        });
+        let rt = Runtime::load(&dir)
+            .with_context(|| "run `make artifacts` first")?;
+        Ok(Env { rt })
+    }
+}
+
+/// Build a dataset at the experiment scale.
+pub fn dataset(name: &str, scale: &ExpScale, seed: u64) -> Dataset {
+    let spec = spec_by_name(name)
+        .unwrap_or_else(|| panic!("unknown dataset {name}"))
+        .scaled(scale.dataset_factor);
+    sbm::generate(&spec, seed)
+}
+
+/// Instantiate a method from the dataset preset. `aux_override`
+/// replaces the preset aux budget (Fig. 2's sweep knob).
+pub fn generator(
+    method: &str,
+    ds_name: &str,
+    aux_override: Option<usize>,
+) -> Box<dyn BatchGenerator> {
+    let p = preset_for(ds_name);
+    let aux = aux_override.unwrap_or(p.aux_per_output);
+    baselines::by_name(method, aux, p.num_batches, p.node_budget)
+        .unwrap_or_else(|| panic!("unknown method {method}"))
+}
+
+/// Train one (model, method) configuration.
+pub fn train_once(
+    env: &mut Env,
+    ds: &Dataset,
+    model: &str,
+    method: &str,
+    scale: &ExpScale,
+    seed: u64,
+) -> Result<TrainResult> {
+    let mut gen = generator(method, &ds.name, None);
+    let cfg = TrainConfig {
+        model: model.to_string(),
+        epochs: scale.epochs,
+        seed,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed ^ 0xE9E1);
+    train(&mut env.rt, ds, &cfg, gen.as_mut(), &mut rng)
+}
+
+/// Inference over the test split with a trained state.
+#[allow(clippy::too_many_arguments)]
+pub fn infer_once(
+    env: &mut Env,
+    ds: &Dataset,
+    model: &str,
+    state: &ModelState,
+    method: &str,
+    aux_override: Option<usize>,
+    eval: &[u32],
+    seed: u64,
+) -> Result<InferReport> {
+    let mut gen = generator(method, &ds.name, aux_override);
+    let mut rng = Rng::new(seed ^ 0x1F3A);
+    // fixed methods: preprocessing outside the timed region
+    let cache = if gen.is_fixed() {
+        Some(BatchCache::build(&gen.generate(ds, eval, &mut rng)))
+    } else {
+        None
+    };
+    infer_with_batches(
+        &mut env.rt,
+        ds,
+        model,
+        state,
+        gen.as_mut(),
+        cache.as_ref(),
+        eval,
+        &mut rng,
+    )
+}
+
+/// Seconds until the convergence curve first reaches `target_acc`
+/// (None if never).
+pub fn time_to_accuracy(res: &TrainResult, target_acc: f64) -> Option<f64> {
+    res.history
+        .iter()
+        .find(|r| r.val_acc >= target_acc)
+        .map(|r| r.wall_s)
+}

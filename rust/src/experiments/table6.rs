@@ -1,0 +1,66 @@
+//! Table 6 — main-memory usage per method: graph + batch cache + model
+//! state + padded buffers. IBMB can use more memory (overlapping
+//! batches) or less (ignores irrelevant graph regions) than baselines.
+
+use anyhow::Result;
+
+use super::runner::{self, Env, MAIN_METHODS};
+use crate::batching::{BatchCache, DenseBatch};
+use crate::bench_harness::Table;
+use crate::cli::Args;
+use crate::config::ExpScale;
+use crate::runtime::ModelState;
+use crate::util::Rng;
+
+fn gib(bytes: usize) -> String {
+    // MiB resolution: smoke-scale numbers round to zero in GiB
+    format!("{:.2}", bytes as f64 / (1 << 20) as f64)
+}
+
+pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
+    let env = Env::load()?;
+    let ds_name = args.get_or("dataset", "synth-arxiv");
+    let model = args.get_or("model", "gcn");
+    let ds = runner::dataset(ds_name, scale, 11);
+
+    let mut table = Table::new(&[
+        "method",
+        "dataset (MiB)",
+        "batch cache (MiB)",
+        "buffers+state (MiB)",
+        "total (MiB)",
+    ]);
+    for method in MAIN_METHODS {
+        let mut gen = runner::generator(method, &ds.name, None);
+        let mut rng = Rng::new(11);
+        let cache =
+            BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+        let max_nodes = cache.max_batch_nodes();
+        let meta = env
+            .rt
+            .manifest
+            .bucket_meta(model, "train", max_nodes)
+            .expect("bucket");
+        let state = ModelState::init(meta, 11);
+        let buffers = 2 * DenseBatch::zeros(meta.n_pad, meta.feat).memory_bytes();
+        // global methods keep the whole dataset resident; IBMB can drop
+        // it after preprocessing (paper: "removes the dataset from
+        // memory after preprocessing")
+        let keeps_dataset = !gen.is_fixed()
+            || matches!(method, "Cluster-GCN" | "GraphSAINT-RW" | "LADIES");
+        let ds_bytes = if keeps_dataset { ds.memory_bytes() } else { 0 };
+        let total =
+            ds_bytes + cache.memory_bytes() + state.memory_bytes() + buffers;
+        table.row(&[
+            method.to_string(),
+            gib(ds_bytes),
+            gib(cache.memory_bytes()),
+            gib(state.memory_bytes() + buffers),
+            gib(total),
+        ]);
+    }
+    table.print(&format!(
+        "Table 6 — main-memory usage ({ds_name}, {model})"
+    ));
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Table 7 — the paper's flagship end-to-end grid: per (dataset, model,
+//! method) the preprocessing time, per-epoch time, inference time, and
+//! test accuracy under (a) the same mini-batching method and (b) exact
+//! full-batch inference.
+
+use anyhow::Result;
+
+use super::runner::{self, Env, MAIN_METHODS};
+use crate::bench_harness::{pm, secs, Table};
+use crate::cli::Args;
+use crate::config::ExpScale;
+use crate::inference::fullgraph;
+use crate::util::stats::{mean, std_dev};
+
+pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
+    let mut env = Env::load()?;
+    let default_settings = if args.flag("full") {
+        "synth-arxiv:gcn,synth-arxiv:gat,synth-arxiv:sage,\
+         synth-products:gcn,synth-reddit:gcn,synth-papers:gcn"
+    } else {
+        "synth-arxiv:gcn"
+    };
+    let settings: Vec<(String, String)> = args
+        .get_or("settings", default_settings)
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            let (d, m) = s.trim().split_once(':').expect("dataset:model");
+            (d.to_string(), m.to_string())
+        })
+        .collect();
+
+    for (ds_name, model) in settings {
+        let ds = runner::dataset(&ds_name, scale, 12);
+        eprintln!(
+            "[table7] {ds_name} ({} nodes, {} train), {model}",
+            ds.graph.num_nodes(),
+            ds.splits.train.len()
+        );
+        let mut table = Table::new(&[
+            "method",
+            "preprocess (s)",
+            "per-epoch (s)",
+            "inference (s)",
+            "acc same (%)",
+            "acc full-batch (%)",
+        ]);
+        // exact full-batch reference timing (once per setting)
+        let mut fb_secs = 0.0;
+        for method in MAIN_METHODS {
+            let mut pre = Vec::new();
+            let mut per_epoch = Vec::new();
+            let mut inf = Vec::new();
+            let mut acc_same = Vec::new();
+            let mut acc_fb = Vec::new();
+            for seed in 0..scale.seeds as u64 {
+                let res = runner::train_once(
+                    &mut env, &ds, &model, method, scale, seed,
+                )?;
+                pre.push(res.preprocess_s);
+                per_epoch.push(res.mean_epoch_s);
+                let rep = runner::infer_once(
+                    &mut env,
+                    &ds,
+                    &model,
+                    &res.state,
+                    method,
+                    None,
+                    &ds.splits.test,
+                    seed,
+                )?;
+                inf.push(rep.seconds);
+                acc_same.push(rep.accuracy * 100.0);
+                let fb = fullgraph::full_graph_inference(
+                    &res.meta_train,
+                    &res.state,
+                    &ds,
+                    &ds.splits.test,
+                );
+                fb_secs = fb.seconds;
+                acc_fb.push(fb.accuracy * 100.0);
+            }
+            table.row(&[
+                method.to_string(),
+                secs(mean(&pre)),
+                secs(mean(&per_epoch)),
+                secs(mean(&inf)),
+                pm(mean(&acc_same), std_dev(&acc_same)),
+                pm(mean(&acc_fb), std_dev(&acc_fb)),
+            ]);
+        }
+        table.row(&[
+            "full-batch (exact)".into(),
+            "-".into(),
+            "-".into(),
+            secs(fb_secs),
+            "-".into(),
+            "-".into(),
+        ]);
+        table.print(&format!("Table 7 — {ds_name}, {model}"));
+    }
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Construction of preprocessed [`CsrGraph`]s from edge lists.
+//!
+//! Mirrors the paper's preprocessing (App. B): "we first make the graph
+//! undirected, and add self-loops. The adjacency matrix is symmetrically
+//! normalized" — the normalization cache lives on [`CsrGraph`].
+
+use super::csr::CsrGraph;
+
+/// Accumulates (possibly directed, possibly duplicated) edges and builds
+/// the canonical undirected + self-loop CSR form.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    num_nodes: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl GraphBuilder {
+    pub fn new(num_nodes: usize) -> GraphBuilder {
+        GraphBuilder {
+            num_nodes,
+            edges: Vec::new(),
+        }
+    }
+
+    /// Add a (directed) edge; the builder symmetrizes at `build` time.
+    #[inline]
+    pub fn add_edge(&mut self, u: u32, v: u32) {
+        debug_assert!((u as usize) < self.num_nodes);
+        debug_assert!((v as usize) < self.num_nodes);
+        self.edges.push((u, v));
+    }
+
+    pub fn num_pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build the canonical graph: undirected, deduplicated, self loops
+    /// on every node, sorted neighbor lists.
+    pub fn build(mut self) -> CsrGraph {
+        let n = self.num_nodes;
+        // symmetrize + self loops
+        let dir_edges = self.edges.len();
+        self.edges.reserve(dir_edges + n);
+        for i in 0..dir_edges {
+            let (u, v) = self.edges[i];
+            if u != v {
+                self.edges.push((v, u));
+            }
+        }
+        for u in 0..n as u32 {
+            self.edges.push((u, u));
+        }
+        // counting sort into CSR rows
+        let mut counts = vec![0u32; n + 1];
+        for &(u, _) in &self.edges {
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0u32; self.edges.len()];
+        let mut cursor = counts.clone();
+        for &(u, v) in &self.edges {
+            indices[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+        }
+        // sort + dedup each row, then compact
+        let mut out_indptr = vec![0u32; n + 1];
+        let mut out_indices = Vec::with_capacity(indices.len());
+        for u in 0..n {
+            let row = &mut indices[counts[u] as usize..counts[u + 1] as usize];
+            row.sort_unstable();
+            let mut prev = u32::MAX;
+            for &v in row.iter() {
+                if v != prev {
+                    out_indices.push(v);
+                    prev = v;
+                }
+            }
+            out_indptr[u + 1] = out_indices.len() as u32;
+        }
+        CsrGraph::from_csr(out_indptr, out_indices)
+    }
+}
+
+/// Convenience: build the canonical graph straight from an edge list.
+pub fn from_edges(num_nodes: usize, edges: &[(u32, u32)]) -> CsrGraph {
+    let mut b = GraphBuilder::new(num_nodes);
+    for &(u, v) in edges {
+        b.add_edge(u, v);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetrizes_dedups_and_adds_self_loops() {
+        // duplicated directed edges, both directions supplied once
+        let g = from_edges(4, &[(0, 1), (0, 1), (1, 0), (2, 3)]);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.neighbors(0), &[0, 1]);
+        assert_eq!(g.neighbors(1), &[0, 1]);
+        assert_eq!(g.neighbors(2), &[2, 3]);
+        assert_eq!(g.neighbors(3), &[2, 3]);
+    }
+
+    #[test]
+    fn isolated_nodes_get_self_loops() {
+        let g = from_edges(3, &[]);
+        for u in 0..3 {
+            assert_eq!(g.neighbors(u), &[u]);
+            assert_eq!(g.degree(u), 1);
+        }
+    }
+
+    #[test]
+    fn explicit_self_loop_not_duplicated() {
+        let g = from_edges(2, &[(0, 0), (0, 1)]);
+        assert_eq!(g.neighbors(0), &[0, 1]);
+    }
+
+    #[test]
+    fn larger_random_graph_is_valid() {
+        let mut rng = crate::util::Rng::new(5);
+        let n = 500;
+        let mut edges = Vec::new();
+        for _ in 0..3000 {
+            edges.push((
+                rng.next_below(n) as u32,
+                rng.next_below(n) as u32,
+            ));
+        }
+        let g = from_edges(n, &edges);
+        assert!(g.validate().is_ok());
+        assert!(g.num_edges() >= n); // at least the self loops
+    }
+}

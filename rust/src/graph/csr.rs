@@ -1,0 +1,156 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! The whole pipeline assumes the preprocessed convention of the paper
+//! (App. B): graphs are undirected, have self loops, and carry cached
+//! symmetric normalization factors `d^{-1/2}` so batch densification can
+//! fill normalized adjacency blocks without recomputing degrees.
+
+/// An immutable CSR graph over `u32` node ids.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    /// Row offsets, length `n + 1`.
+    pub indptr: Vec<u32>,
+    /// Column indices (neighbors), length `m`.
+    pub indices: Vec<u32>,
+    /// Cached `1/sqrt(deg)` per node (degree counts self loops).
+    pub inv_sqrt_deg: Vec<f32>,
+}
+
+impl CsrGraph {
+    /// Build from raw CSR arrays; computes the normalization cache.
+    pub fn from_csr(indptr: Vec<u32>, indices: Vec<u32>) -> CsrGraph {
+        assert!(!indptr.is_empty());
+        assert_eq!(*indptr.last().unwrap() as usize, indices.len());
+        let n = indptr.len() - 1;
+        let mut inv_sqrt_deg = Vec::with_capacity(n);
+        for u in 0..n {
+            let deg = (indptr[u + 1] - indptr[u]) as f32;
+            inv_sqrt_deg.push(if deg > 0.0 { deg.sqrt().recip() } else { 0.0 });
+        }
+        CsrGraph {
+            indptr,
+            indices,
+            inv_sqrt_deg,
+        }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Number of directed edge slots (undirected edges count twice;
+    /// self loops once).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Degree of node `u` (including self loop if present).
+    #[inline]
+    pub fn degree(&self, u: u32) -> usize {
+        (self.indptr[u as usize + 1] - self.indptr[u as usize]) as usize
+    }
+
+    /// Neighbor slice of node `u`.
+    #[inline]
+    pub fn neighbors(&self, u: u32) -> &[u32] {
+        &self.indices
+            [self.indptr[u as usize] as usize..self.indptr[u as usize + 1] as usize]
+    }
+
+    /// Symmetric normalization weight of edge `(u, v)`:
+    /// `1/sqrt(deg(u) * deg(v))`.
+    #[inline]
+    pub fn norm_weight(&self, u: u32, v: u32) -> f32 {
+        self.inv_sqrt_deg[u as usize] * self.inv_sqrt_deg[v as usize]
+    }
+
+    /// True if `v` is in `u`'s (sorted) neighbor list.
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Mean degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes() == 0 {
+            return 0.0;
+        }
+        self.num_edges() as f64 / self.num_nodes() as f64
+    }
+
+    /// Bytes of the CSR arrays (for Table 6 memory accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.indptr.len() * 4 + self.indices.len() * 4 + self.inv_sqrt_deg.len() * 4
+    }
+
+    /// Structural validation: sorted rows, ids in range, symmetry.
+    /// Used by tests and the dataset loader.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_nodes() as u32;
+        for u in 0..n {
+            let nbrs = self.neighbors(u);
+            for w in nbrs.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {u} not strictly sorted"));
+                }
+            }
+            for &v in nbrs {
+                if v >= n {
+                    return Err(format!("edge ({u},{v}) out of range"));
+                }
+                if !self.has_edge(v, u) {
+                    return Err(format!("edge ({u},{v}) not symmetric"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> CsrGraph {
+        // 0 - 1 - 2 with self loops
+        CsrGraph::from_csr(vec![0, 2, 5, 7], vec![0, 1, 0, 1, 2, 1, 2])
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = path3();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 7);
+        assert_eq!(g.degree(1), 3);
+        assert_eq!(g.neighbors(0), &[0, 1]);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn norm_weights_match_definition() {
+        let g = path3();
+        let w = g.norm_weight(0, 1);
+        assert!((w - 1.0 / (2.0f32 * 3.0).sqrt()).abs() < 1e-6);
+        assert_eq!(g.norm_weight(0, 1), g.norm_weight(1, 0));
+    }
+
+    #[test]
+    fn validate_accepts_good_graph() {
+        assert!(path3().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_asymmetric() {
+        let g = CsrGraph::from_csr(vec![0, 1, 1], vec![1]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let g = path3();
+        assert_eq!(g.memory_bytes(), 4 * 4 + 7 * 4 + 3 * 4);
+    }
+}

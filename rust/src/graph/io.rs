@@ -1,0 +1,105 @@
+//! Binary on-disk format for preprocessed graphs.
+//!
+//! The paper caches the preprocessed (undirected, self-looped,
+//! normalized) adjacency "for graph partitioning and mini-batching";
+//! this module is that cache. Format (little endian):
+//!
+//! ```text
+//! magic "IBMBGRPH" | u64 n | u64 m | u32 indptr[n+1] | u32 indices[m]
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csr::CsrGraph;
+
+const MAGIC: &[u8; 8] = b"IBMBGRPH";
+
+pub fn save(g: &CsrGraph, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.num_nodes() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    write_u32s(&mut w, &g.indptr)?;
+    write_u32s(&mut w, &g.indices)?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<CsrGraph> {
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let indptr = read_u32s(&mut r, n + 1)?;
+    let indices = read_u32s(&mut r, m)?;
+    if indptr.last().copied().unwrap_or(1) as usize != m {
+        bail!("{path:?}: inconsistent indptr");
+    }
+    Ok(CsrGraph::from_csr(indptr, indices))
+}
+
+fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    // bulk little-endian write
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_edges;
+
+    #[test]
+    fn roundtrip() {
+        let g = from_edges(5, &[(0, 1), (1, 2), (3, 4), (0, 4)]);
+        let dir = std::env::temp_dir().join("ibmb_test_graph_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.bin");
+        save(&g, &path).unwrap();
+        let g2 = load(&path).unwrap();
+        assert_eq!(g.indptr, g2.indptr);
+        assert_eq!(g.indices, g2.indices);
+        assert_eq!(g.inv_sqrt_deg, g2.inv_sqrt_deg);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("ibmb_test_graph_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTAGRPH0000000000000000").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

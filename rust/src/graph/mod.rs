@@ -1,0 +1,15 @@
+//! Graph substrate: CSR storage, construction transforms (undirected-ize,
+//! self loops, symmetric normalization), induced subgraph extraction with
+//! relabeling, and a binary on-disk format.
+//!
+//! Everything downstream — PPR, partitioning, batch generation — operates
+//! on [`CsrGraph`].
+
+pub mod builder;
+pub mod csr;
+pub mod io;
+pub mod subgraph;
+
+pub use builder::GraphBuilder;
+pub use csr::CsrGraph;
+pub use subgraph::{induced_subgraph, Subgraph};

@@ -1,0 +1,121 @@
+//! Induced-subgraph extraction — the "subgraph generation" step of IBMB
+//! (paper §3.1): a mini-batch is the subgraph induced by the selected
+//! output + auxiliary nodes, with local (relabeled) node ids.
+
+use super::csr::CsrGraph;
+
+/// An induced subgraph with a local-id edge list.
+///
+/// `nodes[i]` is the global id of local node `i`. Edges are directed
+/// slots `(src, dst)` in local ids, including self loops, with the
+/// *global* symmetric normalization weight attached (the paper re-uses
+/// global normalization factors instead of recomputing per batch —
+/// App. B "Preprocessing").
+#[derive(Debug, Clone)]
+pub struct Subgraph {
+    pub nodes: Vec<u32>,
+    pub edges: Vec<(u32, u32)>,
+    pub weights: Vec<f32>,
+}
+
+impl Subgraph {
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+    /// Bytes of this subgraph's arrays (Table 6 accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes.len() * 4 + self.edges.len() * 8 + self.weights.len() * 4
+    }
+}
+
+/// Extract the subgraph induced by `nodes` (global ids, deduplicated by
+/// the caller or not — duplicates are removed here, order of first
+/// occurrence is preserved so output nodes can stay in front).
+pub fn induced_subgraph(g: &CsrGraph, nodes: &[u32]) -> Subgraph {
+    // local id map; u32::MAX = absent
+    let mut local = vec![u32::MAX; g.num_nodes()];
+    let mut uniq = Vec::with_capacity(nodes.len());
+    for &u in nodes {
+        if local[u as usize] == u32::MAX {
+            local[u as usize] = uniq.len() as u32;
+            uniq.push(u);
+        }
+    }
+    let mut edges = Vec::new();
+    let mut weights = Vec::new();
+    for (lu, &u) in uniq.iter().enumerate() {
+        for &v in g.neighbors(u) {
+            let lv = local[v as usize];
+            if lv != u32::MAX {
+                edges.push((lu as u32, lv));
+                weights.push(g.norm_weight(u, v));
+            }
+        }
+    }
+    Subgraph {
+        nodes: uniq,
+        edges,
+        weights,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_edges;
+
+    fn sample() -> CsrGraph {
+        // triangle 0-1-2 plus pendant 3 attached to 2
+        from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)])
+    }
+
+    #[test]
+    fn induces_internal_edges_only() {
+        let g = sample();
+        let s = induced_subgraph(&g, &[0, 1]);
+        assert_eq!(s.nodes, vec![0, 1]);
+        // self loops (0,0),(1,1) + edge both directions
+        let mut e = s.edges.clone();
+        e.sort_unstable();
+        assert_eq!(e, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn preserves_first_occurrence_order_and_dedups() {
+        let g = sample();
+        let s = induced_subgraph(&g, &[2, 0, 2, 3]);
+        assert_eq!(s.nodes, vec![2, 0, 3]);
+    }
+
+    #[test]
+    fn weights_are_global_normalization() {
+        let g = sample();
+        let s = induced_subgraph(&g, &[2, 3]);
+        // find local edge (0,1) == global (2,3)
+        let idx = s
+            .edges
+            .iter()
+            .position(|&(a, b)| a == 0 && b == 1)
+            .unwrap();
+        assert!((s.weights[idx] - g.norm_weight(2, 3)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn full_node_set_recovers_graph_edge_count() {
+        let g = sample();
+        let s = induced_subgraph(&g, &[0, 1, 2, 3]);
+        assert_eq!(s.num_edges(), g.num_edges());
+        assert_eq!(s.num_nodes(), 4);
+    }
+
+    #[test]
+    fn empty_selection() {
+        let g = sample();
+        let s = induced_subgraph(&g, &[]);
+        assert_eq!(s.num_nodes(), 0);
+        assert_eq!(s.num_edges(), 0);
+    }
+}

@@ -1,0 +1,436 @@
+//! Exact sparse full-graph forward pass on the host CPU.
+//!
+//! Reimplements the L2 models (GCN / GraphSAGE / GAT) over CSR edges in
+//! plain Rust. Two roles:
+//!
+//! 1. The **"Full-batch"** baseline of Table 7 / Fig. 2 — exact
+//!    inference over the entire graph, which is accurate but slow and
+//!    memory-hungry, exactly the trade-off the paper reports.
+//! 2. A **cross-language oracle**: on a single mini-batch subgraph this
+//!    must match the AOT artifact's `infer_step` to f32 tolerance
+//!    (integration test `rust/tests/parity.rs`), validating the whole
+//!    Python→HLO→PJRT path end to end.
+
+use crate::datasets::Dataset;
+use crate::runtime::{ArtifactMeta, ModelState};
+
+/// Borrowed sparse graph view (full graph or batch subgraph).
+#[derive(Debug, Clone, Copy)]
+pub struct SparseGraphRef<'a> {
+    pub n: usize,
+    pub edge_src: &'a [u32],
+    pub edge_dst: &'a [u32],
+    pub weights: &'a [f32],
+}
+
+fn tensor<'a>(state: &'a ModelState, meta: &ArtifactMeta, name: &str) -> &'a [f32] {
+    state
+        .tensor(meta, name)
+        .unwrap_or_else(|| panic!("missing param {name}"))
+}
+
+/// dst-accumulating sparse aggregation: `out[d] += w * h[s]`.
+fn spmm(g: &SparseGraphRef, h: &[f32], dim: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for ((&s, &d), &w) in g
+        .edge_src
+        .iter()
+        .zip(g.edge_dst)
+        .zip(g.weights)
+    {
+        let (s, d) = (s as usize * dim, d as usize * dim);
+        let (src, dst) = (&h[s..s + dim], &mut out[d..d + dim]);
+        for (o, &x) in dst.iter_mut().zip(src) {
+            *o += w * x;
+        }
+    }
+}
+
+/// Row-major dense `x [n, in] @ w [in, out] + b`.
+fn linear(x: &[f32], n: usize, d_in: usize, w: &[f32], b: &[f32], d_out: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d_out];
+    for i in 0..n {
+        let xi = &x[i * d_in..(i + 1) * d_in];
+        let oi = &mut out[i * d_out..(i + 1) * d_out];
+        oi.copy_from_slice(&b[..d_out]);
+        for (k, &xv) in xi.iter().enumerate() {
+            if xv != 0.0 {
+                let wr = &w[k * d_out..(k + 1) * d_out];
+                for (o, &wv) in oi.iter_mut().zip(wr) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn layernorm_relu(x: &mut [f32], n: usize, dim: usize, g: &[f32], b: &[f32]) {
+    const EPS: f32 = 1e-5;
+    for i in 0..n {
+        let row = &mut x[i * dim..(i + 1) * dim];
+        let mean: f32 = row.iter().sum::<f32>() / dim as f32;
+        let var: f32 =
+            row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / dim as f32;
+        let rstd = (var + EPS).sqrt().recip();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = ((*v - mean) * rstd * g[j] + b[j]).max(0.0);
+        }
+    }
+}
+
+fn gat_layer(
+    meta: &ArtifactMeta,
+    state: &ModelState,
+    l: usize,
+    g: &SparseGraphRef,
+    h: &[f32],
+    d_in: usize,
+) -> (Vec<f32>, usize) {
+    let last = l == meta.layers - 1;
+    let heads = if last { 1 } else { meta.heads };
+    let w = tensor(state, meta, &format!("l{l}.w"));
+    let b = tensor(state, meta, &format!("l{l}.b"));
+    let a_src = tensor(state, meta, &format!("l{l}.a_src"));
+    let a_dst = tensor(state, meta, &format!("l{l}.a_dst"));
+    let d_total = b.len();
+    let dh = d_total / heads;
+    let hw = linear(h, g.n, d_in, w, &vec![0.0; d_total], d_total);
+    let mut out = vec![0.0f32; g.n * d_total];
+
+    // per-destination softmax over incoming edges, per head
+    for hd in 0..heads {
+        // s_row[i] = hw_i . a_src[hd] (row/attending side = destination),
+        // s_col[j] = hw_j . a_dst[hd] (column/source side) — matching the
+        // dense kernel's scores = s_src + s_dst^T with row = dst.
+        let mut s_row = vec![0.0f32; g.n];
+        let mut s_col = vec![0.0f32; g.n];
+        for i in 0..g.n {
+            let v = &hw[i * d_total + hd * dh..i * d_total + (hd + 1) * dh];
+            s_row[i] = v
+                .iter()
+                .zip(&a_src[hd * dh..(hd + 1) * dh])
+                .map(|(a, b)| a * b)
+                .sum();
+            s_col[i] = v
+                .iter()
+                .zip(&a_dst[hd * dh..(hd + 1) * dh])
+                .map(|(a, b)| a * b)
+                .sum();
+        }
+        // two passes over edges grouped by destination: max, then expsum
+        let mut row_max = vec![f32::NEG_INFINITY; g.n];
+        for (&s, &d) in g.edge_src.iter().zip(g.edge_dst) {
+            let raw = s_row[d as usize] + s_col[s as usize];
+            let sc = if raw >= 0.0 { raw } else { 0.2 * raw };
+            row_max[d as usize] = row_max[d as usize].max(sc);
+        }
+        let mut row_sum = vec![0.0f32; g.n];
+        let mut edge_e = vec![0.0f32; g.edge_src.len()];
+        for (e, (&s, &d)) in g.edge_src.iter().zip(g.edge_dst).enumerate() {
+            let raw = s_row[d as usize] + s_col[s as usize];
+            let sc = if raw >= 0.0 { raw } else { 0.2 * raw };
+            let v = (sc - row_max[d as usize]).exp();
+            edge_e[e] = v;
+            row_sum[d as usize] += v;
+        }
+        for (e, (&s, &d)) in g.edge_src.iter().zip(g.edge_dst).enumerate() {
+            let attn = edge_e[e] / row_sum[d as usize];
+            let src =
+                &hw[s as usize * d_total + hd * dh..s as usize * d_total + (hd + 1) * dh];
+            let dst = &mut out
+                [d as usize * d_total + hd * dh..d as usize * d_total + (hd + 1) * dh];
+            for (o, &x) in dst.iter_mut().zip(src) {
+                *o += attn * x;
+            }
+        }
+    }
+    for i in 0..g.n {
+        for j in 0..d_total {
+            out[i * d_total + j] += b[j];
+        }
+    }
+    (out, d_total)
+}
+
+/// Exact forward pass; returns logits `[n * classes]`, row-major.
+/// Mirrors `python/compile/model.py::forward` with `train=False`.
+pub fn forward(
+    meta: &ArtifactMeta,
+    state: &ModelState,
+    g: &SparseGraphRef,
+    x: &[f32],
+) -> Vec<f32> {
+    assert_eq!(x.len(), g.n * meta.feat);
+    let mut h = x.to_vec();
+    let mut dim = meta.feat;
+    let mut agg = vec![0.0f32; g.n * dim];
+    for l in 0..meta.layers {
+        let (mut next, d_out) = match meta.model.as_str() {
+            "gcn" => {
+                if agg.len() != g.n * dim {
+                    agg = vec![0.0; g.n * dim];
+                }
+                spmm(g, &h, dim, &mut agg);
+                let w = tensor(state, meta, &format!("l{l}.w"));
+                let b = tensor(state, meta, &format!("l{l}.b"));
+                let d_out = b.len();
+                (linear(&agg, g.n, dim, w, b, d_out), d_out)
+            }
+            "sage" => {
+                if agg.len() != g.n * dim {
+                    agg = vec![0.0; g.n * dim];
+                }
+                spmm(g, &h, dim, &mut agg);
+                // concat [h ‖ Âh]
+                let mut cat = vec![0.0f32; g.n * dim * 2];
+                for i in 0..g.n {
+                    cat[i * 2 * dim..i * 2 * dim + dim]
+                        .copy_from_slice(&h[i * dim..(i + 1) * dim]);
+                    cat[i * 2 * dim + dim..(i + 1) * 2 * dim]
+                        .copy_from_slice(&agg[i * dim..(i + 1) * dim]);
+                }
+                let w = tensor(state, meta, &format!("l{l}.w"));
+                let b = tensor(state, meta, &format!("l{l}.b"));
+                let d_out = b.len();
+                (linear(&cat, g.n, 2 * dim, w, b, d_out), d_out)
+            }
+            "gat" => gat_layer(meta, state, l, g, &h, dim),
+            other => panic!("unknown model {other}"),
+        };
+        if l != meta.layers - 1 {
+            let gm = tensor(state, meta, &format!("l{l}.ln_g"));
+            let bt = tensor(state, meta, &format!("l{l}.ln_b"));
+            layernorm_relu(&mut next, g.n, d_out, gm, bt);
+        }
+        h = next;
+        dim = d_out;
+    }
+    h
+}
+
+/// Report of a full-graph inference run.
+#[derive(Debug, Clone, Copy)]
+pub struct FullGraphReport {
+    pub accuracy: f64,
+    pub seconds: f64,
+    /// Peak transient bytes (features + two activation buffers).
+    pub bytes: usize,
+}
+
+/// Exact inference over the whole dataset graph; accuracy on `eval_nodes`.
+pub fn full_graph_inference(
+    meta: &ArtifactMeta,
+    state: &ModelState,
+    ds: &Dataset,
+    eval_nodes: &[u32],
+) -> FullGraphReport {
+    let t = crate::util::Timer::start();
+    let n = ds.graph.num_nodes();
+    // materialize features and edges (this is the memory cost the paper
+    // attributes to full-batch inference)
+    let mut x = vec![0.0f32; n * ds.feat_dim];
+    for u in 0..n as u32 {
+        ds.node_features_into(
+            u,
+            &mut x[u as usize * ds.feat_dim..(u as usize + 1) * ds.feat_dim],
+        );
+    }
+    let m = ds.graph.num_edges();
+    let mut edge_src = Vec::with_capacity(m);
+    let mut edge_dst = Vec::with_capacity(m);
+    let mut weights = Vec::with_capacity(m);
+    for u in 0..n as u32 {
+        for &v in ds.graph.neighbors(u) {
+            // aggregation into u from v
+            edge_src.push(v);
+            edge_dst.push(u);
+            weights.push(ds.graph.norm_weight(u, v));
+        }
+    }
+    let g = SparseGraphRef {
+        n,
+        edge_src: &edge_src,
+        edge_dst: &edge_dst,
+        weights: &weights,
+    };
+    let logits = forward(meta, state, &g, &x);
+    let c = meta.classes;
+    let mut correct = 0usize;
+    for &u in eval_nodes {
+        let row = &logits[u as usize * c..(u as usize + 1) * c];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == ds.labels[u as usize] as usize {
+            correct += 1;
+        }
+    }
+    let bytes = x.len() * 4 + (edge_src.len() + edge_dst.len()) * 4
+        + weights.len() * 4
+        + 2 * n * meta.hidden.max(meta.feat) * 4;
+    FullGraphReport {
+        accuracy: correct as f64 / eval_nodes.len().max(1) as f64,
+        seconds: t.elapsed_s(),
+        bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn toy_meta(model: &str) -> ArtifactMeta {
+        // layout for feat=4, hidden=4, classes=2, layers=2, heads=2
+        let params = match model {
+            "gcn" => vec![
+                ("l0.w", vec![4, 4]),
+                ("l0.b", vec![4]),
+                ("l0.ln_g", vec![4]),
+                ("l0.ln_b", vec![4]),
+                ("l1.w", vec![4, 2]),
+                ("l1.b", vec![2]),
+            ],
+            "sage" => vec![
+                ("l0.w", vec![8, 4]),
+                ("l0.b", vec![4]),
+                ("l0.ln_g", vec![4]),
+                ("l0.ln_b", vec![4]),
+                ("l1.w", vec![8, 2]),
+                ("l1.b", vec![2]),
+            ],
+            "gat" => vec![
+                ("l0.w", vec![4, 4]),
+                ("l0.b", vec![4]),
+                ("l0.a_src", vec![2, 2]),
+                ("l0.a_dst", vec![2, 2]),
+                ("l0.ln_g", vec![4]),
+                ("l0.ln_b", vec![4]),
+                ("l1.w", vec![4, 2]),
+                ("l1.b", vec![2]),
+                ("l1.a_src", vec![1, 2]),
+                ("l1.a_dst", vec![1, 2]),
+            ],
+            _ => unreachable!(),
+        };
+        let mut entries = String::new();
+        let mut off = 0usize;
+        for (i, (name, shape)) in params.iter().enumerate() {
+            let size: usize = shape.iter().product();
+            if i > 0 {
+                entries.push(',');
+            }
+            entries.push_str(&format!(
+                r#"{{"name": "{name}", "shape": {shape:?}, "offset": {off}, "size": {size}}}"#
+            ));
+            off += size;
+        }
+        let doc = format!(
+            r#"{{"version": 1, "artifacts": [{{"id": "t", "model": "{model}",
+             "kind": "infer", "n_pad": 16, "feat": 4, "classes": 2,
+             "hidden": 4, "layers": 2, "heads": 2, "dropout": 0.0,
+             "weight_decay": 0.0, "param_count": {off},
+             "params": [{entries}], "path": "t.hlo.txt"}}]}}"#
+        );
+        Manifest::parse(&doc).unwrap().artifacts[0].clone()
+    }
+
+    fn ring_graph(n: usize) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+        // ring with self loops, uniform weights (deg 3)
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        let mut w = Vec::new();
+        for u in 0..n as u32 {
+            for v in [
+                u,
+                (u + 1) % n as u32,
+                (u + n as u32 - 1) % n as u32,
+            ] {
+                src.push(v);
+                dst.push(u);
+                w.push(1.0 / 3.0);
+            }
+        }
+        (src, dst, w)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness_all_models() {
+        for model in ["gcn", "sage", "gat"] {
+            let meta = toy_meta(model);
+            let state = ModelState::init(&meta, 3);
+            let n = 12;
+            let (src, dst, w) = ring_graph(n);
+            let g = SparseGraphRef {
+                n,
+                edge_src: &src,
+                edge_dst: &dst,
+                weights: &w,
+            };
+            let x: Vec<f32> = (0..n * 4).map(|i| (i as f32 * 0.37).sin()).collect();
+            let out = forward(&meta, &state, &g, &x);
+            assert_eq!(out.len(), n * 2, "{model}");
+            assert!(out.iter().all(|v| v.is_finite()), "{model}");
+        }
+    }
+
+    #[test]
+    fn gcn_aggregation_uses_weights() {
+        let meta = toy_meta("gcn");
+        let state = ModelState::init(&meta, 4);
+        let n = 8;
+        let (src, dst, w) = ring_graph(n);
+        let g = SparseGraphRef {
+            n,
+            edge_src: &src,
+            edge_dst: &dst,
+            weights: &w,
+        };
+        let x: Vec<f32> = (0..n * 4).map(|i| (i % 7) as f32).collect();
+        let a = forward(&meta, &state, &g, &x);
+        let w2: Vec<f32> = w.iter().map(|v| v * 2.0).collect();
+        let g2 = SparseGraphRef {
+            weights: &w2,
+            ..g
+        };
+        let b = forward(&meta, &state, &g2, &x);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn gat_attention_rows_are_convex() {
+        // constant value vectors propagate unchanged through attention;
+        // use W = I by setting params manually is overkill — instead
+        // check permutation equivariance on a symmetric ring.
+        let meta = toy_meta("gat");
+        let state = ModelState::init(&meta, 5);
+        let n = 10;
+        let (src, dst, w) = ring_graph(n);
+        let g = SparseGraphRef {
+            n,
+            edge_src: &src,
+            edge_dst: &dst,
+            weights: &w,
+        };
+        let x: Vec<f32> = (0..n * 4).map(|i| ((i * 13 % 11) as f32) * 0.1).collect();
+        let out = forward(&meta, &state, &g, &x);
+        // rotate node features by one ring position => output rotates
+        let mut x_rot = vec![0.0; n * 4];
+        for i in 0..n {
+            x_rot[((i + 1) % n) * 4..((i + 1) % n) * 4 + 4]
+                .copy_from_slice(&x[i * 4..i * 4 + 4]);
+        }
+        let out_rot = forward(&meta, &state, &g, &x_rot);
+        for i in 0..n {
+            let a = &out[i * 2..i * 2 + 2];
+            let b = &out_rot[((i + 1) % n) * 2..((i + 1) % n) * 2 + 2];
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-4, "node {i}: {x} vs {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Inference drivers.
+//!
+//! * [`driver`] — mini-batched inference through the AOT executables:
+//!   any [`crate::batching::BatchGenerator`]'s batches, prefetched and
+//!   padded, produce per-output-node predictions (the paper's Fig. 2 /
+//!   Table 7 "Inference" and "Same method" columns).
+//! * [`fullgraph`] — an exact sparse forward pass over the *whole*
+//!   graph on the host, standing in for the paper's chunked full-batch
+//!   GPU inference (Table 7 "Full-batch" column). Also serves as a
+//!   numerical cross-check of the AOT artifacts: on a single batch the
+//!   two paths must agree to f32 tolerance.
+
+pub mod driver;
+pub mod fullgraph;
+
+pub use driver::{infer_with_batches, InferReport};

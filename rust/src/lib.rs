@@ -1,0 +1,41 @@
+//! # IBMB — Influence-Based Mini-Batching for Graph Neural Networks
+//!
+//! A Rust + JAX + Pallas reproduction of *"Influence-Based Mini-Batching
+//! for Graph Neural Networks"* (Gasteiger, Qian & Günnemann, 2022) as a
+//! three-layer data pipeline:
+//!
+//! * **Layer 3 (this crate)** — the IBMB pipeline itself: graph store,
+//!   approximate personalized PageRank, output-node partitioning
+//!   (PPR-distance merging and a from-scratch multilevel METIS-like
+//!   partitioner), influence-maximal auxiliary-node selection, contiguous
+//!   batch caching, KL-divergence batch scheduling, a prefetching loader,
+//!   the training/inference drivers, and all five baseline mini-batching
+//!   methods from the paper's evaluation.
+//! * **Layer 2** — JAX GNN models (GCN/GAT/GraphSAGE) with a fused
+//!   fwd+bwd+Adam train step, AOT-lowered to HLO text by
+//!   `python/compile/aot.py` (build time only).
+//! * **Layer 1** — Pallas kernels for the compute hot-spots (VMEM-tiled
+//!   dense-block SpMM, masked GAT attention, fused LayerNorm+ReLU).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) — Python is never on the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment
+//! index mapping each paper table/figure to a bench target.
+
+pub mod baselines;
+pub mod batching;
+#[path = "bench_harness.rs"] pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod datasets;
+pub mod experiments;
+pub mod graph;
+pub mod inference;
+pub mod partition;
+pub mod pipeline;
+pub mod ppr;
+pub mod runtime;
+pub mod scheduler;
+pub mod training;
+pub mod util;

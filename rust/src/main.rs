@@ -1,0 +1,159 @@
+//! `ibmb` — launcher CLI for the IBMB pipeline.
+//!
+//! ```text
+//! ibmb train   --dataset synth-arxiv --model gcn --method "node-wise IBMB" --epochs 40
+//! ibmb infer   --dataset synth-arxiv --model gcn --method "node-wise IBMB"
+//! ibmb gen-data --dataset synth-arxiv --out data/arxiv.bin
+//! ibmb fig2|fig3|...|table7 [--full] [--dataset ...] [--model ...]
+//! ibmb list    # artifacts + datasets
+//! ```
+
+use anyhow::Result;
+
+use ibmb::cli::Args;
+use ibmb::config::ExpScale;
+use ibmb::datasets::ALL_DATASETS;
+use ibmb::experiments::{self, runner};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: ibmb <train|infer|gen-data|list|fig2..fig9|table5..table7> \
+         [--dataset NAME] [--model gcn|gat|sage] [--method NAME] \
+         [--epochs N] [--seed N] [--scale F] [--full]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let scale = {
+        let mut s = ExpScale::from_args(
+            &args.flags.iter().map(|f| format!("--{f}")).collect::<Vec<_>>(),
+        );
+        if let Some(f) = args.get("scale") {
+            s.dataset_factor = f.parse().unwrap_or(s.dataset_factor);
+        }
+        if let Some(e) = args.get("epochs") {
+            s.epochs = e.parse().unwrap_or(s.epochs);
+        }
+        if let Some(n) = args.get("seeds") {
+            s.seeds = n.parse().unwrap_or(s.seeds);
+        }
+        s
+    };
+    match args.subcommand.as_deref() {
+        Some("list") => {
+            let env = runner::Env::load()?;
+            println!("artifacts:");
+            for a in &env.rt.manifest.artifacts {
+                println!(
+                    "  {} (n_pad={}, params={})",
+                    a.id, a.n_pad, a.param_count
+                );
+            }
+            println!("datasets:");
+            for d in ALL_DATASETS {
+                println!(
+                    "  {} ({} nodes, deg~{}, train {:.1}%)",
+                    d.name,
+                    d.nodes,
+                    d.avg_degree,
+                    d.train_frac * 100.0
+                );
+            }
+        }
+        Some("gen-data") => {
+            let name = args.get_or("dataset", "synth-arxiv");
+            let ds = runner::dataset(name, &scale, args.get_u64("seed", 0));
+            let out = args.get_or("out", "data/graph.bin").to_string();
+            if let Some(parent) = std::path::Path::new(&out).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            ibmb::graph::io::save(&ds.graph, std::path::Path::new(&out))?;
+            println!(
+                "wrote {} ({} nodes, {} edges) to {out}",
+                name,
+                ds.graph.num_nodes(),
+                ds.graph.num_edges()
+            );
+        }
+        Some("train") => {
+            let mut env = runner::Env::load()?;
+            let ds_name = args.get_or("dataset", "synth-arxiv");
+            let model = args.get_or("model", "gcn");
+            let method = args.get_or("method", "node-wise IBMB");
+            let ds = runner::dataset(ds_name, &scale, args.get_u64("seed", 0));
+            let res = runner::train_once(
+                &mut env,
+                &ds,
+                model,
+                method,
+                &scale,
+                args.get_u64("seed", 0),
+            )?;
+            println!(
+                "{method} on {ds_name}/{model}: preprocess {:.2}s, \
+                 {:.3}s/epoch × {} epochs, best val acc {:.1}%, \
+                 prefetch overlap {:.2}",
+                res.preprocess_s,
+                res.mean_epoch_s,
+                res.epochs_run,
+                res.best_val_acc * 100.0,
+                res.overlap_ratio
+            );
+            for r in &res.history {
+                println!(
+                    "  epoch {:3}  t={:7.2}s  train_loss={:.4}  \
+                     val_loss={:.4}  val_acc={:.3}  lr={:.5}",
+                    r.epoch, r.wall_s, r.train_loss, r.val_loss, r.val_acc, r.lr
+                );
+            }
+        }
+        Some("infer") => {
+            let mut env = runner::Env::load()?;
+            let ds_name = args.get_or("dataset", "synth-arxiv");
+            let model = args.get_or("model", "gcn");
+            let method = args.get_or("method", "node-wise IBMB");
+            let ds = runner::dataset(ds_name, &scale, args.get_u64("seed", 0));
+            let trained = runner::train_once(
+                &mut env,
+                &ds,
+                model,
+                "node-wise IBMB",
+                &scale,
+                args.get_u64("seed", 0),
+            )?;
+            let rep = runner::infer_once(
+                &mut env,
+                &ds,
+                model,
+                &trained.state,
+                method,
+                None,
+                &ds.splits.test,
+                args.get_u64("seed", 0),
+            )?;
+            println!(
+                "{method} inference on {ds_name}/{model}: acc {:.1}%, \
+                 {:.3}s, {} batches, pad utilization {:.2}",
+                rep.accuracy * 100.0,
+                rep.seconds,
+                rep.batches,
+                rep.pad_utilization
+            );
+        }
+        Some("fig2") => experiments::fig2::run(&scale, &args)?,
+        Some("fig3") => experiments::fig3::run(&scale, &args)?,
+        Some("fig4") => experiments::fig4::run(&scale, &args)?,
+        Some("fig5") => experiments::fig5::run(&scale, &args)?,
+        Some("fig6") => experiments::fig6::run(&scale, &args)?,
+        Some("fig7") => experiments::fig7::run(&scale, &args)?,
+        Some("fig8") => experiments::fig8::run(&scale, &args)?,
+        Some("fig9") => experiments::fig9::run(&scale, &args)?,
+        Some("table5") => experiments::table5::run(&scale, &args)?,
+        Some("table6") => experiments::table6::run(&scale, &args)?,
+        Some("table7") => experiments::table7::run(&scale, &args)?,
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,462 @@
+//! From-scratch multilevel k-way graph partitioner (METIS stand-in).
+//!
+//! The paper uses METIS [Karypis & Kumar 1998] for graph-partition-based
+//! output-node batching and for Cluster-GCN. libmetis is unavailable
+//! offline, so we implement the same multilevel scheme:
+//!
+//! 1. **Coarsening** — repeated heavy-edge matching collapses matched
+//!    pairs until the graph is small (`<= coarse_target` nodes).
+//! 2. **Initial partition** — greedy BFS region growing on the coarsest
+//!    graph into `k` balanced parts.
+//! 3. **Uncoarsening + refinement** — project the partition back level
+//!    by level, running boundary Kernighan–Lin style moves that reduce
+//!    edge cut subject to a balance constraint.
+
+use crate::graph::CsrGraph;
+use crate::util::Rng;
+
+/// Partitioner knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MetisConfig {
+    /// Stop coarsening when at most this many (weighted) nodes remain,
+    /// scaled by `k`.
+    pub coarse_factor: usize,
+    /// Refinement passes per level.
+    pub refine_passes: usize,
+    /// Allowed imbalance: max part weight <= (1 + slack) * ideal.
+    pub balance_slack: f64,
+}
+
+impl Default for MetisConfig {
+    fn default() -> Self {
+        MetisConfig {
+            coarse_factor: 30,
+            refine_passes: 4,
+            balance_slack: 0.10,
+        }
+    }
+}
+
+/// A coarsening level: weighted graph + mapping to the finer level.
+struct Level {
+    /// CSR adjacency with edge weights (parallel arrays).
+    indptr: Vec<u32>,
+    indices: Vec<u32>,
+    eweights: Vec<u32>,
+    /// Node weights (number of original nodes collapsed).
+    nweights: Vec<u32>,
+    /// For each finer-level node, its coarse node id (empty at level 0).
+    fine_to_coarse: Vec<u32>,
+}
+
+impl Level {
+    fn n(&self) -> usize {
+        self.indptr.len() - 1
+    }
+    fn neighbors(&self, u: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let s = self.indptr[u as usize] as usize;
+        let e = self.indptr[u as usize + 1] as usize;
+        self.indices[s..e]
+            .iter()
+            .copied()
+            .zip(self.eweights[s..e].iter().copied())
+    }
+}
+
+fn level_from_graph(g: &CsrGraph) -> Level {
+    // drop self loops; unit edge/node weights
+    let n = g.num_nodes();
+    let mut indptr = vec![0u32; n + 1];
+    let mut indices = Vec::with_capacity(g.num_edges());
+    for u in 0..n as u32 {
+        for &v in g.neighbors(u) {
+            if v != u {
+                indices.push(v);
+            }
+        }
+        indptr[u as usize + 1] = indices.len() as u32;
+    }
+    let ew = vec![1u32; indices.len()];
+    Level {
+        indptr,
+        indices,
+        eweights: ew,
+        nweights: vec![1; n],
+        fine_to_coarse: Vec::new(),
+    }
+}
+
+/// Heavy-edge matching: visit nodes in random order, match each
+/// unmatched node to its unmatched neighbor with maximum edge weight.
+fn heavy_edge_matching(level: &Level, rng: &mut Rng) -> (Vec<u32>, usize) {
+    let n = level.n();
+    let mut matched = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut coarse_n = 0usize;
+    for &u in &order {
+        if matched[u as usize] != u32::MAX {
+            continue;
+        }
+        let mut best = u;
+        let mut best_w = 0u32;
+        for (v, w) in level.neighbors(u) {
+            if matched[v as usize] == u32::MAX && v != u && w > best_w {
+                best = v;
+                best_w = w;
+            }
+        }
+        matched[u as usize] = best;
+        matched[best as usize] = u;
+        coarse_n += 1;
+    }
+    // assign coarse ids in deterministic fine order
+    let mut coarse_id = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for u in 0..n as u32 {
+        if coarse_id[u as usize] == u32::MAX {
+            coarse_id[u as usize] = next;
+            let m = matched[u as usize];
+            if m != u && coarse_id[m as usize] == u32::MAX {
+                coarse_id[m as usize] = next;
+            }
+            next += 1;
+        }
+    }
+    (coarse_id, coarse_n.max(next as usize))
+}
+
+/// Contract a level along a matching.
+fn contract(level: &Level, coarse_id: &[u32]) -> Level {
+    let cn = coarse_id.iter().copied().max().map_or(0, |m| m + 1) as usize;
+    let mut nweights = vec![0u32; cn];
+    for u in 0..level.n() {
+        nweights[coarse_id[u] as usize] += level.nweights[u];
+    }
+    // accumulate coarse edges via hashmap per row
+    let mut rows: Vec<std::collections::HashMap<u32, u32>> =
+        vec![std::collections::HashMap::new(); cn];
+    for u in 0..level.n() as u32 {
+        let cu = coarse_id[u as usize];
+        for (v, w) in level.neighbors(u) {
+            let cv = coarse_id[v as usize];
+            if cu != cv {
+                *rows[cu as usize].entry(cv).or_insert(0) += w;
+            }
+        }
+    }
+    let mut indptr = vec![0u32; cn + 1];
+    let mut indices = Vec::new();
+    let mut eweights = Vec::new();
+    for (c, row) in rows.iter().enumerate() {
+        let mut es: Vec<(u32, u32)> = row.iter().map(|(&v, &w)| (v, w)).collect();
+        es.sort_unstable();
+        for (v, w) in es {
+            indices.push(v);
+            eweights.push(w);
+        }
+        indptr[c + 1] = indices.len() as u32;
+    }
+    Level {
+        indptr,
+        indices,
+        eweights,
+        nweights,
+        fine_to_coarse: coarse_id.to_vec(),
+    }
+}
+
+/// Greedy BFS region growing into `k` parts on the coarsest level.
+fn initial_partition(level: &Level, k: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = level.n();
+    let total_w: u64 = level.nweights.iter().map(|&w| w as u64).sum();
+    let ideal = (total_w as f64 / k as f64).ceil() as u64;
+    let mut part = vec![u32::MAX; n];
+    let mut weights = vec![0u64; k];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut oi = 0;
+    for p in 0..k as u32 {
+        // find an unassigned seed
+        while oi < n && part[order[oi] as usize] != u32::MAX {
+            oi += 1;
+        }
+        if oi >= n {
+            break;
+        }
+        let seed = order[oi];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(seed);
+        while let Some(u) = queue.pop_front() {
+            if part[u as usize] != u32::MAX {
+                continue;
+            }
+            if weights[p as usize] + level.nweights[u as usize] as u64
+                > ideal + 1
+            {
+                break;
+            }
+            part[u as usize] = p;
+            weights[p as usize] += level.nweights[u as usize] as u64;
+            for (v, _) in level.neighbors(u) {
+                if part[v as usize] == u32::MAX {
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    // assign stragglers to the lightest part
+    for u in 0..n {
+        if part[u] == u32::MAX {
+            let p = (0..k).min_by_key(|&p| weights[p]).unwrap();
+            part[u] = p as u32;
+            weights[p] += level.nweights[u] as u64;
+        }
+    }
+    part
+}
+
+/// One boundary-refinement pass: move boundary nodes to the neighboring
+/// part with maximal gain if balance permits. Returns moves made.
+fn refine_pass(
+    level: &Level,
+    part: &mut [u32],
+    k: usize,
+    weights: &mut [u64],
+    max_w: u64,
+) -> usize {
+    let n = level.n();
+    let mut moves = 0;
+    let mut conn = vec![0i64; k];
+    for u in 0..n as u32 {
+        let pu = part[u as usize];
+        // connectivity of u to each part
+        let mut touched: Vec<u32> = Vec::new();
+        for (v, w) in level.neighbors(u) {
+            let pv = part[v as usize];
+            if conn[pv as usize] == 0 {
+                touched.push(pv);
+            }
+            conn[pv as usize] += w as i64;
+        }
+        let mut best_p = pu;
+        let mut best_gain = 0i64;
+        for &p in &touched {
+            if p == pu {
+                continue;
+            }
+            let gain = conn[p as usize] - conn[pu as usize];
+            let fits = weights[p as usize]
+                + level.nweights[u as usize] as u64
+                <= max_w;
+            if gain > best_gain && fits {
+                best_gain = gain;
+                best_p = p;
+            }
+        }
+        for &p in &touched {
+            conn[p as usize] = 0;
+        }
+        if best_p != pu {
+            weights[pu as usize] -= level.nweights[u as usize] as u64;
+            weights[best_p as usize] += level.nweights[u as usize] as u64;
+            part[u as usize] = best_p;
+            moves += 1;
+        }
+    }
+    moves
+}
+
+/// Edge cut of a node->part assignment on the original graph.
+pub fn edge_cut(g: &CsrGraph, part: &[u32]) -> usize {
+    let mut cut = 0;
+    for u in 0..g.num_nodes() as u32 {
+        for &v in g.neighbors(u) {
+            if v != u && part[u as usize] != part[v as usize] {
+                cut += 1;
+            }
+        }
+    }
+    cut / 2
+}
+
+/// Multilevel k-way partition of `g`; returns a part id per node.
+pub fn partition_graph(
+    g: &CsrGraph,
+    k: usize,
+    cfg: &MetisConfig,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let k = k.max(1);
+    if k == 1 {
+        return vec![0; g.num_nodes()];
+    }
+    // 1. coarsen
+    let mut levels = vec![level_from_graph(g)];
+    let target = cfg.coarse_factor * k;
+    loop {
+        let last = levels.last().unwrap();
+        if last.n() <= target {
+            break;
+        }
+        let (coarse_id, _) = heavy_edge_matching(last, rng);
+        let next = contract(last, &coarse_id);
+        if next.n() as f64 > last.n() as f64 * 0.95 {
+            // matching stalled (e.g. star graphs) — stop coarsening
+            levels.push(next);
+            break;
+        }
+        levels.push(next);
+    }
+
+    // 2. initial partition on coarsest
+    let coarsest = levels.last().unwrap();
+    let mut part = initial_partition(coarsest, k, rng);
+
+    // 3. uncoarsen + refine
+    let total_w: u64 = levels[0].nweights.iter().map(|&w| w as u64).sum();
+    let max_w = ((total_w as f64 / k as f64) * (1.0 + cfg.balance_slack))
+        .ceil() as u64;
+    for li in (0..levels.len()).rev() {
+        let level = &levels[li];
+        let mut weights = vec![0u64; k];
+        for u in 0..level.n() {
+            weights[part[u] as usize] += level.nweights[u] as u64;
+        }
+        for _ in 0..cfg.refine_passes {
+            if refine_pass(level, &mut part, k, &mut weights, max_w) == 0 {
+                break;
+            }
+        }
+        // project to finer level
+        if li > 0 {
+            let map = &level.fine_to_coarse;
+            let finer_n = levels[li - 1].n();
+            let mut fine_part = vec![0u32; finer_n];
+            for u in 0..finer_n {
+                fine_part[u] = part[map[u] as usize];
+            }
+            part = fine_part;
+        }
+    }
+    part
+}
+
+/// Partition *output nodes* via a graph partition: partition the whole
+/// graph into `num_batches` parts and group the output nodes by part —
+/// exactly how the paper (and Cluster-GCN) derive output batches.
+pub fn metis_output_partition(
+    g: &CsrGraph,
+    out_nodes: &[u32],
+    num_batches: usize,
+    cfg: &MetisConfig,
+    rng: &mut Rng,
+) -> super::Partition {
+    let part = partition_graph(g, num_batches, cfg, rng);
+    let mut batches: Vec<Vec<u32>> = vec![Vec::new(); num_batches];
+    for &u in out_nodes {
+        batches[part[u as usize] as usize].push(u);
+    }
+    batches.retain(|b| !b.is_empty());
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{sbm, DatasetSpec};
+    use crate::graph::builder::from_edges;
+    use crate::partition::validate_partition;
+
+    #[test]
+    fn partitions_are_complete_and_in_range() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 30);
+        let mut rng = Rng::new(0);
+        let part = partition_graph(&ds.graph, 6, &MetisConfig::default(), &mut rng);
+        assert_eq!(part.len(), ds.graph.num_nodes());
+        assert!(part.iter().all(|&p| p < 6));
+        let mut sizes = vec![0usize; 6];
+        for &p in &part {
+            sizes[p as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
+    }
+
+    #[test]
+    fn balance_is_respected() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 31);
+        let mut rng = Rng::new(1);
+        let k = 4;
+        let part = partition_graph(&ds.graph, k, &MetisConfig::default(), &mut rng);
+        let mut sizes = vec![0usize; k];
+        for &p in &part {
+            sizes[p as usize] += 1;
+        }
+        let ideal = ds.graph.num_nodes() as f64 / k as f64;
+        for &s in &sizes {
+            assert!(
+                (s as f64) < ideal * 1.35,
+                "part size {s} vs ideal {ideal}"
+            );
+        }
+    }
+
+    #[test]
+    fn cut_beats_random_partition() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 32);
+        let g = &ds.graph;
+        let mut rng = Rng::new(2);
+        let k = 6;
+        let part = partition_graph(g, k, &MetisConfig::default(), &mut rng);
+        let random: Vec<u32> = (0..g.num_nodes())
+            .map(|_| rng.next_below(k) as u32)
+            .collect();
+        let cut = edge_cut(g, &part);
+        let rcut = edge_cut(g, &random);
+        assert!(
+            (cut as f64) < rcut as f64 * 0.6,
+            "cut {cut} vs random {rcut}"
+        );
+    }
+
+    #[test]
+    fn two_cliques_are_separated() {
+        // two K5s joined by one edge: the obvious bisection
+        let mut edges = Vec::new();
+        for a in 0..5u32 {
+            for b in (a + 1)..5 {
+                edges.push((a, b));
+                edges.push((a + 5, b + 5));
+            }
+        }
+        edges.push((0, 5));
+        let g = from_edges(10, &edges);
+        let mut rng = Rng::new(3);
+        let part = partition_graph(&g, 2, &MetisConfig::default(), &mut rng);
+        assert_eq!(edge_cut(&g, &part), 1);
+    }
+
+    #[test]
+    fn output_partition_groups_by_part() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 33);
+        let mut rng = Rng::new(4);
+        let out = ds.splits.train.clone();
+        let p = metis_output_partition(
+            &ds.graph,
+            &out,
+            5,
+            &MetisConfig::default(),
+            &mut rng,
+        );
+        assert!(validate_partition(&p, &out).is_ok());
+        assert!(p.len() <= 5);
+    }
+
+    #[test]
+    fn k_one_is_trivial() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 34);
+        let mut rng = Rng::new(5);
+        let part = partition_graph(&ds.graph, 1, &MetisConfig::default(), &mut rng);
+        assert!(part.iter().all(|&p| p == 0));
+    }
+}

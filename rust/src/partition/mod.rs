@@ -1,0 +1,80 @@
+//! Output-node partitioning (paper §3.2).
+//!
+//! Splits the output nodes (train/val/test ids) into batches so that
+//! nodes sharing influential neighborhoods land together:
+//!
+//! * [`pprdist`] — greedy PPR-distance merging: scan PPR entries by
+//!   descending magnitude, union the batches of the two endpoints while
+//!   respecting the size cap (the paper's streaming-friendly variant).
+//! * [`metis`] — a from-scratch multilevel k-way graph partitioner
+//!   (heavy-edge-matching coarsening → greedy growth → boundary
+//!   Kernighan–Lin refinement), standing in for libmetis. Used by
+//!   batch-wise IBMB and the Cluster-GCN baseline.
+//! * [`random`] — fixed random batches (the "Fixed random" ablation of
+//!   Fig. 6 and the `IBMB, rand batch.` line of Fig. 2).
+
+pub mod metis;
+pub mod pprdist;
+pub mod random;
+
+/// A partition of output nodes into batches (global node ids).
+pub type Partition = Vec<Vec<u32>>;
+
+/// Balance = max batch size / ideal size (1.0 is perfect).
+pub fn balance(p: &Partition) -> f64 {
+    let total: usize = p.iter().map(|b| b.len()).sum();
+    if p.is_empty() || total == 0 {
+        return 1.0;
+    }
+    let max = p.iter().map(|b| b.len()).max().unwrap();
+    max as f64 / (total as f64 / p.len() as f64)
+}
+
+/// Asserts structural sanity: disjoint, covering `expected` ids exactly.
+pub fn validate_partition(p: &Partition, expected: &[u32]) -> Result<(), String> {
+    let mut seen = std::collections::HashSet::new();
+    for b in p {
+        if b.is_empty() {
+            return Err("empty batch".into());
+        }
+        for &u in b {
+            if !seen.insert(u) {
+                return Err(format!("node {u} in two batches"));
+            }
+        }
+    }
+    if seen.len() != expected.len() {
+        return Err(format!(
+            "covers {} of {} nodes",
+            seen.len(),
+            expected.len()
+        ));
+    }
+    for &u in expected {
+        if !seen.contains(&u) {
+            return Err(format!("node {u} missing"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balance_of_even_partition_is_one() {
+        let p: Partition = vec![vec![0, 1], vec![2, 3]];
+        assert!((balance(&p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_overlap_and_misses() {
+        let ok: Partition = vec![vec![0, 1], vec![2]];
+        assert!(validate_partition(&ok, &[0, 1, 2]).is_ok());
+        let dup: Partition = vec![vec![0, 1], vec![1]];
+        assert!(validate_partition(&dup, &[0, 1]).is_err());
+        let missing: Partition = vec![vec![0]];
+        assert!(validate_partition(&missing, &[0, 1]).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Fixed random output-node batches — the ablation baseline of Fig. 6
+//! ("Fixed random") and Fig. 2 ("IBMB, rand batch."): auxiliary nodes
+//! are still selected by influence, but output nodes are grouped with
+//! no locality, destroying the neighborhood-sharing synergy.
+
+use super::Partition;
+use crate::util::Rng;
+
+/// Shuffle `out_nodes` and chop into `num_batches` nearly-equal batches.
+pub fn random_partition(
+    out_nodes: &[u32],
+    num_batches: usize,
+    rng: &mut Rng,
+) -> Partition {
+    let b = num_batches.clamp(1, out_nodes.len().max(1));
+    let mut ids = out_nodes.to_vec();
+    rng.shuffle(&mut ids);
+    let mut out = Vec::with_capacity(b);
+    let base = ids.len() / b;
+    let extra = ids.len() % b;
+    let mut pos = 0;
+    for i in 0..b {
+        let sz = base + usize::from(i < extra);
+        if sz == 0 {
+            continue;
+        }
+        out.push(ids[pos..pos + sz].to_vec());
+        pos += sz;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::validate_partition;
+
+    #[test]
+    fn partitions_exactly() {
+        let nodes: Vec<u32> = (0..103).collect();
+        let mut rng = Rng::new(1);
+        let p = random_partition(&nodes, 8, &mut rng);
+        assert_eq!(p.len(), 8);
+        assert!(validate_partition(&p, &nodes).is_ok());
+        // sizes differ by at most one
+        let sizes: Vec<usize> = p.iter().map(|b| b.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn more_batches_than_nodes_degrades_gracefully() {
+        let nodes: Vec<u32> = (0..3).collect();
+        let mut rng = Rng::new(2);
+        let p = random_partition(&nodes, 10, &mut rng);
+        assert_eq!(p.len(), 3);
+        assert!(validate_partition(&p, &nodes).is_ok());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let nodes: Vec<u32> = (0..50).collect();
+        let p1 = random_partition(&nodes, 5, &mut Rng::new(7));
+        let p2 = random_partition(&nodes, 5, &mut Rng::new(7));
+        assert_eq!(p1, p2);
+    }
+}

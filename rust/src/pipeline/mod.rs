@@ -1,0 +1,12 @@
+//! Prefetching loader — "we fully pipeline data loading and batch
+//! creation by prefetching batches in parallel" (paper §5).
+//!
+//! A single worker thread densifies (features + adjacency fill +
+//! padding) the *next* batch while the caller executes the current one,
+//! with two rotating buffers and bounded channels for backpressure.
+//! The paper found one worker optimal ("data loading is limited by
+//! memory bandwidth, which is shared between workers") — we match that.
+
+pub mod prefetch;
+
+pub use prefetch::{run_prefetched, PrefetchStats};

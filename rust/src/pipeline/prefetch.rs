@@ -1,0 +1,161 @@
+//! Generic double-buffered prefetch executor over scoped threads
+//! (tokio is unavailable offline; std threads express the same
+//! pipeline semantics — DESIGN.md §7).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Overlap accounting for the §Perf target ("densify fully hidden
+/// behind execute").
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefetchStats {
+    /// Seconds the consumer spent blocked waiting for a buffer.
+    pub wait_s: f64,
+    /// Seconds the consumer spent executing.
+    pub consume_s: f64,
+    /// Items processed.
+    pub items: usize,
+}
+
+impl PrefetchStats {
+    /// 1.0 = producer fully hidden; 0.0 = fully serialized.
+    pub fn overlap_ratio(&self) -> f64 {
+        let total = self.wait_s + self.consume_s;
+        if total <= 0.0 {
+            return 1.0;
+        }
+        self.consume_s / total
+    }
+}
+
+/// Run `consume(i, buf)` over `order`, with `fill(i, buf)` for the next
+/// item executing concurrently on a worker thread. Two buffers rotate
+/// through bounded channels (capacity 1 each) providing backpressure.
+pub fn run_prefetched<B: Send>(
+    order: &[usize],
+    mut buf_a: B,
+    buf_b: B,
+    fill: impl Fn(usize, &mut B) + Send + Sync,
+    mut consume: impl FnMut(usize, &B),
+) -> PrefetchStats {
+    let mut stats = PrefetchStats::default();
+    if order.is_empty() {
+        return stats;
+    }
+    if order.len() == 1 {
+        // no pipeline needed
+        fill(order[0], &mut buf_a);
+        let t = Instant::now();
+        consume(order[0], &buf_a);
+        stats.consume_s = t.elapsed().as_secs_f64();
+        stats.items = 1;
+        return stats;
+    }
+
+    std::thread::scope(|scope| {
+        // filled buffers flow worker -> consumer; empties flow back
+        let (full_tx, full_rx) = mpsc::sync_channel::<(usize, B)>(1);
+        let (empty_tx, empty_rx) = mpsc::sync_channel::<B>(2);
+
+        // seed the worker with both buffers
+        fill(order[0], &mut buf_a);
+        full_tx.send((order[0], buf_a)).unwrap();
+
+        let fill_ref = &fill;
+        scope.spawn(move || {
+            let mut next = Some(buf_b);
+            for &i in &order[1..] {
+                let mut buf = match next.take() {
+                    Some(b) => b,
+                    None => match empty_rx.recv() {
+                        Ok(b) => b,
+                        Err(_) => return, // consumer dropped
+                    },
+                };
+                fill_ref(i, &mut buf);
+                if full_tx.send((i, buf)).is_err() {
+                    return;
+                }
+            }
+        });
+
+        for _ in 0..order.len() {
+            let t_wait = Instant::now();
+            let (i, buf) = full_rx.recv().expect("producer died");
+            stats.wait_s += t_wait.elapsed().as_secs_f64();
+            let t_run = Instant::now();
+            consume(i, &buf);
+            stats.consume_s += t_run.elapsed().as_secs_f64();
+            stats.items += 1;
+            let _ = empty_tx.send(buf); // worker may already be done
+        }
+    });
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn processes_all_items_in_order() {
+        let order: Vec<usize> = (0..20).collect();
+        let mut seen = Vec::new();
+        let stats = run_prefetched(
+            &order,
+            0usize,
+            0usize,
+            |i, buf| *buf = i * 10,
+            |i, buf| {
+                assert_eq!(*buf, i * 10);
+                seen.push(i);
+            },
+        );
+        assert_eq!(seen, order);
+        assert_eq!(stats.items, 20);
+    }
+
+    #[test]
+    fn single_item_and_empty() {
+        let mut count = 0;
+        let s = run_prefetched(&[7], 0u8, 0u8, |_, _| {}, |_, _| count += 1);
+        assert_eq!((count, s.items), (1, 1));
+        let s = run_prefetched(&[], 0u8, 0u8, |_, _| {}, |_, _| {});
+        assert_eq!(s.items, 0);
+    }
+
+    #[test]
+    fn producer_overlaps_consumer() {
+        // producer and consumer each sleep; pipelined wall time must be
+        // well below the serial sum
+        let order: Vec<usize> = (0..8).collect();
+        let t = Instant::now();
+        let stats = run_prefetched(
+            &order,
+            0u8,
+            0u8,
+            |_, _| std::thread::sleep(std::time::Duration::from_millis(10)),
+            |_, _| std::thread::sleep(std::time::Duration::from_millis(10)),
+        );
+        let wall = t.elapsed().as_secs_f64();
+        assert!(wall < 0.145, "no overlap: {wall}s");
+        assert!(stats.overlap_ratio() > 0.5, "{:?}", stats);
+    }
+
+    #[test]
+    fn fill_runs_once_per_item() {
+        let fills = AtomicUsize::new(0);
+        let order: Vec<usize> = (0..50).collect();
+        run_prefetched(
+            &order,
+            0u8,
+            0u8,
+            |_, _| {
+                fills.fetch_add(1, Ordering::Relaxed);
+            },
+            |_, _| {},
+        );
+        assert_eq!(fills.load(Ordering::Relaxed), 50);
+    }
+}

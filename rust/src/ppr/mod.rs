@@ -1,0 +1,24 @@
+//! Influence-score computation via personalized PageRank (paper §3).
+//!
+//! Theorem 1 reduces influence-optimal auxiliary-node selection to
+//! picking nodes with maximal expected influence, and for mean-
+//! aggregation GNNs in the `L → ∞` limit with restarts the influence
+//! score *is* personalized PageRank. Three approximations are provided:
+//!
+//! * [`push`] — node-wise approximate PPR (Andersen–Chung–Lang push
+//!   flow): `O(1/(ε α))` per root, local, exact error bound — used by
+//!   node-wise IBMB and shaDow.
+//! * [`power`] — batch-wise topic-sensitive PPR by power iteration over
+//!   a whole output-node set at once — used by batch-wise IBMB.
+//! * [`heat`] — heat-kernel diffusion, the alternative local-clustering
+//!   method of the paper's Table 5 sensitivity study.
+
+pub mod heat;
+pub mod parallel;
+pub mod power;
+pub mod push;
+pub mod topk;
+
+pub use parallel::parallel_push_ppr;
+pub use push::{push_ppr, PushConfig};
+pub use topk::top_k_indices;

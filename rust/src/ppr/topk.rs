@@ -1,0 +1,89 @@
+//! Top-k selection over sparse score vectors.
+//!
+//! Auxiliary-node selection keeps the k highest-influence nodes per
+//! output node (node-wise) or per batch (batch-wise). A partial
+//! select-nth is used instead of a full sort: the candidate sets from
+//! push PPR can be much larger than k.
+
+/// Indices of the `k` largest `scores`, in descending score order.
+/// Ties broken by smaller index for determinism.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    let cmp = |&a: &usize, &b: &usize| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    };
+    if k < scores.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_by(cmp);
+    idx
+}
+
+/// The `k` highest-scoring *nodes* of a sparse `(nodes, scores)` pair.
+pub fn top_k_nodes(nodes: &[u32], scores: &[f32], k: usize) -> Vec<u32> {
+    top_k_indices(scores, k)
+        .into_iter()
+        .map(|i| nodes[i])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_largest_in_order() {
+        let s = [0.1, 0.9, 0.5, 0.7, 0.2];
+        assert_eq!(top_k_indices(&s, 3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn k_larger_than_len() {
+        let s = [0.3, 0.1];
+        assert_eq!(top_k_indices(&s, 10), vec![0, 1]);
+    }
+
+    #[test]
+    fn k_zero_and_empty() {
+        assert!(top_k_indices(&[1.0], 0).is_empty());
+        assert!(top_k_indices(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_index() {
+        let s = [0.5, 0.5, 0.5, 0.5];
+        assert_eq!(top_k_indices(&s, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn top_k_nodes_maps_ids() {
+        let nodes = [10u32, 20, 30];
+        let scores = [0.2, 0.9, 0.5];
+        assert_eq!(top_k_nodes(&nodes, &scores, 2), vec![20, 30]);
+    }
+
+    #[test]
+    fn agrees_with_full_sort_on_random_input() {
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..20 {
+            let n = 1 + rng.next_below(200);
+            let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let k = rng.next_below(n + 4);
+            let got = top_k_indices(&scores, k);
+            let mut want: Vec<usize> = (0..n).collect();
+            want.sort_by(|&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+            });
+            want.truncate(k.min(n));
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed with the in-house JSON reader (no serde
+//! offline).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One tensor slot in the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One AOT-lowered executable and its static hyperparameters.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub id: String,
+    pub model: String,
+    pub kind: String, // "train" | "infer"
+    pub n_pad: usize,
+    pub feat: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub dropout: f64,
+    pub weight_decay: f64,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub path: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing numeric field {key}"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing numeric field {key}"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing string field {key}"))
+}
+
+impl Manifest {
+    /// Parse `manifest.json`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = req_usize(&doc, "version")?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts array"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let mut params = Vec::new();
+            for p in a
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing params"))?
+            {
+                params.push(ParamSpec {
+                    name: req_str(p, "name")?,
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: req_usize(p, "offset")?,
+                    size: req_usize(p, "size")?,
+                });
+            }
+            let meta = ArtifactMeta {
+                id: req_str(a, "id")?,
+                model: req_str(a, "model")?,
+                kind: req_str(a, "kind")?,
+                n_pad: req_usize(a, "n_pad")?,
+                feat: req_usize(a, "feat")?,
+                classes: req_usize(a, "classes")?,
+                hidden: req_usize(a, "hidden")?,
+                layers: req_usize(a, "layers")?,
+                heads: req_usize(a, "heads")?,
+                dropout: req_f64(a, "dropout")?,
+                weight_decay: req_f64(a, "weight_decay")?,
+                param_count: req_usize(a, "param_count")?,
+                params,
+                path: req_str(a, "path")?,
+            };
+            // structural invariants
+            let mut off = 0usize;
+            for p in &meta.params {
+                anyhow::ensure!(
+                    p.offset == off,
+                    "{}: param {} offset {} != {off}",
+                    meta.id,
+                    p.name,
+                    p.offset
+                );
+                anyhow::ensure!(
+                    p.size == p.shape.iter().product::<usize>().max(1),
+                    "{}: param {} size mismatch",
+                    meta.id,
+                    p.name
+                );
+                off += p.size;
+            }
+            anyhow::ensure!(
+                off == meta.param_count,
+                "{}: param_count {} != layout {off}",
+                meta.id,
+                meta.param_count
+            );
+            artifacts.push(meta);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Find an artifact by exact id.
+    pub fn by_id(&self, id: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.id == id)
+    }
+
+    /// Find the artifact for (model, kind, bucket).
+    pub fn find(&self, model: &str, kind: &str, n_pad: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.kind == kind && a.n_pad == n_pad)
+    }
+
+    /// Available buckets for a model/kind, ascending.
+    pub fn buckets(&self, model: &str, kind: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kind == kind)
+            .map(|a| a.n_pad)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Smallest bucket that fits `n` nodes for (model, kind).
+    pub fn bucket_meta(&self, model: &str, kind: &str, n: usize) -> Option<&ArtifactMeta> {
+        self.buckets(model, kind)
+            .into_iter()
+            .find(|&b| b >= n)
+            .and_then(|b| self.find(model, kind, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"version": 1, "artifacts": [
+      {"id": "gcn_train_n256", "model": "gcn", "kind": "train",
+       "n_pad": 256, "feat": 64, "classes": 10, "hidden": 64,
+       "layers": 3, "heads": 4, "dropout": 0.3, "weight_decay": 0.0001,
+       "param_count": 10,
+       "inputs": [], "outputs": [],
+       "params": [{"name": "l0.w", "shape": [2, 3], "offset": 0, "size": 6},
+                   {"name": "l0.b", "shape": [4], "offset": 6, "size": 4}],
+       "path": "gcn_train_n256.hlo.txt"},
+      {"id": "gcn_train_n512", "model": "gcn", "kind": "train",
+       "n_pad": 512, "feat": 64, "classes": 10, "hidden": 64,
+       "layers": 3, "heads": 4, "dropout": 0.3, "weight_decay": 0.0001,
+       "param_count": 0, "inputs": [], "outputs": [], "params": [],
+       "path": "gcn_train_n512.hlo.txt"}
+    ]}"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert!(m.by_id("gcn_train_n256").is_some());
+        assert!(m.find("gcn", "train", 512).is_some());
+        assert!(m.find("gat", "train", 512).is_none());
+        assert_eq!(m.buckets("gcn", "train"), vec![256, 512]);
+        assert_eq!(m.bucket_meta("gcn", "train", 300).unwrap().n_pad, 512);
+        assert!(m.bucket_meta("gcn", "train", 4096).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_layout() {
+        let bad = SAMPLE.replace("\"offset\": 6", "\"offset\": 7");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 2");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_shipped_manifest_if_built() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.artifacts.len() >= 2);
+            for a in &m.artifacts {
+                assert!(path.parent().unwrap().join(&a.path).exists());
+            }
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! PJRT runtime: loads the AOT artifacts and executes them on the hot
+//! path. Python never runs here — `artifacts/*.hlo.txt` + manifest are
+//! the entire interface (DESIGN.md §6).
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod state;
+
+pub use manifest::{ArtifactMeta, Manifest, ParamSpec};
+pub use state::ModelState;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::batching::DenseBatch;
+
+/// Metrics returned by a train or infer step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub correct: f32,
+    pub mask_count: f32,
+}
+
+impl StepMetrics {
+    pub fn accuracy(&self) -> f64 {
+        if self.mask_count > 0.0 {
+            self.correct as f64 / self.mask_count as f64
+        } else {
+            0.0
+        }
+    }
+    pub fn merge(&mut self, other: &StepMetrics) {
+        self.loss += other.loss * other.mask_count;
+        self.correct += other.correct;
+        self.mask_count += other.mask_count;
+    }
+    pub fn mean_loss(&self) -> f64 {
+        if self.mask_count > 0.0 {
+            (self.loss / self.mask_count) as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// PJRT CPU runtime with lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Number of executables compiled so far (perf accounting).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+
+    /// Compile (once) and fetch the executable for an artifact id.
+    pub fn executable(&mut self, id: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(id) {
+            let meta = self
+                .manifest
+                .by_id(id)
+                .ok_or_else(|| anyhow!("unknown artifact {id}"))?;
+            let path = self.dir.join(&meta.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {id}: {e}"))?;
+            self.compiled.insert(id.to_string(), exe);
+        }
+        Ok(&self.compiled[id])
+    }
+
+    /// Host-to-device transfer without the Literal intermediate.
+    ///
+    /// NOTE: `PjRtLoadedExecutable::execute` (literal variant) in xla
+    /// 0.1.6 leaks every input buffer (`buffer.release()` in the C
+    /// wrapper's `execute`, never freed — ~10 MB/step at n_pad=2048).
+    /// We therefore create input buffers ourselves and run `execute_b`,
+    /// so Drop reclaims them. This also saves one host-side copy per
+    /// input (EXPERIMENTS.md §Perf L3 iteration log).
+    fn buf<T: xla::ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host->device: {e}"))
+    }
+
+    fn batch_buffers(
+        &self,
+        dense: &DenseBatch,
+        meta: &ArtifactMeta,
+    ) -> Result<[xla::PjRtBuffer; 4]> {
+        let n = meta.n_pad;
+        let f = meta.feat;
+        Ok([
+            self.buf(&dense.x, &[n, f])?,
+            self.buf(&dense.adj, &[n, n])?,
+            self.buf(&dense.labels, &[n])?,
+            self.buf(&dense.mask, &[n])?,
+        ])
+    }
+
+    /// Run one fused train step (fwd + bwd + Adam), updating `state`
+    /// in place and returning the batch metrics.
+    pub fn train_step(
+        &mut self,
+        meta: &ArtifactMeta,
+        state: &mut ModelState,
+        dense: &DenseBatch,
+        lr: f32,
+        seed: i32,
+    ) -> Result<StepMetrics> {
+        debug_assert_eq!(meta.kind, "train");
+        debug_assert_eq!(dense.n_pad, meta.n_pad);
+        state.step += 1;
+        let p = meta.param_count;
+        let [x, adj, labels, mask] = self.batch_buffers(dense, meta)?;
+        let inputs = [
+            self.buf(&state.params, &[p])?,
+            self.buf(&state.m, &[p])?,
+            self.buf(&state.v, &[p])?,
+            self.buf(&[state.step as f32], &[])?,
+            self.buf(&[lr], &[])?,
+            self.buf(&[seed], &[])?,
+            x,
+            adj,
+            labels,
+            mask,
+        ];
+        let exe = self.executable(&meta.id)?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.id))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("tuple: {e}"))?;
+        anyhow::ensure!(parts.len() == 6, "expected 6 outputs");
+        let mut it = parts.into_iter();
+        it.next().unwrap().copy_raw_to(&mut state.params).map_err(|e| anyhow!("{e}"))?;
+        it.next().unwrap().copy_raw_to(&mut state.m).map_err(|e| anyhow!("{e}"))?;
+        it.next().unwrap().copy_raw_to(&mut state.v).map_err(|e| anyhow!("{e}"))?;
+        let loss: f32 = it.next().unwrap().get_first_element().map_err(|e| anyhow!("{e}"))?;
+        let correct: f32 = it.next().unwrap().get_first_element().map_err(|e| anyhow!("{e}"))?;
+        let mask_count: f32 = it.next().unwrap().get_first_element().map_err(|e| anyhow!("{e}"))?;
+        Ok(StepMetrics {
+            loss,
+            correct,
+            mask_count,
+        })
+    }
+
+    /// Run one forward+backward step WITHOUT the optimizer, returning
+    /// the gradient vector (gradient-accumulation mode, paper Fig. 8).
+    pub fn grad_step(
+        &mut self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        dense: &DenseBatch,
+        seed: i32,
+    ) -> Result<(Vec<f32>, StepMetrics)> {
+        debug_assert_eq!(meta.kind, "grad");
+        let [x, adj, labels, mask] = self.batch_buffers(dense, meta)?;
+        let inputs = [
+            self.buf(&state.params, &[meta.param_count])?,
+            self.buf(&[seed], &[])?,
+            x,
+            adj,
+            labels,
+            mask,
+        ];
+        let exe = self.executable(&meta.id)?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.id))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let (g, l, c, mc) = result
+            .to_tuple4()
+            .map_err(|e| anyhow!("tuple4: {e}"))?;
+        let grads = g.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        Ok((
+            grads,
+            StepMetrics {
+                loss: l.get_first_element().map_err(|e| anyhow!("{e}"))?,
+                correct: c.get_first_element().map_err(|e| anyhow!("{e}"))?,
+                mask_count: mc.get_first_element().map_err(|e| anyhow!("{e}"))?,
+            },
+        ))
+    }
+
+    /// Run one inference step (no dropout, no state mutation).
+    pub fn infer_step(
+        &mut self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        dense: &DenseBatch,
+    ) -> Result<StepMetrics> {
+        debug_assert_eq!(meta.kind, "infer");
+        debug_assert_eq!(dense.n_pad, meta.n_pad);
+        let [x, adj, labels, mask] = self.batch_buffers(dense, meta)?;
+        let inputs = [
+            self.buf(&state.params, &[meta.param_count])?,
+            x,
+            adj,
+            labels,
+            mask,
+        ];
+        let exe = self.executable(&meta.id)?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.id))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let (l, c, mc) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("tuple3: {e}"))?;
+        Ok(StepMetrics {
+            loss: l.get_first_element().map_err(|e| anyhow!("{e}"))?,
+            correct: c.get_first_element().map_err(|e| anyhow!("{e}"))?,
+            mask_count: mc.get_first_element().map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_metrics_accumulate() {
+        let mut a = StepMetrics::default();
+        a.merge(&StepMetrics {
+            loss: 2.0,
+            correct: 3.0,
+            mask_count: 4.0,
+        });
+        a.merge(&StepMetrics {
+            loss: 1.0,
+            correct: 5.0,
+            mask_count: 6.0,
+        });
+        assert!((a.accuracy() - 0.8).abs() < 1e-9);
+        assert!((a.mean_loss() - 1.4).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,122 @@
+//! Host-side model state: the flat parameter vector plus Adam moments.
+//!
+//! Initialization reproduces `python/compile/model.py::init_params`'s
+//! *layout* (Glorot-uniform weights, ones for LayerNorm gains, zeros
+//! elsewhere) with the Rust PRNG — the artifacts only fix the layout,
+//! not the init values, so cross-language bit-parity is not required.
+
+use super::manifest::ArtifactMeta;
+use crate::util::Rng;
+
+/// Trainable state threaded through the fused train step.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based Adam step counter (fed as f32 for bias correction).
+    pub step: u64,
+}
+
+impl ModelState {
+    /// Glorot-style init matching the manifest's parameter layout.
+    pub fn init(meta: &ArtifactMeta, seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed ^ 0x9D06_57A1);
+        let mut params = vec![0.0f32; meta.param_count];
+        for spec in &meta.params {
+            let slice = &mut params[spec.offset..spec.offset + spec.size];
+            if spec.name.ends_with(".w") {
+                let (fan_in, fan_out) = (spec.shape[0], spec.shape[1]);
+                let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+                for x in slice.iter_mut() {
+                    *x = rng.uniform(-limit, limit);
+                }
+            } else if spec.name.ends_with(".a_src")
+                || spec.name.ends_with(".a_dst")
+            {
+                let limit = (6.0 / (spec.size + 1) as f32).sqrt();
+                for x in slice.iter_mut() {
+                    *x = rng.uniform(-limit, limit);
+                }
+            } else if spec.name.ends_with(".ln_g") {
+                slice.fill(1.0);
+            } // biases and ln_b stay zero
+        }
+        ModelState {
+            params,
+            m: vec![0.0; meta.param_count],
+            v: vec![0.0; meta.param_count],
+            step: 0,
+        }
+    }
+
+    /// View of one named parameter tensor.
+    pub fn tensor<'a>(&'a self, meta: &ArtifactMeta, name: &str) -> Option<&'a [f32]> {
+        meta.params
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| &self.params[p.offset..p.offset + p.size])
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        (self.params.len() + self.m.len() + self.v.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    const SAMPLE: &str = r#"{"version": 1, "artifacts": [
+      {"id": "t", "model": "gcn", "kind": "train", "n_pad": 64,
+       "feat": 8, "classes": 4, "hidden": 8, "layers": 2, "heads": 4,
+       "dropout": 0.0, "weight_decay": 0.0, "param_count": 92,
+       "inputs": [], "outputs": [],
+       "params": [
+         {"name": "l0.w", "shape": [8, 8], "offset": 0, "size": 64},
+         {"name": "l0.b", "shape": [8], "offset": 64, "size": 8},
+         {"name": "l0.ln_g", "shape": [8], "offset": 72, "size": 8},
+         {"name": "l0.ln_b", "shape": [8], "offset": 80, "size": 8},
+         {"name": "l1.a_src", "shape": [1, 4], "offset": 88, "size": 4}],
+       "path": "t.hlo.txt"}]}"#;
+
+    fn meta() -> ArtifactMeta {
+        Manifest::parse(SAMPLE).unwrap().artifacts[0].clone()
+    }
+
+    #[test]
+    fn init_respects_layout() {
+        let m = meta();
+        let s = ModelState::init(&m, 1);
+        assert_eq!(s.params.len(), 92);
+        // weights non-zero, bounded by glorot limit
+        let limit = (6.0f32 / 16.0).sqrt();
+        let w = s.tensor(&m, "l0.w").unwrap();
+        assert!(w.iter().any(|&x| x != 0.0));
+        assert!(w.iter().all(|&x| x.abs() <= limit));
+        // bias zero, ln_g one, ln_b zero
+        assert!(s.tensor(&m, "l0.b").unwrap().iter().all(|&x| x == 0.0));
+        assert!(s.tensor(&m, "l0.ln_g").unwrap().iter().all(|&x| x == 1.0));
+        assert!(s.tensor(&m, "l0.ln_b").unwrap().iter().all(|&x| x == 0.0));
+        // attention vectors initialized
+        assert!(s
+            .tensor(&m, "l1.a_src")
+            .unwrap()
+            .iter()
+            .any(|&x| x != 0.0));
+        // adam state zeroed
+        assert!(s.m.iter().all(|&x| x == 0.0));
+        assert_eq!(s.step, 0);
+    }
+
+    #[test]
+    fn init_is_seeded() {
+        let m = meta();
+        let a = ModelState::init(&m, 1);
+        let b = ModelState::init(&m, 1);
+        let c = ModelState::init(&m, 2);
+        assert_eq!(a.params, b.params);
+        assert_ne!(a.params, c.params);
+    }
+}

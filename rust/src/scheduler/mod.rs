@@ -1,0 +1,243 @@
+//! Batch scheduling (paper §4 "Batch scheduling").
+//!
+//! Fixed, locality-correlated batches can form suboptimal *sequences*:
+//! a run of similar batches drives the optimizer in one direction and
+//! causes the paper's "downward spikes in accuracy". The fix is to
+//! maximize dissimilarity between consecutive batches, where batch
+//! distance is the **symmetrized KL divergence of training-label
+//! distributions**. Two schedulers:
+//!
+//! * [`tsp::optimal_cycle`] — a fixed maximum-distance batch cycle via
+//!   simulated annealing on the max-TSP tour (paper: python-tsp SA).
+//! * [`WeightedScheduler`] — sample the next batch with probability
+//!   proportional to its distance from the current one.
+//! * [`SequentialScheduler`] / [`ShuffleScheduler`] — controls.
+
+pub mod tsp;
+
+use crate::util::stats::symmetric_kl;
+use crate::util::Rng;
+
+/// Pairwise symmetrized-KL distance matrix between batch label
+/// histograms (each histogram is the label counts of a batch's
+/// *output* nodes).
+pub fn batch_distance_matrix(histograms: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let b = histograms.len();
+    let mut d = vec![vec![0.0; b]; b];
+    for i in 0..b {
+        for j in (i + 1)..b {
+            let v = symmetric_kl(&histograms[i], &histograms[j]);
+            d[i][j] = v;
+            d[j][i] = v;
+        }
+    }
+    d
+}
+
+/// Produces the batch visit order for each epoch.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    /// Order of batch indices for one epoch.
+    fn epoch_order(&mut self, rng: &mut Rng) -> Vec<usize>;
+}
+
+/// Fixed 0..b order (worst case for correlated batches).
+pub struct SequentialScheduler {
+    pub num_batches: usize,
+}
+
+impl Scheduler for SequentialScheduler {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+    fn epoch_order(&mut self, _rng: &mut Rng) -> Vec<usize> {
+        (0..self.num_batches).collect()
+    }
+}
+
+/// Uniform random shuffle per epoch (the usual default).
+pub struct ShuffleScheduler {
+    pub num_batches: usize,
+}
+
+impl Scheduler for ShuffleScheduler {
+    fn name(&self) -> &'static str {
+        "shuffle"
+    }
+    fn epoch_order(&mut self, rng: &mut Rng) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.num_batches).collect();
+        rng.shuffle(&mut order);
+        order
+    }
+}
+
+/// The paper's fixed max-distance cycle, rotated to a random start
+/// each epoch so every batch is still used exactly once per epoch.
+pub struct OptimalCycleScheduler {
+    cycle: Vec<usize>,
+}
+
+impl OptimalCycleScheduler {
+    pub fn new(dist: &[Vec<f64>], rng: &mut Rng) -> Self {
+        OptimalCycleScheduler {
+            cycle: tsp::optimal_cycle(dist, rng),
+        }
+    }
+    pub fn cycle(&self) -> &[usize] {
+        &self.cycle
+    }
+}
+
+impl Scheduler for OptimalCycleScheduler {
+    fn name(&self) -> &'static str {
+        "optimal cycle"
+    }
+    fn epoch_order(&mut self, rng: &mut Rng) -> Vec<usize> {
+        let b = self.cycle.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        let start = rng.next_below(b);
+        (0..b).map(|i| self.cycle[(start + i) % b]).collect()
+    }
+}
+
+/// Distance-weighted sampling without replacement: each epoch visits
+/// every batch once, choosing the next proportional to its distance
+/// from the current batch (paper's variant (ii)).
+pub struct WeightedScheduler {
+    dist: Vec<Vec<f64>>,
+    last: Option<usize>,
+}
+
+impl WeightedScheduler {
+    pub fn new(dist: Vec<Vec<f64>>) -> Self {
+        WeightedScheduler { dist, last: None }
+    }
+}
+
+impl Scheduler for WeightedScheduler {
+    fn name(&self) -> &'static str {
+        "weighted sampling"
+    }
+    fn epoch_order(&mut self, rng: &mut Rng) -> Vec<usize> {
+        let b = self.dist.len();
+        let mut remaining: Vec<usize> = (0..b).collect();
+        let mut order = Vec::with_capacity(b);
+        let mut cur = self.last;
+        while !remaining.is_empty() {
+            let next_pos = match cur {
+                None => rng.next_below(remaining.len()),
+                Some(c) => {
+                    let w: Vec<f64> = remaining
+                        .iter()
+                        .map(|&j| self.dist[c][j].max(1e-9))
+                        .collect();
+                    rng.weighted(&w)
+                }
+            };
+            let next = remaining.swap_remove(next_pos);
+            order.push(next);
+            cur = Some(next);
+        }
+        self.last = cur;
+        order
+    }
+}
+
+/// Mean distance between consecutive batches of an order (quality
+/// metric used by Fig. 7's reproduction).
+pub fn order_quality(dist: &[Vec<f64>], order: &[usize]) -> f64 {
+    if order.len() < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for w in order.windows(2) {
+        total += dist[w[0]][w[1]];
+    }
+    total / (order.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_dist() -> Vec<Vec<f64>> {
+        // two clusters {0,1} and {2,3}: cross distances large
+        let h = [
+            vec![10.0, 0.0],
+            vec![9.0, 1.0],
+            vec![0.0, 10.0],
+            vec![1.0, 9.0],
+        ];
+        batch_distance_matrix(&h)
+    }
+
+    #[test]
+    fn distance_matrix_is_symmetric_zero_diag() {
+        let d = toy_dist();
+        for i in 0..4 {
+            assert_eq!(d[i][i], 0.0);
+            for j in 0..4 {
+                assert_eq!(d[i][j], d[j][i]);
+            }
+        }
+        assert!(d[0][2] > d[0][1]);
+    }
+
+    #[test]
+    fn all_schedulers_produce_permutations() {
+        let d = toy_dist();
+        let mut rng = Rng::new(1);
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(SequentialScheduler { num_batches: 4 }),
+            Box::new(ShuffleScheduler { num_batches: 4 }),
+            Box::new(OptimalCycleScheduler::new(&d, &mut rng)),
+            Box::new(WeightedScheduler::new(d.clone())),
+        ];
+        for s in scheds.iter_mut() {
+            for _ in 0..3 {
+                let mut o = s.epoch_order(&mut rng);
+                o.sort_unstable();
+                assert_eq!(o, vec![0, 1, 2, 3], "{}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn optimal_cycle_beats_sequential_on_clustered_batches() {
+        let d = toy_dist();
+        let mut rng = Rng::new(2);
+        let mut opt = OptimalCycleScheduler::new(&d, &mut rng);
+        let mut seq = SequentialScheduler { num_batches: 4 };
+        let q_opt = order_quality(&d, &opt.epoch_order(&mut rng));
+        let q_seq = order_quality(&d, &seq.epoch_order(&mut rng));
+        assert!(q_opt > q_seq, "opt {q_opt} vs seq {q_seq}");
+    }
+
+    #[test]
+    fn weighted_scheduler_prefers_distant_followups() {
+        let d = toy_dist();
+        let mut rng = Rng::new(3);
+        let mut sched = WeightedScheduler::new(d.clone());
+        let mut cross = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let o = sched.epoch_order(&mut rng);
+            for w in o.windows(2) {
+                total += 1;
+                // cluster of 0,1 is {0}, of 2,3 is {1}
+                if (w[0] < 2) != (w[1] < 2) {
+                    cross += 1;
+                }
+            }
+        }
+        // random order would cross ~2/3 of the time at most; weighted
+        // should cross more often
+        assert!(
+            cross as f64 / total as f64 > 0.6,
+            "cross rate {}",
+            cross as f64 / total as f64
+        );
+    }
+}

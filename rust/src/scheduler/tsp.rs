@@ -1,0 +1,174 @@
+//! Max-distance TSP cycle by simulated annealing.
+//!
+//! The paper finds "the fixed batch cycle that maximizes the batch
+//! distances between consecutive batches. This is a traveling salesman
+//! problem ... We determine the optimal batch order for IBMB via
+//! simulated annealing" (App. B, python-tsp). 2-opt neighborhood,
+//! geometric cooling, seeded.
+
+use crate::util::Rng;
+
+/// Simulated-annealing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SaConfig {
+    pub iterations: usize,
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl Default for SaConfig {
+    fn default() -> Self {
+        SaConfig {
+            iterations: 20_000,
+            t_start: 1.0,
+            t_end: 1e-3,
+        }
+    }
+}
+
+fn cycle_length(dist: &[Vec<f64>], order: &[usize]) -> f64 {
+    let b = order.len();
+    (0..b)
+        .map(|i| dist[order[i]][order[(i + 1) % b]])
+        .sum()
+}
+
+/// Find a high-total-distance cycle visiting every batch once.
+pub fn optimal_cycle_with(
+    dist: &[Vec<f64>],
+    cfg: &SaConfig,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let b = dist.len();
+    if b <= 2 {
+        return (0..b).collect();
+    }
+    let mut order: Vec<usize> = (0..b).collect();
+    rng.shuffle(&mut order);
+    let mut best = order.clone();
+    let mut cur_len = cycle_length(dist, &order);
+    let mut best_len = cur_len;
+    let cool = (cfg.t_end / cfg.t_start).powf(1.0 / cfg.iterations as f64);
+    let mut t = cfg.t_start;
+    // scale temperature by a typical distance so acceptance is sane
+    let scale = {
+        let mut s = 0.0;
+        let mut c = 0;
+        for i in 0..b {
+            for j in (i + 1)..b {
+                s += dist[i][j];
+                c += 1;
+            }
+        }
+        (s / c.max(1) as f64).max(1e-9)
+    };
+    for _ in 0..cfg.iterations {
+        // 2-opt: reverse a random segment
+        let i = rng.next_below(b);
+        let j = rng.next_below(b);
+        let (lo, hi) = (i.min(j), i.max(j));
+        if hi - lo < 1 || (lo == 0 && hi == b - 1) {
+            t *= cool;
+            continue;
+        }
+        // delta from swapping the two boundary edges
+        let prev = order[(lo + b - 1) % b];
+        let next = order[(hi + 1) % b];
+        let old = dist[prev][order[lo]] + dist[order[hi]][next];
+        let new = dist[prev][order[hi]] + dist[order[lo]][next];
+        let delta = new - old; // maximize
+        if delta > 0.0
+            || rng.next_f64() < (delta / (t * scale)).exp()
+        {
+            order[lo..=hi].reverse();
+            cur_len += delta;
+            if cur_len > best_len {
+                best_len = cur_len;
+                best = order.clone();
+            }
+        }
+        t *= cool;
+    }
+    best
+}
+
+/// Default-config SA cycle.
+pub fn optimal_cycle(dist: &[Vec<f64>], rng: &mut Rng) -> Vec<usize> {
+    optimal_cycle_with(dist, &SaConfig::default(), rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_dist(b: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; b]; b];
+        for i in 0..b {
+            for j in (i + 1)..b {
+                let v = rng.next_f64();
+                d[i][j] = v;
+                d[j][i] = v;
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn returns_permutation() {
+        let mut rng = Rng::new(4);
+        let d = random_dist(9, &mut rng);
+        let mut c = optimal_cycle(&d, &mut rng);
+        c.sort_unstable();
+        assert_eq!(c, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn beats_random_orders() {
+        let mut rng = Rng::new(5);
+        let d = random_dist(12, &mut rng);
+        let sa = optimal_cycle(&d, &mut rng);
+        let sa_len = cycle_length(&d, &sa);
+        let mut rand_best = 0.0f64;
+        for _ in 0..200 {
+            let mut o: Vec<usize> = (0..12).collect();
+            rng.shuffle(&mut o);
+            rand_best = rand_best.max(cycle_length(&d, &o));
+        }
+        assert!(
+            sa_len >= rand_best * 0.98,
+            "sa {sa_len} vs random-best {rand_best}"
+        );
+    }
+
+    #[test]
+    fn finds_exact_optimum_on_small_instance() {
+        // 4 nodes: brute-force the max cycle
+        let mut rng = Rng::new(6);
+        let d = random_dist(4, &mut rng);
+        let sa_len = cycle_length(&d, &optimal_cycle(&d, &mut rng));
+        let mut best = 0.0f64;
+        let perms = [
+            [0usize, 1, 2, 3],
+            [0, 1, 3, 2],
+            [0, 2, 1, 3],
+            [0, 2, 3, 1],
+            [0, 3, 1, 2],
+            [0, 3, 2, 1],
+        ];
+        for p in perms {
+            best = best.max(cycle_length(&d, &p));
+        }
+        assert!((sa_len - best).abs() < 1e-9, "sa {sa_len} best {best}");
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let mut rng = Rng::new(7);
+        assert!(optimal_cycle(&[], &mut rng).is_empty());
+        assert_eq!(optimal_cycle(&[vec![0.0]], &mut rng), vec![0]);
+        assert_eq!(
+            optimal_cycle(&random_dist(2, &mut rng), &mut rng).len(),
+            2
+        );
+    }
+}

@@ -1,0 +1,108 @@
+//! ReduceLROnPlateau — the paper's LR schedule (App. B): decay 0.33,
+//! patience 30, min LR 1e-4, cooldown 10, driven by validation loss.
+
+/// Plateau-based learning-rate decay.
+#[derive(Debug, Clone)]
+pub struct ReduceLROnPlateau {
+    pub lr: f32,
+    pub factor: f32,
+    pub patience: usize,
+    pub min_lr: f32,
+    pub cooldown: usize,
+    best: f64,
+    bad_epochs: usize,
+    cooldown_left: usize,
+}
+
+impl ReduceLROnPlateau {
+    /// Paper defaults with the given starting LR.
+    pub fn paper_defaults(lr: f32) -> Self {
+        ReduceLROnPlateau::new(lr, 0.33, 30, 1e-4, 10)
+    }
+
+    pub fn new(
+        lr: f32,
+        factor: f32,
+        patience: usize,
+        min_lr: f32,
+        cooldown: usize,
+    ) -> Self {
+        ReduceLROnPlateau {
+            lr,
+            factor,
+            patience,
+            min_lr,
+            cooldown,
+            best: f64::INFINITY,
+            bad_epochs: 0,
+            cooldown_left: 0,
+        }
+    }
+
+    /// Record an epoch's validation loss; returns the (possibly
+    /// reduced) learning rate to use next.
+    pub fn step(&mut self, val_loss: f64) -> f32 {
+        if val_loss < self.best - 1e-12 {
+            self.best = val_loss;
+            self.bad_epochs = 0;
+        } else if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+        } else {
+            self.bad_epochs += 1;
+            if self.bad_epochs > self.patience {
+                self.lr = (self.lr * self.factor).max(self.min_lr);
+                self.bad_epochs = 0;
+                self.cooldown_left = self.cooldown;
+            }
+        }
+        self.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improving_loss_keeps_lr() {
+        let mut s = ReduceLROnPlateau::new(0.1, 0.5, 2, 0.001, 0);
+        for i in 0..10 {
+            assert_eq!(s.step(1.0 / (i + 1) as f64), 0.1);
+        }
+    }
+
+    #[test]
+    fn plateau_triggers_decay_after_patience() {
+        let mut s = ReduceLROnPlateau::new(0.1, 0.5, 2, 0.001, 0);
+        s.step(1.0);
+        assert_eq!(s.step(1.0), 0.1); // bad 1
+        assert_eq!(s.step(1.0), 0.1); // bad 2
+        assert!((s.step(1.0) - 0.05).abs() < 1e-9); // bad 3 > patience
+    }
+
+    #[test]
+    fn respects_min_lr() {
+        let mut s = ReduceLROnPlateau::new(0.01, 0.1, 0, 0.005, 0);
+        s.step(1.0);
+        for _ in 0..5 {
+            s.step(1.0);
+        }
+        assert!((s.lr - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cooldown_suppresses_counting() {
+        let mut s = ReduceLROnPlateau::new(0.1, 0.5, 1, 0.001, 3);
+        s.step(1.0);
+        s.step(1.0); // bad 1
+        s.step(1.0); // bad 2 -> decay, cooldown 3
+        assert!((s.lr - 0.05).abs() < 1e-9);
+        s.step(1.0); // cooldown 2
+        s.step(1.0); // cooldown 1
+        s.step(1.0); // cooldown 0
+        assert!((s.lr - 0.05).abs() < 1e-9, "decayed during cooldown");
+        s.step(1.0); // bad 1
+        s.step(1.0); // bad 2 -> decay
+        assert!((s.lr - 0.025).abs() < 1e-9);
+    }
+}

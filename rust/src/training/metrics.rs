@@ -1,0 +1,159 @@
+//! Classification metrics beyond plain accuracy: confusion matrix,
+//! per-class accuracy/F1, macro averages. Used by the inference
+//! drivers' detailed reports and by tests asserting that models learn
+//! *all* classes (not just the majority ones).
+
+/// Streaming confusion matrix over `classes` labels.
+#[derive(Debug, Clone)]
+pub struct Confusion {
+    pub classes: usize,
+    /// Row = true label, column = prediction.
+    counts: Vec<u64>,
+}
+
+impl Confusion {
+    pub fn new(classes: usize) -> Confusion {
+        Confusion {
+            classes,
+            counts: vec![0; classes * classes],
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, truth: usize, pred: usize) {
+        debug_assert!(truth < self.classes && pred < self.classes);
+        self.counts[truth * self.classes + pred] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let correct: u64 =
+            (0..self.classes).map(|c| self.counts[c * self.classes + c]).sum();
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        }
+    }
+
+    /// Recall (per-class accuracy) for class `c`.
+    pub fn recall(&self, c: usize) -> f64 {
+        let row: u64 = self.counts[c * self.classes..(c + 1) * self.classes]
+            .iter()
+            .sum();
+        if row == 0 {
+            return 0.0;
+        }
+        self.counts[c * self.classes + c] as f64 / row as f64
+    }
+
+    pub fn precision(&self, c: usize) -> f64 {
+        let col: u64 = (0..self.classes)
+            .map(|r| self.counts[r * self.classes + c])
+            .sum();
+        if col == 0 {
+            return 0.0;
+        }
+        self.counts[c * self.classes + c] as f64 / col as f64
+    }
+
+    pub fn f1(&self, c: usize) -> f64 {
+        let p = self.precision(c);
+        let r = self.recall(c);
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    /// Unweighted mean F1 over classes that appear in the data.
+    pub fn macro_f1(&self) -> f64 {
+        let present: Vec<usize> = (0..self.classes)
+            .filter(|&c| {
+                self.counts[c * self.classes..(c + 1) * self.classes]
+                    .iter()
+                    .sum::<u64>()
+                    > 0
+            })
+            .collect();
+        if present.is_empty() {
+            return 0.0;
+        }
+        present.iter().map(|&c| self.f1(c)).sum::<f64>() / present.len() as f64
+    }
+
+    pub fn merge(&mut self, other: &Confusion) {
+        assert_eq!(self.classes, other.classes);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Confusion {
+        let mut c = Confusion::new(3);
+        // class 0: 3 right, 1 as class 1
+        for _ in 0..3 {
+            c.record(0, 0);
+        }
+        c.record(0, 1);
+        // class 1: 2 right
+        c.record(1, 1);
+        c.record(1, 1);
+        // class 2: never predicted right
+        c.record(2, 0);
+        c
+    }
+
+    #[test]
+    fn accuracy_and_total() {
+        let c = sample();
+        assert_eq!(c.total(), 7);
+        assert!((c.accuracy() - 5.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_metrics() {
+        let c = sample();
+        assert!((c.recall(0) - 0.75).abs() < 1e-12);
+        assert!((c.recall(1) - 1.0).abs() < 1e-12);
+        assert_eq!(c.recall(2), 0.0);
+        assert!((c.precision(0) - 3.0 / 4.0).abs() < 1e-12);
+        assert!((c.precision(1) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(c.f1(2), 0.0);
+    }
+
+    #[test]
+    fn macro_f1_ignores_absent_classes() {
+        let mut c = Confusion::new(5);
+        c.record(0, 0);
+        c.record(1, 1);
+        // classes 2..4 absent
+        assert!((c.macro_f1() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = sample();
+        let b = sample();
+        a.merge(&b);
+        assert_eq!(a.total(), 14);
+        assert!((a.accuracy() - 5.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let c = Confusion::new(4);
+        assert_eq!(c.accuracy(), 0.0);
+        assert_eq!(c.macro_f1(), 0.0);
+    }
+}

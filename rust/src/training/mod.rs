@@ -1,0 +1,13 @@
+//! Training orchestration (paper §4): fused-Adam steps through the AOT
+//! train executable, plateau LR scheduling, early stopping, batch
+//! scheduling, gradient accumulation, and per-epoch approximate
+//! validation using the training method's own batches (the paper's
+//! protocol: "we use the mini-batching method used for training to also
+//! approximate inference during training").
+
+pub mod lr_schedule;
+pub mod metrics;
+pub mod trainer;
+
+pub use lr_schedule::ReduceLROnPlateau;
+pub use trainer::{train, TrainConfig, TrainResult};

@@ -1,0 +1,13 @@
+//! Small self-contained substrates the offline environment forces us to
+//! own: a seeded PRNG (no `rand` crate), summary statistics with
+//! bootstrap confidence intervals (the paper reports mean ± std and 95 %
+//! CIs), a minimal JSON reader/writer for the artifact manifest, and a
+//! monotonic timer.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,186 @@
+//! Summary statistics for experiment reporting.
+//!
+//! The paper reports "mean and standard deviation in all tables and the
+//! bootstrapped mean and 95 % confidence intervals in all figures"; this
+//! module provides exactly those estimators plus the percentile helpers
+//! used by the bench harness.
+
+use crate::util::Rng;
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100].
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Bootstrapped mean with a 95 % percentile confidence interval
+/// (`resamples` bootstrap replicates), as used in the paper's figures.
+pub fn bootstrap_ci95(
+    xs: &[f64],
+    resamples: usize,
+    rng: &mut Rng,
+) -> (f64, f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut means = Vec::with_capacity(resamples);
+    for _ in 0..resamples {
+        let mut acc = 0.0;
+        for _ in 0..xs.len() {
+            acc += xs[rng.next_below(xs.len())];
+        }
+        means.push(acc / xs.len() as f64);
+    }
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        mean(xs),
+        percentile(&means, 2.5),
+        percentile(&means, 97.5),
+    )
+}
+
+/// Aggregate over repeated measurements of one quantity.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            std: std_dev(xs),
+            min: sorted.first().copied().unwrap_or(0.0),
+            p50: percentile(&sorted, 50.0),
+            p95: percentile(&sorted, 95.0),
+            max: sorted.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean={:.4} std={:.4} p50={:.4} p95={:.4} (n={})",
+            self.mean, self.std, self.p50, self.p95, self.n
+        )
+    }
+}
+
+/// Symmetrized KL divergence between two discrete distributions,
+/// the batch-distance metric of the paper's scheduling section (§4).
+/// Inputs need not be normalized; zero bins are smoothed.
+pub fn symmetric_kl(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let eps = 1e-12;
+    let ps: f64 = p.iter().sum::<f64>().max(eps);
+    let qs: f64 = q.iter().sum::<f64>().max(eps);
+    let mut kl_pq = 0.0;
+    let mut kl_qp = 0.0;
+    for i in 0..p.len() {
+        let pi = (p[i] / ps).max(eps);
+        let qi = (q[i] / qs).max(eps);
+        kl_pq += pi * (pi / qi).ln();
+        kl_qp += qi * (qi / pi).ln();
+    }
+    kl_pq + kl_qp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_and_singleton_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(std_dev(&[3.0]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 95.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_mean() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f64> = (0..200).map(|i| (i % 10) as f64).collect();
+        let (m, lo, hi) = bootstrap_ci95(&xs, 500, &mut rng);
+        assert!(lo <= m && m <= hi, "{lo} {m} {hi}");
+        assert!(hi - lo < 1.0, "CI too wide: {lo}..{hi}");
+    }
+
+    #[test]
+    fn symmetric_kl_properties() {
+        let p = [0.5, 0.5, 0.0];
+        let q = [0.1, 0.1, 0.8];
+        assert_eq!(symmetric_kl(&p, &p), 0.0);
+        let d_pq = symmetric_kl(&p, &q);
+        let d_qp = symmetric_kl(&q, &p);
+        assert!((d_pq - d_qp).abs() < 1e-9, "symmetry");
+        assert!(d_pq > 0.0);
+        // farther distribution => larger distance
+        let r = [0.45, 0.45, 0.1];
+        assert!(symmetric_kl(&p, &r) < d_pq);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+}

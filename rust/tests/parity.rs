@@ -1,0 +1,226 @@
+//! Cross-language parity: the AOT artifact (JAX/Pallas → HLO → PJRT)
+//! and the independent Rust sparse forward pass must agree on the same
+//! batch — this validates the entire compile path end to end, for all
+//! three models.
+
+use ibmb::batching::{BatchCache, BatchGenerator, DenseBatch, NodeWiseIbmb};
+use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::inference::fullgraph::{forward, SparseGraphRef};
+use ibmb::runtime::{ModelState, Runtime};
+use ibmb::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            return Some(Runtime::load(dir).expect("runtime"));
+        }
+    }
+    eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    None
+}
+
+fn tiny_dataset() -> ibmb::datasets::Dataset {
+    let spec = DatasetSpec {
+        nodes: 800,
+        feat_dim: 64,
+        classes: 10,
+        ..DatasetSpec::tiny_for_tests()
+    };
+    sbm::generate(&spec, 77)
+}
+
+/// For each model: run the infer artifact on one IBMB batch and compare
+/// loss/accuracy against the host-side exact forward on that batch's
+/// subgraph.
+#[test]
+fn artifact_matches_host_forward_all_models() {
+    let Some(mut rt) = runtime() else { return };
+    let ds = tiny_dataset();
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: 8,
+        max_outputs_per_batch: 48,
+        node_budget: 256,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(1);
+    let cache = BatchCache::build(&gen.generate(
+        &ds,
+        &ds.splits.val[..60.min(ds.splits.val.len())].to_vec(),
+        &mut rng,
+    ));
+    assert!(!cache.is_empty());
+
+    for model in ["gcn", "sage", "gat"] {
+        let meta = rt
+            .manifest
+            .bucket_meta(model, "infer", cache.max_batch_nodes())
+            .expect("bucket")
+            .clone();
+        let state = ModelState::init(&meta, 42);
+        let mut dense = DenseBatch::zeros(meta.n_pad, meta.feat);
+
+        for b in 0..cache.len().min(3) {
+            cache.densify_into(&ds, b, &mut dense);
+            let metrics = rt.infer_step(&meta, &state, &dense).expect("infer");
+
+            // host-side forward on the same subgraph
+            let batch = cache.to_cached(b);
+            let n = batch.num_nodes();
+            let edge_src: Vec<u32> = batch.edges.iter().map(|e| e.0).collect();
+            let edge_dst: Vec<u32> = batch.edges.iter().map(|e| e.1).collect();
+            let g = SparseGraphRef {
+                n,
+                edge_src: &edge_dst, // aggregation into dst: artifact's
+                edge_dst: &edge_src, // adj[d][s] sums over s — but host
+                weights: &batch.weights, // spmm sums into edge_dst...
+            };
+            // NOTE: batch edges are symmetric (undirected + both slots),
+            // so orientation does not matter here; kept explicit for
+            // clarity.
+            let x = &dense.x[..n * meta.feat];
+            let logits = forward(&meta, &state, &g, x);
+            // compare masked correct-count and mean loss
+            let c = meta.classes;
+            let mut correct = 0.0f32;
+            let mut loss_sum = 0.0f32;
+            let mut msum = 0.0f32;
+            for i in 0..batch.num_outputs {
+                let row = &logits[i * c..(i + 1) * c];
+                let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse: f32 =
+                    row.iter().map(|v| (v - max).exp()).sum::<f32>().ln() + max;
+                let label = dense.labels[i] as usize;
+                loss_sum += lse - row[label];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == label {
+                    correct += 1.0;
+                }
+                msum += 1.0;
+            }
+            let host_loss = loss_sum / msum.max(1.0);
+            assert_eq!(
+                metrics.mask_count, msum,
+                "{model} batch {b}: mask count"
+            );
+            assert!(
+                (metrics.correct - correct).abs() < 0.5,
+                "{model} batch {b}: correct {} vs host {}",
+                metrics.correct,
+                correct
+            );
+            assert!(
+                (metrics.loss - host_loss).abs() < 5e-3 * host_loss.abs().max(1.0),
+                "{model} batch {b}: loss {} vs host {}",
+                metrics.loss,
+                host_loss
+            );
+        }
+    }
+}
+
+/// The fused train step must reduce training loss on a realistic batch
+/// set, for every model — end-to-end learning signal through Pallas
+/// kernels, custom VJPs, and fused Adam.
+#[test]
+fn train_step_learns_all_models() {
+    let Some(mut rt) = runtime() else { return };
+    let ds = tiny_dataset();
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: 8,
+        max_outputs_per_batch: 64,
+        node_budget: 256,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(2);
+    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+    for model in ["gcn", "sage", "gat"] {
+        let meta = rt
+            .manifest
+            .bucket_meta(model, "train", cache.max_batch_nodes())
+            .expect("bucket")
+            .clone();
+        let mut state = ModelState::init(&meta, 7);
+        let mut dense = DenseBatch::zeros(meta.n_pad, meta.feat);
+        let mut first = None;
+        let mut last = 0.0;
+        for epoch in 0..6 {
+            let mut epoch_loss = 0.0;
+            let mut count = 0.0;
+            for b in 0..cache.len() {
+                cache.densify_into(&ds, b, &mut dense);
+                let m = rt
+                    .train_step(&meta, &mut state, &dense, 5e-3, epoch * 100 + b as i32)
+                    .expect("train step");
+                epoch_loss += m.loss as f64 * m.mask_count as f64;
+                count += m.mask_count as f64;
+            }
+            let loss = epoch_loss / count;
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.85,
+            "{model}: loss {first:.3} -> {last:.3} did not improve"
+        );
+    }
+}
+
+/// Gradient-accumulation path: `grad` artifact + host Adam must also
+/// learn, and grads must be finite.
+#[test]
+fn grad_step_and_host_adam_learn() {
+    let Some(mut rt) = runtime() else { return };
+    let ds = tiny_dataset();
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: 8,
+        max_outputs_per_batch: 64,
+        node_budget: 256,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(3);
+    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+    let meta = rt
+        .manifest
+        .bucket_meta("gcn", "grad", cache.max_batch_nodes())
+        .expect("grad bucket")
+        .clone();
+    let mut state = ModelState::init(&meta, 9);
+    let mut dense = DenseBatch::zeros(meta.n_pad, meta.feat);
+    let mut first = None;
+    let mut last = 0.0;
+    for epoch in 0..6i32 {
+        let mut acc = vec![0.0f32; meta.param_count];
+        let mut loss_sum = 0.0;
+        let mut count = 0.0;
+        for b in 0..cache.len() {
+            cache.densify_into(&ds, b, &mut dense);
+            let (g, m) = rt
+                .grad_step(&meta, &state, &dense, epoch * 31 + b as i32)
+                .expect("grad step");
+            assert!(g.iter().all(|v| v.is_finite()));
+            for (a, gv) in acc.iter_mut().zip(&g) {
+                *a += gv;
+            }
+            loss_sum += m.loss as f64 * m.mask_count as f64;
+            count += m.mask_count as f64;
+        }
+        for v in acc.iter_mut() {
+            *v /= cache.len() as f32;
+        }
+        ibmb::training::trainer::host_adam(&mut state, &acc, 1e-2);
+        let loss = loss_sum / count;
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    assert!(last < first.unwrap(), "full-epoch accumulation not learning");
+}

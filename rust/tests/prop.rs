@@ -1,0 +1,261 @@
+//! Property-style randomized tests over the coordinator's invariants
+//! (proptest is unavailable offline — DESIGN.md §7 — so we drive a
+//! seeded generator through many random configurations; every failure
+//! message includes the case seed for replay).
+//!
+//! Invariants covered:
+//! * every batching method partitions the output nodes exactly
+//!   (disjoint cover), respects its node budget, and produces
+//!   structurally valid batches;
+//! * cache round-trips preserve batches bit-exactly;
+//! * schedulers always emit permutations;
+//! * the METIS partitioner covers all nodes within balance bounds;
+//! * push/power PPR mass bounds hold on random graphs;
+//! * JSON parser round-trips random documents.
+
+use std::collections::HashSet;
+
+use ibmb::baselines;
+use ibmb::batching::BatchCache;
+use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::partition::metis::{partition_graph, MetisConfig};
+use ibmb::ppr::power::{batch_ppr, PowerConfig};
+use ibmb::ppr::push::{push_ppr, PushConfig, PushWorkspace};
+use ibmb::scheduler::{
+    batch_distance_matrix, OptimalCycleScheduler, Scheduler, WeightedScheduler,
+};
+use ibmb::util::json::{parse, to_string, Json};
+use ibmb::util::Rng;
+
+fn random_dataset(rng: &mut Rng) -> ibmb::datasets::Dataset {
+    let spec = DatasetSpec {
+        nodes: 300 + rng.next_below(500),
+        communities: 4 + rng.next_below(12),
+        classes: 3 + rng.next_below(5),
+        feat_dim: 8,
+        avg_degree: 4.0 + rng.next_f64() * 8.0,
+        p_intra: 0.5 + rng.next_f64() * 0.3,
+        p_adjacent: 0.1,
+        degree_tail: 2.0 + rng.next_f64(),
+        noise: 1.0,
+        train_frac: 0.2 + rng.next_f64() * 0.4,
+        val_frac: 0.1,
+        name: "prop",
+    };
+    sbm::generate(&spec, rng.next_u64())
+}
+
+const METHODS: [&str; 8] = [
+    "node-wise IBMB",
+    "batch-wise IBMB",
+    "fixed random",
+    "neighbor sampling",
+    "LADIES",
+    "GraphSAINT-RW",
+    "Cluster-GCN",
+    "shaDow",
+];
+
+#[test]
+fn prop_all_methods_produce_valid_batches() {
+    let mut master = Rng::new(0xFACE);
+    for case in 0..8 {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let ds = random_dataset(&mut rng);
+        let budget = 256 + 256 * rng.next_below(3);
+        let nb = 2 + rng.next_below(6);
+        let aux = 2 + rng.next_below(12);
+        for method in METHODS {
+            let mut gen = baselines::by_name(method, aux, nb, budget).unwrap();
+            let out = ds.splits.train.clone();
+            let batches = gen.generate(&ds, &out, &mut rng);
+            assert!(
+                !batches.is_empty(),
+                "case {case} seed {seed}: {method} produced no batches"
+            );
+            let mut seen: HashSet<u32> = HashSet::new();
+            for b in &batches {
+                b.validate().unwrap_or_else(|e| {
+                    panic!("case {case} seed {seed}: {method}: {e}")
+                });
+                assert!(b.num_outputs > 0, "{method}: empty outputs");
+                for &o in b.output_nodes() {
+                    // GraphSAINT may sample an output in several
+                    // batches (global sampler); all others must not
+                    if method != "GraphSAINT-RW" {
+                        assert!(
+                            seen.insert(o),
+                            "case {case} seed {seed}: {method}: output {o} twice"
+                        );
+                    }
+                }
+            }
+            // exact cover for partition-based methods
+            if !matches!(method, "GraphSAINT-RW") {
+                assert_eq!(
+                    seen.len(),
+                    out.len(),
+                    "case {case} seed {seed}: {method} covers {}/{}",
+                    seen.len(),
+                    out.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cache_roundtrip_is_exact() {
+    let mut master = Rng::new(0xBEEF);
+    for _ in 0..6 {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let ds = random_dataset(&mut rng);
+        let mut gen =
+            baselines::by_name("node-wise IBMB", 6, 4, 512).unwrap();
+        let batches = gen.generate(&ds, &ds.splits.train, &mut rng);
+        let cache = BatchCache::build(&batches);
+        assert_eq!(cache.len(), batches.len(), "seed {seed}");
+        for (i, b) in batches.iter().enumerate() {
+            let got = cache.to_cached(i);
+            assert_eq!(got.nodes, b.nodes, "seed {seed} batch {i}");
+            assert_eq!(got.edges, b.edges, "seed {seed} batch {i}");
+            assert_eq!(got.weights, b.weights, "seed {seed} batch {i}");
+            assert_eq!(got.num_outputs, b.num_outputs);
+        }
+    }
+}
+
+#[test]
+fn prop_schedulers_always_emit_permutations() {
+    let mut master = Rng::new(0xD1CE);
+    for _ in 0..10 {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let b = 1 + rng.next_below(24);
+        let c = 2 + rng.next_below(6);
+        let hists: Vec<Vec<f64>> = (0..b)
+            .map(|_| (0..c).map(|_| rng.next_f64() * 10.0).collect())
+            .collect();
+        let dist = batch_distance_matrix(&hists);
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(OptimalCycleScheduler::new(&dist, &mut rng)),
+            Box::new(WeightedScheduler::new(dist.clone())),
+        ];
+        for s in scheds.iter_mut() {
+            for _ in 0..3 {
+                let mut o = s.epoch_order(&mut rng);
+                o.sort_unstable();
+                assert_eq!(
+                    o,
+                    (0..b).collect::<Vec<_>>(),
+                    "seed {seed} b={b} {}",
+                    s.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_metis_covers_and_balances() {
+    let mut master = Rng::new(0xF00D);
+    for _ in 0..6 {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let ds = random_dataset(&mut rng);
+        let k = 2 + rng.next_below(8);
+        let part =
+            partition_graph(&ds.graph, k, &MetisConfig::default(), &mut rng);
+        assert_eq!(part.len(), ds.graph.num_nodes(), "seed {seed}");
+        let mut sizes = vec![0usize; k];
+        for &p in &part {
+            assert!((p as usize) < k, "seed {seed}: part id out of range");
+            sizes[p as usize] += 1;
+        }
+        let ideal = ds.graph.num_nodes() as f64 / k as f64;
+        for (p, &s) in sizes.iter().enumerate() {
+            assert!(
+                (s as f64) <= ideal * 1.6 + 2.0,
+                "seed {seed}: part {p} has {s} (ideal {ideal:.0})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_ppr_mass_bounds() {
+    let mut master = Rng::new(0xAB1E);
+    for _ in 0..6 {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let ds = random_dataset(&mut rng);
+        let n = ds.graph.num_nodes();
+        let mut ws = PushWorkspace::new(n);
+        for _ in 0..5 {
+            let root = rng.next_below(n) as u32;
+            let ppr = push_ppr(&ds.graph, root, &PushConfig::default(), &mut ws);
+            let mass = ppr.total_mass();
+            assert!(
+                (0.0..=1.0 + 1e-4).contains(&mass),
+                "seed {seed} root {root}: push mass {mass}"
+            );
+            assert!(
+                ppr.scores.iter().all(|s| *s >= 0.0),
+                "seed {seed}: negative score"
+            );
+        }
+        let roots: Vec<u32> = (0..5)
+            .map(|_| rng.next_below(n) as u32)
+            .collect();
+        let (_, scores) = batch_ppr(&ds.graph, &roots, &PowerConfig::default());
+        let mass: f32 = scores.iter().sum();
+        assert!(
+            mass > 0.5 && mass <= 1.0 + 1e-3,
+            "seed {seed}: power mass {mass}"
+        );
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0 * 64.0).round() / 64.0),
+        3 => {
+            let len = rng.next_below(8);
+            let s: String = (0..len)
+                .map(|_| {
+                    let opts = ['a', 'Z', '9', '"', '\\', 'é', '\n', '😀'];
+                    opts[rng.next_below(opts.len())]
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr(
+            (0..rng.next_below(4))
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.next_below(4) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::new(0x15A5);
+    for case in 0..200 {
+        let doc = random_json(&mut rng, 3);
+        let text = to_string(&doc);
+        let back = parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e} for {text}"));
+        assert_eq!(doc, back, "case {case}: {text}");
+    }
+}
