@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, then the tier-1 verify
+# (`cargo build --release && cargo test -q`). fmt/clippy run only when
+# the components are installed so the gate also works on minimal
+# toolchains; the tier-1 steps are unconditional.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+else
+    echo "== skipping fmt (rustfmt not installed) =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== skipping clippy (not installed) =="
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "CI OK"

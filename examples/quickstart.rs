@@ -1,16 +1,19 @@
 //! Quickstart: the minimal IBMB pipeline end to end.
 //!
 //! 1. Generate a small synthetic graph dataset.
-//! 2. Preprocess: node-wise IBMB batches (PPR influence selection +
+//! 2. **Plan**: node-wise IBMB batch plans (PPR influence selection +
 //!    PPR-distance output partitioning), cached contiguously.
-//! 3. Train a GCN for a few epochs through the AOT-compiled fused
-//!    train step (PJRT CPU, no Python anywhere).
-//! 4. Run batched inference on the test split.
+//! 3. Train a GCN for a few epochs — plans **materialize** into
+//!    arena-reused buffers on the prefetch ring, feeding the
+//!    AOT-compiled fused train step (PJRT CPU, no Python anywhere).
+//! 4. Run batched inference on the test split through the same
+//!    plan/materialize pipeline.
 //!
 //! Run with: `cargo run --release --example quickstart`
 //! (requires `make artifacts` first)
 
-use ibmb::batching::{BatchCache, BatchGenerator, NodeWiseIbmb};
+use ibmb::batching::{BatchArena, BatchCache, BatchGenerator, NodeWiseIbmb};
+use ibmb::config::DEFAULT_PREFETCH_DEPTH;
 use ibmb::datasets::{sbm, DatasetSpec};
 use ibmb::experiments::runner::Env;
 use ibmb::inference::infer_with_batches;
@@ -48,11 +51,11 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    // peek at the preprocessing product
+    // peek at the planning product (phase 1: node lists only)
     let mut rng = Rng::new(0);
-    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
     println!(
-        "preprocessing: {} batches, largest {} nodes, cache {:.1} KiB",
+        "planning: {} batches, largest {} nodes, cache {:.1} KiB",
         cache.len(),
         cache.max_batch_nodes(),
         cache.memory_bytes() as f64 / 1024.0
@@ -84,7 +87,8 @@ fn main() -> anyhow::Result<()> {
     };
     let mut irng = Rng::new(1);
     let test_cache =
-        BatchCache::build(&test_gen.generate(&ds, &ds.splits.test, &mut irng));
+        BatchCache::build(&test_gen.plan(&ds, &ds.splits.test, &mut irng));
+    let mut arena = BatchArena::new(ds.feat_dim);
     let rep = infer_with_batches(
         &mut env.rt,
         &ds,
@@ -94,6 +98,8 @@ fn main() -> anyhow::Result<()> {
         Some(&test_cache),
         &ds.splits.test,
         &mut irng,
+        &mut arena,
+        DEFAULT_PREFETCH_DEPTH,
     )?;
     println!(
         "test accuracy {:.1}% in {:.3}s ({} batches)",

@@ -1,19 +1,53 @@
 //! Micro-benchmarks of the L3 hot paths (the §Perf profile):
 //! push-PPR throughput, batch-wise power-iteration PPR, METIS
-//! partitioning, densification, the prefetch-overlap ratio, and a
-//! single fused train step per bucket.
+//! partitioning, and the plan→materialize→consume ring pipeline at
+//! configurable prefetch depth, plus a single fused train step per
+//! bucket when artifacts are present.
+//!
+//! The pipeline section sweeps ring depths (default `1,2,4`; override
+//! with `--depths 1,8`), reporting batches/sec, arena allocations, and
+//! overlap ratio, and writes the machine-readable `BENCH_pipeline.json`
+//! so the perf trajectory is recorded across PRs.
 
-use ibmb::batching::{BatchCache, BatchGenerator, DenseBatch, NodeWiseIbmb};
+use std::collections::BTreeMap;
+
+use ibmb::batching::{BatchArena, BatchCache, BatchGenerator, DenseBatch, NodeWiseIbmb};
 use ibmb::bench_harness::{secs, time_it, Table};
 use ibmb::config::preset_for;
 use ibmb::datasets::{sbm, spec_by_name};
 use ibmb::partition::metis::{partition_graph, MetisConfig};
+use ibmb::pipeline::run_prefetched;
 use ibmb::ppr::power::{batch_ppr, PowerConfig};
 use ibmb::ppr::push::{push_ppr, PushConfig, PushWorkspace};
 use ibmb::runtime::ModelState;
-use ibmb::util::Rng;
+use ibmb::util::json::{to_string, Json};
+use ibmb::util::{Rng, Timer};
+
+/// One measured ring configuration.
+struct DepthResult {
+    depth: usize,
+    batches_per_s: f64,
+    overlap_ratio: f64,
+    /// Total fresh buffer allocations over warmup + measured epochs.
+    allocations: usize,
+    /// Allocations during the measured (post-warmup) epochs — the
+    /// steady-state zero-allocation invariant.
+    steady_allocations: usize,
+}
 
 fn main() -> anyhow::Result<()> {
+    let args = ibmb::cli::Args::parse(
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    );
+    let mut depths: Vec<usize> = args
+        .get("depths")
+        .map(|s| s.split(',').filter_map(|t| t.parse().ok()).collect())
+        .unwrap_or_else(|| vec![1, 2, 4]);
+    if depths.is_empty() {
+        eprintln!("--depths parsed to nothing; falling back to 1,2,4");
+        depths = vec![1, 2, 4];
+    }
+
     let spec = spec_by_name("synth-arxiv").unwrap().scaled(0.5);
     let ds = sbm::generate(&spec, 1);
     let n = ds.graph.num_nodes();
@@ -58,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         format!("{:.2} Medges/s", ds.graph.num_edges() as f64 / s.mean / 1e6),
     ]);
 
-    // densification
+    // ---- plan once, then stream through the ring at each depth ----
     let p = preset_for(&ds.name);
     let mut gen = NodeWiseIbmb {
         aux_per_output: p.aux_per_output,
@@ -66,23 +100,106 @@ fn main() -> anyhow::Result<()> {
         node_budget: p.node_budget,
         ..Default::default()
     };
-    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
     let bucket = cache
         .max_batch_nodes()
         .next_power_of_two()
         .clamp(256, 2048);
-    let mut dense = DenseBatch::zeros(bucket, ds.feat_dim);
-    let mut i = 0;
-    let s = time_it(5, 100, || {
-        cache.densify_into(&ds, i % cache.len(), &mut dense);
-        i += 1;
-    });
-    table.row(&[
-        format!("densify into n{bucket}"),
-        secs(s.mean),
-        secs(s.p95),
-        format!("{:.0} batches/s", 1.0 / s.mean),
-    ]);
+    let order: Vec<usize> = (0..cache.len()).collect();
+    let epochs = 4usize;
+    let mut depth_results: Vec<DepthResult> = Vec::new();
+    for &depth in &depths {
+        let depth = depth.max(1);
+        let mut arena = BatchArena::new(ds.feat_dim);
+        // consume = touch every materialized feature row (a stand-in
+        // for the host->device copy the execute thread performs)
+        let run_epoch = |arena: &mut BatchArena| {
+            let ring = arena.acquire_many(bucket, depth);
+            let (stats, ring) = run_prefetched(
+                &order,
+                ring,
+                |i, buf| cache.materialize_into(&ds, i, buf),
+                |_, buf| {
+                    let sum: f32 =
+                        buf.x[..buf.num_real * buf.feat].iter().sum();
+                    std::hint::black_box(sum);
+                },
+            );
+            arena.release_many(ring);
+            stats
+        };
+        run_epoch(&mut arena); // warmup: populates the arena pools
+        let warm_allocs = arena.allocations();
+        let t = Timer::start();
+        let mut overlap = 0.0;
+        for _ in 0..epochs {
+            overlap = run_epoch(&mut arena).overlap_ratio();
+        }
+        let elapsed = t.elapsed_s();
+        let total_batches = epochs * cache.len();
+        let result = DepthResult {
+            depth,
+            batches_per_s: total_batches as f64 / elapsed,
+            overlap_ratio: overlap,
+            allocations: arena.allocations(),
+            steady_allocations: arena.allocations() - warm_allocs,
+        };
+        table.row(&[
+            format!("ring depth {depth} (n{bucket})"),
+            secs(elapsed / total_batches as f64),
+            "-".into(),
+            format!(
+                "{:.0} batches/s, {} allocs ({} steady), overlap {:.2}",
+                result.batches_per_s,
+                result.allocations,
+                result.steady_allocations,
+                result.overlap_ratio
+            ),
+        ]);
+        depth_results.push(result);
+    }
+
+    // machine-readable record for the perf trajectory
+    let json = Json::Obj(BTreeMap::from([
+        ("bench".into(), Json::Str("micro_pipeline".into())),
+        ("dataset".into(), Json::Str(ds.name.clone())),
+        ("nodes".into(), Json::Num(n as f64)),
+        ("batches".into(), Json::Num(cache.len() as f64)),
+        ("bucket".into(), Json::Num(bucket as f64)),
+        ("epochs".into(), Json::Num(epochs as f64)),
+        (
+            "depths".into(),
+            Json::Arr(
+                depth_results
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(BTreeMap::from([
+                            ("depth".into(), Json::Num(r.depth as f64)),
+                            (
+                                "batches_per_s".into(),
+                                Json::Num(r.batches_per_s),
+                            ),
+                            (
+                                "overlap_ratio".into(),
+                                Json::Num(r.overlap_ratio),
+                            ),
+                            (
+                                "allocations".into(),
+                                Json::Num(r.allocations as f64),
+                            ),
+                            (
+                                "steady_allocations".into(),
+                                Json::Num(r.steady_allocations as f64),
+                            ),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+    let out_path = args.get_or("out", "BENCH_pipeline.json").to_string();
+    std::fs::write(&out_path, to_string(&json))?;
+    println!("wrote {out_path}");
 
     // fused train step per bucket (needs artifacts)
     match ibmb::experiments::runner::Env::load() {
@@ -104,12 +221,12 @@ fn main() -> anyhow::Result<()> {
                     node_budget: bucket,
                     ..Default::default()
                 };
-                let bcache = BatchCache::build(&bgen.generate(
+                let bcache = BatchCache::build(&bgen.plan(
                     &ds,
                     &ds.splits.train,
                     &mut rng,
                 ));
-                bcache.densify_into(&ds, 0, &mut dense);
+                bcache.materialize_into(&ds, 0, &mut dense);
                 let s = time_it(2, 10, || {
                     env.rt
                         .train_step(&meta, &mut state, &dense, 1e-3, 1)

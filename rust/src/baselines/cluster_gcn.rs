@@ -8,7 +8,7 @@
 //! Table 7 reproductions show (slow on small label rates, boundary
 //! accuracy loss).
 
-use crate::batching::batch::CachedBatch;
+use crate::batching::batch::BatchPlan;
 use crate::batching::BatchGenerator;
 use crate::datasets::Dataset;
 use crate::graph::induced_subgraph;
@@ -38,12 +38,12 @@ impl BatchGenerator for ClusterGcn {
         "Cluster-GCN"
     }
 
-    fn generate(
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch> {
+    ) -> Vec<BatchPlan> {
         let part = partition_graph(&ds.graph, self.num_batches, &self.metis, rng);
         let out_set: std::collections::HashSet<u32> =
             out_nodes.iter().copied().collect();
@@ -68,7 +68,7 @@ impl BatchGenerator for ClusterGcn {
                     members.iter().copied().filter(|v| !out_set.contains(v)),
                 );
                 let sg = induced_subgraph(&ds.graph, &outputs);
-                Some(CachedBatch {
+                Some(BatchPlan {
                     nodes: sg.nodes,
                     num_outputs: n_out,
                     edges: sg.edges,
@@ -93,7 +93,7 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(12);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         let total_out: usize = batches.iter().map(|b| b.num_outputs).sum();
         assert_eq!(total_out, out.len());
         // every node of the graph appears in exactly one batch:
@@ -115,7 +115,7 @@ mod tests {
             ..Default::default()
         };
         let mut rng = Rng::new(13);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         let total_nodes: usize = batches.iter().map(|b| b.num_nodes()).sum();
         // drags in whole partitions (~N/num_batches nodes each) despite
         // having only 4 output nodes

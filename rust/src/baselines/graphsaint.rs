@@ -9,7 +9,7 @@
 
 use std::collections::HashSet;
 
-use crate::batching::batch::CachedBatch;
+use crate::batching::batch::BatchPlan;
 use crate::batching::BatchGenerator;
 use crate::datasets::Dataset;
 use crate::graph::induced_subgraph;
@@ -35,12 +35,12 @@ impl BatchGenerator for GraphSaintRw {
         false
     }
 
-    fn generate(
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch> {
+    ) -> Vec<BatchPlan> {
         let out_set: HashSet<u32> = out_nodes.iter().copied().collect();
         let n = ds.graph.num_nodes();
         (0..self.num_steps)
@@ -91,7 +91,7 @@ impl BatchGenerator for GraphSaintRw {
                 let n_out = outputs.len();
                 outputs.extend(aux);
                 let sg = induced_subgraph(&ds.graph, &outputs);
-                CachedBatch {
+                BatchPlan {
                     nodes: sg.nodes,
                     num_outputs: n_out,
                     edges: sg.edges,
@@ -121,7 +121,7 @@ mod tests {
         let out_set: std::collections::HashSet<u32> =
             out.iter().copied().collect();
         let mut rng = Rng::new(10);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         assert!(!batches.is_empty());
         for b in &batches {
             assert!(b.validate().is_ok());
@@ -146,7 +146,7 @@ mod tests {
             node_budget: 400,
         };
         let mut rng = Rng::new(11);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         let aux: usize = batches
             .iter()
             .map(|b| b.num_nodes() - b.num_outputs)

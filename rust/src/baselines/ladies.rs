@@ -11,7 +11,7 @@
 
 use std::collections::HashSet;
 
-use crate::batching::batch::CachedBatch;
+use crate::batching::batch::BatchPlan;
 use crate::batching::BatchGenerator;
 use crate::datasets::Dataset;
 use crate::graph::induced_subgraph;
@@ -36,12 +36,12 @@ impl BatchGenerator for Ladies {
         false
     }
 
-    fn generate(
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch> {
+    ) -> Vec<BatchPlan> {
         let layers = 3; // matches the artifact models
         let partition = random_partition(out_nodes, self.num_batches, rng);
         partition
@@ -102,7 +102,7 @@ impl BatchGenerator for Ladies {
                     }
                 }
                 let sg = induced_subgraph(&ds.graph, &selected);
-                CachedBatch {
+                BatchPlan {
                     nodes: sg.nodes,
                     num_outputs: outputs.len(),
                     edges: sg.edges,
@@ -128,7 +128,7 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(8);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         let total: usize = batches.iter().map(|b| b.num_outputs).sum();
         assert_eq!(total, out.len());
         for b in &batches {
@@ -149,7 +149,7 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(9);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         for b in &batches {
             assert!(b.num_nodes() <= b.num_outputs + 3 * 30);
         }

@@ -9,7 +9,7 @@
 
 use std::collections::HashSet;
 
-use crate::batching::batch::CachedBatch;
+use crate::batching::batch::BatchPlan;
 use crate::batching::BatchGenerator;
 use crate::datasets::Dataset;
 use crate::graph::induced_subgraph;
@@ -34,12 +34,12 @@ impl BatchGenerator for NeighborSampling {
         false
     }
 
-    fn generate(
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch> {
+    ) -> Vec<BatchPlan> {
         let partition = random_partition(out_nodes, self.num_batches, rng);
         partition
             .iter()
@@ -73,7 +73,7 @@ impl BatchGenerator for NeighborSampling {
                     }
                 }
                 let sg = induced_subgraph(&ds.graph, &selected);
-                CachedBatch {
+                BatchPlan {
                     nodes: sg.nodes,
                     num_outputs: outputs.len(),
                     edges: sg.edges,
@@ -89,7 +89,7 @@ mod tests {
     use super::*;
     use crate::datasets::{sbm, DatasetSpec};
 
-    fn run(fanouts: Vec<usize>) -> (Dataset, Vec<CachedBatch>) {
+    fn run(fanouts: Vec<usize>) -> (Dataset, Vec<BatchPlan>) {
         let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 90);
         let mut g = NeighborSampling {
             fanouts,
@@ -98,7 +98,7 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(6);
-        let b = g.generate(&ds, &out, &mut rng);
+        let b = g.plan(&ds, &out, &mut rng);
         (ds, b)
     }
 
@@ -123,11 +123,11 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(7);
-        let a = g.generate(&ds, &out, &mut rng);
-        let b = g.generate(&ds, &out, &mut rng);
+        let a = g.plan(&ds, &out, &mut rng);
+        let b = g.plan(&ds, &out, &mut rng);
         assert!(!g.is_fixed());
         let nodes =
-            |bs: &[CachedBatch]| bs.iter().flat_map(|b| b.nodes.clone()).collect::<Vec<_>>();
+            |bs: &[BatchPlan]| bs.iter().flat_map(|b| b.nodes.clone()).collect::<Vec<_>>();
         assert_ne!(nodes(&a), nodes(&b));
     }
 
@@ -135,7 +135,7 @@ mod tests {
     fn bigger_fanout_bigger_batches() {
         let (_, small) = run(vec![2, 2]);
         let (_, big) = run(vec![8, 8]);
-        let avg = |bs: &[CachedBatch]| {
+        let avg = |bs: &[BatchPlan]| {
             bs.iter().map(|b| b.num_nodes()).sum::<usize>() as f64
                 / bs.len() as f64
         };

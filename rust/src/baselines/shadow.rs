@@ -8,7 +8,7 @@
 //! Σ(k+1) instead of |union|, which reproduces the paper's "worse
 //! runtimes" (Table 7: shaDow inference is the slowest scalable method).
 
-use crate::batching::batch::CachedBatch;
+use crate::batching::batch::BatchPlan;
 use crate::batching::BatchGenerator;
 use crate::datasets::Dataset;
 use crate::graph::induced_subgraph;
@@ -41,12 +41,12 @@ impl BatchGenerator for Shadow {
         "shaDow"
     }
 
-    fn generate(
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch> {
+    ) -> Vec<BatchPlan> {
         // outputs per batch limited by the stacked (duplicated) size
         let per_graph = self.aux_per_output + 1;
         let outs_per_batch = (self.node_budget / per_graph).max(1);
@@ -103,7 +103,7 @@ impl BatchGenerator for Shadow {
                 .iter()
                 .map(|&(s, d)| (inv[s as usize], inv[d as usize]))
                 .collect();
-            batches.push(CachedBatch {
+            batches.push(BatchPlan {
                 nodes: new_nodes,
                 num_outputs: chunk.len(),
                 edges: new_edges,
@@ -129,7 +129,7 @@ mod tests {
             ..Default::default()
         };
         let mut rng = Rng::new(14);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         let total_out: usize = batches.iter().map(|b| b.num_outputs).sum();
         assert_eq!(total_out, out.len());
         // outputs lead each batch and match the roots
@@ -152,7 +152,7 @@ mod tests {
             ..Default::default()
         };
         let mut rng = Rng::new(15);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         let stacked: usize = batches.iter().map(|b| b.num_nodes()).sum();
         let union: std::collections::HashSet<u32> = batches
             .iter()

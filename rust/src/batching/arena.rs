@@ -1,0 +1,171 @@
+//! Arena of reusable [`DenseBatch`] buffers (DESIGN.md §7).
+//!
+//! A densified batch is O(n_pad²) memory (`adj` dominates); allocating
+//! and zeroing one per batch was the hot-path cost the paper's
+//! "consecutive memory accesses" argument says we must not pay. The
+//! arena pools buffers **per bucket size** and hands them out dirty:
+//! [`super::materialize`] zeroes exactly the region the previous
+//! occupant touched, so a pooled buffer materializes bit-identically to
+//! a fresh [`DenseBatch::zeros`] one (asserted by the arena-parity
+//! test in `rust/tests/pipeline.rs`). Steady-state training and
+//! inference therefore perform **zero** tensor allocations: the
+//! [`allocations`](BatchArena::allocations) counter stops growing after
+//! warmup.
+//!
+//! One arena is shared across an entire run — the trainer's epoch loop
+//! and its per-epoch validation inference draw from the same pools, as
+//! does a standalone inference driver serving request waves.
+
+use super::batch::DenseBatch;
+
+/// Pool of [`DenseBatch`] buffers keyed by bucket size (`n_pad`).
+#[derive(Debug)]
+pub struct BatchArena {
+    feat: usize,
+    /// `(n_pad, parked buffers)` — a handful of bucket sizes at most,
+    /// so a linear scan beats hashing.
+    pools: Vec<(usize, Vec<DenseBatch>)>,
+    allocations: usize,
+}
+
+impl BatchArena {
+    /// An empty arena for a dataset/artifact feature width.
+    pub fn new(feat: usize) -> BatchArena {
+        BatchArena {
+            feat,
+            pools: Vec::new(),
+            allocations: 0,
+        }
+    }
+
+    /// Feature width every pooled buffer shares.
+    pub fn feat(&self) -> usize {
+        self.feat
+    }
+
+    /// Fresh `DenseBatch::zeros` allocations performed so far. The
+    /// steady-state invariant: this equals the high-water buffer count
+    /// (pipeline depth × distinct buckets) and stops growing after the
+    /// first epoch.
+    pub fn allocations(&self) -> usize {
+        self.allocations
+    }
+
+    /// Buffers currently parked in the arena.
+    pub fn pooled(&self) -> usize {
+        self.pools.iter().map(|(_, p)| p.len()).sum()
+    }
+
+    /// Bytes held by parked buffers (Table 6 memory accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.pools
+            .iter()
+            .flat_map(|(_, p)| p.iter())
+            .map(|b| b.memory_bytes())
+            .sum()
+    }
+
+    fn pool_mut(&mut self, n_pad: usize) -> &mut Vec<DenseBatch> {
+        if let Some(i) = self.pools.iter().position(|(b, _)| *b == n_pad) {
+            &mut self.pools[i].1
+        } else {
+            self.pools.push((n_pad, Vec::new()));
+            &mut self.pools.last_mut().unwrap().1
+        }
+    }
+
+    /// Hand out a buffer for bucket `n_pad`: pooled (dirty — reset
+    /// incrementally by [`super::materialize`]) or freshly allocated.
+    pub fn acquire(&mut self, n_pad: usize) -> DenseBatch {
+        let pooled = self.pool_mut(n_pad).pop();
+        match pooled {
+            Some(buf) => {
+                debug_assert_eq!(buf.feat, self.feat);
+                debug_assert_eq!(buf.n_pad, n_pad);
+                buf
+            }
+            None => {
+                self.allocations += 1;
+                DenseBatch::zeros(n_pad, self.feat)
+            }
+        }
+    }
+
+    /// Acquire a ring of `count` buffers for one pipeline run.
+    pub fn acquire_many(&mut self, n_pad: usize, count: usize) -> Vec<DenseBatch> {
+        (0..count).map(|_| self.acquire(n_pad)).collect()
+    }
+
+    /// Park a buffer back in its bucket pool.
+    pub fn release(&mut self, buf: DenseBatch) {
+        assert_eq!(
+            buf.feat, self.feat,
+            "arena feat mismatch: buffer {} vs arena {}",
+            buf.feat, self.feat
+        );
+        let n_pad = buf.n_pad;
+        self.pool_mut(n_pad).push(buf);
+    }
+
+    /// Park a whole ring back (the return value of
+    /// [`crate::pipeline::run_prefetched`]).
+    pub fn release_many(&mut self, bufs: impl IntoIterator<Item = DenseBatch>) {
+        for b in bufs {
+            self.release(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_cycles_do_not_reallocate() {
+        let mut arena = BatchArena::new(8);
+        for _ in 0..10 {
+            let b = arena.acquire(64);
+            arena.release(b);
+        }
+        assert_eq!(arena.allocations(), 1);
+        assert_eq!(arena.pooled(), 1);
+    }
+
+    #[test]
+    fn pools_are_keyed_by_bucket_size() {
+        let mut arena = BatchArena::new(8);
+        let a = arena.acquire(64);
+        let b = arena.acquire(128);
+        assert_eq!(arena.allocations(), 2);
+        arena.release_many([a, b]);
+        // each size comes back from its own pool
+        let a2 = arena.acquire(64);
+        let b2 = arena.acquire(128);
+        assert_eq!((a2.n_pad, b2.n_pad), (64, 128));
+        assert_eq!(arena.allocations(), 2);
+        // a third size allocates
+        let c = arena.acquire(256);
+        assert_eq!(arena.allocations(), 3);
+        arena.release_many([a2, b2, c]);
+        assert_eq!(arena.pooled(), 3);
+        assert!(arena.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn ring_acquisition_counts_once() {
+        let mut arena = BatchArena::new(4);
+        for _epoch in 0..5 {
+            let ring = arena.acquire_many(32, 3);
+            assert_eq!(ring.len(), 3);
+            arena.release_many(ring);
+        }
+        assert_eq!(arena.allocations(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "feat mismatch")]
+    fn rejects_foreign_feature_width() {
+        let mut arena = BatchArena::new(4);
+        arena.release(DenseBatch::zeros(16, 8));
+    }
+}

@@ -1,27 +1,32 @@
-//! Batch representations and densification.
+//! Batch plans and their materialization.
 //!
-//! [`CachedBatch`] is the compact cached form (node ids + local edges);
-//! [`DenseBatch`] is the padded buffer set matching the AOT artifact's
-//! batch interchange format (DESIGN.md §6). Densification — feature
-//! generation, adjacency fill, padding — happens on the prefetch thread
-//! so the execute thread only ever hands ready buffers to PJRT.
+//! [`BatchPlan`] is the compact *planning* product (node ids + induced
+//! local topology + bucket choice); [`DenseBatch`] is the padded buffer
+//! set matching the AOT artifact's batch interchange format
+//! (DESIGN.md §6). The two phases are deliberately decoupled
+//! (DESIGN.md §4): planning decides **which** nodes, materialization —
+//! feature generation, adjacency fill, padding — produces tensors into
+//! a caller-owned buffer on the prefetch thread, so the execute thread
+//! only ever hands ready buffers to PJRT and buffers can be pooled in a
+//! [`super::BatchArena`] instead of reallocated per batch.
 
 use crate::datasets::Dataset;
 
-/// A generated mini-batch in compact form.
+/// A planned mini-batch in compact form.
 ///
 /// `nodes` holds global ids with the **output nodes first**
 /// (`nodes[..num_outputs]`); `edges`/`weights` are the induced subgraph
-/// in local ids with global symmetric-normalization weights.
+/// in local ids with global symmetric-normalization weights. No dense
+/// tensors live here — [`materialize`] produces those on demand.
 #[derive(Debug, Clone)]
-pub struct CachedBatch {
+pub struct BatchPlan {
     pub nodes: Vec<u32>,
     pub num_outputs: usize,
     pub edges: Vec<(u32, u32)>,
     pub weights: Vec<f32>,
 }
 
-impl CachedBatch {
+impl BatchPlan {
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
     }
@@ -33,6 +38,12 @@ impl CachedBatch {
     }
     pub fn memory_bytes(&self) -> usize {
         self.nodes.len() * 4 + self.edges.len() * 8 + self.weights.len() * 4
+    }
+
+    /// Smallest artifact bucket this plan fits into — the plan-side half
+    /// of bucket selection (`buckets` ascending, from the manifest).
+    pub fn bucket(&self, buckets: &[usize]) -> Option<usize> {
+        super::bucket_for(self.num_nodes(), buckets)
     }
 
     /// Structural sanity (tests + debug assertions in the loader).
@@ -76,7 +87,8 @@ pub struct DenseBatch {
 }
 
 impl DenseBatch {
-    /// Allocate zeroed buffers for a bucket.
+    /// Allocate zeroed buffers for a bucket. Hot paths should acquire
+    /// from a [`super::BatchArena`] instead of calling this per batch.
     pub fn zeros(n_pad: usize, feat: usize) -> DenseBatch {
         DenseBatch {
             n_pad,
@@ -95,11 +107,15 @@ impl DenseBatch {
     }
 }
 
-/// Fill `dense` from a cached batch: streamed features, zero-padded
-/// normalized adjacency, labels, output mask. Buffers are fully
-/// overwritten (zeroing only what the previous batch touched).
-pub fn densify(ds: &Dataset, batch: &CachedBatch, dense: &mut DenseBatch) {
-    let n = batch.num_nodes();
+/// Materialize a plan into `dense`: streamed features, zero-padded
+/// normalized adjacency, labels, output mask. Generator-independent —
+/// every batching method's plans densify through this one function.
+/// Buffers are fully overwritten (zeroing only the region the previous
+/// occupant touched), which is what makes arena reuse exact: a dirty
+/// pooled buffer materializes bit-identically to a fresh
+/// [`DenseBatch::zeros`] one.
+pub fn materialize(ds: &Dataset, plan: &BatchPlan, dense: &mut DenseBatch) {
+    let n = plan.num_nodes();
     assert!(
         n <= dense.n_pad,
         "batch of {n} nodes exceeds bucket {}",
@@ -116,19 +132,19 @@ pub fn densify(ds: &Dataset, batch: &CachedBatch, dense: &mut DenseBatch) {
     dense.mask[..prev].iter_mut().for_each(|v| *v = 0.0);
     dense.labels[..prev].iter_mut().for_each(|v| *v = 0);
 
-    for (i, &u) in batch.nodes.iter().enumerate() {
+    for (i, &u) in plan.nodes.iter().enumerate() {
         ds.node_features_into(u, &mut dense.x[i * dense.feat..(i + 1) * dense.feat]);
         dense.labels[i] = ds.labels[u as usize] as i32;
     }
-    for i in 0..batch.num_outputs {
+    for i in 0..plan.num_outputs {
         dense.mask[i] = 1.0;
     }
     // adj[dst][src] = w  =>  (adj @ h)[dst] = sum_src w * h[src]
-    for (&(s, d), &w) in batch.edges.iter().zip(&batch.weights) {
+    for (&(s, d), &w) in plan.edges.iter().zip(&plan.weights) {
         dense.adj[d as usize * n_pad + s as usize] = w;
     }
     dense.num_real = n;
-    dense.num_outputs = batch.num_outputs;
+    dense.num_outputs = plan.num_outputs;
 }
 
 #[cfg(test)]
@@ -141,9 +157,9 @@ mod tests {
         sbm::generate(&DatasetSpec::tiny_for_tests(), 40)
     }
 
-    fn batch_from(ds: &Dataset, nodes: &[u32], n_out: usize) -> CachedBatch {
+    fn plan_from(ds: &Dataset, nodes: &[u32], n_out: usize) -> BatchPlan {
         let sg = induced_subgraph(&ds.graph, nodes);
-        CachedBatch {
+        BatchPlan {
             nodes: sg.nodes,
             num_outputs: n_out,
             edges: sg.edges,
@@ -152,11 +168,11 @@ mod tests {
     }
 
     #[test]
-    fn densify_layout_is_correct() {
+    fn materialize_layout_is_correct() {
         let ds = tiny_ds();
-        let b = batch_from(&ds, &[5, 6, 7, 100], 2);
+        let p = plan_from(&ds, &[5, 6, 7, 100], 2);
         let mut d = DenseBatch::zeros(16, ds.feat_dim);
-        densify(&ds, &b, &mut d);
+        materialize(&ds, &p, &mut d);
         assert_eq!(d.num_real, 4);
         assert_eq!(d.num_outputs, 2);
         assert_eq!(&d.mask[..4], &[1.0, 1.0, 0.0, 0.0]);
@@ -171,13 +187,13 @@ mod tests {
     }
 
     #[test]
-    fn densify_clears_previous_occupant() {
+    fn materialize_clears_previous_occupant() {
         let ds = tiny_ds();
-        let big = batch_from(&ds, &(0u32..12).collect::<Vec<_>>(), 12);
-        let small = batch_from(&ds, &[300, 301], 1);
+        let big = plan_from(&ds, &(0u32..12).collect::<Vec<_>>(), 12);
+        let small = plan_from(&ds, &[300, 301], 1);
         let mut d = DenseBatch::zeros(16, ds.feat_dim);
-        densify(&ds, &big, &mut d);
-        densify(&ds, &small, &mut d);
+        materialize(&ds, &big, &mut d);
+        materialize(&ds, &small, &mut d);
         // everything beyond the small batch must be zero again
         assert!(d.mask[2..].iter().all(|&m| m == 0.0));
         assert!(d.labels[2..].iter().all(|&l| l == 0));
@@ -194,14 +210,14 @@ mod tests {
     }
 
     #[test]
-    fn validate_catches_bad_batches() {
+    fn validate_catches_bad_plans() {
         let ds = tiny_ds();
-        let mut b = batch_from(&ds, &[1, 2, 3], 1);
-        assert!(b.validate().is_ok());
-        b.edges.push((9, 0));
-        b.weights.push(0.1);
-        assert!(b.validate().is_err());
-        let dup = CachedBatch {
+        let mut p = plan_from(&ds, &[1, 2, 3], 1);
+        assert!(p.validate().is_ok());
+        p.edges.push((9, 0));
+        p.weights.push(0.1);
+        assert!(p.validate().is_err());
+        let dup = BatchPlan {
             nodes: vec![1, 1],
             num_outputs: 1,
             edges: vec![],
@@ -212,11 +228,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "exceeds bucket")]
-    fn densify_rejects_oversized_batch() {
+    fn plan_bucket_selection() {
         let ds = tiny_ds();
-        let b = batch_from(&ds, &(0u32..20).collect::<Vec<_>>(), 4);
+        let p = plan_from(&ds, &[1, 2, 3], 1);
+        assert_eq!(p.bucket(&[2, 4, 8]), Some(4));
+        assert_eq!(p.bucket(&[2]), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds bucket")]
+    fn materialize_rejects_oversized_plan() {
+        let ds = tiny_ds();
+        let p = plan_from(&ds, &(0u32..20).collect::<Vec<_>>(), 4);
         let mut d = DenseBatch::zeros(16, ds.feat_dim);
-        densify(&ds, &b, &mut d);
+        materialize(&ds, &p, &mut d);
     }
 }

@@ -1,18 +1,21 @@
-//! Contiguous batch cache — the computational heart of the paper's
+//! Contiguous plan cache — the computational heart of the paper's
 //! training speedup (§4 "Computational advantages"): "we can then cache
 //! each mini-batch in consecutive blocks of memory, thereby ...
 //! circumventing expensive random data accesses."
 //!
-//! All batches live in four flat arenas (nodes, edge sources, edge
+//! All plans live in four flat arenas (nodes, edge sources, edge
 //! destinations, weights) with per-batch offsets, so iterating an epoch
-//! is a single forward scan over memory. [`BatchCache::densify_into`]
-//! reads straight from the arenas into the padded buffers without
-//! materializing intermediate structures.
+//! is a single forward scan over memory. [`BatchCache::materialize_into`]
+//! reads straight from the arenas into a padded [`DenseBatch`] without
+//! materializing intermediate structures — it is the fixed-method fast
+//! path of the plan/materialize split (DESIGN.md §4): fixed generators
+//! plan once, the cache streams those plans through the ring prefetcher
+//! every epoch.
 
-use super::batch::{CachedBatch, DenseBatch};
+use super::batch::{BatchPlan, DenseBatch};
 use crate::datasets::Dataset;
 
-/// Immutable arena-packed batch set.
+/// Immutable arena-packed plan set.
 #[derive(Debug, Clone)]
 pub struct BatchCache {
     nodes: Vec<u32>,
@@ -27,22 +30,22 @@ pub struct BatchCache {
 }
 
 impl BatchCache {
-    /// Pack generated batches into contiguous arenas.
-    pub fn build(batches: &[CachedBatch]) -> BatchCache {
-        let total_nodes: usize = batches.iter().map(|b| b.num_nodes()).sum();
-        let total_edges: usize = batches.iter().map(|b| b.num_edges()).sum();
+    /// Pack planned batches into contiguous arenas.
+    pub fn build(plans: &[BatchPlan]) -> BatchCache {
+        let total_nodes: usize = plans.iter().map(|b| b.num_nodes()).sum();
+        let total_edges: usize = plans.iter().map(|b| b.num_edges()).sum();
         let mut c = BatchCache {
             nodes: Vec::with_capacity(total_nodes),
             edge_src: Vec::with_capacity(total_edges),
             edge_dst: Vec::with_capacity(total_edges),
             weights: Vec::with_capacity(total_edges),
-            node_off: Vec::with_capacity(batches.len() + 1),
-            edge_off: Vec::with_capacity(batches.len() + 1),
-            num_outputs: Vec::with_capacity(batches.len()),
+            node_off: Vec::with_capacity(plans.len() + 1),
+            edge_off: Vec::with_capacity(plans.len() + 1),
+            num_outputs: Vec::with_capacity(plans.len()),
         };
         c.node_off.push(0);
         c.edge_off.push(0);
-        for b in batches {
+        for b in plans {
             debug_assert!(b.validate().is_ok());
             c.nodes.extend_from_slice(&b.nodes);
             for (&(s, d), &w) in b.edges.iter().zip(&b.weights) {
@@ -94,9 +97,11 @@ impl BatchCache {
             + (self.node_off.len() + self.edge_off.len() + self.num_outputs.len()) * 8
     }
 
-    /// Densify batch `i` straight out of the arenas (no intermediate
-    /// allocation — prefetch-thread hot path).
-    pub fn densify_into(&self, ds: &Dataset, i: usize, dense: &mut DenseBatch) {
+    /// Materialize batch `i` straight out of the arenas (no
+    /// intermediate allocation — prefetch-thread hot path). Equivalent
+    /// to `materialize(ds, &self.to_plan(i), dense)` without building
+    /// the owned plan.
+    pub fn materialize_into(&self, ds: &Dataset, i: usize, dense: &mut DenseBatch) {
         let nodes = self.batch_nodes(i);
         let n = nodes.len();
         assert!(n <= dense.n_pad, "batch {i}: {n} > bucket {}", dense.n_pad);
@@ -126,10 +131,10 @@ impl BatchCache {
         dense.num_outputs = self.num_outputs[i];
     }
 
-    /// Owned copy of batch `i` (tests / non-hot-path consumers).
-    pub fn to_cached(&self, i: usize) -> CachedBatch {
+    /// Owned copy of plan `i` (tests / non-hot-path consumers).
+    pub fn to_plan(&self, i: usize) -> BatchPlan {
         let (es, ee) = (self.edge_off[i], self.edge_off[i + 1]);
-        CachedBatch {
+        BatchPlan {
             nodes: self.batch_nodes(i).to_vec(),
             num_outputs: self.num_outputs[i],
             edges: (es..ee)
@@ -143,12 +148,12 @@ impl BatchCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::batching::batch::densify;
+    use crate::batching::batch::materialize;
     use crate::batching::{BatchGenerator, NodeWiseIbmb};
     use crate::datasets::{sbm, DatasetSpec};
     use crate::util::Rng;
 
-    fn build() -> (Dataset, Vec<CachedBatch>, BatchCache) {
+    fn build() -> (Dataset, Vec<BatchPlan>, BatchCache) {
         let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 80);
         let mut g = NodeWiseIbmb {
             aux_per_output: 6,
@@ -158,17 +163,17 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(5);
-        let batches = g.generate(&ds, &out, &mut rng);
-        let cache = BatchCache::build(&batches);
-        (ds, batches, cache)
+        let plans = g.plan(&ds, &out, &mut rng);
+        let cache = BatchCache::build(&plans);
+        (ds, plans, cache)
     }
 
     #[test]
-    fn roundtrips_batches_exactly() {
-        let (_, batches, cache) = build();
-        assert_eq!(cache.len(), batches.len());
-        for (i, b) in batches.iter().enumerate() {
-            let got = cache.to_cached(i);
+    fn roundtrips_plans_exactly() {
+        let (_, plans, cache) = build();
+        assert_eq!(cache.len(), plans.len());
+        for (i, b) in plans.iter().enumerate() {
+            let got = cache.to_plan(i);
             assert_eq!(got.nodes, b.nodes);
             assert_eq!(got.num_outputs, b.num_outputs);
             assert_eq!(got.edges, b.edges);
@@ -177,14 +182,14 @@ mod tests {
     }
 
     #[test]
-    fn densify_into_matches_direct_densify() {
-        let (ds, batches, cache) = build();
+    fn materialize_into_matches_direct_materialize() {
+        let (ds, plans, cache) = build();
         let bucket = cache.max_batch_nodes().next_power_of_two().max(16);
         let mut a = DenseBatch::zeros(bucket, ds.feat_dim);
         let mut b = DenseBatch::zeros(bucket, ds.feat_dim);
         for i in 0..cache.len() {
-            cache.densify_into(&ds, i, &mut a);
-            densify(&ds, &batches[i], &mut b);
+            cache.materialize_into(&ds, i, &mut a);
+            materialize(&ds, &plans[i], &mut b);
             assert_eq!(a.x, b.x, "batch {i} x");
             assert_eq!(a.adj, b.adj, "batch {i} adj");
             assert_eq!(a.labels, b.labels);
@@ -195,10 +200,10 @@ mod tests {
 
     #[test]
     fn memory_accounting_is_consistent() {
-        let (_, batches, cache) = build();
-        let loose: usize = batches.iter().map(|b| b.memory_bytes()).sum();
+        let (_, plans, cache) = build();
+        let loose: usize = plans.iter().map(|b| b.memory_bytes()).sum();
         // arena holds same payload (+ offsets overhead)
         assert!(cache.memory_bytes() >= loose);
-        assert!(cache.memory_bytes() < loose + 64 * (batches.len() + 2));
+        assert!(cache.memory_bytes() < loose + 64 * (plans.len() + 2));
     }
 }

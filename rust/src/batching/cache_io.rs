@@ -20,7 +20,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::batch::CachedBatch;
+use super::batch::BatchPlan;
 use super::cache::BatchCache;
 
 const MAGIC: &[u8; 8] = b"IBMBCACH";
@@ -57,11 +57,11 @@ pub fn save(cache: &BatchCache, path: &Path) -> Result<()> {
             w.write_all(&u.to_le_bytes())?;
         }
     }
-    // edges via to_cached views (src then dst then weights, per batch
+    // edges via to_plan views (src then dst then weights, per batch
     // order so offsets line up)
-    let mut all: Vec<CachedBatch> = Vec::with_capacity(b);
+    let mut all: Vec<BatchPlan> = Vec::with_capacity(b);
     for i in 0..b {
-        all.push(cache.to_cached(i));
+        all.push(cache.to_plan(i));
     }
     for cb in &all {
         for &(s, _) in &cb.edges {
@@ -130,12 +130,12 @@ pub fn load(path: &Path) -> Result<BatchCache> {
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect();
 
-    // rebuild through CachedBatch (validates ranges on the way)
+    // rebuild through BatchPlan (validates ranges on the way)
     let mut batches = Vec::with_capacity(b);
     for i in 0..b {
         let (ns, ne) = (node_off[i] as usize, node_off[i + 1] as usize);
         let (es, ee) = (edge_off[i] as usize, edge_off[i + 1] as usize);
-        let cb = CachedBatch {
+        let cb = BatchPlan {
             nodes: nodes[ns..ne].to_vec(),
             num_outputs: num_outputs[i] as usize,
             edges: edge_src[es..ee]
@@ -171,7 +171,7 @@ mod tests {
         };
         let mut rng = Rng::new(15);
         let cache =
-            BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+            BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
         let dir = std::env::temp_dir().join("ibmb_cache_io_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("cache.bin");
@@ -179,8 +179,8 @@ mod tests {
         let loaded = load(&path).unwrap();
         assert_eq!(loaded.len(), cache.len());
         for i in 0..cache.len() {
-            let a = cache.to_cached(i);
-            let b = loaded.to_cached(i);
+            let a = cache.to_plan(i);
+            let b = loaded.to_plan(i);
             assert_eq!(a.nodes, b.nodes);
             assert_eq!(a.num_outputs, b.num_outputs);
             assert_eq!(a.edges, b.edges);

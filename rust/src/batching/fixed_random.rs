@@ -6,7 +6,7 @@
 
 use std::collections::HashMap;
 
-use super::batch::CachedBatch;
+use super::batch::BatchPlan;
 use super::BatchGenerator;
 use crate::datasets::Dataset;
 use crate::graph::induced_subgraph;
@@ -40,12 +40,12 @@ impl BatchGenerator for FixedRandomBatches {
         "fixed random"
     }
 
-    fn generate(
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch> {
+    ) -> Vec<BatchPlan> {
         let partition = random_partition(out_nodes, self.num_batches, rng);
         let mut ws = PushWorkspace::new(ds.graph.num_nodes());
         partition
@@ -75,7 +75,7 @@ impl BatchGenerator for FixedRandomBatches {
                 let mut nodes = outputs.clone();
                 nodes.extend(cands.iter().map(|&(v, _)| v));
                 let sg = induced_subgraph(&ds.graph, &nodes);
-                CachedBatch {
+                BatchPlan {
                     nodes: sg.nodes,
                     num_outputs: outputs.len(),
                     edges: sg.edges,
@@ -102,7 +102,7 @@ mod tests {
             ..Default::default()
         };
         let mut rng = Rng::new(3);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         let total: usize = batches.iter().map(|b| b.num_outputs).sum();
         assert_eq!(total, out.len());
         for b in &batches {
@@ -124,7 +124,7 @@ mod tests {
             node_budget: 4096,
             ..Default::default()
         };
-        let ibmb_batches = ibmb.generate(&ds, &out, &mut rng);
+        let ibmb_batches = ibmb.plan(&ds, &out, &mut rng);
         let nb = ibmb_batches.len().max(1);
         let mut rand = FixedRandomBatches {
             aux_per_output: 8,
@@ -132,8 +132,8 @@ mod tests {
             node_budget: 4096,
             ..Default::default()
         };
-        let rand_batches = rand.generate(&ds, &out, &mut rng);
-        let total = |bs: &[CachedBatch]| {
+        let rand_batches = rand.plan(&ds, &out, &mut rng);
+        let total = |bs: &[BatchPlan]| {
             bs.iter().map(|b| b.num_nodes()).sum::<usize>()
         };
         assert!(

@@ -5,7 +5,7 @@
 //! auxiliary nodes ("we use as many auxiliary nodes as the size of each
 //! partition", App. B).
 
-use super::batch::CachedBatch;
+use super::batch::BatchPlan;
 use super::BatchGenerator;
 use crate::datasets::Dataset;
 use crate::graph::induced_subgraph;
@@ -45,7 +45,7 @@ impl Default for BatchWiseIbmb {
 }
 
 impl BatchWiseIbmb {
-    fn assemble(&self, ds: &Dataset, outputs: &[u32]) -> CachedBatch {
+    fn assemble(&self, ds: &Dataset, outputs: &[u32]) -> BatchPlan {
         let (cand_nodes, cand_scores) = match &self.heat {
             Some(h) => heat_kernel(&ds.graph, outputs, h),
             None => batch_ppr(&ds.graph, outputs, &self.power),
@@ -67,7 +67,7 @@ impl BatchWiseIbmb {
             }
         }
         let sg = induced_subgraph(&ds.graph, &nodes);
-        CachedBatch {
+        BatchPlan {
             nodes: sg.nodes,
             num_outputs: outputs.len(),
             edges: sg.edges,
@@ -81,12 +81,12 @@ impl BatchGenerator for BatchWiseIbmb {
         "batch-wise IBMB"
     }
 
-    fn generate(
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch> {
+    ) -> Vec<BatchPlan> {
         let partition = metis_output_partition(
             &ds.graph,
             out_nodes,
@@ -106,7 +106,7 @@ mod tests {
     use super::*;
     use crate::datasets::{sbm, DatasetSpec};
 
-    fn gen(num_batches: usize) -> (Dataset, Vec<CachedBatch>) {
+    fn gen(num_batches: usize) -> (Dataset, Vec<BatchPlan>) {
         let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 60);
         let mut g = BatchWiseIbmb {
             num_batches,
@@ -115,7 +115,7 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(1);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         (ds, batches)
     }
 
@@ -170,7 +170,7 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(2);
-        for b in g.generate(&ds, &out, &mut rng) {
+        for b in g.plan(&ds, &out, &mut rng) {
             // outputs may exceed the aux budget (partition is given),
             // but aux selection must not blow past the cap
             assert!(

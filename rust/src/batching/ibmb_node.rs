@@ -10,7 +10,7 @@
 
 use std::collections::HashMap;
 
-use super::batch::CachedBatch;
+use super::batch::BatchPlan;
 use super::BatchGenerator;
 use crate::datasets::Dataset;
 use crate::graph::induced_subgraph;
@@ -65,7 +65,7 @@ impl NodeWiseIbmb {
         outputs: &[u32],
         idx_of: &HashMap<u32, usize>,
         pprs: &[SparsePpr],
-    ) -> CachedBatch {
+    ) -> BatchPlan {
         // accumulate influence of candidate aux nodes over all outputs
         let mut is_output = HashMap::new();
         for &o in outputs {
@@ -92,7 +92,7 @@ impl NodeWiseIbmb {
         let mut nodes: Vec<u32> = outputs.to_vec();
         nodes.extend(cands.iter().map(|&(v, _)| v));
         let sg = induced_subgraph(&ds.graph, &nodes);
-        CachedBatch {
+        BatchPlan {
             nodes: sg.nodes,
             num_outputs: outputs.len(),
             edges: sg.edges,
@@ -106,12 +106,12 @@ impl BatchGenerator for NodeWiseIbmb {
         "node-wise IBMB"
     }
 
-    fn generate(
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch> {
+    ) -> Vec<BatchPlan> {
         let pprs = self.pprs(ds, out_nodes);
         let partition = ppr_distance_partition(
             out_nodes,
@@ -136,7 +136,7 @@ mod tests {
     use super::*;
     use crate::datasets::{sbm, DatasetSpec};
 
-    fn gen(k: usize, cap: usize) -> (Dataset, Vec<CachedBatch>) {
+    fn gen(k: usize, cap: usize) -> (Dataset, Vec<BatchPlan>) {
         let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 50);
         let mut g = NodeWiseIbmb {
             aux_per_output: k,
@@ -146,7 +146,7 @@ mod tests {
         };
         let out = ds.splits.train.clone();
         let mut rng = Rng::new(0);
-        let batches = g.generate(&ds, &out, &mut rng);
+        let batches = g.plan(&ds, &out, &mut rng);
         (ds, batches)
     }
 
@@ -200,7 +200,7 @@ mod tests {
     fn more_aux_nodes_means_bigger_batches() {
         let (_, small) = gen(4, 40);
         let (_, big) = gen(16, 40);
-        let avg = |bs: &[CachedBatch]| {
+        let avg = |bs: &[BatchPlan]| {
             bs.iter().map(|b| b.num_nodes()).sum::<usize>() as f64
                 / bs.len() as f64
         };

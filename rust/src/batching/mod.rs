@@ -1,13 +1,27 @@
-//! Mini-batch generation: the paper's core contribution (L3).
+//! Mini-batch generation: the paper's core contribution (L3), as a
+//! two-phase **plan / materialize** pipeline (DESIGN.md §4).
 //!
 //! A mini-batch is (1) a set of *output* nodes whose predictions this
 //! batch computes, (2) a set of *auxiliary* nodes providing
 //! message-passing context, and (3) the induced subgraph over both.
-//! Generators implement [`BatchGenerator`]; IBMB variants precompute a
-//! fixed batch set once ([`BatchGenerator::is_fixed`]) which the
-//! training loop stores in a contiguous [`cache::BatchCache`], while
-//! stochastic baselines resample per epoch.
+//! The stack splits that into:
+//!
+//! * **plan** — [`BatchGenerator::plan`] decides *which* nodes: every
+//!   method (IBMB variants and all five baselines) emits compact
+//!   [`BatchPlan`]s — node lists, local topology, bucket sizes — and
+//!   never touches a tensor;
+//! * **materialize** — the generator-independent [`materialize`]
+//!   densifies one plan into a caller-owned [`DenseBatch`]. Buffers
+//!   come from a [`BatchArena`] and are reset, not reallocated, so the
+//!   steady-state epoch loop performs zero tensor allocations.
+//!
+//! IBMB variants precompute a fixed plan set once
+//! ([`BatchGenerator::is_fixed`]) which the training loop packs into a
+//! contiguous [`cache::BatchCache`] and streams through the ring
+//! prefetcher; stochastic baselines re-plan per epoch but reuse the
+//! same arena buffers.
 
+pub mod arena;
 pub mod batch;
 pub mod cache;
 pub mod cache_io;
@@ -15,8 +29,10 @@ pub mod fixed_random;
 pub mod ibmb_batch;
 pub mod ibmb_node;
 
-pub use batch::{densify, CachedBatch, DenseBatch};
+pub use arena::BatchArena;
+pub use batch::{materialize, BatchPlan, DenseBatch};
 pub use cache::BatchCache;
+pub use fixed_random::FixedRandomBatches;
 pub use ibmb_batch::BatchWiseIbmb;
 pub use ibmb_node::NodeWiseIbmb;
 
@@ -28,21 +44,23 @@ pub trait BatchGenerator {
     /// Display name used in experiment tables.
     fn name(&self) -> &'static str;
 
-    /// Whether batches are fixed after preprocessing (cacheable) or
+    /// Whether the plan set is fixed after preprocessing (cacheable) or
     /// resampled every epoch.
     fn is_fixed(&self) -> bool {
         true
     }
 
-    /// Generate the batch set for `out_nodes`. For fixed methods this is
+    /// Phase 1: plan the batch set for `out_nodes` — node lists and
+    /// bucket sizes only, no dense tensors. For fixed methods this is
     /// the (expensive) preprocessing step, run once; for stochastic
-    /// methods it is called per epoch.
-    fn generate(
+    /// methods it is called per epoch. Phase 2 is the
+    /// generator-independent [`materialize`].
+    fn plan(
         &mut self,
         ds: &Dataset,
         out_nodes: &[u32],
         rng: &mut Rng,
-    ) -> Vec<CachedBatch>;
+    ) -> Vec<BatchPlan>;
 }
 
 /// Pick the smallest artifact bucket that fits `n` nodes.

@@ -7,6 +7,12 @@ pub mod presets;
 
 pub use presets::{preset_for, MethodPreset};
 
+/// Default prefetch ring depth (DESIGN.md §7): 2 = classic double
+/// buffering, which the paper's single-worker pipeline implies. Raise
+/// via `--prefetch-depth N` (CLI) or `IBMB_PREFETCH_DEPTH=N` (benches)
+/// to absorb materialization-time jitter at N× buffer memory.
+pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
+
 /// Global experiment scale.
 #[derive(Debug, Clone)]
 pub struct ExpScale {

@@ -38,6 +38,7 @@ pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
             epochs: scale.epochs,
             seed: 7,
             scheduler: kind,
+            prefetch_depth: env.prefetch_depth,
             ..Default::default()
         };
         let mut rng = Rng::new(7);
@@ -53,7 +54,7 @@ pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
         let quality = {
             let mut g2 = runner::generator("batch-wise IBMB", &ds.name, None);
             let mut qrng = Rng::new(7);
-            let batches = g2.generate(&ds, &ds.splits.train, &mut qrng);
+            let batches = g2.plan(&ds, &ds.splits.train, &mut qrng);
             let hists: Vec<Vec<f64>> = batches
                 .iter()
                 .map(|b| ds.label_histogram(b.output_nodes()))

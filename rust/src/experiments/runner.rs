@@ -5,8 +5,8 @@
 use anyhow::{Context, Result};
 
 use crate::baselines;
-use crate::batching::{BatchCache, BatchGenerator};
-use crate::config::{preset_for, ExpScale};
+use crate::batching::{BatchArena, BatchCache, BatchGenerator};
+use crate::config::{preset_for, ExpScale, DEFAULT_PREFETCH_DEPTH};
 use crate::datasets::{sbm, spec_by_name, Dataset};
 use crate::inference::{infer_with_batches, InferReport};
 use crate::runtime::{ModelState, Runtime};
@@ -27,6 +27,10 @@ pub const MAIN_METHODS: [&str; 7] = [
 /// Shared experiment environment.
 pub struct Env {
     pub rt: Runtime,
+    /// Prefetch ring depth used by the train/infer one-liners
+    /// (`IBMB_PREFETCH_DEPTH` env override; `--prefetch-depth` in the
+    /// CLI patches it after load).
+    pub prefetch_depth: usize,
 }
 
 impl Env {
@@ -44,7 +48,11 @@ impl Env {
         });
         let rt = Runtime::load(&dir)
             .with_context(|| "run `make artifacts` first")?;
-        Ok(Env { rt })
+        let prefetch_depth = std::env::var("IBMB_PREFETCH_DEPTH")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_PREFETCH_DEPTH);
+        Ok(Env { rt, prefetch_depth })
     }
 }
 
@@ -83,6 +91,7 @@ pub fn train_once(
         model: model.to_string(),
         epochs: scale.epochs,
         seed,
+        prefetch_depth: env.prefetch_depth,
         ..Default::default()
     };
     let mut rng = Rng::new(seed ^ 0xE9E1);
@@ -105,10 +114,11 @@ pub fn infer_once(
     let mut rng = Rng::new(seed ^ 0x1F3A);
     // fixed methods: preprocessing outside the timed region
     let cache = if gen.is_fixed() {
-        Some(BatchCache::build(&gen.generate(ds, eval, &mut rng)))
+        Some(BatchCache::build(&gen.plan(ds, eval, &mut rng)))
     } else {
         None
     };
+    let mut arena = BatchArena::new(ds.feat_dim);
     infer_with_batches(
         &mut env.rt,
         ds,
@@ -118,6 +128,8 @@ pub fn infer_once(
         cache.as_ref(),
         eval,
         &mut rng,
+        &mut arena,
+        env.prefetch_depth,
     )
 }
 

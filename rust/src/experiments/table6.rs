@@ -34,7 +34,7 @@ pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
         let mut gen = runner::generator(method, &ds.name, None);
         let mut rng = Rng::new(11);
         let cache =
-            BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+            BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
         let max_nodes = cache.max_batch_nodes();
         let meta = env
             .rt
@@ -42,7 +42,9 @@ pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
             .bucket_meta(model, "train", max_nodes)
             .expect("bucket");
         let state = ModelState::init(meta, 11);
-        let buffers = 2 * DenseBatch::zeros(meta.n_pad, meta.feat).memory_bytes();
+        // the prefetch ring holds `depth` arena buffers at steady state
+        let buffers = env.prefetch_depth
+            * DenseBatch::zeros(meta.n_pad, meta.feat).memory_bytes();
         // global methods keep the whole dataset resident; IBMB can drop
         // it after preprocessing (paper: "removes the dataset from
         // memory after preprocessing")

@@ -1,9 +1,10 @@
-//! Mini-batched inference driver: run any batching method's batches
-//! through the AOT infer executable with prefetched densification.
+//! Mini-batched inference driver: stream any batching method's plans
+//! through the AOT infer executable with ring-prefetched
+//! materialization into arena-reused buffers.
 
 use anyhow::{anyhow, Result};
 
-use crate::batching::{BatchCache, BatchGenerator, DenseBatch};
+use crate::batching::{BatchArena, BatchCache, BatchGenerator};
 use crate::datasets::Dataset;
 use crate::pipeline::run_prefetched;
 use crate::runtime::{ModelState, Runtime, StepMetrics};
@@ -14,7 +15,7 @@ use crate::util::{Rng, Timer};
 pub struct InferReport {
     pub accuracy: f64,
     pub mean_loss: f64,
-    /// End-to-end seconds (batch sampling if stochastic + densify +
+    /// End-to-end seconds (plan sampling if stochastic + materialize +
     /// execute; preprocessing of fixed methods is NOT included,
     /// matching the paper's preprocess/inference column split).
     pub seconds: f64,
@@ -22,14 +23,21 @@ pub struct InferReport {
     pub batches: usize,
     /// Real nodes / padded slots (bucket efficiency).
     pub pad_utilization: f64,
-    /// Cache bytes for the batch set used.
+    /// Cache bytes for the plan set used.
     pub cache_bytes: usize,
+    /// Prefetch overlap for this pass (1.0 = materialization fully
+    /// hidden behind execution).
+    pub overlap_ratio: f64,
 }
 
 /// Run inference over `eval_nodes` with a trained `state`.
 ///
 /// Fixed methods pass their prebuilt `cache`; stochastic methods pass
-/// `None` and sample inside the timed region (their real cost).
+/// `None` and plan inside the timed region (their real cost). Dense
+/// buffers are drawn from `arena` — shared with training when called
+/// from the epoch loop — and `depth` sets the prefetch ring size, so
+/// repeated passes perform zero tensor allocations after the first.
+#[allow(clippy::too_many_arguments)]
 pub fn infer_with_batches(
     rt: &mut Runtime,
     ds: &Dataset,
@@ -39,14 +47,15 @@ pub fn infer_with_batches(
     cache: Option<&BatchCache>,
     eval_nodes: &[u32],
     rng: &mut Rng,
+    arena: &mut BatchArena,
+    depth: usize,
 ) -> Result<InferReport> {
     let t = Timer::start();
     let owned_cache;
     let cache = match cache {
         Some(c) => c,
         None => {
-            owned_cache =
-                BatchCache::build(&generator.generate(ds, eval_nodes, rng));
+            owned_cache = BatchCache::build(&generator.plan(ds, eval_nodes, rng));
             &owned_cache
         }
     };
@@ -59,20 +68,24 @@ pub fn infer_with_batches(
             anyhow!("no infer bucket for {model} fitting {max_nodes} nodes")
         })?
         .clone();
+    anyhow::ensure!(
+        arena.feat() == meta.feat,
+        "arena feat {} != artifact feat {}",
+        arena.feat(),
+        meta.feat
+    );
     // compile before the loop so the timing reflects steady state
     rt.executable(&meta.id)?;
 
     let order: Vec<usize> = (0..cache.len()).collect();
-    let buf_a = DenseBatch::zeros(meta.n_pad, meta.feat);
-    let buf_b = DenseBatch::zeros(meta.n_pad, meta.feat);
+    let ring = arena.acquire_many(meta.n_pad, depth.max(1));
     let mut total = StepMetrics::default();
     let mut real_nodes = 0usize;
     let mut err: Option<anyhow::Error> = None;
-    run_prefetched(
+    let (stats, ring) = run_prefetched(
         &order,
-        buf_a,
-        buf_b,
-        |i, buf| cache.densify_into(ds, i, buf),
+        ring,
+        |i, buf| cache.materialize_into(ds, i, buf),
         |_, buf| {
             if err.is_some() {
                 return;
@@ -86,6 +99,7 @@ pub fn infer_with_batches(
             }
         },
     );
+    arena.release_many(ring);
     if let Some(e) = err {
         return Err(e);
     }
@@ -96,5 +110,6 @@ pub fn infer_with_batches(
         batches: cache.len(),
         pad_utilization: real_nodes as f64 / (cache.len() * meta.n_pad) as f64,
         cache_bytes: cache.memory_bytes(),
+        overlap_ratio: stats.overlap_ratio(),
     })
 }

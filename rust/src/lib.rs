@@ -7,21 +7,45 @@
 //! * **Layer 3 (this crate)** — the IBMB pipeline itself: graph store,
 //!   approximate personalized PageRank, output-node partitioning
 //!   (PPR-distance merging and a from-scratch multilevel METIS-like
-//!   partitioner), influence-maximal auxiliary-node selection, contiguous
-//!   batch caching, KL-divergence batch scheduling, a prefetching loader,
-//!   the training/inference drivers, and all five baseline mini-batching
-//!   methods from the paper's evaluation.
+//!   partitioner), influence-maximal auxiliary-node selection,
+//!   KL-divergence batch scheduling, the training/inference drivers,
+//!   and all five baseline mini-batching methods from the paper's
+//!   evaluation.
 //! * **Layer 2** — JAX GNN models (GCN/GAT/GraphSAGE) with a fused
 //!   fwd+bwd+Adam train step, AOT-lowered to HLO text by
 //!   `python/compile/aot.py` (build time only).
 //! * **Layer 1** — Pallas kernels for the compute hot-spots (VMEM-tiled
 //!   dense-block SpMM, masked GAT attention, fused LayerNorm+ReLU).
 //!
-//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) — Python is never on the request path.
+//! ## The batch pipeline: plan → materialize → execute
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment
-//! index mapping each paper table/figure to a bench target.
+//! Batching is a two-phase pipeline (DESIGN.md §4):
+//!
+//! 1. **Plan** — every method implements
+//!    [`batching::BatchGenerator::plan`], emitting compact
+//!    [`batching::BatchPlan`]s (node lists + induced topology + bucket
+//!    sizes, no tensors). Fixed methods plan once and pack the result
+//!    into a contiguous [`batching::BatchCache`]; stochastic baselines
+//!    re-plan per epoch.
+//! 2. **Materialize** — the generator-independent
+//!    [`batching::materialize`] (or the cache's arena-scan
+//!    `materialize_into`) densifies a plan into a caller-owned
+//!    [`batching::DenseBatch`]. Buffers are pooled per bucket size in a
+//!    [`batching::BatchArena`] and reset rather than reallocated, so
+//!    the steady-state epoch loop performs **zero** tensor allocations.
+//! 3. **Execute** — [`pipeline::run_prefetched`] rotates a depth-N ring
+//!    of arena buffers between a materialize worker and the execute
+//!    thread (`--prefetch-depth`, default 2 = double buffering);
+//!    training ([`training::train`]) and inference
+//!    ([`inference::infer_with_batches`]) share the same ring and
+//!    arena.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C
+//! API (`xla` crate; an offline stub is vendored under `vendor/xla`) —
+//! Python is never on the request path.
+//!
+//! See `rust/DESIGN.md` for the full system inventory and the
+//! experiment index mapping each paper table/figure to a bench target.
 
 pub mod baselines;
 pub mod batching;

@@ -19,7 +19,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: ibmb <train|infer|gen-data|list|fig2..fig9|table5..table7> \
          [--dataset NAME] [--model gcn|gat|sage] [--method NAME] \
-         [--epochs N] [--seed N] [--scale F] [--full]"
+         [--epochs N] [--seed N] [--scale F] [--prefetch-depth N] [--full]"
     );
     std::process::exit(2);
 }
@@ -41,6 +41,11 @@ fn main() -> Result<()> {
         }
         s
     };
+    // figN/tableN drivers load their Env internally; export the CLI
+    // depth so every subcommand honors --prefetch-depth uniformly.
+    if let Some(d) = args.get("prefetch-depth") {
+        std::env::set_var("IBMB_PREFETCH_DEPTH", d);
+    }
     match args.subcommand.as_deref() {
         Some("list") => {
             let env = runner::Env::load()?;
@@ -79,6 +84,8 @@ fn main() -> Result<()> {
         }
         Some("train") => {
             let mut env = runner::Env::load()?;
+            env.prefetch_depth =
+                args.get_usize("prefetch-depth", env.prefetch_depth).max(1);
             let ds_name = args.get_or("dataset", "synth-arxiv");
             let model = args.get_or("model", "gcn");
             let method = args.get_or("method", "node-wise IBMB");
@@ -111,6 +118,8 @@ fn main() -> Result<()> {
         }
         Some("infer") => {
             let mut env = runner::Env::load()?;
+            env.prefetch_depth =
+                args.get_usize("prefetch-depth", env.prefetch_depth).max(1);
             let ds_name = args.get_or("dataset", "synth-arxiv");
             let model = args.get_or("model", "gcn");
             let method = args.get_or("method", "node-wise IBMB");
@@ -135,11 +144,13 @@ fn main() -> Result<()> {
             )?;
             println!(
                 "{method} inference on {ds_name}/{model}: acc {:.1}%, \
-                 {:.3}s, {} batches, pad utilization {:.2}",
+                 {:.3}s, {} batches, pad utilization {:.2}, \
+                 prefetch overlap {:.2}",
                 rep.accuracy * 100.0,
                 rep.seconds,
                 rep.batches,
-                rep.pad_utilization
+                rep.pad_utilization,
+                rep.overlap_ratio
             );
         }
         Some("fig2") => experiments::fig2::run(&scale, &args)?,

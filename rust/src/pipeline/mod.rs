@@ -1,11 +1,15 @@
 //! Prefetching loader — "we fully pipeline data loading and batch
 //! creation by prefetching batches in parallel" (paper §5).
 //!
-//! A single worker thread densifies (features + adjacency fill +
-//! padding) the *next* batch while the caller executes the current one,
-//! with two rotating buffers and bounded channels for backpressure.
-//! The paper found one worker optimal ("data loading is limited by
-//! memory bandwidth, which is shared between workers") — we match that.
+//! A single worker thread materializes (features + adjacency fill +
+//! padding) upcoming batches while the caller executes the current one,
+//! rotating a ring of N arena-owned buffers through bounded channels
+//! for backpressure (DESIGN.md §7). The paper found one worker optimal
+//! ("data loading is limited by memory bandwidth, which is shared
+//! between workers") — we match that and expose the *buffer* count as
+//! the tunable instead: `--prefetch-depth` / `IBMB_PREFETCH_DEPTH`
+//! selects N (default 2 = double buffering; deeper rings absorb
+//! materialization-time jitter at N× buffer memory).
 
 pub mod prefetch;
 

@@ -1,12 +1,23 @@
-//! Generic double-buffered prefetch executor over scoped threads
+//! Generic depth-N ring prefetch executor over scoped threads
 //! (tokio is unavailable offline; std threads express the same
 //! pipeline semantics — DESIGN.md §7).
+//!
+//! [`run_prefetched`] drives `consume(i, buf)` over `order` while a
+//! single worker thread runs `fill(i, buf)` for upcoming items into a
+//! ring of N caller-owned buffers (N = pipeline depth). Bounded
+//! channels provide backpressure: at most N−1 filled buffers ever wait
+//! ahead of the consumer. Depth 1 degenerates to a serial fill→consume
+//! loop (the no-pipeline baseline the benches compare against), depth 2
+//! is classic double buffering, and deeper rings absorb fill-time
+//! jitter. All buffers are handed back to the caller afterwards so a
+//! [`crate::batching::BatchArena`] can reclaim them — the ring borrows
+//! memory, it never owns it.
 
 use std::sync::mpsc;
 use std::time::Instant;
 
-/// Overlap accounting for the §Perf target ("densify fully hidden
-/// behind execute").
+/// Overlap accounting for the §Perf target ("materialization fully
+/// hidden behind execute").
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PrefetchStats {
     /// Seconds the consumer spent blocked waiting for a buffer.
@@ -15,6 +26,8 @@ pub struct PrefetchStats {
     pub consume_s: f64,
     /// Items processed.
     pub items: usize,
+    /// Ring depth the run used (number of buffers).
+    pub depth: usize,
 }
 
 impl PrefetchStats {
@@ -28,69 +41,87 @@ impl PrefetchStats {
     }
 }
 
-/// Run `consume(i, buf)` over `order`, with `fill(i, buf)` for the next
-/// item executing concurrently on a worker thread. Two buffers rotate
-/// through bounded channels (capacity 1 each) providing backpressure.
+/// Run `consume(i, buf)` over `order` with `fill(i, buf)` for upcoming
+/// items executing concurrently on a worker thread, rotating through
+/// the `buffers` ring. Returns the stats and every buffer (order
+/// unspecified) for reuse.
+///
+/// Panics if `buffers` is empty.
 pub fn run_prefetched<B: Send>(
     order: &[usize],
-    mut buf_a: B,
-    buf_b: B,
+    mut buffers: Vec<B>,
     fill: impl Fn(usize, &mut B) + Send + Sync,
     mut consume: impl FnMut(usize, &B),
-) -> PrefetchStats {
-    let mut stats = PrefetchStats::default();
+) -> (PrefetchStats, Vec<B>) {
+    assert!(!buffers.is_empty(), "run_prefetched needs >= 1 buffer");
+    let depth = buffers.len();
+    let mut stats = PrefetchStats {
+        depth,
+        ..Default::default()
+    };
     if order.is_empty() {
-        return stats;
+        return (stats, buffers);
     }
-    if order.len() == 1 {
-        // no pipeline needed
-        fill(order[0], &mut buf_a);
-        let t = Instant::now();
-        consume(order[0], &buf_a);
-        stats.consume_s = t.elapsed().as_secs_f64();
-        stats.items = 1;
-        return stats;
+    if depth == 1 || order.len() == 1 {
+        // serial: every fill is consumer wait by definition
+        let buf = &mut buffers[0];
+        for &i in order {
+            let t = Instant::now();
+            fill(i, buf);
+            stats.wait_s += t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            consume(i, buf);
+            stats.consume_s += t.elapsed().as_secs_f64();
+            stats.items += 1;
+        }
+        return (stats, buffers);
     }
 
+    let mut recovered: Vec<B> = Vec::with_capacity(depth);
     std::thread::scope(|scope| {
         // filled buffers flow worker -> consumer; empties flow back
-        let (full_tx, full_rx) = mpsc::sync_channel::<(usize, B)>(1);
-        let (empty_tx, empty_rx) = mpsc::sync_channel::<B>(2);
-
-        // seed the worker with both buffers
-        fill(order[0], &mut buf_a);
-        full_tx.send((order[0], buf_a)).unwrap();
-
+        let (full_tx, full_rx) = mpsc::sync_channel::<(usize, B)>(depth - 1);
+        let (empty_tx, empty_rx) = mpsc::sync_channel::<B>(depth);
+        let seed: Vec<B> = std::mem::take(&mut buffers);
         let fill_ref = &fill;
-        scope.spawn(move || {
-            let mut next = Some(buf_b);
-            for &i in &order[1..] {
-                let mut buf = match next.take() {
+        let worker = scope.spawn(move || {
+            let mut pool = seed;
+            for &i in order {
+                let next = pool.pop().or_else(|| empty_rx.recv().ok());
+                let mut buf = match next {
                     Some(b) => b,
-                    None => match empty_rx.recv() {
-                        Ok(b) => b,
-                        Err(_) => return, // consumer dropped
-                    },
+                    None => return pool, // consumer dropped
                 };
                 fill_ref(i, &mut buf);
                 if full_tx.send((i, buf)).is_err() {
-                    return;
+                    return pool;
                 }
             }
+            pool // leftover empties when depth > items
         });
 
-        for _ in 0..order.len() {
-            let t_wait = Instant::now();
-            let (i, buf) = full_rx.recv().expect("producer died");
-            stats.wait_s += t_wait.elapsed().as_secs_f64();
-            let t_run = Instant::now();
+        // The worker needs exactly len - depth recycled empties (it
+        // starts with the whole ring); the final `depth` buffers are
+        // kept out of the channel so the caller gets them back.
+        let handoffs = order.len().saturating_sub(depth);
+        for k in 0..order.len() {
+            let t = Instant::now();
+            let (i, buf) = full_rx.recv().expect("prefetch worker died");
+            stats.wait_s += t.elapsed().as_secs_f64();
+            let t = Instant::now();
             consume(i, &buf);
-            stats.consume_s += t_run.elapsed().as_secs_f64();
+            stats.consume_s += t.elapsed().as_secs_f64();
             stats.items += 1;
-            let _ = empty_tx.send(buf); // worker may already be done
+            if k < handoffs {
+                let _ = empty_tx.send(buf);
+            } else {
+                recovered.push(buf);
+            }
         }
+        drop(empty_tx);
+        recovered.extend(worker.join().expect("prefetch worker panicked"));
     });
-    stats
+    (stats, recovered)
 }
 
 #[cfg(test)]
@@ -102,10 +133,9 @@ mod tests {
     fn processes_all_items_in_order() {
         let order: Vec<usize> = (0..20).collect();
         let mut seen = Vec::new();
-        let stats = run_prefetched(
+        let (stats, bufs) = run_prefetched(
             &order,
-            0usize,
-            0usize,
+            vec![0usize, 0usize],
             |i, buf| *buf = i * 10,
             |i, buf| {
                 assert_eq!(*buf, i * 10);
@@ -114,15 +144,61 @@ mod tests {
         );
         assert_eq!(seen, order);
         assert_eq!(stats.items, 20);
+        assert_eq!(stats.depth, 2);
+        assert_eq!(bufs.len(), 2);
+    }
+
+    #[test]
+    fn depths_one_two_four_agree_on_consume_order() {
+        let order: Vec<usize> = (0..37).collect();
+        let mut orders = Vec::new();
+        for depth in [1usize, 2, 4] {
+            let mut seen = Vec::new();
+            let (stats, bufs) = run_prefetched(
+                &order,
+                vec![0usize; depth],
+                |i, buf| *buf = i * 3 + 1,
+                |i, buf| {
+                    assert_eq!(*buf, i * 3 + 1, "depth {depth}: stale buffer");
+                    seen.push(i);
+                },
+            );
+            assert_eq!(stats.items, order.len(), "depth {depth}");
+            assert_eq!(stats.depth, depth);
+            assert_eq!(bufs.len(), depth, "depth {depth}: buffers lost");
+            let r = stats.overlap_ratio();
+            assert!((0.0..=1.0).contains(&r), "depth {depth}: overlap {r}");
+            orders.push(seen);
+        }
+        assert_eq!(orders[0], order);
+        assert!(orders.windows(2).all(|w| w[0] == w[1]));
     }
 
     #[test]
     fn single_item_and_empty() {
         let mut count = 0;
-        let s = run_prefetched(&[7], 0u8, 0u8, |_, _| {}, |_, _| count += 1);
-        assert_eq!((count, s.items), (1, 1));
-        let s = run_prefetched(&[], 0u8, 0u8, |_, _| {}, |_, _| {});
-        assert_eq!(s.items, 0);
+        let (s, b) =
+            run_prefetched(&[7], vec![0u8, 0u8], |_, _| {}, |_, _| count += 1);
+        assert_eq!((count, s.items, b.len()), (1, 1, 2));
+        let (s, b) = run_prefetched(&[], vec![0u8, 0u8], |_, _| {}, |_, _| {});
+        assert_eq!((s.items, b.len()), (0, 2));
+    }
+
+    #[test]
+    fn ring_deeper_than_order_returns_all_buffers() {
+        let mut seen = Vec::new();
+        let (stats, bufs) = run_prefetched(
+            &[3, 1],
+            vec![0usize; 5],
+            |i, buf| *buf = i,
+            |i, buf| {
+                assert_eq!(*buf, i);
+                seen.push(i);
+            },
+        );
+        assert_eq!(seen, vec![3, 1]);
+        assert_eq!(stats.items, 2);
+        assert_eq!(bufs.len(), 5);
     }
 
     #[test]
@@ -131,10 +207,9 @@ mod tests {
         // well below the serial sum
         let order: Vec<usize> = (0..8).collect();
         let t = Instant::now();
-        let stats = run_prefetched(
+        let (stats, _) = run_prefetched(
             &order,
-            0u8,
-            0u8,
+            vec![0u8, 0u8],
             |_, _| std::thread::sleep(std::time::Duration::from_millis(10)),
             |_, _| std::thread::sleep(std::time::Duration::from_millis(10)),
         );
@@ -147,15 +222,17 @@ mod tests {
     fn fill_runs_once_per_item() {
         let fills = AtomicUsize::new(0);
         let order: Vec<usize> = (0..50).collect();
-        run_prefetched(
-            &order,
-            0u8,
-            0u8,
-            |_, _| {
-                fills.fetch_add(1, Ordering::Relaxed);
-            },
-            |_, _| {},
-        );
-        assert_eq!(fills.load(Ordering::Relaxed), 50);
+        for depth in [1, 2, 3] {
+            fills.store(0, Ordering::Relaxed);
+            run_prefetched(
+                &order,
+                vec![0u8; depth],
+                |_, _| {
+                    fills.fetch_add(1, Ordering::Relaxed);
+                },
+                |_, _| {},
+            );
+            assert_eq!(fills.load(Ordering::Relaxed), 50, "depth {depth}");
+        }
     }
 }

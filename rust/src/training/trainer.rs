@@ -1,10 +1,12 @@
-//! The training loop: preprocessing → cached batches → prefetched
-//! fused-Adam steps → per-epoch approximate validation → plateau LR +
-//! early stopping. Reproduces the paper's protocol (App. B).
+//! The training loop: preprocessing → cached plans → ring-prefetched
+//! fused-Adam steps on arena-reused buffers → per-epoch approximate
+//! validation → plateau LR + early stopping. Reproduces the paper's
+//! protocol (App. B) on top of the plan/materialize pipeline
+//! (DESIGN.md §4, §7).
 
 use anyhow::{anyhow, Result};
 
-use crate::batching::{BatchCache, BatchGenerator, DenseBatch};
+use crate::batching::{BatchArena, BatchCache, BatchGenerator};
 use crate::datasets::Dataset;
 use crate::pipeline::run_prefetched;
 use crate::runtime::{ArtifactMeta, ModelState, Runtime, StepMetrics};
@@ -38,6 +40,10 @@ pub struct TrainConfig {
     pub grad_accum: usize,
     /// Evaluate validation every this many epochs.
     pub eval_every: usize,
+    /// Prefetch ring depth: number of arena buffers rotating between
+    /// the materialize worker and the execute thread (2 = double
+    /// buffering; see `--prefetch-depth`).
+    pub prefetch_depth: usize,
 }
 
 impl Default for TrainConfig {
@@ -51,6 +57,7 @@ impl Default for TrainConfig {
             scheduler: SchedulerKind::Weighted,
             grad_accum: 1,
             eval_every: 1,
+            prefetch_depth: crate::config::DEFAULT_PREFETCH_DEPTH,
         }
     }
 }
@@ -80,6 +87,10 @@ pub struct TrainResult {
     pub cache_bytes: usize,
     /// Prefetch overlap ratio across training (§Perf target > 0.95).
     pub overlap_ratio: f64,
+    /// Fresh `DenseBatch` allocations over the whole run — with arena
+    /// reuse this equals the high-water ring size (train + validation
+    /// buckets), NOT epochs × batches.
+    pub arena_allocations: usize,
 }
 
 /// Host-side Adam (used only on the gradient-accumulation path; the
@@ -133,7 +144,7 @@ fn make_scheduler(
     }
 }
 
-/// Train `cfg.model` with `generator`'s batches.
+/// Train `cfg.model` with `generator`'s plans.
 pub fn train(
     rt: &mut Runtime,
     ds: &Dataset,
@@ -147,9 +158,9 @@ pub fn train(
 
     // ---- preprocessing (timed separately, like the paper's tables) ----
     let t_pre = Timer::start();
-    let mut cache = BatchCache::build(&generator.generate(ds, train_nodes, rng));
+    let mut cache = BatchCache::build(&generator.plan(ds, train_nodes, rng));
     let val_cache = if generator.is_fixed() && !val_nodes.is_empty() {
-        Some(BatchCache::build(&generator.generate(ds, val_nodes, rng)))
+        Some(BatchCache::build(&generator.plan(ds, val_nodes, rng)))
     } else {
         None
     };
@@ -169,11 +180,23 @@ pub fn train(
         })?
         .clone();
     rt.executable(&meta_train.id)?; // compile outside the timed epochs
+    anyhow::ensure!(
+        ds.feat_dim == meta_train.feat,
+        "dataset feat {} != artifact feat {}",
+        ds.feat_dim,
+        meta_train.feat
+    );
 
     let mut state = ModelState::init(&meta_train, cfg.seed);
     let mut sched = make_scheduler(cfg.scheduler, ds, &cache, rng);
     let mut plateau =
         super::lr_schedule::ReduceLROnPlateau::paper_defaults(cfg.lr);
+
+    // One arena serves the whole run: the train ring, and (through
+    // `infer_with_batches`) the validation ring. After the first epoch
+    // every buffer comes back from the pools.
+    let mut arena = BatchArena::new(ds.feat_dim);
+    let depth = cfg.prefetch_depth.max(1);
 
     let mut history = Vec::new();
     let mut best_val_loss = f64::INFINITY;
@@ -191,9 +214,10 @@ pub fn train(
     let mut epochs_run = 0;
     for epoch in 0..cfg.epochs {
         let t_epoch = Timer::start();
-        // stochastic methods resample every epoch (their real cost)
+        // stochastic methods re-plan every epoch (their real cost) but
+        // keep materializing into the same arena buffers
         if !generator.is_fixed() {
-            cache = BatchCache::build(&generator.generate(ds, train_nodes, rng));
+            cache = BatchCache::build(&generator.plan(ds, train_nodes, rng));
             if cache.is_empty() {
                 continue;
             }
@@ -208,18 +232,16 @@ pub fn train(
             );
         }
         let order = sched.epoch_order(rng);
-        let buf_a = DenseBatch::zeros(meta_train.n_pad, meta_train.feat);
-        let buf_b = DenseBatch::zeros(meta_train.n_pad, meta_train.feat);
+        let ring = arena.acquire_many(meta_train.n_pad, depth);
         let mut train_metrics = StepMetrics::default();
         let mut err: Option<anyhow::Error> = None;
         let mut accum_count = 0usize;
         let mut step_idx = 0usize;
         let cache_ref = &cache;
-        let stats = run_prefetched(
+        let (stats, ring) = run_prefetched(
             &order,
-            buf_a,
-            buf_b,
-            |i, buf| cache_ref.densify_into(ds, i, buf),
+            ring,
+            |i, buf| cache_ref.materialize_into(ds, i, buf),
             |_, buf| {
                 if err.is_some() {
                     return;
@@ -253,6 +275,7 @@ pub fn train(
                 }
             },
         );
+        arena.release_many(ring);
         if let Some(e) = err {
             return Err(e);
         }
@@ -285,6 +308,8 @@ pub fn train(
                 val_cache.as_ref(),
                 val_nodes,
                 rng,
+                &mut arena,
+                depth,
             )?;
             (report.mean_loss, report.accuracy)
         };
@@ -329,5 +354,6 @@ pub fn train(
         epochs_run,
         cache_bytes,
         overlap_ratio,
+        arena_allocations: arena.allocations(),
     })
 }

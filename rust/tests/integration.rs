@@ -4,7 +4,7 @@
 //! error paths (missing buckets, oversized batches, bad manifests).
 
 use ibmb::baselines;
-use ibmb::batching::{BatchCache, BatchGenerator, DenseBatch, NodeWiseIbmb};
+use ibmb::batching::{BatchArena, BatchCache, BatchGenerator, DenseBatch, NodeWiseIbmb};
 use ibmb::datasets::{sbm, DatasetSpec};
 use ibmb::inference::infer_with_batches;
 use ibmb::runtime::{Manifest, ModelState, Runtime};
@@ -126,7 +126,8 @@ fn inference_accuracy_matches_training_signal() {
     };
     let mut rng = Rng::new(4);
     let res = train(&mut rt, &ds, &cfg, &mut gen, &mut rng).expect("train");
-    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.test, &mut rng));
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.test, &mut rng));
+    let mut arena = BatchArena::new(ds.feat_dim);
     let rep = infer_with_batches(
         &mut rt,
         &ds,
@@ -136,6 +137,8 @@ fn inference_accuracy_matches_training_signal() {
         Some(&cache),
         &ds.splits.test,
         &mut rng,
+        &mut arena,
+        2,
     )
     .expect("infer");
     assert!(rep.batches > 0);
@@ -220,7 +223,7 @@ fn unknown_model_is_a_clean_error() {
 }
 
 #[test]
-fn oversized_densify_panics_with_context() {
+fn oversized_materialize_panics_with_context() {
     let ds = dataset(600, 8);
     let mut gen = NodeWiseIbmb {
         aux_per_output: 16,
@@ -229,10 +232,10 @@ fn oversized_densify_panics_with_context() {
         ..Default::default()
     };
     let mut rng = Rng::new(8);
-    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
     let mut tiny = DenseBatch::zeros(8, ds.feat_dim);
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        cache.densify_into(&ds, 0, &mut tiny);
+        cache.materialize_into(&ds, 0, &mut tiny);
     }));
     assert!(result.is_err());
 }

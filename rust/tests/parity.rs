@@ -43,7 +43,7 @@ fn artifact_matches_host_forward_all_models() {
         ..Default::default()
     };
     let mut rng = Rng::new(1);
-    let cache = BatchCache::build(&gen.generate(
+    let cache = BatchCache::build(&gen.plan(
         &ds,
         &ds.splits.val[..60.min(ds.splits.val.len())].to_vec(),
         &mut rng,
@@ -60,11 +60,11 @@ fn artifact_matches_host_forward_all_models() {
         let mut dense = DenseBatch::zeros(meta.n_pad, meta.feat);
 
         for b in 0..cache.len().min(3) {
-            cache.densify_into(&ds, b, &mut dense);
+            cache.materialize_into(&ds, b, &mut dense);
             let metrics = rt.infer_step(&meta, &state, &dense).expect("infer");
 
             // host-side forward on the same subgraph
-            let batch = cache.to_cached(b);
+            let batch = cache.to_plan(b);
             let n = batch.num_nodes();
             let edge_src: Vec<u32> = batch.edges.iter().map(|e| e.0).collect();
             let edge_dst: Vec<u32> = batch.edges.iter().map(|e| e.1).collect();
@@ -137,7 +137,7 @@ fn train_step_learns_all_models() {
         ..Default::default()
     };
     let mut rng = Rng::new(2);
-    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
     for model in ["gcn", "sage", "gat"] {
         let meta = rt
             .manifest
@@ -152,7 +152,7 @@ fn train_step_learns_all_models() {
             let mut epoch_loss = 0.0;
             let mut count = 0.0;
             for b in 0..cache.len() {
-                cache.densify_into(&ds, b, &mut dense);
+                cache.materialize_into(&ds, b, &mut dense);
                 let m = rt
                     .train_step(&meta, &mut state, &dense, 5e-3, epoch * 100 + b as i32)
                     .expect("train step");
@@ -186,7 +186,7 @@ fn grad_step_and_host_adam_learn() {
         ..Default::default()
     };
     let mut rng = Rng::new(3);
-    let cache = BatchCache::build(&gen.generate(&ds, &ds.splits.train, &mut rng));
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
     let meta = rt
         .manifest
         .bucket_meta("gcn", "grad", cache.max_batch_nodes())
@@ -201,7 +201,7 @@ fn grad_step_and_host_adam_learn() {
         let mut loss_sum = 0.0;
         let mut count = 0.0;
         for b in 0..cache.len() {
-            cache.densify_into(&ds, b, &mut dense);
+            cache.materialize_into(&ds, b, &mut dense);
             let (g, m) = rt
                 .grad_step(&meta, &state, &dense, epoch * 31 + b as i32)
                 .expect("grad step");

@@ -1,0 +1,205 @@
+//! Pipeline-level invariants of the plan/materialize refactor:
+//!
+//! * **Arena parity** — for every batching method, materializing into a
+//!   dirty arena-reused buffer is bit-identical to materializing into a
+//!   fresh `DenseBatch::zeros` buffer (catches stale-buffer-reset
+//!   bugs), and release/acquire cycles never reallocate.
+//! * **Ring determinism** — `run_prefetched` at depths 1, 2 and 4
+//!   consumes the same items in the same order with a sane
+//!   `overlap_ratio`, and hands every buffer back.
+//! * **Zero steady-state allocations** — an epoch loop over the ring
+//!   allocates exactly `depth` buffers, independent of epoch count.
+
+use ibmb::baselines;
+use ibmb::batching::{
+    materialize, BatchArena, BatchCache, BatchGenerator, DenseBatch,
+};
+use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::pipeline::run_prefetched;
+use ibmb::util::Rng;
+
+const METHODS: [&str; 8] = [
+    "node-wise IBMB",
+    "batch-wise IBMB",
+    "fixed random",
+    "neighbor sampling",
+    "LADIES",
+    "GraphSAINT-RW",
+    "Cluster-GCN",
+    "shaDow",
+];
+
+fn assert_dense_eq(a: &DenseBatch, b: &DenseBatch, ctx: &str) {
+    assert_eq!(a.num_real, b.num_real, "{ctx}: num_real");
+    assert_eq!(a.num_outputs, b.num_outputs, "{ctx}: num_outputs");
+    assert_eq!(a.x, b.x, "{ctx}: x");
+    assert_eq!(a.adj, b.adj, "{ctx}: adj");
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.mask, b.mask, "{ctx}: mask");
+}
+
+/// Every generator's plans must materialize identically into a reused
+/// arena buffer and a fresh zeroed buffer — the contract that makes
+/// buffer pooling safe, including shaDow's duplicated-node plans.
+#[test]
+fn arena_reuse_matches_fresh_zeros_for_every_generator() {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 400);
+    for method in METHODS {
+        let mut gen = baselines::by_name(method, 6, 4, 384).unwrap();
+        let mut rng = Rng::new(0xA11C);
+        let plans = gen.plan(&ds, &ds.splits.train, &mut rng);
+        assert!(!plans.is_empty(), "{method}: no plans");
+        let bucket = plans
+            .iter()
+            .map(|p| p.num_nodes())
+            .max()
+            .unwrap()
+            .next_power_of_two()
+            .max(16);
+        let mut arena = BatchArena::new(ds.feat_dim);
+        let mut reused = arena.acquire(bucket);
+        for (i, p) in plans.iter().enumerate() {
+            let mut fresh = DenseBatch::zeros(bucket, ds.feat_dim);
+            materialize(&ds, p, &mut fresh);
+            // `reused` still holds the previous plan's contents here
+            materialize(&ds, p, &mut reused);
+            assert_dense_eq(&fresh, &reused, &format!("{method} batch {i}"));
+        }
+        arena.release(reused);
+        // further acquire/release cycles must hit the pool, not malloc
+        for _ in 0..3 {
+            let b = arena.acquire(bucket);
+            arena.release(b);
+        }
+        assert_eq!(arena.allocations(), 1, "{method}: arena reallocated");
+    }
+}
+
+/// The cache's arena-scan materialization obeys the same reuse parity
+/// as the owned-plan path.
+#[test]
+fn cache_materialize_into_is_reuse_safe() {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 401);
+    let mut gen = baselines::by_name("node-wise IBMB", 8, 4, 256).unwrap();
+    let mut rng = Rng::new(0xCAFE);
+    let plans = gen.plan(&ds, &ds.splits.train, &mut rng);
+    let cache = BatchCache::build(&plans);
+    let bucket = cache.max_batch_nodes().next_power_of_two().max(16);
+    let mut reused = DenseBatch::zeros(bucket, ds.feat_dim);
+    // visit in an order that puts big batches before small ones too
+    let mut order: Vec<usize> = (0..cache.len()).collect();
+    order.reverse();
+    for pass in 0..2 {
+        for &i in &order {
+            let mut fresh = DenseBatch::zeros(bucket, ds.feat_dim);
+            cache.materialize_into(&ds, i, &mut fresh);
+            cache.materialize_into(&ds, i, &mut reused);
+            assert_dense_eq(&fresh, &reused, &format!("pass {pass} batch {i}"));
+        }
+    }
+}
+
+/// Depths 1 (serial), 2 (double buffering) and 4 must produce identical
+/// consume orders and plausible overlap accounting.
+#[test]
+fn ring_depths_1_2_4_agree() {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 402);
+    let mut gen = baselines::by_name("node-wise IBMB", 8, 4, 256).unwrap();
+    let mut rng = Rng::new(0xD00D);
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
+    let bucket = cache.max_batch_nodes().next_power_of_two().max(16);
+    let order: Vec<usize> = (0..cache.len()).collect();
+
+    let mut consumed_orders = Vec::new();
+    let mut checksums = Vec::new();
+    for depth in [1usize, 2, 4] {
+        let mut arena = BatchArena::new(ds.feat_dim);
+        let ring = arena.acquire_many(bucket, depth);
+        let mut seen = Vec::new();
+        let mut sum = 0.0f64;
+        let (stats, ring) = run_prefetched(
+            &order,
+            ring,
+            |i, buf| cache.materialize_into(&ds, i, buf),
+            |i, buf| {
+                seen.push(i);
+                sum += buf.x[..buf.num_real * buf.feat]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .sum::<f64>();
+            },
+        );
+        arena.release_many(ring);
+        assert_eq!(stats.items, cache.len(), "depth {depth}");
+        assert_eq!(stats.depth, depth);
+        assert_eq!(arena.pooled(), depth, "depth {depth}: buffers lost");
+        let r = stats.overlap_ratio();
+        assert!((0.0..=1.0).contains(&r), "depth {depth}: overlap {r}");
+        consumed_orders.push(seen);
+        checksums.push(sum);
+    }
+    assert_eq!(consumed_orders[0], order);
+    assert!(consumed_orders.windows(2).all(|w| w[0] == w[1]));
+    // same buffers, same plans => identical data at every depth
+    assert!(
+        checksums.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-6),
+        "checksums diverge: {checksums:?}"
+    );
+}
+
+/// The epoch loop's allocation profile: exactly `depth` buffers total,
+/// no matter how many epochs stream through the ring.
+#[test]
+fn steady_state_epoch_loop_allocates_only_the_ring() {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 403);
+    let mut gen = baselines::by_name("node-wise IBMB", 8, 4, 256).unwrap();
+    let mut rng = Rng::new(0xFEED);
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
+    let bucket = cache.max_batch_nodes().next_power_of_two().max(16);
+    let order: Vec<usize> = (0..cache.len()).collect();
+    let depth = 3usize;
+    let mut arena = BatchArena::new(ds.feat_dim);
+    for epoch in 0..6 {
+        let ring = arena.acquire_many(bucket, depth);
+        let (stats, ring) = run_prefetched(
+            &order,
+            ring,
+            |i, buf| cache.materialize_into(&ds, i, buf),
+            |_, _| {},
+        );
+        arena.release_many(ring);
+        assert_eq!(stats.items, cache.len());
+        assert_eq!(
+            arena.allocations(),
+            depth,
+            "epoch {epoch}: steady state allocated"
+        );
+    }
+}
+
+/// A stochastic method re-planning per epoch still reuses the arena
+/// ring (the plans change; the buffers do not).
+#[test]
+fn stochastic_replanning_reuses_buffers() {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 404);
+    let mut gen = baselines::by_name("neighbor sampling", 4, 4, 256).unwrap();
+    assert!(!gen.is_fixed());
+    let mut rng = Rng::new(0xB0B0);
+    let bucket = 256usize;
+    let depth = 2usize;
+    let mut arena = BatchArena::new(ds.feat_dim);
+    for _epoch in 0..4 {
+        let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
+        assert!(cache.max_batch_nodes() <= bucket);
+        let order: Vec<usize> = (0..cache.len()).collect();
+        let ring = arena.acquire_many(bucket, depth);
+        let (_, ring) = run_prefetched(
+            &order,
+            ring,
+            |i, buf| cache.materialize_into(&ds, i, buf),
+            |_, _| {},
+        );
+        arena.release_many(ring);
+    }
+    assert_eq!(arena.allocations(), depth);
+}

@@ -69,7 +69,7 @@ fn prop_all_methods_produce_valid_batches() {
         for method in METHODS {
             let mut gen = baselines::by_name(method, aux, nb, budget).unwrap();
             let out = ds.splits.train.clone();
-            let batches = gen.generate(&ds, &out, &mut rng);
+            let batches = gen.plan(&ds, &out, &mut rng);
             assert!(
                 !batches.is_empty(),
                 "case {case} seed {seed}: {method} produced no batches"
@@ -114,11 +114,11 @@ fn prop_cache_roundtrip_is_exact() {
         let ds = random_dataset(&mut rng);
         let mut gen =
             baselines::by_name("node-wise IBMB", 6, 4, 512).unwrap();
-        let batches = gen.generate(&ds, &ds.splits.train, &mut rng);
+        let batches = gen.plan(&ds, &ds.splits.train, &mut rng);
         let cache = BatchCache::build(&batches);
         assert_eq!(cache.len(), batches.len(), "seed {seed}");
         for (i, b) in batches.iter().enumerate() {
-            let got = cache.to_cached(i);
+            let got = cache.to_plan(i);
             assert_eq!(got.nodes, b.nodes, "seed {seed} batch {i}");
             assert_eq!(got.edges, b.edges, "seed {seed} batch {i}");
             assert_eq!(got.weights, b.weights, "seed {seed} batch {i}");

@@ -1,0 +1,178 @@
+//! Minimal vendored subset of the `anyhow` error-handling API.
+//!
+//! The offline crate registry has no `anyhow`, so this local path crate
+//! implements exactly the surface the workspace uses: the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, the [`Context`] extension trait,
+//! the [`Result`] alias, and an [`Error`] type that carries an ordered
+//! chain of context frames (outermost first). Formatting matches the
+//! upstream conventions the code relies on: `{}` prints the outermost
+//! frame, `{:#}` joins the chain with `": "`, and `{:?}` prints a
+//! `Caused by:` listing.
+
+use std::fmt;
+
+/// Dynamic error: an ordered chain of message frames, outermost first.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            frames: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap the error with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) frame.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the frames from outermost to innermost.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.frames.first().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, frame) in self.frames[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Mirrors upstream: any std error converts via `?`, capturing its
+// source chain. `Error` itself deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context frames to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fallible(ok: bool) -> Result<u32> {
+        ensure!(ok, "flag was {ok}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_formats() {
+        let x = 3;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(format!("{e}"), "value 3 bad");
+        let e = e.context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: value 3 bad");
+        assert!(format!("{e:?}").contains("Caused by"));
+        assert_eq!(e.root_cause(), "value 3 bad");
+    }
+
+    #[test]
+    fn ensure_and_question_mark() {
+        assert_eq!(fallible(true).unwrap(), 7);
+        assert!(fallible(false).is_err());
+        let io: Result<()> = (|| {
+            std::fs::read("/definitely/not/a/path/xyz")?;
+            Ok(())
+        })();
+        let err = io.unwrap_err();
+        assert!(!format!("{err}").is_empty());
+    }
+
+    #[test]
+    fn with_context_chains_on_any_error() {
+        let base: Result<()> = Err(anyhow!("root"));
+        let err = base.with_context(|| "while testing").unwrap_err();
+        assert_eq!(format!("{err:#}"), "while testing: root");
+    }
+}

@@ -1,0 +1,159 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The runtime layer (`rust/src/runtime`) executes AOT-lowered HLO
+//! through the PJRT C API; that backend is unavailable in this offline
+//! build environment. This path crate mirrors the exact API surface the
+//! runtime uses so the whole pipeline type-checks and the non-PJRT
+//! parts (planning, materialization, caching, scheduling, prefetching)
+//! run and test normally. Every entry point that would touch PJRT
+//! returns a descriptive error, which the runtime surfaces as "run
+//! `make artifacts` first" — swapping this path dependency for the real
+//! registry crate restores execution with no source changes
+//! (rust/DESIGN.md §6).
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries the operation name that needed the real backend.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(op: &str) -> Error {
+    Error(format!(
+        "{op}: PJRT backend unavailable (offline `xla` stub; swap \
+         vendor/xla for the real bindings to enable execution)"
+    ))
+}
+
+/// Element types accepted for host buffers and literals.
+pub trait ArrayElement: Copy + Default {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u8 {}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Host-side literal value.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple3"))
+    }
+
+    #[allow(clippy::type_complexity)]
+    pub fn to_tuple4(self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple4"))
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+
+    pub fn copy_raw_to<T: ArrayElement>(&self, _dst: &mut [T]) -> Result<()> {
+        Err(unavailable("Literal::copy_raw_to"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_and_descriptively() {
+        let err = PjRtClient::cpu().err().unwrap();
+        let msg = format!("{err}");
+        assert!(msg.contains("PJRT backend unavailable"), "{msg}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
