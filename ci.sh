@@ -20,10 +20,14 @@ else
     echo "== skipping clippy (not installed) =="
 fi
 
-echo "== tier-1: cargo build --release =="
-cargo build --release
+echo "== tier-1 build (all targets: lib, CLI, benches, examples) =="
+cargo build --release --all-targets
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== serving smoke (tiny SBM, 1 shard, 100 queries) =="
+cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 1 --clients 8 --queries 100 --window-us 300
 
 echo "CI OK"

@@ -1,0 +1,67 @@
+//! Serving quickstart: stand the online inference service up on a
+//! tiny synthetic dataset, fire a handful of closed-loop queries at
+//! it, and print the latency/coalescing stats.
+//!
+//! This is the smallest end-to-end tour of the `serve` subsystem
+//! (DESIGN.md §9): node-wise IBMB plans the serveable set once, the
+//! router inverts output node → plan, concurrent queries coalesce in
+//! the microbatch queue, and two executor shards answer them with the
+//! CPU reference forward pass — no AOT artifacts needed.
+//!
+//! Run with: `cargo run --release --example serve_quickstart`
+
+use std::time::Duration;
+
+use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::serve::{self, ServeConfig, Skew};
+
+fn main() -> anyhow::Result<()> {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 11);
+    println!(
+        "dataset: {} nodes, {} edges, {} classes",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        ds.num_classes
+    );
+
+    let cfg = ServeConfig {
+        shards: 2,
+        clients: 6,
+        queries: 48,
+        flush_window: Duration::from_micros(400),
+        results_cache_bytes: 256 * 1024,
+        ..Default::default()
+    };
+    // the train split is the serveable set; anything else cold-paths
+    let eval = ds.splits.train.clone();
+    let mut setup = serve::prepare(&ds, &eval, &cfg);
+    println!(
+        "prepared {} plans ({} KiB arena), bucket n{}, model {}",
+        setup.cache.len(),
+        setup.cache.memory_bytes() / 1024,
+        setup.meta.n_pad,
+        setup.meta.id
+    );
+
+    let report =
+        serve::serve_closed_loop(&ds, &mut setup, &eval, Skew::Zipf(1.2), &cfg)?;
+    println!(
+        "served {} queries in {:.3}s ({:.0} qps)",
+        report.queries, report.wall_s, report.qps
+    );
+    println!(
+        "latency: p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  max {:.2}ms",
+        report.p50_ms, report.p95_ms, report.p99_ms, report.max_ms
+    );
+    println!(
+        "{} executions for {} queries → coalescing {:.2}x; {} memo hits \
+         ({:.0}%); shards {:?}",
+        report.executions,
+        report.executed_queries,
+        report.coalescing_factor,
+        report.cache_hits,
+        report.cache_hit_rate * 100.0,
+        report.shard_queries
+    );
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! Online serving benchmark: qps, tail latency, and coalescing factor
+//! vs. shard count under uniform and zipf-skewed closed-loop load,
+//! plus one memo-enabled run for the cache hit rate. Emits the
+//! machine-readable `BENCH_serving.json` so the serving perf
+//! trajectory is recorded across PRs (paper §5: inference is the
+//! headline — precomputed influence batches are reusable at query
+//! time; coalescing and memoization multiply that reuse).
+//!
+//! Run: `cargo bench --bench serving` (`--full` for the bigger graph;
+//! `--shards 1,2,4 --queries N --clients N` to override).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use ibmb::bench_harness::Table;
+use ibmb::cli::Args;
+use ibmb::datasets::{sbm, spec_by_name};
+use ibmb::serve::{self, ServeConfig, Skew};
+use ibmb::util::json::{to_string, Json};
+
+struct RunRecord {
+    label: String,
+    skew: String,
+    shards: usize,
+    memo_bytes: usize,
+    qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    coalescing: f64,
+    hit_rate: f64,
+    executions: u64,
+    shard_balance: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let factor = args.get_f64("scale", if args.flag("full") { 0.5 } else { 0.25 });
+    let spec = spec_by_name("synth-arxiv").unwrap().scaled(factor);
+    let ds = sbm::generate(&spec, 7);
+    let eval = ds.splits.test.clone();
+    let queries = args.get_usize("queries", 1200);
+    let clients = args.get_usize("clients", 48);
+    let shard_counts: Vec<usize> = args
+        .get("shards")
+        .map(|s| s.split(',').filter_map(|t| t.parse().ok()).collect())
+        .unwrap_or_else(|| vec![1, 2, 4]);
+    let base = ServeConfig {
+        queries,
+        clients,
+        flush_window: Duration::from_micros(args.get_u64("window-us", 800)),
+        max_coalesce: args.get_usize("coalesce", 16),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    };
+    println!(
+        "serving bench: {} nodes, {} eval nodes, {} queries, {} clients",
+        ds.graph.num_nodes(),
+        eval.len(),
+        queries,
+        clients
+    );
+    let mut setup = serve::prepare(&ds, &eval, &base);
+    println!(
+        "{} plans cached, bucket n{}",
+        setup.cache.len(),
+        setup.meta.n_pad
+    );
+
+    let mut records: Vec<RunRecord> = Vec::new();
+    let mut table = Table::new(&[
+        "config",
+        "qps",
+        "p50 (ms)",
+        "p99 (ms)",
+        "coalesce",
+        "hit rate",
+        "balance",
+    ]);
+    let skews = [Skew::Uniform, Skew::Zipf(args.get_f64("zipf-s", 1.2))];
+    for skew in skews {
+        for &shards in &shard_counts {
+            let cfg = ServeConfig {
+                shards,
+                ..base.clone()
+            };
+            let r =
+                serve::serve_closed_loop(&ds, &mut setup, &eval, skew, &cfg)?;
+            let label = format!("{} s{}", skew.label(), shards);
+            table.row(&[
+                label.clone(),
+                format!("{:.0}", r.qps),
+                format!("{:.2}", r.p50_ms),
+                format!("{:.2}", r.p99_ms),
+                format!("{:.2}", r.coalescing_factor),
+                format!("{:.2}", r.cache_hit_rate),
+                format!("{:.2}", r.shard_balance),
+            ]);
+            records.push(RunRecord {
+                label,
+                skew: skew.label(),
+                shards,
+                memo_bytes: 0,
+                qps: r.qps,
+                p50_ms: r.p50_ms,
+                p99_ms: r.p99_ms,
+                coalescing: r.coalescing_factor,
+                hit_rate: r.cache_hit_rate,
+                executions: r.executions,
+                shard_balance: r.shard_balance,
+            });
+        }
+    }
+    // one memo-enabled run: repeat traffic collapses to cache hits
+    let memo_bytes = args.get_usize("results-cache-bytes", 4 << 20);
+    let cfg = ServeConfig {
+        shards: 2,
+        results_cache_bytes: memo_bytes,
+        results_ttl: Some(Duration::from_millis(
+            args.get_u64("results-ttl-ms", 50),
+        )),
+        ..base.clone()
+    };
+    let skew = Skew::Zipf(args.get_f64("zipf-s", 1.2));
+    let r = serve::serve_closed_loop(&ds, &mut setup, &eval, skew, &cfg)?;
+    let label = format!("{} s2 +memo", skew.label());
+    table.row(&[
+        label.clone(),
+        format!("{:.0}", r.qps),
+        format!("{:.2}", r.p50_ms),
+        format!("{:.2}", r.p99_ms),
+        format!("{:.2}", r.coalescing_factor),
+        format!("{:.2}", r.cache_hit_rate),
+        format!("{:.2}", r.shard_balance),
+    ]);
+    records.push(RunRecord {
+        label,
+        skew: skew.label(),
+        shards: 2,
+        memo_bytes,
+        qps: r.qps,
+        p50_ms: r.p50_ms,
+        p99_ms: r.p99_ms,
+        coalescing: r.coalescing_factor,
+        hit_rate: r.cache_hit_rate,
+        executions: r.executions,
+        shard_balance: r.shard_balance,
+    });
+
+    let zipf_coalesce = records
+        .iter()
+        .filter(|r| r.skew.starts_with("zipf") && r.memo_bytes == 0)
+        .map(|r| r.coalescing)
+        .fold(0.0f64, f64::max);
+    if zipf_coalesce <= 1.0 {
+        eprintln!(
+            "WARNING: zipf coalescing factor {zipf_coalesce:.2} <= 1 — \
+             raise --clients or --window-us"
+        );
+    }
+
+    let json = Json::Obj(BTreeMap::from([
+        ("bench".into(), Json::Str("serving".into())),
+        ("dataset".into(), Json::Str(ds.name.clone())),
+        ("nodes".into(), Json::Num(ds.graph.num_nodes() as f64)),
+        ("eval_nodes".into(), Json::Num(eval.len() as f64)),
+        ("plans".into(), Json::Num(setup.cache.len() as f64)),
+        ("queries".into(), Json::Num(queries as f64)),
+        ("clients".into(), Json::Num(clients as f64)),
+        (
+            "window_us".into(),
+            Json::Num(base.flush_window.as_micros() as f64),
+        ),
+        (
+            "runs".into(),
+            Json::Arr(
+                records
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(BTreeMap::from([
+                            ("label".into(), Json::Str(r.label.clone())),
+                            ("skew".into(), Json::Str(r.skew.clone())),
+                            ("shards".into(), Json::Num(r.shards as f64)),
+                            (
+                                "memo_bytes".into(),
+                                Json::Num(r.memo_bytes as f64),
+                            ),
+                            ("qps".into(), Json::Num(r.qps)),
+                            ("p50_ms".into(), Json::Num(r.p50_ms)),
+                            ("p99_ms".into(), Json::Num(r.p99_ms)),
+                            (
+                                "coalescing_factor".into(),
+                                Json::Num(r.coalescing),
+                            ),
+                            ("hit_rate".into(), Json::Num(r.hit_rate)),
+                            (
+                                "executions".into(),
+                                Json::Num(r.executions as f64),
+                            ),
+                            (
+                                "shard_balance".into(),
+                                Json::Num(r.shard_balance),
+                            ),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+    let out_path = args.get_or("out", "BENCH_serving.json").to_string();
+    std::fs::write(&out_path, to_string(&json))?;
+    println!("wrote {out_path}");
+    table.print("serving — qps / tail latency / coalescing vs shards");
+    Ok(())
+}

@@ -83,6 +83,22 @@ impl BatchCache {
         &self.nodes[self.node_off[i]..self.node_off[i] + self.num_outputs[i]]
     }
 
+    /// Plan `i`'s edge sources (local ids) as an arena slice — the
+    /// zero-copy plan-index view the serving executor and `cache_io`
+    /// read instead of cloning whole plans via [`Self::to_plan`].
+    pub fn edge_src_of(&self, i: usize) -> &[u32] {
+        &self.edge_src[self.edge_off[i]..self.edge_off[i + 1]]
+    }
+    /// Plan `i`'s edge destinations (local ids), parallel to
+    /// [`Self::edge_src_of`].
+    pub fn edge_dst_of(&self, i: usize) -> &[u32] {
+        &self.edge_dst[self.edge_off[i]..self.edge_off[i + 1]]
+    }
+    /// Plan `i`'s edge weights, parallel to [`Self::edge_src_of`].
+    pub fn edge_weights_of(&self, i: usize) -> &[f32] {
+        &self.weights[self.edge_off[i]..self.edge_off[i + 1]]
+    }
+
     /// Largest batch node count — picks the artifact bucket.
     pub fn max_batch_nodes(&self) -> usize {
         (0..self.len()).map(|i| self.num_nodes(i)).max().unwrap_or(0)
@@ -195,6 +211,23 @@ mod tests {
             assert_eq!(a.labels, b.labels);
             assert_eq!(a.mask, b.mask);
             assert_eq!(a.num_real, b.num_real);
+        }
+    }
+
+    #[test]
+    fn edge_slice_views_match_owned_plans() {
+        let (_, _, cache) = build();
+        for i in 0..cache.len() {
+            let plan = cache.to_plan(i);
+            let src = cache.edge_src_of(i);
+            let dst = cache.edge_dst_of(i);
+            let w = cache.edge_weights_of(i);
+            assert_eq!(src.len(), plan.edges.len());
+            assert_eq!(dst.len(), plan.edges.len());
+            assert_eq!(w, &plan.weights[..]);
+            for (e, &(s, d)) in plan.edges.iter().enumerate() {
+                assert_eq!((src[e], dst[e]), (s, d), "batch {i} edge {e}");
+            }
         }
     }
 

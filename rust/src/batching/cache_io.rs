@@ -7,12 +7,19 @@
 //! every seed. Format (little endian):
 //!
 //! ```text
-//! magic "IBMBCACH" | u64 batches | u64 nodes | u64 edges
+//! magic "IBMBCACH" | u64 version (=2)
+//! | u64 batches | u64 nodes | u64 edges
 //! | u64 node_off[batches+1] | u64 edge_off[batches+1]
 //! | u64 num_outputs[batches]
 //! | u32 nodes[nodes] | u32 edge_src[edges] | u32 edge_dst[edges]
 //! | f32 weights[edges]
 //! ```
+//!
+//! The version field lets the serving router persist/reload plan
+//! indexes safely across format changes: readers reject files whose
+//! version they do not understand instead of misparsing them. Version
+//! history: 1 = headerless seed format (no version field; now
+//! rejected), 2 = current.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -25,6 +32,10 @@ use super::cache::BatchCache;
 
 const MAGIC: &[u8; 8] = b"IBMBCACH";
 
+/// Current on-disk format version. Bump on any layout change and
+/// keep the history note in the module docs in sync.
+pub const FORMAT_VERSION: u64 = 2;
+
 /// Serialize a cache to disk.
 pub fn save(cache: &BatchCache, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(
@@ -34,7 +45,7 @@ pub fn save(cache: &BatchCache, path: &Path) -> Result<()> {
     let b = cache.len();
     let total_nodes: usize = (0..b).map(|i| cache.num_nodes(i)).sum();
     let total_edges: usize = (0..b).map(|i| cache.num_edges(i)).sum();
-    for v in [b as u64, total_nodes as u64, total_edges as u64] {
+    for v in [FORMAT_VERSION, b as u64, total_nodes as u64, total_edges as u64] {
         w.write_all(&v.to_le_bytes())?;
     }
     let mut off = 0u64;
@@ -57,27 +68,26 @@ pub fn save(cache: &BatchCache, path: &Path) -> Result<()> {
             w.write_all(&u.to_le_bytes())?;
         }
     }
-    // edges via to_plan views (src then dst then weights, per batch
-    // order so offsets line up)
-    let mut all: Vec<BatchPlan> = Vec::with_capacity(b);
+    // edges straight from the arena slice views (src then dst then
+    // weights, per batch order so offsets line up)
     for i in 0..b {
-        all.push(cache.to_plan(i));
-    }
-    for cb in &all {
-        for &(s, _) in &cb.edges {
+        for &s in cache.edge_src_of(i) {
             w.write_all(&s.to_le_bytes())?;
         }
     }
-    for cb in &all {
-        for &(_, d) in &cb.edges {
+    for i in 0..b {
+        for &d in cache.edge_dst_of(i) {
             w.write_all(&d.to_le_bytes())?;
         }
     }
-    for cb in &all {
-        for &wt in &cb.weights {
+    for i in 0..b {
+        for &wt in cache.edge_weights_of(i) {
             w.write_all(&wt.to_le_bytes())?;
         }
     }
+    // Drop would swallow a flush failure (ENOSPC etc.) and report a
+    // truncated file as a successful save; flush explicitly.
+    w.flush().with_context(|| format!("flush {path:?}"))?;
     Ok(())
 }
 
@@ -105,26 +115,70 @@ pub fn load(path: &Path) -> Result<BatchCache> {
         File::open(path).with_context(|| format!("open {path:?}"))?,
     );
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{path:?}: truncated (no magic)"))?;
     if &magic != MAGIC {
-        bail!("{path:?}: bad magic");
+        bail!("{path:?}: bad magic (not an IBMB cache file)");
     }
-    let head = read_u64s(&mut r, 3)?;
+    let version = read_u64s(&mut r, 1)
+        .with_context(|| format!("{path:?}: truncated (no version)"))?[0];
+    if version != FORMAT_VERSION {
+        bail!(
+            "{path:?}: unsupported IBMBCACH version {version} \
+             (this build reads version {FORMAT_VERSION}; version-1 \
+             files predate the version field — regenerate the cache)"
+        );
+    }
+    let head = read_u64s(&mut r, 3)
+        .with_context(|| format!("{path:?}: truncated header"))?;
     let (b, total_nodes, total_edges) =
         (head[0] as usize, head[1] as usize, head[2] as usize);
-    let node_off = read_u64s(&mut r, b + 1)?;
-    let edge_off = read_u64s(&mut r, b + 1)?;
-    let num_outputs = read_u64s(&mut r, b)?;
-    if node_off.last().copied() != Some(total_nodes as u64)
+    // Sanity-check the declared counts against the file length BEFORE
+    // sizing any allocation from them, so a corrupt count is a clean
+    // error instead of a multi-petabyte Vec or an OOB slice. The
+    // format has no padding: the expected size is exact.
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("{path:?}: stat"))?
+        .len() as u128;
+    let expected: u128 = 8  // magic
+        + 8 // version
+        + 24 // batches/nodes/edges
+        + 8 * (3 * b as u128 + 2) // node_off + edge_off + num_outputs
+        + 4 * total_nodes as u128 // nodes
+        + 12 * total_edges as u128; // edge_src + edge_dst + weights
+    if expected != file_len {
+        bail!(
+            "{path:?}: header counts ({b} batches, {total_nodes} nodes, \
+             {total_edges} edges) imply {expected} bytes but the file \
+             has {file_len} (corrupt header)"
+        );
+    }
+    let offsets = read_u64s(&mut r, 2 * (b + 1) + b)
+        .with_context(|| format!("{path:?}: truncated offset tables"))?;
+    let node_off = &offsets[..b + 1];
+    let edge_off = &offsets[b + 1..2 * (b + 1)];
+    let num_outputs = &offsets[2 * (b + 1)..];
+    if node_off.first().copied() != Some(0)
+        || edge_off.first().copied() != Some(0)
+        || node_off.last().copied() != Some(total_nodes as u64)
         || edge_off.last().copied() != Some(total_edges as u64)
     {
         bail!("{path:?}: inconsistent offsets");
     }
-    let nodes = read_u32s(&mut r, total_nodes)?;
-    let edge_src = read_u32s(&mut r, total_edges)?;
-    let edge_dst = read_u32s(&mut r, total_edges)?;
+    if node_off.windows(2).any(|w| w[1] < w[0])
+        || edge_off.windows(2).any(|w| w[1] < w[0])
+    {
+        bail!("{path:?}: non-monotonic offsets (corrupt file)");
+    }
+    let nodes = read_u32s(&mut r, total_nodes)
+        .with_context(|| format!("{path:?}: truncated node arena"))?;
+    let edge_src = read_u32s(&mut r, total_edges)
+        .with_context(|| format!("{path:?}: truncated edge sources"))?;
+    let edge_dst = read_u32s(&mut r, total_edges)
+        .with_context(|| format!("{path:?}: truncated edge destinations"))?;
     let mut wbuf = vec![0u8; total_edges * 4];
-    r.read_exact(&mut wbuf)?;
+    r.read_exact(&mut wbuf)
+        .with_context(|| format!("{path:?}: truncated edge weights"))?;
     let weights: Vec<f32> = wbuf
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))

@@ -44,6 +44,19 @@
 //! API (`xla` crate; an offline stub is vendored under `vendor/xla`) —
 //! Python is never on the request path.
 //!
+//! ## Online serving
+//!
+//! The [`serve`] subsystem (DESIGN.md §9, `ibmb serve`) turns the
+//! offline pipeline into a concurrent inference service: an
+//! influence-routed query router (output node → precomputed plan, with
+//! a top-k-PPR cold path), a microbatch queue that coalesces
+//! concurrent queries to the same plan into one materialize+execute,
+//! N executor shards each owning a [`batching::BatchArena`] and
+//! prefetch ring (plans placed by the METIS partition for memory
+//! locality), a byte-bounded LRU memo of plan logits, and p50/p95/p99
+//! latency metrics. `benches/serving.rs` records qps / tail latency /
+//! coalescing factor vs. shard count in `BENCH_serving.json`.
+//!
 //! See `rust/DESIGN.md` for the full system inventory and the
 //! experiment index mapping each paper table/figure to a bench target.
 
@@ -61,5 +74,6 @@ pub mod pipeline;
 pub mod ppr;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod training;
 pub mod util;

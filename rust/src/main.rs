@@ -3,10 +3,13 @@
 //! ```text
 //! ibmb train   --dataset synth-arxiv --model gcn --method "node-wise IBMB" --epochs 40
 //! ibmb infer   --dataset synth-arxiv --model gcn --method "node-wise IBMB"
+//! ibmb serve   --dataset synth-arxiv --shards 2 --queries 2000 --skew zipf
 //! ibmb gen-data --dataset synth-arxiv --out data/arxiv.bin
 //! ibmb fig2|fig3|...|table7 [--full] [--dataset ...] [--model ...]
 //! ibmb list    # artifacts + datasets
 //! ```
+
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -14,12 +17,17 @@ use ibmb::cli::Args;
 use ibmb::config::ExpScale;
 use ibmb::datasets::ALL_DATASETS;
 use ibmb::experiments::{self, runner};
+use ibmb::serve::{self, ServeConfig, Skew};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ibmb <train|infer|gen-data|list|fig2..fig9|table5..table7> \
+        "usage: ibmb <train|infer|serve|gen-data|list|fig2..fig9|table5..table7> \
          [--dataset NAME] [--model gcn|gat|sage] [--method NAME] \
-         [--epochs N] [--seed N] [--scale F] [--prefetch-depth N] [--full]"
+         [--epochs N] [--seed N] [--scale F] [--prefetch-depth N] [--full]\n\
+         serve options: [--shards N] [--clients N] [--queries N] \
+         [--skew uniform|zipf] [--zipf-s F] [--window-us N] [--coalesce N] \
+         [--results-cache-bytes N] [--results-ttl-ms N] [--cold-aux N] \
+         [--hidden N] [--layers N] [--heads N]"
     );
     std::process::exit(2);
 }
@@ -151,6 +159,117 @@ fn main() -> Result<()> {
                 rep.batches,
                 rep.pad_utilization,
                 rep.overlap_ratio
+            );
+        }
+        Some("serve") => {
+            // Needs no AOT artifacts: the service executes plans with
+            // the exact CPU reference forward pass (serve::shard).
+            let ds_name = args.get_or("dataset", "synth-arxiv");
+            let ds = runner::dataset(ds_name, &scale, args.get_u64("seed", 0));
+            let cfg = ServeConfig {
+                model: args.get_or("model", "gcn").to_string(),
+                shards: args.get_usize("shards", 1),
+                clients: args.get_usize("clients", 16),
+                queries: args.get_usize("queries", 1000),
+                flush_window: Duration::from_micros(
+                    args.get_u64("window-us", 500),
+                ),
+                max_coalesce: args.get_usize("coalesce", 16),
+                results_cache_bytes: args.get_usize("results-cache-bytes", 0),
+                results_ttl: match args.get_u64("results-ttl-ms", 0) {
+                    0 => None,
+                    ms => Some(Duration::from_millis(ms)),
+                },
+                cold_aux: args.get_usize("cold-aux", 16),
+                ring_depth: args.get_usize("prefetch-depth", 2),
+                hidden: args.get_usize("hidden", 32),
+                layers: args.get_usize("layers", 2),
+                heads: args.get_usize("heads", 2),
+                seed: args.get_u64("seed", 0),
+            };
+            if !["gcn", "sage", "gat"].contains(&cfg.model.as_str()) {
+                eprintln!(
+                    "unknown --model {:?} (expected gcn|sage|gat)",
+                    cfg.model
+                );
+                std::process::exit(2);
+            }
+            if cfg.model == "gat" && cfg.hidden % cfg.heads.max(1) != 0 {
+                eprintln!(
+                    "--hidden {} must be divisible by --heads {} for gat",
+                    cfg.hidden, cfg.heads
+                );
+                std::process::exit(2);
+            }
+            let skew = match Skew::from_name(
+                args.get_or("skew", "zipf"),
+                args.get_f64("zipf-s", 1.1),
+            ) {
+                Some(s) => s,
+                None => {
+                    eprintln!(
+                        "invalid --skew {:?} / --zipf-s {} (expected \
+                         uniform|zipf with a positive exponent)",
+                        args.get_or("skew", "zipf"),
+                        args.get_f64("zipf-s", 1.1)
+                    );
+                    std::process::exit(2);
+                }
+            };
+            let eval = ds.splits.test.clone();
+            println!(
+                "serving {} ({} nodes, {} edges): planning {} eval nodes…",
+                ds_name,
+                ds.graph.num_nodes(),
+                ds.graph.num_edges(),
+                eval.len()
+            );
+            let mut setup = serve::prepare(&ds, &eval, &cfg);
+            println!(
+                "{} plans cached ({} KiB), bucket n{}, {} shard(s), \
+                 {} skew, {} clients",
+                setup.cache.len(),
+                setup.cache.memory_bytes() / 1024,
+                setup.meta.n_pad,
+                cfg.shards,
+                skew.label(),
+                cfg.clients
+            );
+            let report =
+                serve::serve_closed_loop(&ds, &mut setup, &eval, skew, &cfg)?;
+            println!(
+                "served {} queries in {:.3}s: {:.0} qps, latency \
+                 p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms (mean {:.2}ms)",
+                report.queries,
+                report.wall_s,
+                report.qps,
+                report.p50_ms,
+                report.p95_ms,
+                report.p99_ms,
+                report.mean_ms
+            );
+            println!(
+                "  {} executions for {} executed queries (coalescing \
+                 {:.2}x), {} memo hits ({:.0}%), {} cold queries \
+                 ({} cold plans)",
+                report.executions,
+                report.executed_queries,
+                report.coalescing_factor,
+                report.cache_hits,
+                report.cache_hit_rate * 100.0,
+                report.cold_routes,
+                report.cold_plans
+            );
+            println!(
+                "  shards: {:?} queries (balance {:.2}), arenas {} KiB \
+                 ({} buffers), exec {:.3}s, mat stall {:.3}s, acc {:.1}%",
+                report.shard_queries,
+                report.shard_balance,
+                report.arena_bytes / 1024,
+                report.arena_allocations,
+                report.exec_s,
+                report.mat_wait_s,
+                report.accuracy * 100.0
             );
         }
         Some("fig2") => experiments::fig2::run(&scale, &args)?,

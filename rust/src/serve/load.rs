@@ -1,0 +1,150 @@
+//! Closed-loop load generation with configurable arrival skew.
+//!
+//! Production inference traffic is rarely uniform: a minority of
+//! entities absorbs most queries. The generator supports a zipf
+//! popularity law over the query population (rank r drawn with
+//! probability ∝ 1/rᶜ) next to a uniform baseline, which is exactly
+//! the knob that separates "coalescing pays off" from "every query is
+//! its own batch" in `benches/serving.rs`.
+
+use crate::util::Rng;
+
+/// Arrival skew over the query population.
+#[derive(Debug, Clone, Copy)]
+pub enum Skew {
+    Uniform,
+    /// Zipf with the given exponent (> 0; ~1.0–1.5 is web-like).
+    Zipf(f64),
+}
+
+impl Skew {
+    /// Parse a CLI spelling: "uniform" or "zipf" (with `exponent`).
+    /// Unknown names and non-positive / non-finite exponents are
+    /// rejected so a typo doesn't silently benchmark the wrong
+    /// arrival distribution.
+    pub fn from_name(name: &str, exponent: f64) -> Option<Skew> {
+        if name.eq_ignore_ascii_case("uniform") {
+            Some(Skew::Uniform)
+        } else if name.eq_ignore_ascii_case("zipf")
+            && exponent.is_finite()
+            && exponent > 0.0
+        {
+            Some(Skew::Zipf(exponent))
+        } else {
+            None
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Skew::Uniform => "uniform".to_string(),
+            Skew::Zipf(s) => format!("zipf({s:.2})"),
+        }
+    }
+}
+
+/// Seeded query-node sampler. Zipf rank r (0-based) maps to
+/// `nodes[r]`, so the head of the population list is the hot set.
+pub struct LoadGen {
+    nodes: Vec<u32>,
+    /// Normalized CDF over ranks (empty for uniform).
+    cdf: Vec<f64>,
+    rng: Rng,
+}
+
+impl LoadGen {
+    pub fn new(nodes: &[u32], skew: Skew, seed: u64) -> LoadGen {
+        assert!(!nodes.is_empty(), "empty query population");
+        let cdf = match skew {
+            Skew::Uniform => Vec::new(),
+            Skew::Zipf(s) => {
+                let mut acc = 0.0;
+                let mut cdf = Vec::with_capacity(nodes.len());
+                for r in 0..nodes.len() {
+                    acc += 1.0 / ((r + 1) as f64).powf(s);
+                    cdf.push(acc);
+                }
+                for c in cdf.iter_mut() {
+                    *c /= acc;
+                }
+                cdf
+            }
+        };
+        LoadGen {
+            nodes: nodes.to_vec(),
+            cdf,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Draw the next query node.
+    pub fn next_node(&mut self) -> u32 {
+        if self.cdf.is_empty() {
+            return self.nodes[self.rng.next_below(self.nodes.len())];
+        }
+        let u = self.rng.next_f64();
+        let r = self.cdf.partition_point(|&c| c < u);
+        self.nodes[r.min(self.nodes.len() - 1)]
+    }
+
+    pub fn population(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_covers_population() {
+        let nodes: Vec<u32> = (100..110).collect();
+        let mut g = LoadGen::new(&nodes, Skew::Uniform, 1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let v = g.next_node();
+            assert!(nodes.contains(&v));
+            seen.insert(v);
+        }
+        assert_eq!(seen.len(), nodes.len());
+    }
+
+    #[test]
+    fn zipf_concentrates_on_head_ranks() {
+        let nodes: Vec<u32> = (0..100).collect();
+        let mut g = LoadGen::new(&nodes, Skew::Zipf(1.3), 2);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[g.next_node() as usize] += 1;
+        }
+        let head: usize = counts[..10].iter().sum();
+        let tail: usize = counts[90..].iter().sum();
+        assert!(
+            head > 5 * tail.max(1),
+            "head {head} should dominate tail {tail}"
+        );
+        assert!(counts[0] > counts[50], "{:?}", &counts[..5]);
+    }
+
+    #[test]
+    fn skew_parsing() {
+        assert!(matches!(
+            Skew::from_name("uniform", 1.1),
+            Some(Skew::Uniform)
+        ));
+        assert!(matches!(
+            Skew::from_name("Uniform", 1.1),
+            Some(Skew::Uniform)
+        ));
+        match Skew::from_name("zipf", 1.4) {
+            Some(Skew::Zipf(s)) => assert!((s - 1.4).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+        assert!(Skew::from_name("unifrom", 1.1).is_none(), "typo rejected");
+        assert!(Skew::from_name("zipf", 0.0).is_none(), "s=0 rejected");
+        assert!(Skew::from_name("zipf", -1.2).is_none(), "s<0 rejected");
+        assert!(Skew::from_name("zipf", f64::NAN).is_none());
+        assert_eq!(Skew::Uniform.label(), "uniform");
+        assert_eq!(Skew::Zipf(1.2).label(), "zipf(1.20)");
+    }
+}

@@ -1,0 +1,249 @@
+//! Serving metrics: log-bucketed latency histogram and the service
+//! counters behind the bench's qps / p99 / coalescing-factor report.
+//!
+//! The histogram uses geometric buckets (1 µs × 1.25ᵏ, ~80 buckets up
+//! to ~50 s) so memory is O(1) regardless of query count and quantiles
+//! have bounded relative error (≤ the 25 % bucket growth) — the usual
+//! HDR-style trade for long-running services.
+
+/// Smallest resolvable latency (floor of bucket 0).
+const LAT_MIN_S: f64 = 1e-6;
+/// Geometric bucket growth factor.
+const LAT_GROWTH: f64 = 1.25;
+/// Bucket count: 1 µs × 1.25⁸⁰ ≈ 54 s covers any sane query.
+const LAT_BUCKETS: usize = 80;
+
+/// Fixed-size log-scale latency histogram.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: vec![0; LAT_BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&mut self, s: f64) {
+        let s = s.max(0.0);
+        let b = if s <= LAT_MIN_S {
+            0
+        } else {
+            (((s / LAT_MIN_S).ln() / LAT_GROWTH.ln()).floor() as usize)
+                .min(LAT_BUCKETS - 1)
+        };
+        self.counts[b] += 1;
+        self.count += 1;
+        self.sum_s += s;
+        self.min_s = self.min_s.min(s);
+        self.max_s = self.max_s.max(s);
+    }
+
+    /// Quantile `q` in [0, 1], reported as the upper edge of the
+    /// containing bucket (clamped to the observed max).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64)
+            .max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let hi = LAT_MIN_S * LAT_GROWTH.powi(i as i32 + 1);
+                return hi.min(self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_s
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+/// Counters accumulated by the service event loop.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    pub latency: LatencyHistogram,
+    /// Materialize+execute runs dispatched to shards.
+    pub executions: u64,
+    /// Queries answered by those executions (≥ executions when
+    /// coalescing works).
+    pub executed_queries: u64,
+    /// Queries answered straight from the results memo.
+    pub cache_hit_queries: u64,
+    /// Queries that needed a cold-path (synthesized) plan.
+    pub cold_routes: u64,
+    pub completed: u64,
+    pub correct: u64,
+    /// Executions dispatched per shard (locality / balance signal).
+    pub shard_executions: Vec<u64>,
+    /// Queries answered per shard.
+    pub shard_queries: Vec<u64>,
+    /// Shard-side seconds spent in the model forward pass.
+    pub exec_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn new(shards: usize) -> ServeMetrics {
+        ServeMetrics {
+            latency: LatencyHistogram::new(),
+            executions: 0,
+            executed_queries: 0,
+            cache_hit_queries: 0,
+            cold_routes: 0,
+            completed: 0,
+            correct: 0,
+            shard_executions: vec![0; shards.max(1)],
+            shard_queries: vec![0; shards.max(1)],
+            exec_s: 0.0,
+        }
+    }
+
+    /// One group dispatched to `shard` carrying `queries` queries.
+    pub fn record_dispatch(&mut self, shard: usize, queries: u64) {
+        self.executions += 1;
+        self.executed_queries += queries;
+        self.shard_executions[shard] += 1;
+        self.shard_queries[shard] += queries;
+    }
+
+    /// One query finished (by execution or memo hit).
+    pub fn record_completion(&mut self, latency_s: f64, correct: bool) {
+        self.latency.record(latency_s);
+        self.completed += 1;
+        if correct {
+            self.correct += 1;
+        }
+    }
+
+    /// Queries per execution (> 1 once coalescing pays off; 0 when no
+    /// execution happened).
+    pub fn coalescing_factor(&self) -> f64 {
+        if self.executions == 0 {
+            0.0
+        } else {
+            self.executed_queries as f64 / self.executions as f64
+        }
+    }
+
+    /// Fraction of completed queries served from the results memo.
+    pub fn hit_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.cache_hit_queries as f64 / self.completed as f64
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.completed as f64
+        }
+    }
+
+    /// Max shard query share / ideal share (1.0 = perfectly balanced),
+    /// mirroring [`crate::partition::balance`].
+    pub fn shard_balance(&self) -> f64 {
+        let total: u64 = self.shard_queries.iter().sum();
+        if total == 0 || self.shard_queries.is_empty() {
+            return 1.0;
+        }
+        let max = *self.shard_queries.iter().max().unwrap();
+        max as f64 / (total as f64 / self.shard_queries.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_have_bounded_relative_error() {
+        let mut h = LatencyHistogram::new();
+        // 1000 samples spread uniformly over [1ms, 11ms]
+        for i in 0..1000 {
+            h.record(1e-3 + i as f64 * 1e-5);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        // true p50 = 6ms, true p99 = 10.9ms; bucket edge error <= 25%
+        assert!((4.5e-3..7.5e-3).contains(&p50), "p50={p50}");
+        assert!((8.5e-3..13.7e-3).contains(&p99), "p99={p99}");
+        assert!(p50 <= p99);
+        assert!(h.mean() > 5e-3 && h.mean() < 7e-3);
+        assert!(h.max() <= 11e-3 + 1e-9);
+    }
+
+    #[test]
+    fn empty_and_extreme_samples_are_safe() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(0.0);
+        h.record(1e9); // clamps into the last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) > 0.0 || h.min() == 0.0);
+        assert!(h.quantile(1.0) <= 1e9);
+    }
+
+    #[test]
+    fn coalescing_and_balance_accounting() {
+        let mut m = ServeMetrics::new(2);
+        m.record_dispatch(0, 4);
+        m.record_dispatch(1, 2);
+        m.record_dispatch(0, 6);
+        assert_eq!(m.executions, 3);
+        assert_eq!(m.executed_queries, 12);
+        assert!((m.coalescing_factor() - 4.0).abs() < 1e-12);
+        assert_eq!(m.shard_queries, vec![10, 2]);
+        assert!((m.shard_balance() - 10.0 / 6.0).abs() < 1e-12);
+        m.record_completion(1e-3, true);
+        m.record_completion(2e-3, false);
+        m.cache_hit_queries = 1;
+        assert!((m.accuracy() - 0.5).abs() < 1e-12);
+        assert!((m.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

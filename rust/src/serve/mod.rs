@@ -1,0 +1,56 @@
+//! Online inference serving (DESIGN.md §9).
+//!
+//! The paper's headline inference result — up to 130× faster than
+//! sampling baselines at equal accuracy — comes from batches being
+//! *fixed and reusable* at query time: all the expensive influence
+//! computation happens once, offline. This module turns that property
+//! into an online, concurrent service that answers "what is node v's
+//! prediction?" requests:
+//!
+//! * [`router`] — inverted index from output node → precomputed plan id
+//!   (built from a [`crate::batching::BatchCache`]), with a cold path
+//!   for nodes no precomputed batch covers: the router assigns a
+//!   stable cold-plan id (so cold queries coalesce too) and the node's
+//!   home shard synthesizes + memoizes a personal top-k-PPR plan off
+//!   the control loop.
+//! * [`queue`] — admission/microbatch queue that coalesces concurrent
+//!   queries routed to the same plan into one materialize+execute
+//!   (deadline- and size-based flush), so a popular plan runs once per
+//!   window instead of once per query (cf. "Cooperative Minibatching
+//!   in GNNs", arXiv 2310.12403).
+//! * [`shard`] — N executor worker shards, each owning its own
+//!   [`crate::batching::BatchArena`] and prefetch ring; plans are
+//!   assigned to shards by the METIS graph partition so each shard's
+//!   working set stays memory-local.
+//! * [`results`] — byte-bounded LRU memo of recently executed plan
+//!   logits with hit/miss accounting (and an optional freshness TTL
+//!   for periodically refreshed models).
+//! * [`metrics`] — log-bucketed per-query latency histogram
+//!   (p50/p95/p99), throughput, coalescing factor, cache hit rate.
+//! * [`load`] — closed-loop load generator with configurable arrival
+//!   skew (uniform or zipf over the query population).
+//! * [`service`] — the event loop tying all of the above together
+//!   behind the `ibmb serve` subcommand and `benches/serving.rs`.
+//!
+//! Execution uses the exact CPU reference forward pass
+//! ([`crate::inference::fullgraph::forward`]) over each plan's induced
+//! subgraph, so the service runs end-to-end even in the offline build
+//! where the PJRT backend is stubbed; the artifact metadata it is
+//! driven by ([`shard::reference_artifact`]) matches the AOT layout, so
+//! swapping the executor for `Runtime::infer_step` is a local change.
+
+pub mod load;
+pub mod metrics;
+pub mod queue;
+pub mod results;
+pub mod router;
+pub mod service;
+pub mod shard;
+
+pub use load::{LoadGen, Skew};
+pub use metrics::{LatencyHistogram, ServeMetrics};
+pub use queue::{MicrobatchQueue, PendingGroup, QueryTicket};
+pub use results::ResultsCache;
+pub use router::{PlanKey, QueryRouter, Route};
+pub use service::{prepare, serve_closed_loop, ServeConfig, ServeReport, ServeSetup};
+pub use shard::{reference_artifact, synthesize_cold, ColdPlan, ShardMap};

@@ -1,0 +1,199 @@
+//! Admission / microbatch coalescing queue.
+//!
+//! Concurrent queries routed to the same plan are folded into one
+//! pending group and executed with a *single* materialize+execute —
+//! the serving-time analogue of the paper's "fixed batches are
+//! reusable" argument, and the mechanism behind the coalescing factor
+//! reported by `benches/serving.rs` (cf. "Cooperative Minibatching in
+//! GNNs", arXiv 2310.12403: concurrent queries sharing neighborhoods
+//! multiply the reuse win).
+//!
+//! Flush policy is the usual two-sided one: a group flushes when it
+//! reaches `max_coalesce` queries (size flush, bounds per-query work)
+//! or when its oldest query has waited `window` (deadline flush,
+//! bounds added latency). The queue is purely synchronous and clocked
+//! by caller-supplied [`Instant`]s, so its behavior is deterministic
+//! and unit-testable without threads or sleeps.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::router::PlanKey;
+
+/// One admitted query waiting for its plan to execute.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryTicket {
+    /// Caller-assigned query id (latency bookkeeping).
+    pub id: u64,
+    /// Queried node (global id).
+    pub node: u32,
+    /// The node's output-row position within the plan.
+    pub pos: u32,
+}
+
+/// A coalesced group of queries for one plan, ready to execute.
+#[derive(Debug)]
+pub struct PendingGroup {
+    pub key: PlanKey,
+    /// Admission time of the group's first query (deadline anchor).
+    pub created: Instant,
+    pub queries: Vec<QueryTicket>,
+}
+
+/// Deadline- and size-flushed per-plan coalescing queue.
+pub struct MicrobatchQueue {
+    window: Duration,
+    max_coalesce: usize,
+    groups: HashMap<PlanKey, PendingGroup>,
+}
+
+impl MicrobatchQueue {
+    /// `window` = max time a query waits for co-riders; `max_coalesce`
+    /// = size flush threshold (≥ 1).
+    pub fn new(window: Duration, max_coalesce: usize) -> MicrobatchQueue {
+        MicrobatchQueue {
+            window,
+            max_coalesce: max_coalesce.max(1),
+            groups: HashMap::new(),
+        }
+    }
+
+    /// Admit one query at time `now`. Returns the full group if this
+    /// admission triggered a size flush.
+    pub fn push(
+        &mut self,
+        key: PlanKey,
+        q: QueryTicket,
+        now: Instant,
+    ) -> Option<PendingGroup> {
+        let g = self.groups.entry(key).or_insert_with(|| PendingGroup {
+            key,
+            created: now,
+            queries: Vec::new(),
+        });
+        g.queries.push(q);
+        if g.queries.len() >= self.max_coalesce {
+            return self.groups.remove(&key);
+        }
+        None
+    }
+
+    /// Remove and return every group whose deadline has passed.
+    pub fn due(&mut self, now: Instant) -> Vec<PendingGroup> {
+        let keys: Vec<PlanKey> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| now.duration_since(g.created) >= self.window)
+            .map(|(&k, _)| k)
+            .collect();
+        keys.iter()
+            .filter_map(|k| self.groups.remove(k))
+            .collect()
+    }
+
+    /// Earliest pending deadline (None when the queue is empty) — the
+    /// event loop's wake-up time.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.groups
+            .values()
+            .map(|g| g.created + self.window)
+            .min()
+    }
+
+    /// Remove and return everything (shutdown).
+    pub fn drain(&mut self) -> Vec<PendingGroup> {
+        self.groups.drain().map(|(_, g)| g).collect()
+    }
+
+    pub fn pending_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn pending_queries(&self) -> usize {
+        self.groups.values().map(|g| g.queries.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ticket(id: u64) -> QueryTicket {
+        QueryTicket {
+            id,
+            node: id as u32,
+            pos: 0,
+        }
+    }
+
+    #[test]
+    fn coalesces_same_plan_until_deadline() {
+        let mut q = MicrobatchQueue::new(Duration::from_millis(10), 100);
+        let t0 = Instant::now();
+        for i in 0..5 {
+            assert!(q.push(PlanKey::Cached(3), ticket(i), t0).is_none());
+        }
+        assert_eq!(q.pending_groups(), 1);
+        assert_eq!(q.pending_queries(), 5);
+        // not yet due
+        assert!(q.due(t0 + Duration::from_millis(9)).is_empty());
+        let due = q.due(t0 + Duration::from_millis(10));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].queries.len(), 5);
+        assert_eq!(q.pending_groups(), 0);
+    }
+
+    #[test]
+    fn size_flush_returns_full_group() {
+        let mut q = MicrobatchQueue::new(Duration::from_secs(1), 3);
+        let t0 = Instant::now();
+        assert!(q.push(PlanKey::Cached(0), ticket(0), t0).is_none());
+        assert!(q.push(PlanKey::Cached(0), ticket(1), t0).is_none());
+        let g = q.push(PlanKey::Cached(0), ticket(2), t0).unwrap();
+        assert_eq!(g.queries.len(), 3);
+        assert_eq!(q.pending_groups(), 0);
+        // a new query for the same plan starts a fresh group
+        assert!(q.push(PlanKey::Cached(0), ticket(3), t0).is_none());
+        assert_eq!(q.pending_queries(), 1);
+    }
+
+    #[test]
+    fn distinct_plans_do_not_coalesce() {
+        let mut q = MicrobatchQueue::new(Duration::from_millis(5), 10);
+        let t0 = Instant::now();
+        assert!(q.push(PlanKey::Cached(1), ticket(0), t0).is_none());
+        assert!(q.push(PlanKey::Cold(1), ticket(1), t0).is_none());
+        assert!(q.push(PlanKey::Cached(2), ticket(2), t0).is_none());
+        assert_eq!(q.pending_groups(), 3);
+        let due = q.due(t0 + Duration::from_millis(5));
+        assert_eq!(due.len(), 3);
+        assert!(due.iter().all(|g| g.queries.len() == 1));
+    }
+
+    #[test]
+    fn next_deadline_is_earliest_group() {
+        let mut q = MicrobatchQueue::new(Duration::from_millis(10), 10);
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(4);
+        assert!(q.push(PlanKey::Cached(1), ticket(0), t1).is_none());
+        assert!(q.push(PlanKey::Cached(2), ticket(1), t0).is_none());
+        assert_eq!(q.next_deadline(), Some(t0 + Duration::from_millis(10)));
+        // staggered deadlines flush separately
+        let due = q.due(t0 + Duration::from_millis(10));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].key, PlanKey::Cached(2));
+        assert_eq!(q.next_deadline(), Some(t1 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn drain_empties_everything() {
+        let mut q = MicrobatchQueue::new(Duration::from_secs(1), 10);
+        let t0 = Instant::now();
+        assert!(q.push(PlanKey::Cached(1), ticket(0), t0).is_none());
+        assert!(q.push(PlanKey::Cold(0), ticket(1), t0).is_none());
+        let all = q.drain();
+        assert_eq!(all.len(), 2);
+        assert_eq!(q.pending_groups(), 0);
+        assert_eq!(q.next_deadline(), None);
+    }
+}

@@ -1,0 +1,301 @@
+//! Byte-bounded LRU memo of executed plan outputs.
+//!
+//! A plan's logits are valid until the model or features change, so a
+//! popular plan need not re-execute at all within a freshness window —
+//! the layer *above* coalescing: the queue folds concurrent queries
+//! into one execution, the memo folds repeat queries into zero. The
+//! budget is in bytes (not entries) because plan output rows vary in
+//! size; an optional TTL models periodically refreshed models, after
+//! which an entry counts as a miss and is dropped.
+//!
+//! LRU is the standard lazy scheme: a monotone tick stamps each
+//! access, a FIFO of `(key, tick)` pairs is popped on eviction and
+//! entries whose stamp is stale are skipped — O(1) amortized, no
+//! linked lists.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use super::router::PlanKey;
+
+struct Entry {
+    logits: Vec<f32>,
+    stamp: u64,
+    inserted: Instant,
+}
+
+/// Per-entry bookkeeping overhead charged against the byte budget
+/// (map + LRU queue slots), so the budget reflects real memory.
+const ENTRY_OVERHEAD: usize = 64;
+
+/// LRU memo: plan key → output-node logits of the last execution.
+pub struct ResultsCache {
+    budget: usize,
+    ttl: Option<Duration>,
+    map: HashMap<PlanKey, Entry>,
+    lru: VecDeque<(PlanKey, u64)>,
+    bytes: usize,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub expirations: u64,
+}
+
+impl ResultsCache {
+    /// `budget_bytes` = 0 disables the cache entirely (every lookup is
+    /// a miss, inserts are dropped); `ttl` = None means entries stay
+    /// fresh until evicted.
+    pub fn new(budget_bytes: usize, ttl: Option<Duration>) -> ResultsCache {
+        ResultsCache {
+            budget: budget_bytes,
+            ttl,
+            map: HashMap::new(),
+            lru: VecDeque::new(),
+            bytes: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            expirations: 0,
+        }
+    }
+
+    /// Charged against the budget by *capacity*, not length — a Vec
+    /// truncated from a larger buffer still owns its full allocation.
+    fn entry_bytes(capacity: usize) -> usize {
+        capacity * 4 + ENTRY_OVERHEAD
+    }
+
+    /// Look up a plan's memoized logits; counts a hit or miss and
+    /// refreshes LRU order on hit.
+    pub fn get(&mut self, key: PlanKey, now: Instant) -> Option<&[f32]> {
+        if self.budget == 0 {
+            self.misses += 1;
+            return None;
+        }
+        let expired = match self.map.get(&key) {
+            None => {
+                self.misses += 1;
+                return None;
+            }
+            Some(e) => match self.ttl {
+                Some(t) => now.duration_since(e.inserted) >= t,
+                None => false,
+            },
+        };
+        if expired {
+            if let Some(e) = self.map.remove(&key) {
+                self.bytes -= Self::entry_bytes(e.logits.capacity());
+            }
+            self.expirations += 1;
+            self.misses += 1;
+            return None;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.stamp = tick;
+        }
+        self.lru.push_back((key, tick));
+        // Hit traffic appends a stale record per access; eviction only
+        // drains them under byte pressure, so compact once the queue
+        // outgrows the live set (keeps steady-state memory O(entries)).
+        if self.lru.len() > 2 * self.map.len() + 16 {
+            let map = &self.map;
+            self.lru.retain(|(k, s)| {
+                map.get(k).map(|e| e.stamp == *s).unwrap_or(false)
+            });
+        }
+        self.hits += 1;
+        self.map.get(&key).map(|e| e.logits.as_slice())
+    }
+
+    /// Insert (or replace) a plan's logits, evicting least-recently
+    /// used entries until the byte budget holds. Entries larger than
+    /// the whole budget are dropped on the floor.
+    pub fn insert(&mut self, key: PlanKey, mut logits: Vec<f32>, now: Instant) {
+        if self.budget == 0 {
+            return;
+        }
+        // executors hand over Vecs truncated from larger buffers;
+        // release the excess capacity the byte accounting would charge
+        logits.shrink_to_fit();
+        let nb = Self::entry_bytes(logits.capacity());
+        if nb > self.budget {
+            return;
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.bytes -= Self::entry_bytes(old.logits.capacity());
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.lru.push_back((key, tick));
+        self.map.insert(
+            key,
+            Entry {
+                logits,
+                stamp: tick,
+                inserted: now,
+            },
+        );
+        self.bytes += nb;
+        while self.bytes > self.budget {
+            let (k, stamp) = match self.lru.pop_front() {
+                Some(p) => p,
+                None => break,
+            };
+            let live = self.map.get(&k).map(|e| e.stamp == stamp).unwrap_or(false);
+            if !live {
+                continue; // stale LRU record for a re-accessed entry
+            }
+            if let Some(e) = self.map.remove(&k) {
+                self.bytes -= Self::entry_bytes(e.logits.capacity());
+                self.evictions += 1;
+            }
+        }
+    }
+
+    /// Drop everything (model update invalidation).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.lru.clear();
+        self.bytes = 0;
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    #[cfg(test)]
+    fn lru_records(&self) -> usize {
+        self.lru.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(i: u32) -> PlanKey {
+        PlanKey::Cached(i)
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(1 << 20, None);
+        assert!(c.get(key(1), t0).is_none());
+        c.insert(key(1), vec![1.0, 2.0], t0);
+        assert_eq!(c.get(key(1), t0).unwrap(), &[1.0, 2.0]);
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_under_byte_pressure() {
+        let t0 = Instant::now();
+        // room for exactly two 8-float entries
+        let per = 8 * 4 + ENTRY_OVERHEAD;
+        let mut c = ResultsCache::new(2 * per, None);
+        c.insert(key(1), vec![0.0; 8], t0);
+        c.insert(key(2), vec![0.0; 8], t0);
+        // touch 1 so 2 becomes LRU
+        assert!(c.get(key(1), t0).is_some());
+        c.insert(key(3), vec![0.0; 8], t0);
+        assert_eq!(c.len(), 2);
+        assert!(c.get(key(2), t0).is_none(), "LRU entry must be evicted");
+        assert!(c.get(key(1), t0).is_some());
+        assert!(c.get(key(3), t0).is_some());
+        assert_eq!(c.evictions, 1);
+        assert!(c.bytes() <= 2 * per);
+    }
+
+    #[test]
+    fn oversized_entry_is_dropped() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(32, None);
+        c.insert(key(1), vec![0.0; 1000], t0);
+        assert!(c.is_empty());
+        assert!(c.get(key(1), t0).is_none());
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let t0 = Instant::now();
+        let ttl = Duration::from_millis(50);
+        let mut c = ResultsCache::new(1 << 20, Some(ttl));
+        c.insert(key(1), vec![1.0], t0);
+        assert!(c.get(key(1), t0 + Duration::from_millis(49)).is_some());
+        assert!(c.get(key(1), t0 + Duration::from_millis(50)).is_none());
+        assert_eq!(c.expirations, 1);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn zero_budget_disables() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(0, None);
+        c.insert(key(1), vec![1.0], t0);
+        assert!(c.get(key(1), t0).is_none());
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn hit_traffic_keeps_lru_queue_bounded() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(1 << 20, None);
+        c.insert(key(1), vec![0.0; 4], t0);
+        c.insert(key(2), vec![0.0; 4], t0);
+        for _ in 0..10_000 {
+            assert!(c.get(key(1), t0).is_some());
+        }
+        assert_eq!(c.hits, 10_000);
+        assert!(
+            c.lru_records() <= 2 * c.len() + 17,
+            "queue grew to {} records for {} entries",
+            c.lru_records(),
+            c.len()
+        );
+        // LRU semantics survive compaction: key(2) is still evictable
+        let per = 4 * 4 + ENTRY_OVERHEAD;
+        let mut tight = ResultsCache::new(2 * per, None);
+        tight.insert(key(1), vec![0.0; 4], t0);
+        tight.insert(key(2), vec![0.0; 4], t0);
+        for _ in 0..1000 {
+            assert!(tight.get(key(1), t0).is_some());
+        }
+        tight.insert(key(3), vec![0.0; 4], t0);
+        assert!(tight.get(key(2), t0).is_none(), "key(2) was LRU");
+        assert!(tight.get(key(1), t0).is_some());
+    }
+
+    #[test]
+    fn replace_accounts_bytes_once() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(1 << 20, None);
+        c.insert(key(1), vec![0.0; 8], t0);
+        let b1 = c.bytes();
+        c.insert(key(1), vec![0.0; 8], t0);
+        assert_eq!(c.bytes(), b1);
+        c.clear();
+        assert_eq!((c.bytes(), c.len()), (0, 0));
+    }
+}

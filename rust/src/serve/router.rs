@@ -1,0 +1,204 @@
+//! Influence-routed query router.
+//!
+//! Routing exploits the structural fact the paper's inference numbers
+//! rest on: IBMB's output partition is *disjoint and covering*, so
+//! every serveable node belongs to exactly one precomputed plan. The
+//! router inverts that mapping once — node id → (plan id, position
+//! among the plan's outputs) — into a flat array, making the hot-path
+//! lookup one bounds-checked load.
+//!
+//! Nodes outside every plan (new nodes, non-eval splits) take the
+//! **cold path**: the router assigns the node a stable cold-plan id so
+//! concurrent and repeat cold queries coalesce exactly like warm ones,
+//! and the node's home shard synthesizes (and memoizes) the actual
+//! top-k-PPR plan off the control loop —
+//! [`super::shard::synthesize_cold`]. Keeping synthesis off this
+//! thread means a trickle of cold traffic cannot stall deadline
+//! flushes for in-flight warm queries.
+
+use std::collections::HashMap;
+
+use crate::batching::BatchCache;
+use crate::datasets::Dataset;
+
+/// Identity of an executable plan: a precomputed cache entry or a
+/// cold plan (keyed by router-assigned id). The coalescing queue and
+/// the results memo key on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PlanKey {
+    /// Index into the [`BatchCache`].
+    Cached(u32),
+    /// Router-assigned id of a cold (shard-synthesized) plan.
+    Cold(u32),
+}
+
+/// Routing decision for one query node.
+#[derive(Debug, Clone, Copy)]
+pub enum Route {
+    /// Covered by precomputed plan `plan`; the node is output number
+    /// `pos` of that plan (its logits row after execution).
+    Cached { plan: u32, pos: u32 },
+    /// Served by a cold plan (node = output 0), synthesized lazily on
+    /// the node's home shard.
+    Cold { id: u32 },
+}
+
+impl Route {
+    pub fn key(&self) -> PlanKey {
+        match self {
+            Route::Cached { plan, .. } => PlanKey::Cached(*plan),
+            Route::Cold { id } => PlanKey::Cold(*id),
+        }
+    }
+
+    /// Output-row position of the query node within its plan.
+    pub fn pos(&self) -> u32 {
+        match self {
+            Route::Cached { pos, .. } => *pos,
+            Route::Cold { .. } => 0,
+        }
+    }
+}
+
+/// Packed `(plan << 32) | pos`; `u64::MAX` = not covered by any plan.
+const ABSENT: u64 = u64::MAX;
+
+/// Safety cap on the cold-id map: past this many distinct cold nodes
+/// the map is reset. Ids keep incrementing, so a re-queried node gets
+/// a fresh id and its stale memo entries simply age out of the
+/// results cache; only coalescing continuity is briefly lost.
+const MAX_COLD_IDS: usize = 1 << 20;
+
+/// Output-node → plan inverted index plus stable cold-plan ids.
+pub struct QueryRouter {
+    index: Vec<u64>,
+    cold: HashMap<u32, u32>,
+    /// Output nodes that appeared in more than one plan while building
+    /// the index (0 for a valid IBMB partition).
+    pub duplicates: usize,
+    /// Cold-plan ids handed out so far.
+    pub cold_built: usize,
+}
+
+impl QueryRouter {
+    /// Invert `cache`'s output lists over `ds`'s node id space.
+    pub fn build(ds: &Dataset, cache: &BatchCache) -> QueryRouter {
+        let n = ds.graph.num_nodes();
+        let mut index = vec![ABSENT; n];
+        let mut duplicates = 0usize;
+        for pid in 0..cache.len() {
+            for (pos, &u) in cache.output_nodes(pid).iter().enumerate() {
+                let slot = &mut index[u as usize];
+                if *slot != ABSENT {
+                    duplicates += 1;
+                    continue;
+                }
+                *slot = ((pid as u64) << 32) | pos as u64;
+            }
+        }
+        QueryRouter {
+            index,
+            cold: HashMap::new(),
+            duplicates,
+            cold_built: 0,
+        }
+    }
+
+    /// Number of nodes covered by a precomputed plan.
+    pub fn coverage(&self) -> usize {
+        self.index.iter().filter(|&&p| p != ABSENT).count()
+    }
+
+    /// Route a query node: cached-plan lookup, else a memoized cold id
+    /// (assigning a fresh one is the only mutating case).
+    pub fn route(&mut self, node: u32) -> Route {
+        if let Some(&packed) = self.index.get(node as usize) {
+            if packed != ABSENT {
+                return Route::Cached {
+                    plan: (packed >> 32) as u32,
+                    pos: (packed & u32::MAX as u64) as u32,
+                };
+            }
+        }
+        if let Some(&id) = self.cold.get(&node) {
+            return Route::Cold { id };
+        }
+        if self.cold.len() >= MAX_COLD_IDS {
+            self.cold.clear();
+        }
+        let id = self.cold_built as u32;
+        self.cold_built += 1;
+        self.cold.insert(node, id);
+        Route::Cold { id }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{BatchGenerator, NodeWiseIbmb};
+    use crate::datasets::{sbm, DatasetSpec};
+    use crate::util::Rng;
+
+    fn setup() -> (Dataset, BatchCache) {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 77);
+        let mut g = NodeWiseIbmb {
+            aux_per_output: 6,
+            max_outputs_per_batch: 40,
+            node_budget: 256,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(3);
+        let out = ds.splits.train.clone();
+        let cache = BatchCache::build(&g.plan(&ds, &out, &mut rng));
+        (ds, cache)
+    }
+
+    #[test]
+    fn every_output_node_routes_to_its_plan() {
+        let (ds, cache) = setup();
+        let mut router = QueryRouter::build(&ds, &cache);
+        assert_eq!(router.duplicates, 0);
+        assert_eq!(router.coverage(), ds.splits.train.len());
+        for &u in &ds.splits.train {
+            match router.route(u) {
+                Route::Cached { plan, pos } => {
+                    assert_eq!(
+                        cache.output_nodes(plan as usize)[pos as usize],
+                        u
+                    );
+                }
+                Route::Cold { .. } => panic!("train node {u} went cold"),
+            }
+        }
+        assert_eq!(router.cold_built, 0);
+    }
+
+    #[test]
+    fn uncovered_nodes_get_stable_cold_ids() {
+        let (ds, cache) = setup();
+        let mut router = QueryRouter::build(&ds, &cache);
+        let covered: std::collections::HashSet<u32> =
+            ds.splits.train.iter().copied().collect();
+        let mut cold_nodes = (0..ds.graph.num_nodes() as u32)
+            .filter(|u| !covered.contains(u));
+        let a = cold_nodes.next().expect("tiny split leaves cold nodes");
+        let b = cold_nodes.next().expect("need two cold nodes");
+        let ra = router.route(a);
+        let rb = router.route(b);
+        let ra2 = router.route(a);
+        match (ra, rb, ra2) {
+            (
+                Route::Cold { id: ia },
+                Route::Cold { id: ib },
+                Route::Cold { id: ia2 },
+            ) => {
+                assert_eq!(ia, ia2, "cold id must be memoized per node");
+                assert_ne!(ia, ib, "distinct nodes get distinct cold ids");
+            }
+            other => panic!("expected cold routes, got {other:?}"),
+        }
+        assert_eq!(router.cold_built, 2);
+        assert_eq!(router.route(a).pos(), 0);
+    }
+}

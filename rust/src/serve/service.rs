@@ -1,0 +1,458 @@
+//! The serving event loop: closed-loop clients → router → coalescing
+//! queue → sharded executors → results memo → latency metrics.
+//!
+//! The loop is single-threaded on the control side (routing, queueing,
+//! memoization, accounting) with N executor shard threads; queries
+//! complete out of the shards' result channel. Clients are closed-loop:
+//! each of `clients` logical clients keeps exactly one query in flight
+//! and issues its next the moment the previous completes, which is what
+//! makes throughput self-limiting and the coalescing factor an honest
+//! function of concurrency × skew rather than of an open-loop arrival
+//! schedule.
+//!
+//! A query's life: admit (route + memo probe) → coalesce in the queue
+//! (size/deadline flush) → execute once per *group* on its plan's home
+//! shard → complete every rider, memoize the plan's output logits.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::batching::{BatchCache, BatchGenerator, NodeWiseIbmb};
+use crate::config::preset_for;
+use crate::datasets::Dataset;
+use crate::runtime::{ArtifactMeta, ModelState};
+use crate::util::Rng;
+
+use super::load::{LoadGen, Skew};
+use super::metrics::ServeMetrics;
+use super::queue::{MicrobatchQueue, PendingGroup, QueryTicket};
+use super::results::ResultsCache;
+use super::router::{PlanKey, QueryRouter, Route};
+use super::shard::{
+    argmax, reference_artifact, shard_worker, ShardCtx, ShardMap, ShardMsg,
+    Work, WorkItem,
+};
+
+/// Serving configuration (CLI: `ibmb serve`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Model family: "gcn" | "sage" | "gat".
+    pub model: String,
+    /// Executor worker shards.
+    pub shards: usize,
+    /// Closed-loop clients (max queries in flight).
+    pub clients: usize,
+    /// Total queries to serve.
+    pub queries: usize,
+    /// Microbatch deadline: max time a query waits for co-riders.
+    pub flush_window: Duration,
+    /// Size flush threshold (queries per group).
+    pub max_coalesce: usize,
+    /// Results-memo byte budget (0 disables).
+    pub results_cache_bytes: usize,
+    /// Results-memo freshness bound (None = until evicted).
+    pub results_ttl: Option<Duration>,
+    /// Top-k PPR budget for cold (uncovered) query nodes.
+    pub cold_aux: usize,
+    /// Per-shard prefetch ring depth.
+    pub ring_depth: usize,
+    /// Reference-model hidden width.
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "gcn".to_string(),
+            shards: 1,
+            clients: 16,
+            queries: 500,
+            flush_window: Duration::from_micros(500),
+            max_coalesce: 16,
+            results_cache_bytes: 0,
+            results_ttl: None,
+            cold_aux: 16,
+            ring_depth: 2,
+            hidden: 32,
+            layers: 2,
+            heads: 2,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything [`serve_closed_loop`] needs that is built once per
+/// deployment: the precomputed plan cache, the executor model, and the
+/// query router (whose cold-plan memo persists across runs). The
+/// [`ShardMap`] is rebuilt per run because it depends on the run's
+/// shard count.
+pub struct ServeSetup {
+    pub cache: BatchCache,
+    pub meta: ArtifactMeta,
+    pub state: ModelState,
+    pub router: QueryRouter,
+}
+
+/// Plan the serveable node set with node-wise IBMB (dataset preset),
+/// synthesize the reference executor model sized to the resulting
+/// bucket, and build the query router over the plan set.
+pub fn prepare(ds: &Dataset, eval_nodes: &[u32], cfg: &ServeConfig) -> ServeSetup {
+    let p = preset_for(&ds.name);
+    let mut g = NodeWiseIbmb {
+        aux_per_output: p.aux_per_output,
+        max_outputs_per_batch: p.outputs_per_batch,
+        node_budget: p.node_budget,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0xCAFE);
+    let cache = BatchCache::build(&g.plan(ds, eval_nodes, &mut rng));
+    let bucket = cache
+        .max_batch_nodes()
+        .max(cfg.cold_aux + 1)
+        .next_power_of_two()
+        .max(16);
+    let meta = reference_artifact(
+        &cfg.model,
+        ds.feat_dim,
+        ds.num_classes,
+        cfg.hidden,
+        cfg.layers,
+        cfg.heads,
+        bucket,
+    );
+    let state = ModelState::init(&meta, cfg.seed ^ 0x51A7E);
+    let router = QueryRouter::build(ds, &cache);
+    ServeSetup {
+        cache,
+        meta,
+        state,
+        router,
+    }
+}
+
+/// Aggregate outcome of one closed-loop serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub queries: usize,
+    pub wall_s: f64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    /// Materialize+execute runs performed.
+    pub executions: u64,
+    /// Queries answered by executions.
+    pub executed_queries: u64,
+    /// Queries per execution (> 1 = coalescing won).
+    pub coalescing_factor: f64,
+    /// Queries answered from the results memo.
+    pub cache_hits: u64,
+    pub cache_hit_rate: f64,
+    /// Queries answered via the cold (synthesized-plan) path — memo
+    /// hits for previously executed cold plans are not counted.
+    pub cold_routes: u64,
+    /// Cold-plan ids assigned during this run (≈ distinct new cold
+    /// nodes; shard-side FIFO eviction may resynthesize an id's plan).
+    pub cold_plans: usize,
+    pub accuracy: f64,
+    pub shard_queries: Vec<u64>,
+    pub shard_balance: f64,
+    /// Precomputed plans available to the router.
+    pub plans: usize,
+    /// Shard-side seconds in the forward pass (summed over shards).
+    pub exec_s: f64,
+    /// Shard-side seconds stalled waiting on materialization.
+    pub mat_wait_s: f64,
+    /// Dense-buffer bytes pooled across all shard arenas.
+    pub arena_bytes: usize,
+    /// Fresh buffer allocations across all shard arenas (steady state:
+    /// ring depth × shards).
+    pub arena_allocations: usize,
+    /// Bytes resident in the results memo at shutdown.
+    pub results_cache_bytes: usize,
+}
+
+fn dispatch_group(
+    g: PendingGroup,
+    work_of: &HashMap<PlanKey, Work>,
+    map: &ShardMap,
+    txs: &[mpsc::Sender<WorkItem>],
+    metrics: &mut ServeMetrics,
+) -> Result<()> {
+    let work = *work_of
+        .get(&g.key)
+        .expect("dispatched group without registered work");
+    let shard = match work {
+        Work::Cached(pid) => map.shard_of_plan(pid),
+        Work::Cold(node) => map.shard_of_node(node),
+    };
+    metrics.record_dispatch(shard, g.queries.len() as u64);
+    txs[shard]
+        .send(WorkItem {
+            key: g.key,
+            work,
+            queries: g.queries,
+        })
+        .map_err(|_| anyhow::anyhow!("shard {shard} hung up"))?;
+    Ok(())
+}
+
+/// Serve `cfg.queries` queries drawn from `population` with `skew`,
+/// closed-loop. Blocks until every query completes and all shards have
+/// shut down; returns the aggregate report. `setup` is borrowed
+/// mutably for the router's cold-plan memo, which stays warm across
+/// repeated runs (the bench's shard sweep reuses one setup).
+pub fn serve_closed_loop(
+    ds: &Dataset,
+    setup: &mut ServeSetup,
+    population: &[u32],
+    skew: Skew,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let cache = &setup.cache;
+    let meta = &setup.meta;
+    let state = &setup.state;
+    let router = &mut setup.router;
+    // ServeSetup persists across runs; report this run's delta
+    let cold_ids_at_start = router.cold_built;
+    anyhow::ensure!(!population.is_empty(), "empty query population");
+    anyhow::ensure!(cfg.queries > 0, "need at least one query");
+    anyhow::ensure!(
+        meta.feat == ds.feat_dim,
+        "artifact feat {} != dataset feat {}",
+        meta.feat,
+        ds.feat_dim
+    );
+    let shards = cfg.shards.max(1);
+    let total = cfg.queries as u64;
+    let clients = cfg.clients.max(1).min(cfg.queries) as u64;
+    let classes = meta.classes;
+
+    let mut rng = Rng::new(cfg.seed ^ 0x5E21);
+    let map = ShardMap::build(ds, cache, shards, &mut rng);
+    let mut queue = MicrobatchQueue::new(cfg.flush_window, cfg.max_coalesce);
+    let mut results = ResultsCache::new(cfg.results_cache_bytes, cfg.results_ttl);
+    let mut metrics = ServeMetrics::new(shards);
+    let mut load = LoadGen::new(population, skew, cfg.seed ^ 0x10AD);
+
+    std::thread::scope(|scope| -> Result<ServeReport> {
+        let (res_tx, res_rx) = mpsc::channel::<ShardMsg>();
+        let mut txs: Vec<mpsc::Sender<WorkItem>> = Vec::with_capacity(shards);
+        for shard_id in 0..shards {
+            let (tx, rx) = mpsc::channel::<WorkItem>();
+            let ctx = ShardCtx {
+                shard_id,
+                ds,
+                cache,
+                meta,
+                state,
+                bucket: meta.n_pad,
+                ring_depth: cfg.ring_depth,
+                cold_aux: cfg.cold_aux,
+            };
+            let out = res_tx.clone();
+            scope.spawn(move || shard_worker(ctx, rx, out));
+            txs.push(tx);
+        }
+        drop(res_tx);
+
+        let mut work_of: HashMap<PlanKey, Work> = HashMap::new();
+        let mut arrivals: HashMap<u64, Instant> = HashMap::new();
+        let mut issued = 0u64;
+        let mut completed = 0u64;
+        let t0 = Instant::now();
+        let wall_s = loop {
+            // closed-loop admission: top up to `clients` in flight;
+            // memo hits complete synchronously and free their client
+            // slot immediately.
+            while issued < total && issued - completed < clients {
+                let node = load.next_node();
+                let id = issued;
+                issued += 1;
+                let now = Instant::now();
+                let route = router.route(node);
+                let key = route.key();
+                let pos = route.pos();
+                if let Some(logits) = results.get(key, now) {
+                    let start = pos as usize * classes;
+                    let pred = argmax(&logits[start..start + classes]);
+                    metrics.cache_hit_queries += 1;
+                    metrics.record_completion(
+                        0.0,
+                        pred == ds.labels[node as usize] as usize,
+                    );
+                    completed += 1;
+                    continue;
+                }
+                // counted after the memo probe: memo-served repeats
+                // never reach the synthesized-plan path
+                if matches!(route, Route::Cold { .. }) {
+                    metrics.cold_routes += 1;
+                }
+                let work = match route {
+                    Route::Cached { plan, .. } => Work::Cached(plan),
+                    // the node's home shard synthesizes + memoizes
+                    Route::Cold { .. } => Work::Cold(node),
+                };
+                work_of.entry(key).or_insert(work);
+                arrivals.insert(id, now);
+                if let Some(group) =
+                    queue.push(key, QueryTicket { id, node, pos }, now)
+                {
+                    dispatch_group(group, &work_of, &map, &txs, &mut metrics)?;
+                }
+            }
+            if completed >= total {
+                break t0.elapsed().as_secs_f64();
+            }
+            // deadline flushes
+            let now = Instant::now();
+            for group in queue.due(now) {
+                dispatch_group(group, &work_of, &map, &txs, &mut metrics)?;
+            }
+            // sleep until the next deadline or the next completion
+            let timeout = queue
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(10))
+                .min(Duration::from_millis(10));
+            match res_rx.recv_timeout(timeout) {
+                Ok(ShardMsg::Result(r)) => {
+                    let now = Instant::now();
+                    for o in &r.outcomes {
+                        let lat = arrivals
+                            .remove(&o.id)
+                            .map(|a| now.duration_since(a).as_secs_f64())
+                            .unwrap_or(0.0);
+                        metrics.record_completion(lat, o.correct);
+                        completed += 1;
+                    }
+                    metrics.exec_s += r.exec_s;
+                    results.insert(r.key, r.out_logits, now);
+                }
+                Ok(ShardMsg::Done(_)) => {
+                    anyhow::bail!("shard exited early");
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all shards disconnected");
+                }
+            }
+        };
+
+        // shut shards down and collect their final accounting
+        drop(txs);
+        let mut mat_wait_s = 0.0;
+        let mut arena_bytes = 0usize;
+        let mut arena_allocations = 0usize;
+        for msg in res_rx.iter() {
+            if let ShardMsg::Done(d) = msg {
+                mat_wait_s += d.wait_s;
+                arena_bytes += d.arena_bytes;
+                arena_allocations += d.arena_allocations;
+            }
+        }
+
+        let lat = &metrics.latency;
+        Ok(ServeReport {
+            queries: cfg.queries,
+            wall_s,
+            qps: total as f64 / wall_s.max(1e-9),
+            p50_ms: lat.quantile(0.50) * 1e3,
+            p95_ms: lat.quantile(0.95) * 1e3,
+            p99_ms: lat.quantile(0.99) * 1e3,
+            mean_ms: lat.mean() * 1e3,
+            max_ms: lat.max() * 1e3,
+            executions: metrics.executions,
+            executed_queries: metrics.executed_queries,
+            coalescing_factor: metrics.coalescing_factor(),
+            cache_hits: metrics.cache_hit_queries,
+            cache_hit_rate: metrics.hit_rate(),
+            cold_routes: metrics.cold_routes,
+            cold_plans: router.cold_built - cold_ids_at_start,
+            accuracy: metrics.accuracy(),
+            shard_queries: metrics.shard_queries.clone(),
+            shard_balance: metrics.shard_balance(),
+            plans: cache.len(),
+            exec_s: metrics.exec_s,
+            mat_wait_s,
+            arena_bytes,
+            arena_allocations,
+            results_cache_bytes: results.bytes(),
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{sbm, DatasetSpec};
+
+    fn tiny() -> Dataset {
+        sbm::generate(&DatasetSpec::tiny_for_tests(), 33)
+    }
+
+    #[test]
+    fn serves_every_query_exactly_once() {
+        let ds = tiny();
+        let cfg = ServeConfig {
+            queries: 64,
+            clients: 8,
+            shards: 2,
+            flush_window: Duration::from_micros(300),
+            ..Default::default()
+        };
+        let eval = ds.splits.train.clone();
+        let mut setup = prepare(&ds, &eval, &cfg);
+        assert!(!setup.cache.is_empty());
+        let report =
+            serve_closed_loop(&ds, &mut setup, &eval, Skew::Zipf(1.2), &cfg)
+                .unwrap();
+        assert_eq!(report.queries, 64);
+        assert_eq!(
+            report.executed_queries + report.cache_hits,
+            64,
+            "every query answered by execution or memo"
+        );
+        assert!(report.executions <= report.executed_queries);
+        assert!(report.qps > 0.0);
+        assert!(report.wall_s > 0.0);
+        assert!((0.0..=1.0).contains(&report.accuracy));
+        assert_eq!(
+            report.shard_queries.iter().sum::<u64>(),
+            report.executed_queries
+        );
+        // closed loop with no warm memo must execute at least once
+        assert!(report.executions >= 1);
+    }
+
+    #[test]
+    fn memo_absorbs_repeat_queries() {
+        let ds = tiny();
+        let cfg = ServeConfig {
+            queries: 40,
+            clients: 1, // strictly sequential: every repeat is a hit
+            shards: 1,
+            results_cache_bytes: 1 << 20,
+            flush_window: Duration::from_micros(100),
+            ..Default::default()
+        };
+        let eval = ds.splits.train.clone();
+        let mut setup = prepare(&ds, &eval, &cfg);
+        let node = [eval[0]];
+        let report =
+            serve_closed_loop(&ds, &mut setup, &node, Skew::Uniform, &cfg)
+                .unwrap();
+        assert_eq!(report.executions, 1, "one execution, then memo hits");
+        assert_eq!(report.cache_hits, 39);
+        assert!(report.cache_hit_rate > 0.9);
+    }
+}

@@ -1,0 +1,694 @@
+//! Sharded executor workers.
+//!
+//! Each shard is one worker thread owning its own
+//! [`BatchArena`] and prefetch ring — the serving analogue of the
+//! training pipeline's materialize/execute overlap (DESIGN.md §7, cf.
+//! "Accelerating Training and Inference of GNNs with Fast Sampling and
+//! Pipelining", arXiv 2110.08450: keep executors saturated while batch
+//! preparation overlaps). Plans are assigned to shards through the
+//! METIS graph partition, so the plans a shard executes cover adjacent
+//! regions of the graph and its arena + feature working set stays
+//! memory-local; cold plans follow their root node's partition cell.
+//!
+//! Execution runs the exact CPU reference forward pass
+//! ([`forward`]) over the plan's induced subgraph, reading
+//! edge topology zero-copy from the [`BatchCache`] arena slices and
+//! dense features from the arena-pooled [`DenseBatch`]. The artifact
+//! metadata is synthesized by [`reference_artifact`] in the exact AOT
+//! manifest layout, so swapping in `Runtime::infer_step` when PJRT
+//! artifacts exist is a local change to [`shard_worker`]'s consume
+//! closure.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use crate::batching::{BatchArena, BatchCache, DenseBatch};
+use crate::datasets::Dataset;
+use crate::graph::induced_subgraph;
+use crate::inference::fullgraph::{forward, SparseGraphRef};
+use crate::partition::metis::{partition_graph, MetisConfig};
+use crate::pipeline::run_prefetched;
+use crate::ppr::push::{push_ppr, PushConfig, PushWorkspace};
+use crate::ppr::topk::top_k_indices;
+use crate::runtime::{ArtifactMeta, ModelState, ParamSpec};
+use crate::util::Rng;
+
+use super::queue::QueryTicket;
+use super::router::PlanKey;
+
+/// Max work items a shard drains from its channel per prefetch run.
+const MAX_DRAIN: usize = 64;
+
+/// Per-shard cold-plan memo cap (FIFO eviction). Cold plans are cheap
+/// to resynthesize, so a simple bound keeps sustained cold traffic
+/// from growing the memo without limit (each plan holds up to
+/// `bucket` nodes plus its edge arrays).
+const MAX_COLD_PLANS: usize = 1024;
+
+/// Index of the largest logit (deterministic: first max wins).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Synthesize an `ArtifactMeta` in the AOT manifest's exact parameter
+/// layout (`python/compile/model.py::init_params`) for the CPU
+/// reference executor — lets serving run without on-disk artifacts
+/// while staying drop-in compatible with the PJRT runtime.
+pub fn reference_artifact(
+    model: &str,
+    feat: usize,
+    classes: usize,
+    hidden: usize,
+    layers: usize,
+    heads: usize,
+    n_pad: usize,
+) -> ArtifactMeta {
+    assert!(layers >= 1, "need at least one layer");
+    fn add(
+        params: &mut Vec<ParamSpec>,
+        off: &mut usize,
+        name: String,
+        shape: Vec<usize>,
+    ) {
+        let size = shape.iter().product::<usize>().max(1);
+        params.push(ParamSpec {
+            name,
+            shape,
+            offset: *off,
+            size,
+        });
+        *off += size;
+    }
+    let mut params: Vec<ParamSpec> = Vec::new();
+    let mut off = 0usize;
+    let mut d_in = feat;
+    for l in 0..layers {
+        let last = l == layers - 1;
+        let d_out = if last { classes } else { hidden };
+        match model {
+            "gcn" => {
+                add(&mut params, &mut off, format!("l{l}.w"), vec![d_in, d_out])
+            }
+            "sage" => add(
+                &mut params,
+                &mut off,
+                format!("l{l}.w"),
+                vec![2 * d_in, d_out],
+            ),
+            "gat" => {
+                let h = if last { 1 } else { heads.max(1) };
+                assert!(
+                    d_out % h == 0,
+                    "gat: layer width {d_out} must divide heads {h}"
+                );
+                add(&mut params, &mut off, format!("l{l}.w"), vec![d_in, d_out]);
+            }
+            other => panic!("unknown model {other}"),
+        }
+        add(&mut params, &mut off, format!("l{l}.b"), vec![d_out]);
+        if model == "gat" {
+            let h = if last { 1 } else { heads.max(1) };
+            add(
+                &mut params,
+                &mut off,
+                format!("l{l}.a_src"),
+                vec![h, d_out / h],
+            );
+            add(
+                &mut params,
+                &mut off,
+                format!("l{l}.a_dst"),
+                vec![h, d_out / h],
+            );
+        }
+        if !last {
+            add(&mut params, &mut off, format!("l{l}.ln_g"), vec![d_out]);
+            add(&mut params, &mut off, format!("l{l}.ln_b"), vec![d_out]);
+        }
+        d_in = d_out;
+    }
+    ArtifactMeta {
+        id: format!("serve_{model}_n{n_pad}"),
+        model: model.to_string(),
+        kind: "infer".to_string(),
+        n_pad,
+        feat,
+        classes,
+        hidden,
+        layers,
+        heads: heads.max(1),
+        dropout: 0.0,
+        weight_decay: 0.0,
+        param_count: off,
+        params,
+        path: String::new(),
+    }
+}
+
+/// Plan → shard and node → shard assignment derived from the METIS
+/// graph partition (memory locality: a shard's plans cover adjacent
+/// graph regions).
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    pub num_shards: usize,
+    node_part: Vec<u32>,
+    plan_shard: Vec<u32>,
+}
+
+impl ShardMap {
+    pub fn build(
+        ds: &Dataset,
+        cache: &BatchCache,
+        num_shards: usize,
+        rng: &mut Rng,
+    ) -> ShardMap {
+        let k = num_shards.max(1);
+        let node_part = partition_graph(&ds.graph, k, &MetisConfig::default(), rng);
+        let mut plan_shard = Vec::with_capacity(cache.len());
+        for pid in 0..cache.len() {
+            // majority vote of the plan's output nodes
+            let mut votes = vec![0usize; k];
+            for &u in cache.output_nodes(pid) {
+                votes[node_part[u as usize] as usize] += 1;
+            }
+            let mut best = 0usize;
+            for s in 1..k {
+                if votes[s] > votes[best] {
+                    best = s;
+                }
+            }
+            plan_shard.push(best as u32);
+        }
+        ShardMap {
+            num_shards: k,
+            node_part,
+            plan_shard,
+        }
+    }
+
+    pub fn shard_of_plan(&self, pid: u32) -> usize {
+        self.plan_shard[pid as usize] as usize
+    }
+
+    pub fn shard_of_node(&self, node: u32) -> usize {
+        self.node_part[node as usize] as usize
+    }
+}
+
+/// A synthesized single-output plan for a node absent from every
+/// precomputed batch, memoized shard-locally. The query node is
+/// always local id 0 / the single output. Edge endpoints are stored
+/// *only* pre-split into parallel arrays (the tuple form a
+/// `BatchPlan` carries would double the memo's edge bytes) so the
+/// executor can build a [`SparseGraphRef`] without per-query work.
+#[derive(Debug)]
+pub struct ColdPlan {
+    /// The query node.
+    pub node: u32,
+    /// Plan node list (global ids, query node first).
+    pub nodes: Vec<u32>,
+    pub edge_src: Vec<u32>,
+    pub edge_dst: Vec<u32>,
+    pub weights: Vec<f32>,
+}
+
+/// Cold path: single-output plan over the node's top-k PPR
+/// neighborhood (paper §3.1 at batch size one), capped at `budget`
+/// nodes. Runs on the node's home shard — never on the service
+/// control loop — so synthesis cannot stall deadline flushes.
+pub fn synthesize_cold(
+    ds: &Dataset,
+    node: u32,
+    aux: usize,
+    budget: usize,
+    push: &PushConfig,
+    ws: &mut PushWorkspace,
+) -> ColdPlan {
+    let ppr = push_ppr(&ds.graph, node, push, ws);
+    let mut nodes = Vec::with_capacity(aux + 1);
+    nodes.push(node);
+    // +1 candidate slot because the root usually tops its own PPR
+    for t in top_k_indices(&ppr.scores, aux + 1) {
+        let v = ppr.nodes[t];
+        if v != node && nodes.len() < aux + 1 {
+            nodes.push(v);
+        }
+    }
+    nodes.truncate(budget.max(1));
+    let sg = induced_subgraph(&ds.graph, &nodes);
+    let n = sg.nodes.len() as u32;
+    debug_assert!(sg.edges.iter().all(|&(s, d)| s < n && d < n));
+    debug_assert_eq!(sg.edges.len(), sg.weights.len());
+    let (edge_src, edge_dst): (Vec<u32>, Vec<u32>) =
+        sg.edges.iter().copied().unzip();
+    ColdPlan {
+        node,
+        nodes: sg.nodes,
+        edge_src,
+        edge_dst,
+        weights: sg.weights,
+    }
+}
+
+/// What a shard executes: a cached plan id or a cold query node whose
+/// plan the shard synthesizes (once) and memoizes locally.
+#[derive(Debug, Clone, Copy)]
+pub enum Work {
+    Cached(u32),
+    Cold(u32),
+}
+
+/// One coalesced group dispatched to a shard.
+#[derive(Debug)]
+pub struct WorkItem {
+    pub key: PlanKey,
+    pub work: Work,
+    pub queries: Vec<QueryTicket>,
+}
+
+/// Per-query outcome of one execution.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryOutcome {
+    pub id: u64,
+    pub node: u32,
+    pub pred: u16,
+    pub correct: bool,
+}
+
+/// One executed group's results.
+#[derive(Debug)]
+pub struct ShardResult {
+    pub shard_id: usize,
+    pub key: PlanKey,
+    pub outcomes: Vec<QueryOutcome>,
+    /// Logits of the plan's output nodes, row-major
+    /// `[num_outputs * classes]` — feeds the results memo.
+    pub out_logits: Vec<f32>,
+    pub num_outputs: usize,
+    pub batch_nodes: usize,
+    /// Seconds spent in the forward pass for this group.
+    pub exec_s: f64,
+}
+
+/// Final per-shard accounting, sent once when the shard shuts down.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardDone {
+    pub shard_id: usize,
+    /// Seconds the execute side stalled waiting on materialization.
+    pub wait_s: f64,
+    /// Seconds spent in the consume (execute) closures.
+    pub consume_s: f64,
+    /// Prefetch-ring drains performed.
+    pub drains: u64,
+    pub arena_bytes: usize,
+    pub arena_allocations: usize,
+}
+
+/// Everything flowing back from shards to the event loop.
+#[derive(Debug)]
+pub enum ShardMsg {
+    Result(ShardResult),
+    Done(ShardDone),
+}
+
+/// Borrowed execution context of one shard (all shared state is
+/// immutable; the arena and cold-plan memo are shard-private).
+#[derive(Clone, Copy)]
+pub struct ShardCtx<'a> {
+    pub shard_id: usize,
+    pub ds: &'a Dataset,
+    pub cache: &'a BatchCache,
+    pub meta: &'a ArtifactMeta,
+    pub state: &'a ModelState,
+    /// Dense-buffer bucket (n_pad) every plan must fit — also the
+    /// node cap for synthesized cold plans.
+    pub bucket: usize,
+    pub ring_depth: usize,
+    /// Top-k PPR budget for cold-plan synthesis.
+    pub cold_aux: usize,
+}
+
+/// Features-only fill for the CPU reference executor. The sparse
+/// forward reads edge topology zero-copy from the plan and consumes
+/// exactly `x[..n * feat]`, so the dense adjacency/labels/mask of a
+/// full `materialize` would be dead work on the serving hot path
+/// (O(n_pad²) zeroing per group). A PJRT executor swap would restore
+/// full materialization here — that is the only change needed.
+fn fill_features(
+    ds: &Dataset,
+    nodes: &[u32],
+    num_outputs: usize,
+    buf: &mut DenseBatch,
+) {
+    let n = nodes.len();
+    assert!(
+        n <= buf.n_pad,
+        "batch of {n} nodes exceeds bucket {}",
+        buf.n_pad
+    );
+    for (i, &u) in nodes.iter().enumerate() {
+        ds.node_features_into(u, &mut buf.x[i * buf.feat..(i + 1) * buf.feat]);
+    }
+    buf.num_real = n;
+    buf.num_outputs = num_outputs;
+}
+
+fn execute_one(
+    ctx: &ShardCtx<'_>,
+    item: &WorkItem,
+    cold_plans: &HashMap<u32, ColdPlan>,
+    buf: &DenseBatch,
+) -> ShardResult {
+    let t = Instant::now();
+    let n = buf.num_real;
+    let classes = ctx.meta.classes;
+    let (edge_src, edge_dst, weights) = match &item.work {
+        Work::Cached(pid) => {
+            let p = *pid as usize;
+            (
+                ctx.cache.edge_src_of(p),
+                ctx.cache.edge_dst_of(p),
+                ctx.cache.edge_weights_of(p),
+            )
+        }
+        Work::Cold(node) => {
+            let cp = &cold_plans[node];
+            (
+                cp.edge_src.as_slice(),
+                cp.edge_dst.as_slice(),
+                cp.weights.as_slice(),
+            )
+        }
+    };
+    let g = SparseGraphRef {
+        n,
+        edge_src,
+        edge_dst,
+        weights,
+    };
+    let mut out_logits =
+        forward(ctx.meta, ctx.state, &g, &buf.x[..n * ctx.meta.feat]);
+    out_logits.truncate(buf.num_outputs * classes);
+    let outcomes = item
+        .queries
+        .iter()
+        .map(|q| {
+            let start = q.pos as usize * classes;
+            let pred = argmax(&out_logits[start..start + classes]);
+            QueryOutcome {
+                id: q.id,
+                node: q.node,
+                pred: pred as u16,
+                correct: pred == ctx.ds.labels[q.node as usize] as usize,
+            }
+        })
+        .collect();
+    ShardResult {
+        shard_id: ctx.shard_id,
+        key: item.key,
+        outcomes,
+        out_logits,
+        num_outputs: buf.num_outputs,
+        batch_nodes: n,
+        exec_s: t.elapsed().as_secs_f64(),
+    }
+}
+
+/// Shard worker loop: drain up to [`MAX_DRAIN`] pending groups, stream
+/// them through the prefetch ring (materialize overlapped with
+/// execute), send one [`ShardResult`] per group, repeat until the work
+/// channel closes; then report [`ShardDone`].
+pub fn shard_worker(
+    ctx: ShardCtx<'_>,
+    rx: Receiver<WorkItem>,
+    tx: Sender<ShardMsg>,
+) {
+    let mut arena = BatchArena::new(ctx.ds.feat_dim);
+    let mut cold_plans: HashMap<u32, ColdPlan> = HashMap::new();
+    let mut cold_order: VecDeque<u32> = VecDeque::new();
+    let mut ws = PushWorkspace::new(ctx.ds.graph.num_nodes());
+    let push_cfg = PushConfig::default();
+    let mut wait_s = 0.0;
+    let mut consume_s = 0.0;
+    let mut drains = 0u64;
+    loop {
+        let first = match rx.recv() {
+            Ok(w) => w,
+            Err(_) => break,
+        };
+        let mut items = vec![first];
+        while items.len() < MAX_DRAIN {
+            match rx.try_recv() {
+                Ok(w) => items.push(w),
+                Err(_) => break,
+            }
+        }
+        // synthesize any first-seen cold plans up front so the ring
+        // closures below only read the memo
+        for item in &items {
+            if let Work::Cold(node) = item.work {
+                if !cold_plans.contains_key(&node) {
+                    let cp = synthesize_cold(
+                        ctx.ds,
+                        node,
+                        ctx.cold_aux,
+                        ctx.bucket,
+                        &push_cfg,
+                        &mut ws,
+                    );
+                    cold_plans.insert(node, cp);
+                    cold_order.push_back(node);
+                }
+            }
+        }
+        let order: Vec<usize> = (0..items.len()).collect();
+        let depth = ctx.ring_depth.max(1).min(items.len());
+        let ring = arena.acquire_many(ctx.bucket, depth);
+        let items_ref = &items;
+        let cold_ref = &cold_plans;
+        let (stats, ring) = run_prefetched(
+            &order,
+            ring,
+            |i, buf| match &items_ref[i].work {
+                Work::Cached(pid) => {
+                    let p = *pid as usize;
+                    fill_features(
+                        ctx.ds,
+                        ctx.cache.batch_nodes(p),
+                        ctx.cache.num_outputs(p),
+                        buf,
+                    )
+                }
+                Work::Cold(node) => {
+                    let cp = &cold_ref[node];
+                    fill_features(ctx.ds, &cp.nodes, 1, buf)
+                }
+            },
+            |i, buf| {
+                let result = execute_one(&ctx, &items_ref[i], cold_ref, buf);
+                let _ = tx.send(ShardMsg::Result(result));
+            },
+        );
+        arena.release_many(ring);
+        // FIFO-bound the cold memo AFTER the drain: evicting mid-drain
+        // could drop a plan another item of this drain still reads.
+        // The cap is exceeded by at most one drain's worth of plans.
+        while cold_plans.len() > MAX_COLD_PLANS {
+            match cold_order.pop_front() {
+                Some(old) => {
+                    cold_plans.remove(&old);
+                }
+                None => break,
+            }
+        }
+        wait_s += stats.wait_s;
+        consume_s += stats.consume_s;
+        drains += 1;
+    }
+    let _ = tx.send(ShardMsg::Done(ShardDone {
+        shard_id: ctx.shard_id,
+        wait_s,
+        consume_s,
+        drains,
+        arena_bytes: arena.memory_bytes(),
+        arena_allocations: arena.allocations(),
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{BatchGenerator, NodeWiseIbmb};
+    use crate::datasets::{sbm, DatasetSpec};
+
+    fn setup() -> (Dataset, BatchCache) {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 21);
+        let mut g = NodeWiseIbmb {
+            aux_per_output: 6,
+            max_outputs_per_batch: 40,
+            node_budget: 256,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(9);
+        let out = ds.splits.train.clone();
+        let cache = BatchCache::build(&g.plan(&ds, &out, &mut rng));
+        (ds, cache)
+    }
+
+    #[test]
+    fn reference_artifact_layouts_parse_for_all_models() {
+        for model in ["gcn", "sage", "gat"] {
+            let meta = reference_artifact(model, 16, 4, 8, 2, 2, 64);
+            assert_eq!(meta.kind, "infer");
+            assert_eq!(meta.n_pad, 64);
+            // contiguous offsets summing to param_count (the manifest
+            // invariant Manifest::parse enforces)
+            let mut off = 0usize;
+            for p in &meta.params {
+                assert_eq!(p.offset, off, "{model}: {}", p.name);
+                assert_eq!(p.size, p.shape.iter().product::<usize>());
+                off += p.size;
+            }
+            assert_eq!(off, meta.param_count, "{model}");
+            // a state initialized from it drives the reference forward
+            let state = ModelState::init(&meta, 5);
+            assert_eq!(state.params.len(), meta.param_count);
+            assert!(state.tensor(&meta, "l0.w").is_some());
+            assert!(state.tensor(&meta, "l1.b").is_some());
+        }
+    }
+
+    #[test]
+    fn cold_plan_synthesis_respects_budget_and_root_first() {
+        let (ds, _) = setup();
+        let mut ws = PushWorkspace::new(ds.graph.num_nodes());
+        let push = PushConfig::default();
+        let cp = synthesize_cold(&ds, 5, 8, 64, &push, &mut ws);
+        assert_eq!(cp.node, 5);
+        assert_eq!(cp.nodes[0], 5, "query node is output 0");
+        assert!(cp.nodes.len() <= 9, "aux budget respected");
+        assert_eq!(cp.edge_src.len(), cp.weights.len());
+        assert_eq!(cp.edge_dst.len(), cp.weights.len());
+        let n = cp.nodes.len() as u32;
+        assert!(cp.edge_src.iter().chain(&cp.edge_dst).all(|&v| v < n));
+        // a tight node budget caps the plan below the aux budget
+        let tight = synthesize_cold(&ds, 7, 32, 4, &push, &mut ws);
+        assert!(tight.nodes.len() <= 4);
+        assert_eq!(tight.nodes[0], 7);
+    }
+
+    #[test]
+    fn shard_map_covers_all_plans_and_nodes() {
+        let (ds, cache) = setup();
+        let mut rng = Rng::new(4);
+        for shards in [1usize, 2, 4] {
+            let map = ShardMap::build(&ds, &cache, shards, &mut rng);
+            assert_eq!(map.num_shards, shards);
+            for pid in 0..cache.len() as u32 {
+                assert!(map.shard_of_plan(pid) < shards);
+            }
+            for u in 0..ds.graph.num_nodes() as u32 {
+                assert!(map.shard_of_node(u) < shards);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_shard_follows_output_majority() {
+        let (ds, cache) = setup();
+        let mut rng = Rng::new(4);
+        let map = ShardMap::build(&ds, &cache, 2, &mut rng);
+        for pid in 0..cache.len() {
+            let shard = map.shard_of_plan(pid as u32);
+            let on_shard = cache
+                .output_nodes(pid)
+                .iter()
+                .filter(|&&u| map.shard_of_node(u) == shard)
+                .count();
+            assert!(
+                2 * on_shard >= cache.num_outputs(pid),
+                "plan {pid}: {} of {} outputs on shard {shard}",
+                on_shard,
+                cache.num_outputs(pid)
+            );
+        }
+    }
+
+    #[test]
+    fn worker_executes_groups_and_reports_done() {
+        use std::sync::mpsc;
+        let (ds, cache) = setup();
+        let meta = reference_artifact(
+            "gcn",
+            ds.feat_dim,
+            ds.num_classes,
+            8,
+            2,
+            2,
+            cache.max_batch_nodes().next_power_of_two().max(16),
+        );
+        let state = ModelState::init(&meta, 1);
+        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+        let (res_tx, res_rx) = mpsc::channel::<ShardMsg>();
+        std::thread::scope(|scope| {
+            let ctx = ShardCtx {
+                shard_id: 0,
+                ds: &ds,
+                cache: &cache,
+                meta: &meta,
+                state: &state,
+                bucket: meta.n_pad,
+                ring_depth: 2,
+                cold_aux: 8,
+            };
+            scope.spawn(move || shard_worker(ctx, work_rx, res_tx));
+            // one group per cached plan, one query each (its first output)
+            for pid in 0..cache.len() as u32 {
+                let node = cache.output_nodes(pid as usize)[0];
+                work_tx
+                    .send(WorkItem {
+                        key: PlanKey::Cached(pid),
+                        work: Work::Cached(pid),
+                        queries: vec![QueryTicket {
+                            id: pid as u64,
+                            node,
+                            pos: 0,
+                        }],
+                    })
+                    .unwrap();
+            }
+            drop(work_tx);
+            let mut results = 0usize;
+            let mut done = 0usize;
+            for msg in res_rx.iter() {
+                match msg {
+                    ShardMsg::Result(r) => {
+                        results += 1;
+                        assert_eq!(r.outcomes.len(), 1);
+                        assert_eq!(
+                            r.out_logits.len(),
+                            r.num_outputs * meta.classes
+                        );
+                        assert!(r.out_logits.iter().all(|v| v.is_finite()));
+                        assert!((r.outcomes[0].pred as usize) < meta.classes);
+                    }
+                    ShardMsg::Done(d) => {
+                        done += 1;
+                        assert!(d.drains >= 1);
+                        assert!(d.arena_allocations >= 1);
+                        assert!(d.arena_bytes > 0);
+                    }
+                }
+            }
+            assert_eq!(results, cache.len());
+            assert_eq!(done, 1);
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! Serving-subsystem integration tests: routing totality (every eval
+//! node lands in exactly one plan, everything else takes the PPR cold
+//! path) and end-to-end coalescing (K concurrent queries to one plan
+//! cost exactly one materialize+execute).
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use ibmb::batching::{BatchCache, BatchGenerator, NodeWiseIbmb};
+use ibmb::datasets::{sbm, Dataset, DatasetSpec};
+use ibmb::serve::{self, QueryRouter, Route, ServeConfig, Skew};
+use ibmb::util::Rng;
+
+fn setup() -> (Dataset, BatchCache) {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 101);
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: 6,
+        max_outputs_per_batch: 40,
+        node_budget: 256,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(17);
+    let eval = ds.splits.train.clone();
+    let cache = BatchCache::build(&gen.plan(&ds, &eval, &mut rng));
+    (ds, cache)
+}
+
+#[test]
+fn every_node_routes_to_exactly_one_plan_or_cold_path() {
+    let (ds, cache) = setup();
+    let mut router = QueryRouter::build(&ds, &cache);
+    assert_eq!(router.duplicates, 0, "IBMB partition must be disjoint");
+    let eval: HashSet<u32> = ds.splits.train.iter().copied().collect();
+    assert_eq!(router.coverage(), eval.len());
+
+    let mut routed_per_plan = vec![0usize; cache.len()];
+    let mut cold_ids = HashSet::new();
+    for u in 0..ds.graph.num_nodes() as u32 {
+        match router.route(u) {
+            Route::Cached { plan, pos } => {
+                assert!(
+                    eval.contains(&u),
+                    "non-eval node {u} routed to a cached plan"
+                );
+                assert_eq!(
+                    cache.output_nodes(plan as usize)[pos as usize],
+                    u,
+                    "node {u} routed to a plan that does not output it"
+                );
+                routed_per_plan[plan as usize] += 1;
+            }
+            Route::Cold { id } => {
+                assert!(!eval.contains(&u), "eval node {u} went cold");
+                assert!(cold_ids.insert(id), "cold id {id} reused");
+            }
+        }
+    }
+    // cached routing is a bijection onto the plans' output lists
+    for (pid, &n) in routed_per_plan.iter().enumerate() {
+        assert_eq!(n, cache.num_outputs(pid), "plan {pid} output coverage");
+    }
+    assert_eq!(
+        router.cold_built,
+        ds.graph.num_nodes() - eval.len(),
+        "one memoized cold id per uncovered node"
+    );
+}
+
+#[test]
+fn k_concurrent_queries_to_one_plan_materialize_once() {
+    let (ds, _) = setup();
+    let k = 12;
+    let cfg = ServeConfig {
+        queries: k,
+        clients: k, // all K in flight at once
+        shards: 1,
+        // no size flush, generous deadline (admission takes µs), no
+        // memo short-circuit: exactly one deadline-flushed group
+        max_coalesce: k + 4,
+        flush_window: Duration::from_millis(100),
+        results_cache_bytes: 0,
+        ..Default::default()
+    };
+    let eval = ds.splits.train.clone();
+    let mut setup = serve::prepare(&ds, &eval, &cfg);
+    // all K queries target the same node → same plan
+    let population = [eval[0]];
+    let report =
+        serve::serve_closed_loop(&ds, &mut setup, &population, Skew::Uniform, &cfg)
+            .unwrap();
+    assert_eq!(report.queries, k);
+    assert_eq!(
+        report.executions, 1,
+        "K concurrent same-plan queries must coalesce into one execution"
+    );
+    assert_eq!(report.executed_queries, k as u64);
+    assert!((report.coalescing_factor - k as f64).abs() < 1e-9);
+    assert_eq!(report.cache_hits, 0);
+}
+
+#[test]
+fn size_flush_bounds_group_size_end_to_end() {
+    let (ds, _) = setup();
+    let k = 9;
+    let cfg = ServeConfig {
+        queries: k,
+        clients: k,
+        shards: 1,
+        max_coalesce: 3, // forces ceil(9/3) = 3 executions
+        flush_window: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let eval = ds.splits.train.clone();
+    let mut setup = serve::prepare(&ds, &eval, &cfg);
+    let population = [eval[0]];
+    let report =
+        serve::serve_closed_loop(&ds, &mut setup, &population, Skew::Uniform, &cfg)
+            .unwrap();
+    assert_eq!(report.executions, 3);
+    assert!((report.coalescing_factor - 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn cold_queries_are_served_end_to_end() {
+    let (ds, _) = setup();
+    let cfg = ServeConfig {
+        queries: 20,
+        clients: 4,
+        shards: 2,
+        flush_window: Duration::from_micros(200),
+        ..Default::default()
+    };
+    let eval = ds.splits.train.clone();
+    let mut setup = serve::prepare(&ds, &eval, &cfg);
+    // population drawn entirely from NON-eval nodes
+    let covered: HashSet<u32> = eval.iter().copied().collect();
+    let cold: Vec<u32> = (0..ds.graph.num_nodes() as u32)
+        .filter(|u| !covered.contains(u))
+        .take(5)
+        .collect();
+    assert!(!cold.is_empty());
+    let report =
+        serve::serve_closed_loop(&ds, &mut setup, &cold, Skew::Uniform, &cfg)
+            .unwrap();
+    assert_eq!(report.cold_routes, 20, "every query took the cold path");
+    assert!(report.cold_plans <= 5, "cold plans memoized per node");
+    assert_eq!(report.executed_queries + report.cache_hits, 20);
+}
