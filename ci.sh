@@ -30,4 +30,26 @@ echo "== serving smoke (tiny SBM, 1 shard, 100 queries) =="
 cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
     --scale 0.05 --shards 1 --clients 8 --queries 100 --window-us 300
 
+echo "== dynamic update smoke (tiny SBM, 50-edge deltas mid-serve) =="
+# Seed is pinned so the synthetic delta stream — and therefore the
+# stale-plan counts asserted below — is deterministic across runs.
+smoke_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 1 --clients 8 --queries 150 --window-us 300 \
+    --seed 7 --results-cache-bytes 1048576 \
+    --update-stream synth --update-batches 2 --update-edges 50)
+printf '%s\n' "$smoke_out"
+# queries must still answer across the updates...
+printf '%s\n' "$smoke_out" | grep -q 'queries total across 2 updates' || {
+    echo "update smoke FAILED: serving did not complete across updates" >&2
+    exit 1
+}
+# ...and the deltas must actually invalidate precomputed plans
+printf '%s\n' "$smoke_out" | grep -Eq 'stale_plans=[1-9][0-9]*' || {
+    echo "update smoke FAILED: expected stale_plans > 0" >&2
+    exit 1
+}
+
+echo "== bench JSON validation (BENCH_*.json, when present) =="
+./scripts/check_bench_json.sh
+
 echo "CI OK"

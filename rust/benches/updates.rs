@@ -1,0 +1,229 @@
+//! Dynamic-update benchmark: incremental PPR refresh + staleness-
+//! tracked replan vs. full replanning, as a function of delta size.
+//! Emits `BENCH_updates.json` recording refresh latency and the
+//! fraction of plans rebuilt — the headline claim of DESIGN.md §10 is
+//! that small deltas repair a small, delta-local slice of the
+//! precomputed state instead of re-running preprocessing.
+//!
+//! Run: `cargo bench --bench updates` (`--full` for the bigger graph;
+//! `--sizes 8,32,128 --l1-tol F --seed N` to override).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use ibmb::batching::refresh::{DynamicPlanSet, RefreshConfig};
+use ibmb::bench_harness::Table;
+use ibmb::cli::Args;
+use ibmb::config::preset_for;
+use ibmb::datasets::{sbm, spec_by_name};
+use ibmb::graph::{synth_delta_stream, DynamicGraph};
+use ibmb::util::json::{to_string, Json};
+use ibmb::util::Rng;
+
+struct RunRecord {
+    delta_edges: usize,
+    touched: usize,
+    roots_refreshed: usize,
+    plans_total: usize,
+    plans_rebuilt: usize,
+    plans_patched: usize,
+    rebuilt_fraction: f64,
+    max_root_l1: f64,
+    refresh_ms: f64,
+    replan_ms: f64,
+    full_replan_ms: f64,
+    speedup: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let factor = args.get_f64("scale", if args.flag("full") { 0.5 } else { 0.25 });
+    let spec = spec_by_name("synth-arxiv").unwrap().scaled(factor);
+    let ds = sbm::generate(&spec, 7);
+    let eval = ds.splits.test.clone();
+    let seed = args.get_u64("seed", 0);
+    let l1_tol = args.get_f64("l1-tol", 0.05) as f32;
+    let mut sizes: Vec<usize> = args
+        .get("sizes")
+        .map(|s| s.split(',').filter_map(|t| t.parse().ok()).collect())
+        .unwrap_or_default();
+    if sizes.is_empty() {
+        sizes = vec![8, 32, 128, 512];
+    }
+
+    let p = preset_for(&ds.name);
+    let rcfg = RefreshConfig {
+        aux_per_output: p.aux_per_output,
+        max_outputs_per_batch: p.outputs_per_batch,
+        node_budget: p.node_budget,
+        l1_tol,
+        ..Default::default()
+    };
+    println!(
+        "updates bench: {} nodes, {} outputs, l1_tol {}, deltas {:?}",
+        ds.graph.num_nodes(),
+        eval.len(),
+        l1_tol,
+        sizes
+    );
+
+    let t0 = Instant::now();
+    let baseline =
+        DynamicPlanSet::plan_initial(&ds.graph, &eval, rcfg.clone(), &mut Rng::new(seed ^ 0xCAFE));
+    let initial_plan_s = t0.elapsed().as_secs_f64();
+    println!(
+        "initial plan: {} batches in {:.2}s",
+        baseline.len(),
+        initial_plan_s
+    );
+    drop(baseline);
+
+    let mut records: Vec<RunRecord> = Vec::new();
+    let mut table = Table::new(&[
+        "delta edges",
+        "touched",
+        "roots",
+        "rebuilt",
+        "patched",
+        "frac",
+        "refresh (ms)",
+        "full replan (ms)",
+        "speedup",
+    ]);
+    for &edges in &sizes {
+        // fresh state per size so runs are independent and comparable
+        let mut set = DynamicPlanSet::plan_initial(
+            &ds.graph,
+            &eval,
+            rcfg.clone(),
+            &mut Rng::new(seed ^ 0xCAFE),
+        );
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        let delta = synth_delta_stream(
+            &ds.graph,
+            &eval,
+            1,
+            edges,
+            0,
+            0,
+            ds.num_classes,
+            seed ^ edges as u64,
+        )
+        .pop()
+        .unwrap();
+        let applied = dg.apply(&delta).map_err(anyhow::Error::msg)?;
+        let t = Instant::now();
+        let r = set.apply_delta(&dg, &applied);
+        let incremental_s = t.elapsed().as_secs_f64();
+
+        // full-replan baseline on the post-delta graph
+        let t = Instant::now();
+        let full = DynamicPlanSet::plan_initial(
+            &dg,
+            &eval,
+            rcfg.clone(),
+            &mut Rng::new(seed ^ 0xCAFE),
+        );
+        let full_replan_s = t.elapsed().as_secs_f64();
+        assert!(!full.is_empty());
+
+        let rec = RunRecord {
+            delta_edges: edges,
+            touched: r.touched_nodes,
+            roots_refreshed: r.roots_refreshed,
+            plans_total: r.plans_total,
+            plans_rebuilt: r.plans_rebuilt,
+            plans_patched: r.plans_patched,
+            rebuilt_fraction: r.rebuilt_fraction(),
+            max_root_l1: r.max_root_l1 as f64,
+            refresh_ms: r.refresh_s * 1e3,
+            replan_ms: r.replan_s * 1e3,
+            full_replan_ms: full_replan_s * 1e3,
+            speedup: full_replan_s / incremental_s.max(1e-9),
+        };
+        table.row(&[
+            format!("{edges}"),
+            format!("{}", rec.touched),
+            format!("{}", rec.roots_refreshed),
+            format!("{}", rec.plans_rebuilt),
+            format!("{}", rec.plans_patched),
+            format!("{:.3}", rec.rebuilt_fraction),
+            format!("{:.2}", rec.refresh_ms + rec.replan_ms),
+            format!("{:.2}", rec.full_replan_ms),
+            format!("{:.1}x", rec.speedup),
+        ]);
+        records.push(rec);
+    }
+
+    let smallest = &records[0];
+    if smallest.rebuilt_fraction >= 1.0 {
+        eprintln!(
+            "WARNING: smallest delta ({} edges) rebuilt every plan \
+             ({:.2}) — incremental maintenance is not paying off",
+            smallest.delta_edges, smallest.rebuilt_fraction
+        );
+    }
+
+    let json = Json::Obj(BTreeMap::from([
+        ("bench".into(), Json::Str("updates".into())),
+        ("dataset".into(), Json::Str(ds.name.clone())),
+        ("nodes".into(), Json::Num(ds.graph.num_nodes() as f64)),
+        ("outputs".into(), Json::Num(eval.len() as f64)),
+        ("plans".into(), Json::Num(records[0].plans_total as f64)),
+        ("l1_tol".into(), Json::Num(l1_tol as f64)),
+        (
+            "initial_plan_ms".into(),
+            Json::Num(initial_plan_s * 1e3),
+        ),
+        (
+            "runs".into(),
+            Json::Arr(
+                records
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(BTreeMap::from([
+                            (
+                                "delta_edges".into(),
+                                Json::Num(r.delta_edges as f64),
+                            ),
+                            ("touched".into(), Json::Num(r.touched as f64)),
+                            (
+                                "roots_refreshed".into(),
+                                Json::Num(r.roots_refreshed as f64),
+                            ),
+                            (
+                                "plans_total".into(),
+                                Json::Num(r.plans_total as f64),
+                            ),
+                            (
+                                "plans_rebuilt".into(),
+                                Json::Num(r.plans_rebuilt as f64),
+                            ),
+                            (
+                                "plans_patched".into(),
+                                Json::Num(r.plans_patched as f64),
+                            ),
+                            (
+                                "rebuilt_fraction".into(),
+                                Json::Num(r.rebuilt_fraction),
+                            ),
+                            ("max_root_l1".into(), Json::Num(r.max_root_l1)),
+                            ("refresh_ms".into(), Json::Num(r.refresh_ms)),
+                            ("replan_ms".into(), Json::Num(r.replan_ms)),
+                            (
+                                "full_replan_ms".into(),
+                                Json::Num(r.full_replan_ms),
+                            ),
+                            ("speedup".into(), Json::Num(r.speedup)),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+    let out_path = args.get_or("out", "BENCH_updates.json").to_string();
+    std::fs::write(&out_path, to_string(&json))?;
+    println!("wrote {out_path}");
+    table.print("updates — incremental refresh vs full replan by delta size");
+    Ok(())
+}

@@ -13,7 +13,7 @@ use std::collections::HashMap;
 use super::batch::BatchPlan;
 use super::BatchGenerator;
 use crate::datasets::Dataset;
-use crate::graph::induced_subgraph;
+use crate::graph::{induced_subgraph, GraphView};
 use crate::partition::pprdist::ppr_distance_partition;
 use crate::ppr::push::{PushConfig, SparsePpr};
 use crate::ppr::topk::top_k_indices;
@@ -47,6 +47,54 @@ impl Default for NodeWiseIbmb {
     }
 }
 
+/// Assemble one influence-maximal batch from its output nodes and
+/// their (sparse) PPR vectors — auxiliary nodes are the union of the
+/// outputs' top-k influence lists, trimmed to `node_budget` by total
+/// score. Shared by [`NodeWiseIbmb::plan`] and the dynamic replan path
+/// ([`super::refresh`]), and generic over [`GraphView`] so rebuilds can
+/// run on a delta overlay without a CSR snapshot.
+///
+/// `pprs[i]` is the `(nodes, scores)` pair of `outputs[i]`'s PPR
+/// vector.
+pub(crate) fn assemble_plan<G: GraphView>(
+    g: &G,
+    outputs: &[u32],
+    pprs: &[(&[u32], &[f32])],
+    aux_per_output: usize,
+    node_budget: usize,
+) -> BatchPlan {
+    debug_assert_eq!(outputs.len(), pprs.len());
+    // accumulate influence of candidate aux nodes over all outputs
+    let mut is_output = HashMap::new();
+    for &o in outputs {
+        is_output.insert(o, ());
+    }
+    let mut score: HashMap<u32, f32> = HashMap::new();
+    for &(ppr_nodes, ppr_scores) in pprs {
+        let top = top_k_indices(ppr_scores, aux_per_output + 1);
+        for t in top {
+            let v = ppr_nodes[t];
+            if !is_output.contains_key(&v) {
+                *score.entry(v).or_insert(0.0) += ppr_scores[t];
+            }
+        }
+    }
+    let mut cands: Vec<(u32, f32)> = score.into_iter().collect();
+    cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let budget = node_budget.saturating_sub(outputs.len());
+    cands.truncate(budget);
+
+    let mut nodes: Vec<u32> = outputs.to_vec();
+    nodes.extend(cands.iter().map(|&(v, _)| v));
+    let sg = induced_subgraph(g, &nodes);
+    BatchPlan {
+        nodes: sg.nodes,
+        num_outputs: outputs.len(),
+        edges: sg.edges,
+        weights: sg.weights,
+    }
+}
+
 impl NodeWiseIbmb {
     /// Compute per-output PPR vectors (shared by selection+partition).
     fn pprs(&self, ds: &Dataset, out_nodes: &[u32]) -> Vec<SparsePpr> {
@@ -66,38 +114,20 @@ impl NodeWiseIbmb {
         idx_of: &HashMap<u32, usize>,
         pprs: &[SparsePpr],
     ) -> BatchPlan {
-        // accumulate influence of candidate aux nodes over all outputs
-        let mut is_output = HashMap::new();
-        for &o in outputs {
-            is_output.insert(o, ());
-        }
-        let mut score: HashMap<u32, f32> = HashMap::new();
-        for &o in outputs {
-            let ppr = &pprs[idx_of[&o]];
-            let top = top_k_indices(&ppr.scores, self.aux_per_output + 1);
-            for t in top {
-                let v = ppr.nodes[t];
-                if !is_output.contains_key(&v) {
-                    *score.entry(v).or_insert(0.0) += ppr.scores[t];
-                }
-            }
-        }
-        let mut cands: Vec<(u32, f32)> = score.into_iter().collect();
-        cands.sort_by(|a, b| {
-            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
-        });
-        let budget = self.node_budget.saturating_sub(outputs.len());
-        cands.truncate(budget);
-
-        let mut nodes: Vec<u32> = outputs.to_vec();
-        nodes.extend(cands.iter().map(|&(v, _)| v));
-        let sg = induced_subgraph(&ds.graph, &nodes);
-        BatchPlan {
-            nodes: sg.nodes,
-            num_outputs: outputs.len(),
-            edges: sg.edges,
-            weights: sg.weights,
-        }
+        let per_output: Vec<(&[u32], &[f32])> = outputs
+            .iter()
+            .map(|o| {
+                let ppr = &pprs[idx_of[o]];
+                (&ppr.nodes[..], &ppr.scores[..])
+            })
+            .collect();
+        assemble_plan(
+            &ds.graph,
+            outputs,
+            &per_output,
+            self.aux_per_output,
+            self.node_budget,
+        )
     }
 }
 

@@ -28,6 +28,7 @@ pub mod cache_io;
 pub mod fixed_random;
 pub mod ibmb_batch;
 pub mod ibmb_node;
+pub mod refresh;
 
 pub use arena::BatchArena;
 pub use batch::{materialize, BatchPlan, DenseBatch};
@@ -35,6 +36,7 @@ pub use cache::BatchCache;
 pub use fixed_random::FixedRandomBatches;
 pub use ibmb_batch::BatchWiseIbmb;
 pub use ibmb_node::NodeWiseIbmb;
+pub use refresh::{DynamicPlanSet, RefreshConfig, RefreshReport};
 
 use crate::datasets::Dataset;
 use crate::util::Rng;

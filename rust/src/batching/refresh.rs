@@ -1,0 +1,542 @@
+//! Staleness-tracked incremental replanning under graph deltas
+//! (DESIGN.md §10).
+//!
+//! The precomputed plan set is IBMB's entire serving advantage, so
+//! instead of re-running the full pipeline (per-root PPR → partition →
+//! assembly) on every graph change, [`DynamicPlanSet`] keeps the
+//! *inputs* of planning alive — one residual-carrying
+//! [`PprState`] per output root — and repairs them with the local
+//! correction rule of [`crate::ppr::incremental`]. Two inverted
+//! indexes make staleness detection delta-local:
+//!
+//! * **support** (node → roots with estimate mass there) finds the
+//!   roots whose PPR a touched node can shift;
+//! * **members** (node → plans containing it) finds plans whose
+//!   induced topology a touched edge can change.
+//!
+//! A plan is **rebuilt** (aux selection re-run from the refreshed PPR
+//! vectors, node list may change) only when its outputs' summed L1
+//! drift exceeds `l1_tol`; it is merely **patched** (same node list,
+//! topology re-induced, epoch bumped) when it contains touched or
+//! feature-updated nodes but its influence stayed put. The output
+//! partition itself is stable across deltas — outputs never migrate
+//! between plans — so the serving router's node → plan index stays
+//! valid and only per-plan *epochs* move, which is what the results
+//! memo keys freshness on ([`crate::serve::results`]).
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use super::batch::BatchPlan;
+use super::cache::BatchCache;
+use super::ibmb_node::assemble_plan;
+use crate::graph::delta::AppliedDelta;
+use crate::graph::{induced_subgraph, GraphView};
+use crate::partition::pprdist::ppr_distance_partition;
+use crate::ppr::incremental::{push_ppr_state, refresh_ppr_state, PprState};
+use crate::ppr::push::{PushConfig, PushWorkspace};
+use crate::util::Rng;
+
+/// Dynamic replanning knobs. The planning triple mirrors
+/// [`super::NodeWiseIbmb`]; `l1_tol` is the drift budget below which a
+/// plan's auxiliary selection is considered still influence-optimal.
+#[derive(Debug, Clone)]
+pub struct RefreshConfig {
+    pub aux_per_output: usize,
+    pub max_outputs_per_batch: usize,
+    pub node_budget: usize,
+    /// Rebuild a plan when the summed L1 drift of its outputs' PPR
+    /// estimates exceeds this.
+    pub l1_tol: f32,
+    pub push: PushConfig,
+}
+
+impl Default for RefreshConfig {
+    fn default() -> Self {
+        RefreshConfig {
+            aux_per_output: 16,
+            max_outputs_per_batch: 96,
+            node_budget: 2048,
+            l1_tol: 0.05,
+            push: PushConfig::default(),
+        }
+    }
+}
+
+/// What one [`DynamicPlanSet::apply_delta`] did.
+#[derive(Debug, Clone, Default)]
+pub struct RefreshReport {
+    /// Graph epoch the plan set now reflects.
+    pub epoch: u64,
+    /// Nodes whose adjacency changed in this delta.
+    pub touched_nodes: usize,
+    /// Roots whose PPR state was incrementally repaired.
+    pub roots_refreshed: usize,
+    pub plans_total: usize,
+    /// Plans whose aux selection was re-run (influence drifted).
+    pub plans_rebuilt: usize,
+    /// Plans re-induced / epoch-bumped without replanning.
+    pub plans_patched: usize,
+    /// Ids of all changed (rebuilt + patched) plans.
+    pub changed_plans: Vec<u32>,
+    /// Largest per-root L1 drift observed.
+    pub max_root_l1: f32,
+    /// Seconds in PPR refresh.
+    pub refresh_s: f64,
+    /// Seconds in plan rebuild/patch (assembly + induction).
+    pub replan_s: f64,
+}
+
+impl RefreshReport {
+    /// Fraction of plans fully rebuilt — the bench headline: << 1 for
+    /// small deltas is what makes incremental maintenance worth it.
+    pub fn rebuilt_fraction(&self) -> f64 {
+        if self.plans_total == 0 {
+            0.0
+        } else {
+            self.plans_rebuilt as f64 / self.plans_total as f64
+        }
+    }
+
+    /// Rebuilt + patched plans (anything whose epoch moved) — the
+    /// "stale plans" count surfaced by the CI smoke.
+    pub fn stale_plans(&self) -> usize {
+        self.plans_rebuilt + self.plans_patched
+    }
+}
+
+/// The live planning state: per-root PPR, the current plan set, plan
+/// epochs, and the two inverted indexes driving staleness detection.
+pub struct DynamicPlanSet {
+    cfg: RefreshConfig,
+    out_nodes: Vec<u32>,
+    /// output node id → root index.
+    root_of: HashMap<u32, usize>,
+    /// Per-root push states, aligned with `out_nodes`.
+    states: Vec<PprState>,
+    /// root index → plan id.
+    plan_of_root: Vec<u32>,
+    plans: Vec<BatchPlan>,
+    /// Per-plan epoch: the graph epoch the plan last reflected.
+    epochs: Vec<u64>,
+    epoch: u64,
+    /// node → root indexes with nonzero estimate mass at that node.
+    support: HashMap<u32, Vec<u32>>,
+    /// node → plan ids whose node list contains it.
+    members: HashMap<u32, Vec<u32>>,
+    ws: PushWorkspace,
+}
+
+impl DynamicPlanSet {
+    /// Full initial plan: per-root PPR states, PPR-distance output
+    /// partition, influence-maximal assembly — node-wise IBMB with the
+    /// planning inputs retained for later incremental repair.
+    pub fn plan_initial<G: GraphView>(
+        g: &G,
+        out_nodes: &[u32],
+        cfg: RefreshConfig,
+        rng: &mut Rng,
+    ) -> DynamicPlanSet {
+        let mut ws = PushWorkspace::new(g.num_nodes());
+        let states: Vec<PprState> = out_nodes
+            .iter()
+            .map(|&s| push_ppr_state(g, s, &cfg.push, &mut ws))
+            .collect();
+        let sparse: Vec<_> = states.iter().map(|s| s.to_sparse()).collect();
+        let groups = ppr_distance_partition(
+            out_nodes,
+            &sparse,
+            cfg.max_outputs_per_batch,
+            rng,
+        );
+        let root_of: HashMap<u32, usize> = out_nodes
+            .iter()
+            .enumerate()
+            .map(|(i, &u)| (u, i))
+            .collect();
+        let mut plan_of_root = vec![0u32; out_nodes.len()];
+        let mut plans = Vec::with_capacity(groups.len());
+        for outputs in &groups {
+            let pid = plans.len() as u32;
+            let per_output: Vec<(&[u32], &[f32])> = outputs
+                .iter()
+                .map(|o| {
+                    let sp = &sparse[root_of[o]];
+                    (&sp.nodes[..], &sp.scores[..])
+                })
+                .collect();
+            plans.push(assemble_plan(
+                g,
+                outputs,
+                &per_output,
+                cfg.aux_per_output,
+                cfg.node_budget,
+            ));
+            for o in outputs {
+                plan_of_root[root_of[o]] = pid;
+            }
+        }
+        let epochs = vec![0u64; plans.len()];
+        let mut set = DynamicPlanSet {
+            cfg,
+            out_nodes: out_nodes.to_vec(),
+            root_of,
+            states,
+            plan_of_root,
+            plans,
+            epochs,
+            epoch: 0,
+            support: HashMap::new(),
+            members: HashMap::new(),
+            ws,
+        };
+        for r in 0..set.states.len() {
+            set.index_support(r);
+        }
+        for pid in 0..set.plans.len() {
+            set.index_members(pid as u32);
+        }
+        set
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    pub fn plans(&self) -> &[BatchPlan] {
+        &self.plans
+    }
+
+    pub fn epochs(&self) -> &[u64] {
+        &self.epochs
+    }
+
+    /// Graph epoch the plan set currently reflects.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Pack the current plans into a fresh contiguous [`BatchCache`].
+    pub fn build_cache(&self) -> BatchCache {
+        BatchCache::build(&self.plans)
+    }
+
+    /// Clamp the node budget for *future* rebuilds (the serving bucket
+    /// `n_pad` is fixed at prepare time; rebuilt plans must keep
+    /// fitting it).
+    pub fn clamp_node_budget(&mut self, cap: usize) {
+        self.cfg.node_budget = self.cfg.node_budget.min(cap);
+    }
+
+    // Support must track every node with *nonzero* estimate (refreshed
+    // states can carry small negative p after edge removals): the
+    // correction term scales by p(y), so a p != 0 root skipped here
+    // would silently miss its repair on the next delta.
+    fn index_support(&mut self, root_idx: usize) {
+        let st = &self.states[root_idx];
+        for (i, &v) in st.nodes.iter().enumerate() {
+            if st.p[i] != 0.0 {
+                self.support.entry(v).or_default().push(root_idx as u32);
+            }
+        }
+    }
+
+    fn unindex_support(&mut self, root_idx: usize) {
+        let st = &self.states[root_idx];
+        for (i, &v) in st.nodes.iter().enumerate() {
+            if st.p[i] != 0.0 {
+                if let Some(roots) = self.support.get_mut(&v) {
+                    roots.retain(|&r| r != root_idx as u32);
+                }
+            }
+        }
+    }
+
+    fn index_members(&mut self, pid: u32) {
+        for &v in &self.plans[pid as usize].nodes {
+            self.members.entry(v).or_default().push(pid);
+        }
+    }
+
+    fn unindex_members(&mut self, pid: u32) {
+        for &v in &self.plans[pid as usize].nodes {
+            if let Some(pids) = self.members.get_mut(&v) {
+                pids.retain(|&p| p != pid);
+            }
+        }
+    }
+
+    /// Repair the plan set against one applied delta: refresh the PPR
+    /// states whose support intersects the touched nodes, rebuild
+    /// plans whose influence drifted past `l1_tol`, patch (re-induce)
+    /// plans merely containing touched or feature-updated nodes, and
+    /// bump the epochs of everything that changed.
+    pub fn apply_delta<G: GraphView>(
+        &mut self,
+        g_new: &G,
+        applied: &AppliedDelta,
+    ) -> RefreshReport {
+        self.epoch = applied.epoch;
+        self.ws.ensure(g_new.num_nodes());
+
+        // roots whose estimate mass sits on a touched node — the only
+        // states the correction rule can move
+        let mut affected: Vec<u32> = Vec::new();
+        {
+            let mut seen: HashSet<u32> = HashSet::new();
+            for y in &applied.touched {
+                if let Some(roots) = self.support.get(y) {
+                    for &r in roots {
+                        if seen.insert(r) {
+                            affected.push(r);
+                        }
+                    }
+                }
+            }
+            affected.sort_unstable();
+        }
+
+        let t_refresh = Instant::now();
+        let mut drift: HashMap<u32, f32> = HashMap::new();
+        let mut max_root_l1 = 0.0f32;
+        for &r in &affected {
+            let (new_state, l1) = refresh_ppr_state(
+                g_new,
+                &self.states[r as usize],
+                applied,
+                &self.cfg.push,
+                &mut self.ws,
+            );
+            self.unindex_support(r as usize);
+            self.states[r as usize] = new_state;
+            self.index_support(r as usize);
+            *drift.entry(self.plan_of_root[r as usize]).or_insert(0.0) += l1;
+            max_root_l1 = max_root_l1.max(l1);
+        }
+        let refresh_s = t_refresh.elapsed().as_secs_f64();
+
+        // rebuild set: influence drifted past tolerance
+        let mut rebuild: Vec<u32> = drift
+            .iter()
+            .filter(|(_, &l1)| l1 > self.cfg.l1_tol)
+            .map(|(&pid, _)| pid)
+            .collect();
+        rebuild.sort_unstable();
+        let rebuild_set: HashSet<u32> = rebuild.iter().copied().collect();
+
+        // patch set: plans containing touched or feature-updated nodes
+        let mut patch: Vec<u32> = Vec::new();
+        {
+            let mut seen: HashSet<u32> = HashSet::new();
+            for y in applied.touched.iter().chain(&applied.feature_updates) {
+                if let Some(pids) = self.members.get(y) {
+                    for &pid in pids {
+                        if !rebuild_set.contains(&pid) && seen.insert(pid) {
+                            patch.push(pid);
+                        }
+                    }
+                }
+            }
+            patch.sort_unstable();
+        }
+
+        let t_replan = Instant::now();
+        for &pid in &rebuild {
+            let outputs = self.plans[pid as usize].output_nodes().to_vec();
+            let sparse: Vec<_> = outputs
+                .iter()
+                .map(|o| self.states[self.root_of[o]].to_sparse())
+                .collect();
+            let per_output: Vec<(&[u32], &[f32])> = sparse
+                .iter()
+                .map(|sp| (&sp.nodes[..], &sp.scores[..]))
+                .collect();
+            let plan = assemble_plan(
+                g_new,
+                &outputs,
+                &per_output,
+                self.cfg.aux_per_output,
+                self.cfg.node_budget,
+            );
+            self.unindex_members(pid);
+            self.plans[pid as usize] = plan;
+            self.index_members(pid);
+            self.epochs[pid as usize] = self.epoch;
+        }
+        for &pid in &patch {
+            let nodes = &self.plans[pid as usize].nodes;
+            let sg = induced_subgraph(g_new, nodes);
+            debug_assert_eq!(sg.nodes.len(), nodes.len());
+            let plan = &mut self.plans[pid as usize];
+            plan.edges = sg.edges;
+            plan.weights = sg.weights;
+            self.epochs[pid as usize] = self.epoch;
+        }
+        let replan_s = t_replan.elapsed().as_secs_f64();
+
+        let mut changed_plans = rebuild.clone();
+        changed_plans.extend_from_slice(&patch);
+        changed_plans.sort_unstable();
+        RefreshReport {
+            epoch: self.epoch,
+            touched_nodes: applied.touched.len(),
+            roots_refreshed: affected.len(),
+            plans_total: self.plans.len(),
+            plans_rebuilt: rebuild.len(),
+            plans_patched: patch.len(),
+            changed_plans,
+            max_root_l1,
+            refresh_s,
+            replan_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{BatchGenerator, NodeWiseIbmb};
+    use crate::datasets::{sbm, Dataset, DatasetSpec};
+    use crate::graph::delta::{DynamicGraph, GraphDelta};
+
+    fn setup() -> (Dataset, DynamicPlanSet) {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 61);
+        let cfg = RefreshConfig {
+            aux_per_output: 6,
+            max_outputs_per_batch: 30,
+            node_budget: 200,
+            l1_tol: 0.02,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(5);
+        let set = DynamicPlanSet::plan_initial(
+            &ds.graph,
+            &ds.splits.train,
+            cfg,
+            &mut rng,
+        );
+        (ds, set)
+    }
+
+    #[test]
+    fn initial_plan_matches_node_wise_ibmb() {
+        let (ds, set) = setup();
+        let mut gen = NodeWiseIbmb {
+            aux_per_output: 6,
+            max_outputs_per_batch: 30,
+            node_budget: 200,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(5);
+        let want = gen.plan(&ds, &ds.splits.train, &mut rng);
+        assert_eq!(set.len(), want.len());
+        for (a, b) in set.plans().iter().zip(&want) {
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.num_outputs, b.num_outputs);
+            assert_eq!(a.edges, b.edges);
+            assert_eq!(a.weights, b.weights);
+        }
+        assert!(set.epochs().iter().all(|&e| e == 0));
+    }
+
+    #[test]
+    fn small_delta_rebuilds_few_plans() {
+        let (ds, mut set) = setup();
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        // one edge between two train nodes
+        let (a, b) = (ds.splits.train[0], ds.splits.train[1]);
+        let applied = dg
+            .apply(&GraphDelta {
+                add_edges: vec![(a, b)],
+                ..Default::default()
+            })
+            .unwrap();
+        let report = set.apply_delta(&dg, &applied);
+        assert_eq!(report.epoch, 1);
+        assert!(report.stale_plans() > 0, "an output edge must go stale");
+        assert!(
+            report.rebuilt_fraction() < 1.0,
+            "one edge cannot invalidate every plan: {report:?}"
+        );
+        assert!(report.roots_refreshed > 0);
+        assert!(report.roots_refreshed < set.out_nodes.len());
+        // changed plans carry the new epoch, unchanged keep the old
+        for (pid, &e) in set.epochs().iter().enumerate() {
+            let changed = report.changed_plans.contains(&(pid as u32));
+            assert_eq!(e == 1, changed, "plan {pid}");
+        }
+        // every plan still validates against the new graph
+        for p in set.plans() {
+            assert!(p.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn patched_plans_pick_up_new_topology() {
+        let (ds, mut set) = setup();
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        let (a, b) = (ds.splits.train[0], ds.splits.train[1]);
+        let applied = dg
+            .apply(&GraphDelta {
+                add_edges: vec![(a, b)],
+                ..Default::default()
+            })
+            .unwrap();
+        set.apply_delta(&dg, &applied);
+        // any plan containing both endpoints must now carry the edge
+        for p in set.plans() {
+            let la = p.nodes.iter().position(|&u| u == a);
+            let lb = p.nodes.iter().position(|&u| u == b);
+            if let (Some(la), Some(lb)) = (la, lb) {
+                assert!(
+                    p.edges.contains(&(la as u32, lb as u32)),
+                    "stale topology survived the delta"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn feature_update_bumps_containing_plans_only() {
+        let (ds, mut set) = setup();
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        let target = ds.splits.train[3];
+        let applied = dg
+            .apply(&GraphDelta {
+                feature_updates: vec![target],
+                ..Default::default()
+            })
+            .unwrap();
+        let report = set.apply_delta(&dg, &applied);
+        assert_eq!(report.plans_rebuilt, 0, "no topology change");
+        assert!(report.plans_patched > 0);
+        for &pid in &report.changed_plans {
+            assert!(set.plans()[pid as usize].nodes.contains(&target));
+        }
+    }
+
+    #[test]
+    fn cache_rebuild_reflects_current_plans() {
+        let (ds, mut set) = setup();
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        let (a, b) = (ds.splits.train[0], ds.splits.train[4]);
+        let applied = dg
+            .apply(&GraphDelta {
+                add_edges: vec![(a, b)],
+                ..Default::default()
+            })
+            .unwrap();
+        set.apply_delta(&dg, &applied);
+        let cache = set.build_cache();
+        assert_eq!(cache.len(), set.len());
+        for (i, p) in set.plans().iter().enumerate() {
+            let got = cache.to_plan(i);
+            assert_eq!(got.nodes, p.nodes);
+            assert_eq!(got.edges, p.edges);
+        }
+    }
+}

@@ -38,17 +38,27 @@ pub struct Dataset {
     pub noise: f32,
     pub seed: u64,
     pub splits: Splits,
+    /// Per-node feature version, folded into the feature generator's
+    /// seed. All zero at generation time; dynamic feature updates
+    /// (`GraphDelta::feature_updates`, DESIGN.md §10) bump a node's
+    /// entry, deterministically re-rolling its noise while leaving
+    /// every other node bit-identical.
+    pub feat_epoch: Vec<u32>,
 }
 
 impl Dataset {
     /// Deterministically generate node `u`'s feature row into `out`
-    /// (length `feat_dim`): class mean + seeded Gaussian noise.
+    /// (length `feat_dim`): class mean + seeded Gaussian noise keyed by
+    /// `(dataset seed, node id, feature epoch)`.
     pub fn node_features_into(&self, u: u32, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.feat_dim);
         let c = self.labels[u as usize] as usize;
         let mean = &self.class_means[c * self.feat_dim..(c + 1) * self.feat_dim];
         let mut rng = Rng::new(
-            self.seed ^ (u as u64).wrapping_mul(0xA24BAED4963EE407),
+            self.seed
+                ^ (u as u64).wrapping_mul(0xA24BAED4963EE407)
+                ^ (self.feat_epoch[u as usize] as u64)
+                    .wrapping_mul(0x9E3779B97F4A7C15),
         );
         for (o, &m) in out.iter_mut().zip(mean) {
             *o = m + self.noise * rng.normal();
@@ -71,6 +81,7 @@ impl Dataset {
             + self.labels.len() * 2
             + self.class_means.len() * 4
             + self.splits.memory_bytes()
+            + self.feat_epoch.len() * 4
     }
 }
 

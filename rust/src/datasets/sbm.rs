@@ -89,6 +89,7 @@ pub fn generate(spec: &DatasetSpec, seed: u64) -> Dataset {
         noise: spec.noise,
         seed,
         splits,
+        feat_epoch: vec![0; n],
     }
 }
 

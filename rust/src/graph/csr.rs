@@ -5,6 +5,31 @@
 //! symmetric normalization factors `d^{-1/2}` so batch densification can
 //! fill normalized adjacency blocks without recomputing degrees.
 
+/// Read access to a preprocessed graph (canonical form: undirected,
+/// self loops, cached symmetric normalization). Implemented by the
+/// immutable [`CsrGraph`] and by the mutable
+/// [`super::delta::DynamicGraph`] overlay, so PPR refresh, subgraph
+/// induction, and plan assembly run unchanged on either
+/// representation.
+pub trait GraphView {
+    /// Number of nodes.
+    fn num_nodes(&self) -> usize;
+    /// Sorted neighbor slice of node `u` (includes the self loop).
+    fn neighbors(&self, u: u32) -> &[u32];
+    /// Cached `1/sqrt(deg(u))`.
+    fn inv_sqrt_deg(&self, u: u32) -> f32;
+    /// Degree of node `u` (including self loop).
+    #[inline]
+    fn degree(&self, u: u32) -> usize {
+        self.neighbors(u).len()
+    }
+    /// Symmetric normalization weight of edge `(u, v)`.
+    #[inline]
+    fn norm_weight(&self, u: u32, v: u32) -> f32 {
+        self.inv_sqrt_deg(u) * self.inv_sqrt_deg(v)
+    }
+}
+
 /// An immutable CSR graph over `u32` node ids.
 #[derive(Debug, Clone)]
 pub struct CsrGraph {
@@ -106,6 +131,29 @@ impl CsrGraph {
             }
         }
         Ok(())
+    }
+}
+
+impl GraphView for CsrGraph {
+    #[inline]
+    fn num_nodes(&self) -> usize {
+        CsrGraph::num_nodes(self)
+    }
+    #[inline]
+    fn neighbors(&self, u: u32) -> &[u32] {
+        CsrGraph::neighbors(self, u)
+    }
+    #[inline]
+    fn inv_sqrt_deg(&self, u: u32) -> f32 {
+        self.inv_sqrt_deg[u as usize]
+    }
+    #[inline]
+    fn degree(&self, u: u32) -> usize {
+        CsrGraph::degree(self, u)
+    }
+    #[inline]
+    fn norm_weight(&self, u: u32, v: u32) -> f32 {
+        CsrGraph::norm_weight(self, u, v)
     }
 }
 

@@ -1,15 +1,22 @@
 //! Graph substrate: CSR storage, construction transforms (undirected-ize,
 //! self loops, symmetric normalization), induced subgraph extraction with
-//! relabeling, and a binary on-disk format.
+//! relabeling, a binary on-disk format, and dynamic updates.
 //!
 //! Everything downstream — PPR, partitioning, batch generation — operates
-//! on [`CsrGraph`].
+//! on the [`GraphView`] trait, implemented by the immutable [`CsrGraph`]
+//! and by the [`DynamicGraph`] overlay that admits streaming
+//! [`GraphDelta`]s (DESIGN.md §10).
 
 pub mod builder;
 pub mod csr;
+pub mod delta;
 pub mod io;
 pub mod subgraph;
 
 pub use builder::GraphBuilder;
-pub use csr::CsrGraph;
+pub use csr::{CsrGraph, GraphView};
+pub use delta::{
+    format_delta_log, parse_delta_log, synth_delta_stream, AppliedDelta,
+    DynamicGraph, GraphDelta,
+};
 pub use subgraph::{induced_subgraph, Subgraph};

@@ -2,7 +2,7 @@
 //! (paper §3.1): a mini-batch is the subgraph induced by the selected
 //! output + auxiliary nodes, with local (relabeled) node ids.
 
-use super::csr::CsrGraph;
+use super::csr::GraphView;
 
 /// An induced subgraph with a local-id edge list.
 ///
@@ -33,8 +33,10 @@ impl Subgraph {
 
 /// Extract the subgraph induced by `nodes` (global ids, deduplicated by
 /// the caller or not — duplicates are removed here, order of first
-/// occurrence is preserved so output nodes can stay in front).
-pub fn induced_subgraph(g: &CsrGraph, nodes: &[u32]) -> Subgraph {
+/// occurrence is preserved so output nodes can stay in front). Generic
+/// over [`GraphView`] so dynamic-overlay graphs induce without a
+/// snapshot.
+pub fn induced_subgraph<G: GraphView>(g: &G, nodes: &[u32]) -> Subgraph {
     // local id map; u32::MAX = absent
     let mut local = vec![u32::MAX; g.num_nodes()];
     let mut uniq = Vec::with_capacity(nodes.len());
@@ -66,6 +68,7 @@ pub fn induced_subgraph(g: &CsrGraph, nodes: &[u32]) -> Subgraph {
 mod tests {
     use super::*;
     use crate::graph::builder::from_edges;
+    use crate::graph::csr::CsrGraph;
 
     fn sample() -> CsrGraph {
         // triangle 0-1-2 plus pendant 3 attached to 2

@@ -57,6 +57,19 @@
 //! latency metrics. `benches/serving.rs` records qps / tail latency /
 //! coalescing factor vs. shard count in `BENCH_serving.json`.
 //!
+//! ## Dynamic graph updates
+//!
+//! The precomputed state stays fresh under streaming graph changes
+//! (DESIGN.md §10): [`graph::GraphDelta`]s land on the
+//! [`graph::DynamicGraph`] overlay, [`ppr::incremental`] repairs the
+//! per-root push states with an exact residual correction local to
+//! the touched edges, [`batching::DynamicPlanSet`] rebuilds only the
+//! plans whose influence drifted past an L1 tolerance (patching the
+//! rest), and [`serve::DynamicServeSession`] cascades the
+//! invalidation through the router, plan epochs, and the results memo
+//! (`ibmb serve --update-stream`, `ibmb update`;
+//! `benches/updates.rs` → `BENCH_updates.json`).
+//!
 //! See `rust/DESIGN.md` for the full system inventory and the
 //! experiment index mapping each paper table/figure to a bench target.
 

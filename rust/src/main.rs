@@ -4,6 +4,9 @@
 //! ibmb train   --dataset synth-arxiv --model gcn --method "node-wise IBMB" --epochs 40
 //! ibmb infer   --dataset synth-arxiv --model gcn --method "node-wise IBMB"
 //! ibmb serve   --dataset synth-arxiv --shards 2 --queries 2000 --skew zipf
+//! ibmb serve   --dataset synth-arxiv --update-stream synth --update-edges 50
+//! ibmb update  --dataset synth-arxiv --deltas updates.log
+//! ibmb check-bench BENCH_serving.json BENCH_updates.json
 //! ibmb gen-data --dataset synth-arxiv --out data/arxiv.bin
 //! ibmb fig2|fig3|...|table7 [--full] [--dataset ...] [--model ...]
 //! ibmb list    # artifacts + datasets
@@ -17,19 +20,157 @@ use ibmb::cli::Args;
 use ibmb::config::ExpScale;
 use ibmb::datasets::ALL_DATASETS;
 use ibmb::experiments::{self, runner};
+use ibmb::graph::{parse_delta_log, synth_delta_stream, GraphDelta};
 use ibmb::serve::{self, ServeConfig, Skew};
+use ibmb::util::json::Json;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ibmb <train|infer|serve|gen-data|list|fig2..fig9|table5..table7> \
+        "usage: ibmb <train|infer|serve|update|check-bench|gen-data|list|\
+         fig2..fig9|table5..table7> \
          [--dataset NAME] [--model gcn|gat|sage] [--method NAME] \
          [--epochs N] [--seed N] [--scale F] [--prefetch-depth N] [--full]\n\
          serve options: [--shards N] [--clients N] [--queries N] \
          [--skew uniform|zipf] [--zipf-s F] [--window-us N] [--coalesce N] \
          [--results-cache-bytes N] [--results-ttl-ms N] [--cold-aux N] \
-         [--hidden N] [--layers N] [--heads N]"
+         [--hidden N] [--layers N] [--heads N]\n\
+         update options (serve --update-stream / ibmb update): \
+         [--update-stream FILE|synth] [--deltas FILE|synth] \
+         [--update-batches N] [--update-edges N] [--update-nodes N] \
+         [--update-feats N] [--l1-tol F]\n\
+         check-bench: ibmb check-bench BENCH_*.json"
     );
     std::process::exit(2);
+}
+
+/// Build the delta stream a dynamic subcommand replays: a delta log
+/// file in the `graph::delta` line format, or `synth` for a seeded
+/// synthetic stream biased toward the serveable node set.
+fn delta_stream(
+    spec: &str,
+    ds: &ibmb::datasets::Dataset,
+    focus: &[u32],
+    args: &Args,
+) -> Result<Vec<GraphDelta>> {
+    if spec == "synth" {
+        Ok(synth_delta_stream(
+            &ds.graph,
+            focus,
+            args.get_usize("update-batches", 4),
+            args.get_usize("update-edges", 50),
+            args.get_usize("update-nodes", 0),
+            args.get_usize("update-feats", 0),
+            ds.num_classes,
+            args.get_u64("seed", 0),
+        ))
+    } else {
+        let text = std::fs::read_to_string(spec)?;
+        parse_delta_log(&text)
+            .map_err(|e| anyhow::anyhow!("bad delta log {spec}: {e}"))
+    }
+}
+
+fn print_update_report(i: usize, up: &serve::UpdateReport) {
+    println!(
+        "update[{i}]: epoch={} touched={} (+{} nodes, {} feats) \
+         roots_refreshed={} stale_plans={} (rebuilt={} patched={} of {}) \
+         router_inval={} cold_dropped={} memo_dropped={} \
+         refresh {:.2}ms replan {:.2}ms commit {:.2}ms",
+        up.epoch,
+        up.touched_nodes,
+        up.added_nodes,
+        up.feature_updates,
+        up.roots_refreshed,
+        up.stale_plans(),
+        up.plans_rebuilt,
+        up.plans_patched,
+        up.plans_total,
+        up.router_invalidated,
+        up.cold_ids_dropped,
+        up.memo_dropped,
+        up.refresh_s * 1e3,
+        up.replan_s * 1e3,
+        up.commit_s * 1e3,
+    );
+}
+
+/// Required-key validation for `BENCH_*.json` artifacts (the
+/// `check-bench` subcommand behind `scripts/check_bench_json.sh`).
+fn validate_bench_json(text: &str) -> Result<String, String> {
+    let doc = ibmb::util::json::parse(text)?;
+    let bench = doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or("missing string key \"bench\"")?
+        .to_string();
+    let need = |keys: &[&str]| -> Result<(), String> {
+        for k in keys {
+            if doc.get(k).is_none() {
+                return Err(format!("bench {bench:?}: missing key {k:?}"));
+            }
+        }
+        Ok(())
+    };
+    // (per-run array key, required per-run keys); the array key differs
+    // per bench (micro_pipeline records one entry per ring depth)
+    let (runs_key, run_keys): (&str, &[&str]) = match bench.as_str() {
+        "serving" => {
+            need(&["dataset", "queries"])?;
+            (
+                "runs",
+                &["qps", "p50_ms", "p99_ms", "coalescing_factor", "hit_rate", "shards"],
+            )
+        }
+        "micro_pipeline" => {
+            need(&["dataset", "batches"])?;
+            ("depths", &["depth", "batches_per_s", "overlap_ratio"])
+        }
+        "updates" => {
+            need(&["dataset", "plans", "l1_tol"])?;
+            (
+                "runs",
+                &[
+                    "delta_edges",
+                    "refresh_ms",
+                    "rebuilt_fraction",
+                    "plans_total",
+                    "plans_rebuilt",
+                ],
+            )
+        }
+        _ => ("runs", &[]),
+    };
+    let mut runs = 0usize;
+    match doc.get(runs_key) {
+        None if run_keys.is_empty() => {} // unknown bench, no run array
+        None => {
+            return Err(format!("bench {bench:?}: missing array {runs_key:?}"))
+        }
+        Some(arr) => {
+            let arr = arr.as_arr().ok_or_else(|| {
+                format!("bench {bench:?}: {runs_key:?} not an array")
+            })?;
+            if arr.is_empty() {
+                return Err(format!("bench {bench:?}: empty {runs_key:?}"));
+            }
+            runs = arr.len();
+            for (i, run) in arr.iter().enumerate() {
+                if !matches!(run, Json::Obj(_)) {
+                    return Err(format!(
+                        "bench {bench:?}: {runs_key}[{i}] not an object"
+                    ));
+                }
+                for k in run_keys {
+                    if run.get(k).is_none() {
+                        return Err(format!(
+                            "bench {bench:?}: {runs_key}[{i}] missing key {k:?}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(format!("bench={bench}, {runs} {runs_key}"))
 }
 
 fn main() -> Result<()> {
@@ -224,6 +365,64 @@ fn main() -> Result<()> {
                 ds.graph.num_edges(),
                 eval.len()
             );
+            if let Some(stream) = args.get("update-stream") {
+                // dynamic mode: serve in segments, applying one delta
+                // batch between segments (DESIGN.md §10)
+                let deltas = delta_stream(stream, &ds, &eval, &args)?;
+                anyhow::ensure!(!deltas.is_empty(), "empty update stream");
+                let ucfg = serve::UpdateConfig {
+                    l1_tol: args.get_f64("l1-tol", 0.05) as f32,
+                };
+                let mut session =
+                    serve::DynamicServeSession::prepare(ds, &eval, &cfg, &ucfg);
+                println!(
+                    "{} plans cached, bucket n{}, {} update batches, \
+                     l1_tol {}",
+                    session.cache().len(),
+                    session.setup.meta.n_pad,
+                    deltas.len(),
+                    ucfg.l1_tol
+                );
+                let segs = deltas.len() + 1;
+                let per = (cfg.queries / segs).max(1);
+                // the last segment absorbs the division remainder so
+                // the requested --queries total is actually served
+                let last = cfg.queries.saturating_sub(per * (segs - 1)).max(1);
+                let mut served = 0usize;
+                let mut stale = 0usize;
+                let segment = |session: &mut serve::DynamicServeSession,
+                               label: &str,
+                               queries: usize|
+                 -> Result<usize> {
+                    let r = session.serve_segment(&eval, skew, queries)?;
+                    println!(
+                        "segment[{label}]: {} queries, {:.0} qps, p99 \
+                         {:.2}ms, {} memo hits, {} cold, acc {:.1}%",
+                        r.queries,
+                        r.qps,
+                        r.p99_ms,
+                        r.cache_hits,
+                        r.cold_routes,
+                        r.accuracy * 100.0
+                    );
+                    Ok(r.queries)
+                };
+                served += segment(&mut session, "0", per)?;
+                for (i, d) in deltas.iter().enumerate() {
+                    let up = session.apply(d)?;
+                    stale += up.stale_plans();
+                    print_update_report(i + 1, &up);
+                    let q = if i + 1 == segs - 1 { last } else { per };
+                    served += segment(&mut session, &(i + 1).to_string(), q)?;
+                }
+                println!(
+                    "served {served} queries total across {} updates \
+                     ({stale} stale plans, {} memo epoch evictions)",
+                    deltas.len(),
+                    session.memo.epoch_evictions
+                );
+                return Ok(());
+            }
             let mut setup = serve::prepare(&ds, &eval, &cfg);
             println!(
                 "{} plans cached ({} KiB), bucket n{}, {} shard(s), \
@@ -271,6 +470,105 @@ fn main() -> Result<()> {
                 report.mat_wait_s,
                 report.accuracy * 100.0
             );
+        }
+        Some("update") => {
+            // Offline delta replay: apply each batch to the overlay and
+            // repair the plan set incrementally — no serving, no CSR
+            // snapshot, so the printed refresh cost is the pure
+            // delta-local repair work.
+            use ibmb::batching::refresh::{DynamicPlanSet, RefreshConfig};
+            use ibmb::config::preset_for;
+            use ibmb::graph::DynamicGraph;
+            use ibmb::util::Rng;
+            let ds_name = args.get_or("dataset", "synth-arxiv");
+            let ds = runner::dataset(ds_name, &scale, args.get_u64("seed", 0));
+            let eval = ds.splits.test.clone();
+            let deltas =
+                delta_stream(args.get_or("deltas", "synth"), &ds, &eval, &args)?;
+            anyhow::ensure!(!deltas.is_empty(), "empty delta stream");
+            let p = preset_for(ds_name);
+            let rcfg = RefreshConfig {
+                aux_per_output: p.aux_per_output,
+                max_outputs_per_batch: p.outputs_per_batch,
+                node_budget: p.node_budget,
+                l1_tol: args.get_f64("l1-tol", 0.05) as f32,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(args.get_u64("seed", 0) ^ 0xCAFE);
+            let t0 = std::time::Instant::now();
+            let mut set =
+                DynamicPlanSet::plan_initial(&ds.graph, &eval, rcfg, &mut rng);
+            println!(
+                "{} ({} nodes): planned {} batches over {} outputs in \
+                 {:.2}s; replaying {} delta batches",
+                ds_name,
+                ds.graph.num_nodes(),
+                set.len(),
+                eval.len(),
+                t0.elapsed().as_secs_f64(),
+                deltas.len()
+            );
+            let mut dg = DynamicGraph::new(ds.graph.clone());
+            let mut stale = 0usize;
+            let mut refresh_s = 0.0;
+            for (i, d) in deltas.iter().enumerate() {
+                let applied = dg
+                    .apply(d)
+                    .map_err(|e| anyhow::anyhow!("delta {i}: {e}"))?;
+                let r = set.apply_delta(&dg, &applied);
+                stale += r.stale_plans();
+                refresh_s += r.refresh_s + r.replan_s;
+                println!(
+                    "delta[{}]: {} changes -> touched={} roots={} \
+                     stale_plans={} (rebuilt={} patched={} of {}) \
+                     max_l1={:.4} refresh {:.2}ms replan {:.2}ms \
+                     overlay_rows={}",
+                    i + 1,
+                    d.len(),
+                    r.touched_nodes,
+                    r.roots_refreshed,
+                    r.stale_plans(),
+                    r.plans_rebuilt,
+                    r.plans_patched,
+                    r.plans_total,
+                    r.max_root_l1,
+                    r.refresh_s * 1e3,
+                    r.replan_s * 1e3,
+                    dg.overlay_rows()
+                );
+            }
+            println!(
+                "replayed {} batches: {} stale plans total, {:.2}ms \
+                 incremental repair (graph epoch {})",
+                deltas.len(),
+                stale,
+                refresh_s * 1e3,
+                dg.epoch()
+            );
+        }
+        Some("check-bench") => {
+            let files = if args.positional.is_empty() {
+                anyhow::bail!("usage: ibmb check-bench BENCH_*.json");
+            } else {
+                args.positional.clone()
+            };
+            let mut bad = 0usize;
+            for f in &files {
+                match std::fs::read_to_string(f) {
+                    Err(e) => {
+                        eprintln!("{f}: UNREADABLE: {e}");
+                        bad += 1;
+                    }
+                    Ok(text) => match validate_bench_json(&text) {
+                        Ok(summary) => println!("{f}: OK ({summary})"),
+                        Err(e) => {
+                            eprintln!("{f}: INVALID: {e}");
+                            bad += 1;
+                        }
+                    },
+                }
+            }
+            anyhow::ensure!(bad == 0, "{bad} bench JSON file(s) failed");
         }
         Some("fig2") => experiments::fig2::run(&scale, &args)?,
         Some("fig3") => experiments::fig3::run(&scale, &args)?,

@@ -1,0 +1,305 @@
+//! Incremental push-based PPR maintenance under graph deltas
+//! (DESIGN.md §10).
+//!
+//! The ACL push loop ([`super::push`]) maintains the invariant
+//! `π_s = p + M r` with `M = α (I − (1−α) A D⁻¹)⁻¹`: estimates `p`
+//! plus residual mass `r` discounted through the walk operator. When
+//! the graph changes (`A D⁻¹ → A' D'⁻¹`), solving for the residual
+//! that preserves `p` under the *new* operator gives an exact, local
+//! correction:
+//!
+//! ```text
+//! r' = r + (1−α)/α · (A' D'⁻¹ − A D⁻¹) p
+//! ```
+//!
+//! Column `y` of `A D⁻¹` changes only where `y`'s adjacency or degree
+//! changed, and the correction scales by `p(y)` — so repairing a root
+//! costs `O(Σ_{touched y, p(y)≠0} deg(y))` plus the re-drain, *local
+//! to the delta* and independent of graph size (cf. Zhang, Lofgren &
+//! Goel, "Approximate Personalized PageRank on Dynamic Graphs", KDD
+//! 2016). Removals make residuals signed, which is why the shared
+//! sweep ([`super::push::drain_residuals`]) thresholds on `|r|` — a
+//! no-op distinction for the always-positive fresh push.
+//!
+//! [`PprState`] carries the `(p, r)` pair that plain
+//! [`super::push::push_ppr`] discards; [`push_ppr_state`] produces
+//! identical estimates (same sweep schedule) while keeping residuals,
+//! and [`refresh_ppr_state`] applies the correction and reports the
+//! L1 drift that [`crate::batching::refresh`] uses for staleness
+//! decisions.
+
+use std::collections::HashMap;
+
+use super::push::{drain_residuals, PushConfig, PushWorkspace, SparsePpr};
+use crate::graph::delta::AppliedDelta;
+use crate::graph::GraphView;
+
+/// Sparse push state for one root: parallel `(nodes, p, r)` arrays
+/// over the union support (`p ≠ 0` or `r ≠ 0`). Residuals are kept so
+/// the state can be repaired in place after graph deltas.
+#[derive(Debug, Clone, Default)]
+pub struct PprState {
+    pub root: u32,
+    pub nodes: Vec<u32>,
+    pub p: Vec<f32>,
+    pub r: Vec<f32>,
+}
+
+impl PprState {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Estimate mass (Σ p).
+    pub fn total_mass(&self) -> f32 {
+        self.p.iter().sum()
+    }
+
+    /// Residual mass (Σ r, signed).
+    pub fn residual_mass(&self) -> f32 {
+        self.r.iter().sum()
+    }
+
+    /// The positive estimates as a [`SparsePpr`] (what selection,
+    /// partitioning, and top-k consume).
+    pub fn to_sparse(&self) -> SparsePpr {
+        let mut out = SparsePpr::default();
+        for (i, &v) in self.nodes.iter().enumerate() {
+            if self.p[i] > 0.0 {
+                out.nodes.push(v);
+                out.scores.push(self.p[i]);
+            }
+        }
+        out
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes.len() * 4 + self.p.len() * 4 + self.r.len() * 4
+    }
+}
+
+fn extract_state(root: u32, ws: &PushWorkspace) -> PprState {
+    let mut out = PprState {
+        root,
+        ..Default::default()
+    };
+    for &v in &ws.touched {
+        let (p, r) = (ws.p[v as usize], ws.r[v as usize]);
+        if p != 0.0 || r != 0.0 {
+            out.nodes.push(v);
+            out.p.push(p);
+            out.r.push(r);
+        }
+    }
+    out
+}
+
+/// Approximate PPR of root `s` keeping the full `(p, r)` push state.
+pub fn push_ppr_state<G: GraphView>(
+    g: &G,
+    s: u32,
+    cfg: &PushConfig,
+    ws: &mut PushWorkspace,
+) -> PprState {
+    ws.ensure(g.num_nodes());
+    ws.reset();
+    ws.r[s as usize] = 1.0;
+    ws.touch(s);
+    drain_residuals(g, cfg, ws);
+    extract_state(s, ws)
+}
+
+/// Repair `state` (computed on the pre-delta graph) against the
+/// post-delta graph `g_new` and the old adjacency captured in
+/// `applied`. Returns the refreshed state and the L1 drift of the
+/// estimate vector, `Σ_v |p'(v) − p(v)|` — the staleness signal for
+/// plan rebuilds.
+pub fn refresh_ppr_state<G: GraphView>(
+    g_new: &G,
+    state: &PprState,
+    applied: &AppliedDelta,
+    cfg: &PushConfig,
+    ws: &mut PushWorkspace,
+) -> (PprState, f32) {
+    ws.ensure(g_new.num_nodes());
+    ws.reset();
+    for (i, &v) in state.nodes.iter().enumerate() {
+        ws.p[v as usize] = state.p[i];
+        ws.r[v as usize] = state.r[i];
+        ws.touch(v);
+    }
+
+    // r' = r + (1−α)/α (A'D'⁻¹ − AD⁻¹) p, column-local to touched
+    // nodes carrying estimate mass.
+    let coef = (1.0 - cfg.alpha) / cfg.alpha;
+    for (yi, &y) in applied.touched.iter().enumerate() {
+        let py = ws.p[y as usize];
+        if py == 0.0 {
+            continue;
+        }
+        let old_row = &applied.old_rows[yi];
+        if !old_row.is_empty() {
+            let c = coef * py / old_row.len() as f32;
+            for &x in old_row {
+                ws.r[x as usize] -= c;
+                ws.touch(x);
+            }
+        }
+        let new_row = g_new.neighbors(y);
+        if !new_row.is_empty() {
+            let c = coef * py / new_row.len() as f32;
+            for &x in new_row {
+                ws.r[x as usize] += c;
+                ws.touch(x);
+            }
+        }
+    }
+
+    drain_residuals(g_new, cfg, ws);
+
+    // L1 drift over the union support (ws.touched ⊇ old support).
+    let old_p: HashMap<u32, f32> = state
+        .nodes
+        .iter()
+        .copied()
+        .zip(state.p.iter().copied())
+        .collect();
+    let mut l1 = 0.0f32;
+    for &v in &ws.touched {
+        let before = old_p.get(&v).copied().unwrap_or(0.0);
+        l1 += (ws.p[v as usize] - before).abs();
+    }
+
+    (extract_state(state.root, ws), l1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{sbm, DatasetSpec};
+    use crate::graph::delta::{DynamicGraph, GraphDelta};
+    use crate::ppr::push::push_ppr;
+    use crate::util::Rng;
+
+    fn tight() -> PushConfig {
+        PushConfig {
+            alpha: 0.25,
+            epsilon: 1e-6,
+            max_sweeps: 200,
+        }
+    }
+
+    #[test]
+    fn state_estimates_match_plain_push() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 11);
+        let mut ws = PushWorkspace::new(ds.graph.num_nodes());
+        let cfg = PushConfig::default();
+        for root in [0u32, 7, 100] {
+            let plain = push_ppr(&ds.graph, root, &cfg, &mut ws);
+            let state = push_ppr_state(&ds.graph, root, &cfg, &mut ws);
+            let sparse = state.to_sparse();
+            assert_eq!(plain.nodes, sparse.nodes, "root {root}");
+            assert_eq!(plain.scores, sparse.scores, "root {root}");
+        }
+    }
+
+    #[test]
+    fn push_state_conserves_total_mass() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 12);
+        let mut ws = PushWorkspace::new(ds.graph.num_nodes());
+        let st = push_ppr_state(&ds.graph, 3, &PushConfig::default(), &mut ws);
+        let total = st.total_mass() + st.residual_mass();
+        assert!((total - 1.0).abs() < 1e-4, "p+r mass {total}");
+    }
+
+    #[test]
+    fn refresh_matches_full_recompute_after_delta() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 13);
+        let cfg = tight();
+        let mut ws = PushWorkspace::new(ds.graph.num_nodes());
+        let roots = [2u32, 50, 90];
+        let states: Vec<PprState> = roots
+            .iter()
+            .map(|&s| push_ppr_state(&ds.graph, s, &cfg, &mut ws))
+            .collect();
+
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        let mut rng = Rng::new(99);
+        let n = ds.graph.num_nodes();
+        let mut delta = GraphDelta::default();
+        for _ in 0..20 {
+            let u = rng.next_below(n) as u32;
+            let v = rng.next_below(n) as u32;
+            if u != v {
+                delta.add_edges.push((u, v));
+            }
+        }
+        // remove a few edges around the first root's neighborhood
+        for &v in ds.graph.neighbors(roots[0]).iter().take(2) {
+            if v != roots[0] {
+                delta.remove_edges.push((roots[0], v));
+            }
+        }
+        let applied = dg.apply(&delta).unwrap();
+
+        for st in &states {
+            let (inc, l1) = refresh_ppr_state(&dg, st, &applied, &cfg, &mut ws);
+            assert!(l1.is_finite() && l1 >= 0.0);
+            let full = push_ppr_state(&dg, st.root, &cfg, &mut ws);
+            let mut full_p: HashMap<u32, f32> = HashMap::new();
+            for (i, &v) in full.nodes.iter().enumerate() {
+                full_p.insert(v, full.p[i]);
+            }
+            let mut inc_p: HashMap<u32, f32> = HashMap::new();
+            for (i, &v) in inc.nodes.iter().enumerate() {
+                inc_p.insert(v, inc.p[i]);
+            }
+            let keys: std::collections::HashSet<u32> =
+                full_p.keys().chain(inc_p.keys()).copied().collect();
+            for v in keys {
+                let a = inc_p.get(&v).copied().unwrap_or(0.0);
+                let b = full_p.get(&v).copied().unwrap_or(0.0);
+                let bound =
+                    5.0 * cfg.epsilon * dg.degree(v) as f32 + 1e-4;
+                assert!(
+                    (a - b).abs() < bound,
+                    "root {}: node {v}: inc {a} vs full {b}",
+                    st.root
+                );
+            }
+            // mass is conserved through correction + re-drain
+            let total = inc.total_mass() + inc.residual_mass();
+            assert!((total - 1.0).abs() < 1e-3, "p+r mass {total}");
+        }
+    }
+
+    #[test]
+    fn untouched_state_refreshes_to_itself() {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 14);
+        // converged state (sweep cap not hit), so the re-drain is a
+        // no-op and the state must round-trip bit-exactly
+        let cfg = PushConfig {
+            max_sweeps: 200,
+            ..Default::default()
+        };
+        let mut ws = PushWorkspace::new(ds.graph.num_nodes());
+        let st = push_ppr_state(&ds.graph, 5, &cfg, &mut ws);
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        // a delta far from node 5's support: append an isolated node
+        let applied = dg
+            .apply(&GraphDelta {
+                add_node_labels: vec![0],
+                ..Default::default()
+            })
+            .unwrap();
+        let (inc, l1) = refresh_ppr_state(&dg, &st, &applied, &cfg, &mut ws);
+        assert_eq!(l1, 0.0);
+        assert_eq!(inc.nodes, st.nodes);
+        assert_eq!(inc.p, st.p);
+        assert_eq!(inc.r, st.r);
+    }
+}

@@ -12,13 +12,20 @@
 //!   a whole output-node set at once — used by batch-wise IBMB.
 //! * [`heat`] — heat-kernel diffusion, the alternative local-clustering
 //!   method of the paper's Table 5 sensitivity study.
+//!
+//! [`incremental`] additionally maintains push states under graph
+//! deltas: the residual-correction rule repairs a stored `(p, r)` pair
+//! locally around touched edges instead of re-running full PPR
+//! (DESIGN.md §10).
 
 pub mod heat;
+pub mod incremental;
 pub mod parallel;
 pub mod power;
 pub mod push;
 pub mod topk;
 
+pub use incremental::{push_ppr_state, refresh_ppr_state, PprState};
 pub use parallel::parallel_push_ppr;
 pub use push::{push_ppr, PushConfig};
 pub use topk::top_k_indices;

@@ -8,7 +8,7 @@
 //! fixed number of iterations"); we do the same with a configurable
 //! sweep cap.
 
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, GraphView};
 
 /// Push-flow parameters (paper App. B defaults).
 #[derive(Debug, Clone, Copy)]
@@ -52,12 +52,14 @@ impl SparsePpr {
 }
 
 /// Reusable workspace so per-root PPR does no allocation in the
-/// preprocessing hot loop (one of the §Perf optimizations).
+/// preprocessing hot loop (one of the §Perf optimizations). Fields are
+/// crate-visible so the incremental refresh
+/// ([`super::incremental`]) can load a saved state and re-drain it.
 pub struct PushWorkspace {
-    p: Vec<f32>,
-    r: Vec<f32>,
-    touched: Vec<u32>,
-    in_touched: Vec<bool>,
+    pub(crate) p: Vec<f32>,
+    pub(crate) r: Vec<f32>,
+    pub(crate) touched: Vec<u32>,
+    pub(crate) in_touched: Vec<bool>,
 }
 
 impl PushWorkspace {
@@ -70,14 +72,24 @@ impl PushWorkspace {
         }
     }
 
-    fn touch(&mut self, v: u32) {
+    /// Grow to cover `n` nodes (dynamic graphs append nodes; existing
+    /// entries are untouched).
+    pub fn ensure(&mut self, n: usize) {
+        if self.p.len() < n {
+            self.p.resize(n, 0.0);
+            self.r.resize(n, 0.0);
+            self.in_touched.resize(n, false);
+        }
+    }
+
+    pub(crate) fn touch(&mut self, v: u32) {
         if !self.in_touched[v as usize] {
             self.in_touched[v as usize] = true;
             self.touched.push(v);
         }
     }
 
-    fn reset(&mut self) {
+    pub(crate) fn reset(&mut self) {
         for &v in &self.touched {
             self.p[v as usize] = 0.0;
             self.r[v as usize] = 0.0;
@@ -87,31 +99,30 @@ impl PushWorkspace {
     }
 }
 
-/// Approximate PPR vector of root `s` via push flow.
-pub fn push_ppr(
-    g: &CsrGraph,
-    s: u32,
+/// Frontier sweeps over the workspace's touched set: scan
+/// currently-touched nodes, push any whose *absolute* residual exceeds
+/// the `ε·deg` threshold, until a sweep pushes nothing or the cap is
+/// hit (a fixed sweep cap matches the paper's "fixed number of
+/// iterations"). `touched` grows during a sweep; new entries are
+/// handled in subsequent passes of the same sweep loop. The signed
+/// threshold makes the one loop serve both the fresh push (residuals
+/// never go negative) and the incremental refresh
+/// ([`super::incremental`]), where edge removals inject negative
+/// residual mass.
+pub(crate) fn drain_residuals<G: GraphView>(
+    g: &G,
     cfg: &PushConfig,
     ws: &mut PushWorkspace,
-) -> SparsePpr {
-    ws.reset();
-    ws.r[s as usize] = 1.0;
-    ws.touch(s);
-
-    // frontier sweeps: scan currently-touched nodes, push any whose
-    // residual exceeds the threshold. A fixed sweep cap matches the
-    // paper's "fixed number of iterations".
+) {
     for _ in 0..cfg.max_sweeps {
         let mut any = false;
         let mut i = 0;
-        // touched grows during the sweep; new entries are handled in
-        // subsequent passes of the same sweep loop
         while i < ws.touched.len() {
             let v = ws.touched[i];
             i += 1;
             let deg = g.degree(v) as f32;
             let rv = ws.r[v as usize];
-            if deg > 0.0 && rv > cfg.epsilon * deg {
+            if deg > 0.0 && rv.abs() > cfg.epsilon * deg {
                 any = true;
                 ws.p[v as usize] += cfg.alpha * rv;
                 let spread = (1.0 - cfg.alpha) * rv / deg;
@@ -126,6 +137,19 @@ pub fn push_ppr(
             break;
         }
     }
+}
+
+/// Approximate PPR vector of root `s` via push flow.
+pub fn push_ppr(
+    g: &CsrGraph,
+    s: u32,
+    cfg: &PushConfig,
+    ws: &mut PushWorkspace,
+) -> SparsePpr {
+    ws.reset();
+    ws.r[s as usize] = 1.0;
+    ws.touch(s);
+    drain_residuals(g, cfg, ws);
 
     let mut out = SparsePpr::default();
     for &v in &ws.touched {

@@ -31,6 +31,12 @@
 //!   skew (uniform or zipf over the query population).
 //! * [`service`] — the event loop tying all of the above together
 //!   behind the `ibmb serve` subcommand and `benches/serving.rs`.
+//! * [`update`] — dynamic graph updates between serving segments
+//!   (DESIGN.md §10): graph deltas land on a mutable overlay,
+//!   incremental PPR refresh repairs per-root influence, stale plans
+//!   rebuild past an L1 tolerance, and the router / results memo
+//!   invalidate by plan epoch (`ibmb serve --update-stream`,
+//!   `ibmb update`, `benches/updates.rs`).
 //!
 //! Execution uses the exact CPU reference forward pass
 //! ([`crate::inference::fullgraph::forward`]) over each plan's induced
@@ -46,11 +52,16 @@ pub mod results;
 pub mod router;
 pub mod service;
 pub mod shard;
+pub mod update;
 
 pub use load::{LoadGen, Skew};
 pub use metrics::{LatencyHistogram, ServeMetrics};
 pub use queue::{MicrobatchQueue, PendingGroup, QueryTicket};
 pub use results::ResultsCache;
 pub use router::{PlanKey, QueryRouter, Route};
-pub use service::{prepare, serve_closed_loop, ServeConfig, ServeReport, ServeSetup};
+pub use service::{
+    prepare, serve_closed_loop, serve_closed_loop_with, ServeConfig,
+    ServeReport, ServeSetup,
+};
 pub use shard::{reference_artifact, synthesize_cold, ColdPlan, ShardMap};
+pub use update::{DynamicServeSession, UpdateConfig, UpdateReport};

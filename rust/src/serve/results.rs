@@ -1,12 +1,23 @@
 //! Byte-bounded LRU memo of executed plan outputs.
 //!
-//! A plan's logits are valid until the model or features change, so a
-//! popular plan need not re-execute at all within a freshness window —
-//! the layer *above* coalescing: the queue folds concurrent queries
-//! into one execution, the memo folds repeat queries into zero. The
-//! budget is in bytes (not entries) because plan output rows vary in
-//! size; an optional TTL models periodically refreshed models, after
-//! which an entry counts as a miss and is dropped.
+//! A plan's logits are valid until the model, the features, *or the
+//! plan itself* changes, so a popular plan need not re-execute at all
+//! within a freshness window — the layer *above* coalescing: the queue
+//! folds concurrent queries into one execution, the memo folds repeat
+//! queries into zero. The budget is in bytes (not entries) because
+//! plan output rows vary in size; an optional TTL models periodically
+//! refreshed models, after which an entry counts as a miss and is
+//! dropped.
+//!
+//! Freshness is enforced **on the read path**: every entry is stamped
+//! with the plan epoch it was computed at, and [`ResultsCache::get`]
+//! takes the plan's *current* epoch — a mismatch expires the entry on
+//! the spot, so after a graph delta bumps a plan's epoch
+//! (DESIGN.md §10) a read can never return logits computed from the
+//! pre-delta plan, even before any proactive invalidation sweep runs.
+//! TTL is likewise checked on read. [`ResultsCache::invalidate_where`]
+//! and [`ResultsCache::purge_expired`] are the eager companions the
+//! update path calls.
 //!
 //! LRU is the standard lazy scheme: a monotone tick stamps each
 //! access, a FIFO of `(key, tick)` pairs is popped on eviction and
@@ -22,6 +33,8 @@ struct Entry {
     logits: Vec<f32>,
     stamp: u64,
     inserted: Instant,
+    /// Plan epoch the logits were computed at.
+    epoch: u64,
 }
 
 /// Per-entry bookkeeping overhead charged against the byte budget
@@ -40,6 +53,9 @@ pub struct ResultsCache {
     pub misses: u64,
     pub evictions: u64,
     pub expirations: u64,
+    /// Entries dropped because their plan epoch went stale (graph
+    /// delta invalidation), on read or in an eager sweep.
+    pub epoch_evictions: u64,
 }
 
 impl ResultsCache {
@@ -58,6 +74,7 @@ impl ResultsCache {
             misses: 0,
             evictions: 0,
             expirations: 0,
+            epoch_evictions: 0,
         }
     }
 
@@ -67,28 +84,43 @@ impl ResultsCache {
         capacity * 4 + ENTRY_OVERHEAD
     }
 
-    /// Look up a plan's memoized logits; counts a hit or miss and
-    /// refreshes LRU order on hit.
-    pub fn get(&mut self, key: PlanKey, now: Instant) -> Option<&[f32]> {
+    /// Look up a plan's memoized logits at the plan's *current* epoch;
+    /// counts a hit or miss and refreshes LRU order on hit. Entries
+    /// whose stored epoch differs from `epoch` (the plan changed under
+    /// a graph delta) or whose TTL lapsed are expired here, on the
+    /// read path — staleness never survives a lookup.
+    pub fn get(
+        &mut self,
+        key: PlanKey,
+        epoch: u64,
+        now: Instant,
+    ) -> Option<&[f32]> {
         if self.budget == 0 {
             self.misses += 1;
             return None;
         }
-        let expired = match self.map.get(&key) {
+        let (ttl_expired, epoch_stale) = match self.map.get(&key) {
             None => {
                 self.misses += 1;
                 return None;
             }
-            Some(e) => match self.ttl {
-                Some(t) => now.duration_since(e.inserted) >= t,
-                None => false,
-            },
+            Some(e) => (
+                match self.ttl {
+                    Some(t) => now.duration_since(e.inserted) >= t,
+                    None => false,
+                },
+                e.epoch != epoch,
+            ),
         };
-        if expired {
+        if ttl_expired || epoch_stale {
             if let Some(e) = self.map.remove(&key) {
                 self.bytes -= Self::entry_bytes(e.logits.capacity());
             }
-            self.expirations += 1;
+            if epoch_stale {
+                self.epoch_evictions += 1;
+            } else {
+                self.expirations += 1;
+            }
             self.misses += 1;
             return None;
         }
@@ -111,10 +143,17 @@ impl ResultsCache {
         self.map.get(&key).map(|e| e.logits.as_slice())
     }
 
-    /// Insert (or replace) a plan's logits, evicting least-recently
-    /// used entries until the byte budget holds. Entries larger than
-    /// the whole budget are dropped on the floor.
-    pub fn insert(&mut self, key: PlanKey, mut logits: Vec<f32>, now: Instant) {
+    /// Insert (or replace) a plan's logits computed at plan epoch
+    /// `epoch`, evicting least-recently used entries until the byte
+    /// budget holds. Entries larger than the whole budget are dropped
+    /// on the floor.
+    pub fn insert(
+        &mut self,
+        key: PlanKey,
+        epoch: u64,
+        mut logits: Vec<f32>,
+        now: Instant,
+    ) {
         if self.budget == 0 {
             return;
         }
@@ -137,6 +176,7 @@ impl ResultsCache {
                 logits,
                 stamp: tick,
                 inserted: now,
+                epoch,
             },
         );
         self.bytes += nb;
@@ -161,6 +201,58 @@ impl ResultsCache {
         self.map.clear();
         self.lru.clear();
         self.bytes = 0;
+    }
+
+    /// Remove `keys` outright: debit the byte accounting and compact
+    /// the LRU queue down to live records. Shared by the eager
+    /// invalidation sweeps; the matching counter is bumped by the
+    /// caller.
+    fn remove_keys(&mut self, keys: &[PlanKey]) -> usize {
+        for k in keys {
+            if let Some(e) = self.map.remove(k) {
+                self.bytes -= Self::entry_bytes(e.logits.capacity());
+            }
+        }
+        if !keys.is_empty() {
+            let map = &self.map;
+            self.lru.retain(|(k, s)| {
+                map.get(k).map(|e| e.stamp == *s).unwrap_or(false)
+            });
+        }
+        keys.len()
+    }
+
+    /// Eagerly drop every entry whose key matches `stale` (graph-delta
+    /// invalidation: changed cached plans, all cold plans). Returns the
+    /// number of entries dropped.
+    pub fn invalidate_where(
+        &mut self,
+        stale: impl Fn(&PlanKey) -> bool,
+    ) -> usize {
+        let keys: Vec<PlanKey> =
+            self.map.keys().filter(|&k| stale(k)).copied().collect();
+        let dropped = self.remove_keys(&keys);
+        self.epoch_evictions += dropped as u64;
+        dropped
+    }
+
+    /// Eagerly drop every TTL-expired entry (read-path expiry only
+    /// catches keys that get queried again). Returns the number
+    /// dropped.
+    pub fn purge_expired(&mut self, now: Instant) -> usize {
+        let ttl = match self.ttl {
+            Some(t) => t,
+            None => return 0,
+        };
+        let keys: Vec<PlanKey> = self
+            .map
+            .iter()
+            .filter(|(_, e)| now.duration_since(e.inserted) >= ttl)
+            .map(|(&k, _)| k)
+            .collect();
+        let dropped = self.remove_keys(&keys);
+        self.expirations += dropped as u64;
+        dropped
     }
 
     pub fn bytes(&self) -> usize {
@@ -202,9 +294,9 @@ mod tests {
     fn hit_after_insert_miss_before() {
         let t0 = Instant::now();
         let mut c = ResultsCache::new(1 << 20, None);
-        assert!(c.get(key(1), t0).is_none());
-        c.insert(key(1), vec![1.0, 2.0], t0);
-        assert_eq!(c.get(key(1), t0).unwrap(), &[1.0, 2.0]);
+        assert!(c.get(key(1), 0, t0).is_none());
+        c.insert(key(1), 0, vec![1.0, 2.0], t0);
+        assert_eq!(c.get(key(1), 0, t0).unwrap(), &[1.0, 2.0]);
         assert_eq!((c.hits, c.misses), (1, 1));
         assert!((c.hit_rate() - 0.5).abs() < 1e-12);
     }
@@ -215,15 +307,15 @@ mod tests {
         // room for exactly two 8-float entries
         let per = 8 * 4 + ENTRY_OVERHEAD;
         let mut c = ResultsCache::new(2 * per, None);
-        c.insert(key(1), vec![0.0; 8], t0);
-        c.insert(key(2), vec![0.0; 8], t0);
+        c.insert(key(1), 0, vec![0.0; 8], t0);
+        c.insert(key(2), 0, vec![0.0; 8], t0);
         // touch 1 so 2 becomes LRU
-        assert!(c.get(key(1), t0).is_some());
-        c.insert(key(3), vec![0.0; 8], t0);
+        assert!(c.get(key(1), 0, t0).is_some());
+        c.insert(key(3), 0, vec![0.0; 8], t0);
         assert_eq!(c.len(), 2);
-        assert!(c.get(key(2), t0).is_none(), "LRU entry must be evicted");
-        assert!(c.get(key(1), t0).is_some());
-        assert!(c.get(key(3), t0).is_some());
+        assert!(c.get(key(2), 0, t0).is_none(), "LRU entry must be evicted");
+        assert!(c.get(key(1), 0, t0).is_some());
+        assert!(c.get(key(3), 0, t0).is_some());
         assert_eq!(c.evictions, 1);
         assert!(c.bytes() <= 2 * per);
     }
@@ -232,9 +324,9 @@ mod tests {
     fn oversized_entry_is_dropped() {
         let t0 = Instant::now();
         let mut c = ResultsCache::new(32, None);
-        c.insert(key(1), vec![0.0; 1000], t0);
+        c.insert(key(1), 0, vec![0.0; 1000], t0);
         assert!(c.is_empty());
-        assert!(c.get(key(1), t0).is_none());
+        assert!(c.get(key(1), 0, t0).is_none());
     }
 
     #[test]
@@ -242,19 +334,66 @@ mod tests {
         let t0 = Instant::now();
         let ttl = Duration::from_millis(50);
         let mut c = ResultsCache::new(1 << 20, Some(ttl));
-        c.insert(key(1), vec![1.0], t0);
-        assert!(c.get(key(1), t0 + Duration::from_millis(49)).is_some());
-        assert!(c.get(key(1), t0 + Duration::from_millis(50)).is_none());
+        c.insert(key(1), 0, vec![1.0], t0);
+        assert!(c.get(key(1), 0, t0 + Duration::from_millis(49)).is_some());
+        assert!(c.get(key(1), 0, t0 + Duration::from_millis(50)).is_none());
         assert_eq!(c.expirations, 1);
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn epoch_mismatch_expires_on_read() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(1 << 20, None);
+        c.insert(key(1), 0, vec![1.0], t0);
+        // the plan's epoch moved (graph delta): the pre-delta entry
+        // must be unreadable and gone
+        assert!(c.get(key(1), 1, t0).is_none());
+        assert_eq!(c.epoch_evictions, 1);
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        // re-inserted at the new epoch it serves again
+        c.insert(key(1), 1, vec![2.0], t0);
+        assert_eq!(c.get(key(1), 1, t0).unwrap(), &[2.0]);
+    }
+
+    #[test]
+    fn invalidate_where_drops_matching_entries() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(1 << 20, None);
+        c.insert(key(1), 0, vec![1.0], t0);
+        c.insert(key(2), 0, vec![2.0], t0);
+        c.insert(PlanKey::Cold(7), 0, vec![3.0], t0);
+        let dropped =
+            c.invalidate_where(|k| matches!(k, PlanKey::Cold(_)) || *k == key(2));
+        assert_eq!(dropped, 2);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(key(1), 0, t0).is_some());
+        assert!(c.get(PlanKey::Cold(7), 0, t0).is_none());
+    }
+
+    #[test]
+    fn purge_expired_sweeps_without_reads() {
+        let t0 = Instant::now();
+        let ttl = Duration::from_millis(10);
+        let mut c = ResultsCache::new(1 << 20, Some(ttl));
+        c.insert(key(1), 0, vec![1.0], t0);
+        c.insert(key(2), 0, vec![2.0], t0 + Duration::from_millis(8));
+        assert_eq!(c.purge_expired(t0 + Duration::from_millis(12)), 1);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(key(2), 0, t0 + Duration::from_millis(12)).is_some());
+        // no TTL configured → no-op
+        let mut n = ResultsCache::new(1 << 20, None);
+        n.insert(key(1), 0, vec![1.0], t0);
+        assert_eq!(n.purge_expired(t0 + Duration::from_secs(60)), 0);
     }
 
     #[test]
     fn zero_budget_disables() {
         let t0 = Instant::now();
         let mut c = ResultsCache::new(0, None);
-        c.insert(key(1), vec![1.0], t0);
-        assert!(c.get(key(1), t0).is_none());
+        c.insert(key(1), 0, vec![1.0], t0);
+        assert!(c.get(key(1), 0, t0).is_none());
         assert_eq!(c.bytes(), 0);
     }
 
@@ -262,10 +401,10 @@ mod tests {
     fn hit_traffic_keeps_lru_queue_bounded() {
         let t0 = Instant::now();
         let mut c = ResultsCache::new(1 << 20, None);
-        c.insert(key(1), vec![0.0; 4], t0);
-        c.insert(key(2), vec![0.0; 4], t0);
+        c.insert(key(1), 0, vec![0.0; 4], t0);
+        c.insert(key(2), 0, vec![0.0; 4], t0);
         for _ in 0..10_000 {
-            assert!(c.get(key(1), t0).is_some());
+            assert!(c.get(key(1), 0, t0).is_some());
         }
         assert_eq!(c.hits, 10_000);
         assert!(
@@ -277,23 +416,23 @@ mod tests {
         // LRU semantics survive compaction: key(2) is still evictable
         let per = 4 * 4 + ENTRY_OVERHEAD;
         let mut tight = ResultsCache::new(2 * per, None);
-        tight.insert(key(1), vec![0.0; 4], t0);
-        tight.insert(key(2), vec![0.0; 4], t0);
+        tight.insert(key(1), 0, vec![0.0; 4], t0);
+        tight.insert(key(2), 0, vec![0.0; 4], t0);
         for _ in 0..1000 {
-            assert!(tight.get(key(1), t0).is_some());
+            assert!(tight.get(key(1), 0, t0).is_some());
         }
-        tight.insert(key(3), vec![0.0; 4], t0);
-        assert!(tight.get(key(2), t0).is_none(), "key(2) was LRU");
-        assert!(tight.get(key(1), t0).is_some());
+        tight.insert(key(3), 0, vec![0.0; 4], t0);
+        assert!(tight.get(key(2), 0, t0).is_none(), "key(2) was LRU");
+        assert!(tight.get(key(1), 0, t0).is_some());
     }
 
     #[test]
     fn replace_accounts_bytes_once() {
         let t0 = Instant::now();
         let mut c = ResultsCache::new(1 << 20, None);
-        c.insert(key(1), vec![0.0; 8], t0);
+        c.insert(key(1), 0, vec![0.0; 8], t0);
         let b1 = c.bytes();
-        c.insert(key(1), vec![0.0; 8], t0);
+        c.insert(key(1), 0, vec![0.0; 8], t0);
         assert_eq!(c.bytes(), b1);
         c.clear();
         assert_eq!((c.bytes(), c.len()), (0, 0));

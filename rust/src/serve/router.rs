@@ -78,6 +78,9 @@ pub struct QueryRouter {
     pub duplicates: usize,
     /// Cold-plan ids handed out so far.
     pub cold_built: usize,
+    /// Entries (warm slots + cold ids) dropped by graph-delta
+    /// invalidation.
+    pub invalidations: usize,
 }
 
 impl QueryRouter {
@@ -101,7 +104,57 @@ impl QueryRouter {
             cold: HashMap::new(),
             duplicates,
             cold_built: 0,
+            invalidations: 0,
         }
+    }
+
+    /// Drop the warm-index entries of `outputs` (a plan being retired
+    /// or replanned). Until [`Self::index_plan`] re-registers them the
+    /// nodes take the cold path — never a dangling plan id.
+    pub fn invalidate_outputs(&mut self, outputs: &[u32]) -> usize {
+        let mut dropped = 0;
+        for &u in outputs {
+            if let Some(slot) = self.index.get_mut(u as usize) {
+                if *slot != ABSENT {
+                    *slot = ABSENT;
+                    dropped += 1;
+                }
+            }
+        }
+        self.invalidations += dropped;
+        dropped
+    }
+
+    /// (Re-)register plan `pid`'s output nodes in the warm index,
+    /// clearing any cold id the nodes may have picked up while
+    /// unrouted. Slots already owned by another plan are counted as
+    /// duplicates, as in [`Self::build`].
+    pub fn index_plan(&mut self, pid: u32, outputs: &[u32]) {
+        for (pos, &u) in outputs.iter().enumerate() {
+            match self.index.get_mut(u as usize) {
+                Some(slot) if *slot == ABSENT => {
+                    *slot = ((pid as u64) << 32) | pos as u64;
+                    self.cold.remove(&u);
+                }
+                Some(_) => self.duplicates += 1,
+                None => self.duplicates += 1,
+            }
+        }
+    }
+
+    /// Forget the cold-plan ids of `nodes` (their synthesized
+    /// neighborhoods went stale under a graph delta). The next query
+    /// gets a *fresh* id, so shards re-synthesize against the new
+    /// graph and memo entries for the old id become unreachable.
+    pub fn invalidate_cold(&mut self, nodes: &[u32]) -> usize {
+        let mut dropped = 0;
+        for u in nodes {
+            if self.cold.remove(u).is_some() {
+                dropped += 1;
+            }
+        }
+        self.invalidations += dropped;
+        dropped
     }
 
     /// Number of nodes covered by a precomputed plan.
@@ -200,5 +253,53 @@ mod tests {
         }
         assert_eq!(router.cold_built, 2);
         assert_eq!(router.route(a).pos(), 0);
+    }
+
+    #[test]
+    fn invalidation_retires_and_reindexes_entries() {
+        let (ds, cache) = setup();
+        let mut router = QueryRouter::build(&ds, &cache);
+        let outputs = cache.output_nodes(0).to_vec();
+        let dropped = router.invalidate_outputs(&outputs);
+        assert_eq!(dropped, outputs.len());
+        assert_eq!(router.invalidations, outputs.len());
+        // unrouted outputs fall back to the cold path, never a stale id
+        match router.route(outputs[0]) {
+            Route::Cold { .. } => {}
+            other => panic!("expected cold after invalidation, got {other:?}"),
+        }
+        // re-registering restores warm routing and clears the cold id
+        router.index_plan(0, &outputs);
+        match router.route(outputs[0]) {
+            Route::Cached { plan, pos } => {
+                assert_eq!(plan, 0);
+                assert_eq!(cache.output_nodes(0)[pos as usize], outputs[0]);
+            }
+            other => panic!("expected warm after reindex, got {other:?}"),
+        }
+        assert_eq!(router.coverage(), ds.splits.train.len());
+    }
+
+    #[test]
+    fn cold_invalidation_hands_out_fresh_ids() {
+        let (ds, cache) = setup();
+        let mut router = QueryRouter::build(&ds, &cache);
+        let covered: std::collections::HashSet<u32> =
+            ds.splits.train.iter().copied().collect();
+        let node = (0..ds.graph.num_nodes() as u32)
+            .find(|u| !covered.contains(u))
+            .unwrap();
+        let before = match router.route(node) {
+            Route::Cold { id } => id,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(router.invalidate_cold(&[node]), 1);
+        assert_eq!(router.invalidate_cold(&[node]), 0, "already dropped");
+        match router.route(node) {
+            Route::Cold { id } => {
+                assert_ne!(id, before, "stale cold plan must not be reused")
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -97,21 +97,24 @@ pub struct ServeSetup {
     pub meta: ArtifactMeta,
     pub state: ModelState,
     pub router: QueryRouter,
+    /// Per-plan epochs, parallel to `cache`: the graph epoch each plan
+    /// last reflected (all zero for a static deployment). The results
+    /// memo keys freshness on these — see
+    /// [`super::update::DynamicServeSession`].
+    pub epochs: Vec<u64>,
 }
 
-/// Plan the serveable node set with node-wise IBMB (dataset preset),
-/// synthesize the reference executor model sized to the resulting
-/// bucket, and build the query router over the plan set.
-pub fn prepare(ds: &Dataset, eval_nodes: &[u32], cfg: &ServeConfig) -> ServeSetup {
-    let p = preset_for(&ds.name);
-    let mut g = NodeWiseIbmb {
-        aux_per_output: p.aux_per_output,
-        max_outputs_per_batch: p.outputs_per_batch,
-        node_budget: p.node_budget,
-        ..Default::default()
-    };
-    let mut rng = Rng::new(cfg.seed ^ 0xCAFE);
-    let cache = BatchCache::build(&g.plan(ds, eval_nodes, &mut rng));
+/// Build a [`ServeSetup`] around an already-planned cache: pick the
+/// artifact bucket, synthesize the reference executor model, init its
+/// state, and invert the router index. Shared by the static
+/// [`prepare`] and the dynamic session
+/// ([`super::update::DynamicServeSession::prepare`]) so the bucket
+/// formula and seeds cannot drift between the two.
+pub(crate) fn setup_from_cache(
+    ds: &Dataset,
+    cache: BatchCache,
+    cfg: &ServeConfig,
+) -> ServeSetup {
     let bucket = cache
         .max_batch_nodes()
         .max(cfg.cold_aux + 1)
@@ -128,12 +131,30 @@ pub fn prepare(ds: &Dataset, eval_nodes: &[u32], cfg: &ServeConfig) -> ServeSetu
     );
     let state = ModelState::init(&meta, cfg.seed ^ 0x51A7E);
     let router = QueryRouter::build(ds, &cache);
+    let epochs = vec![0u64; cache.len()];
     ServeSetup {
         cache,
         meta,
         state,
         router,
+        epochs,
     }
+}
+
+/// Plan the serveable node set with node-wise IBMB (dataset preset),
+/// synthesize the reference executor model sized to the resulting
+/// bucket, and build the query router over the plan set.
+pub fn prepare(ds: &Dataset, eval_nodes: &[u32], cfg: &ServeConfig) -> ServeSetup {
+    let p = preset_for(&ds.name);
+    let mut g = NodeWiseIbmb {
+        aux_per_output: p.aux_per_output,
+        max_outputs_per_batch: p.outputs_per_batch,
+        node_budget: p.node_budget,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0xCAFE);
+    let cache = BatchCache::build(&g.plan(ds, eval_nodes, &mut rng));
+    setup_from_cache(ds, cache, cfg)
 }
 
 /// Aggregate outcome of one closed-loop serving run.
@@ -206,10 +227,10 @@ fn dispatch_group(
 }
 
 /// Serve `cfg.queries` queries drawn from `population` with `skew`,
-/// closed-loop. Blocks until every query completes and all shards have
-/// shut down; returns the aggregate report. `setup` is borrowed
-/// mutably for the router's cold-plan memo, which stays warm across
-/// repeated runs (the bench's shard sweep reuses one setup).
+/// closed-loop, with a per-run results memo sized by
+/// `cfg.results_cache_bytes`. `setup` is borrowed mutably for the
+/// router's cold-plan memo, which stays warm across repeated runs
+/// (the bench's shard sweep reuses one setup).
 pub fn serve_closed_loop(
     ds: &Dataset,
     setup: &mut ServeSetup,
@@ -217,9 +238,29 @@ pub fn serve_closed_loop(
     skew: Skew,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
+    let mut results = ResultsCache::new(cfg.results_cache_bytes, cfg.results_ttl);
+    serve_closed_loop_with(ds, setup, population, skew, cfg, &mut results)
+}
+
+/// [`serve_closed_loop`] against a caller-owned results memo — the
+/// dynamic-update session keeps one memo alive across serving
+/// segments so post-delta epoch eviction is actually observable.
+/// Memo lookups and inserts are keyed by the plan's current epoch
+/// (`setup.epochs`); cold plans use epoch 0 (their router ids are
+/// never reused across deltas). Blocks until every query completes
+/// and all shards have shut down; returns the aggregate report.
+pub fn serve_closed_loop_with(
+    ds: &Dataset,
+    setup: &mut ServeSetup,
+    population: &[u32],
+    skew: Skew,
+    cfg: &ServeConfig,
+    results: &mut ResultsCache,
+) -> Result<ServeReport> {
     let cache = &setup.cache;
     let meta = &setup.meta;
     let state = &setup.state;
+    let epochs = &setup.epochs;
     let router = &mut setup.router;
     // ServeSetup persists across runs; report this run's delta
     let cold_ids_at_start = router.cold_built;
@@ -239,8 +280,15 @@ pub fn serve_closed_loop(
     let mut rng = Rng::new(cfg.seed ^ 0x5E21);
     let map = ShardMap::build(ds, cache, shards, &mut rng);
     let mut queue = MicrobatchQueue::new(cfg.flush_window, cfg.max_coalesce);
-    let mut results = ResultsCache::new(cfg.results_cache_bytes, cfg.results_ttl);
     let mut metrics = ServeMetrics::new(shards);
+    let epoch_of = |key: &PlanKey| -> u64 {
+        match key {
+            PlanKey::Cached(pid) => {
+                epochs.get(*pid as usize).copied().unwrap_or(0)
+            }
+            PlanKey::Cold(_) => 0,
+        }
+    };
     let mut load = LoadGen::new(population, skew, cfg.seed ^ 0x10AD);
 
     std::thread::scope(|scope| -> Result<ServeReport> {
@@ -281,7 +329,7 @@ pub fn serve_closed_loop(
                 let route = router.route(node);
                 let key = route.key();
                 let pos = route.pos();
-                if let Some(logits) = results.get(key, now) {
+                if let Some(logits) = results.get(key, epoch_of(&key), now) {
                     let start = pos as usize * classes;
                     let pred = argmax(&logits[start..start + classes]);
                     metrics.cache_hit_queries += 1;
@@ -336,7 +384,7 @@ pub fn serve_closed_loop(
                         completed += 1;
                     }
                     metrics.exec_s += r.exec_s;
-                    results.insert(r.key, r.out_logits, now);
+                    results.insert(r.key, epoch_of(&r.key), r.out_logits, now);
                 }
                 Ok(ShardMsg::Done(_)) => {
                     anyhow::bail!("shard exited early");

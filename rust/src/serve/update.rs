@@ -1,0 +1,398 @@
+//! Dynamic graph updates on the serve path (DESIGN.md §10).
+//!
+//! [`DynamicServeSession`] owns everything a long-lived deployment
+//! mutates when the graph churns: the dataset (labels, feature
+//! epochs, and the contiguous CSR swap), the [`DynamicGraph`] overlay
+//! the deltas land on, the [`DynamicPlanSet`] keeping per-root
+//! influence fresh, the [`ServeSetup`] (plan cache + router + plan
+//! epochs), and one results memo that *survives across serving
+//! segments* — which is what makes epoch-keyed freshness observable.
+//!
+//! One [`DynamicServeSession::apply`] runs the full invalidation
+//! cascade:
+//!
+//! 1. the delta lands on the overlay (symmetrize, normalize, epoch++);
+//! 2. dataset commit: labels/feature epochs extend, the overlay
+//!    compacts into a fresh CSR the executor shards read;
+//! 3. incremental PPR refresh repairs the touched roots, plans past
+//!    the L1 tolerance are rebuilt, plans merely containing touched
+//!    nodes are patched, their epochs bump;
+//! 4. the plan cache is repacked and the router's entries for rebuilt
+//!    plans are invalidated + re-indexed; cold-plan ids of touched
+//!    nodes are dropped so shards lazily re-synthesize against the
+//!    new graph;
+//! 5. the results memo eagerly drops changed-plan and cold entries
+//!    (the epoch check on the read path is the backstop — a pre-delta
+//!    logit can never be served even if this sweep were skipped).
+//!
+//! Serving itself is segment-granular: queries in flight drain before
+//! a delta applies, so shard threads always read a consistent
+//! `(graph, cache, epochs)` triple without locks on the hot path.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::batching::refresh::{DynamicPlanSet, RefreshConfig};
+use crate::batching::BatchCache;
+use crate::config::preset_for;
+use crate::datasets::Dataset;
+use crate::graph::delta::{DynamicGraph, GraphDelta};
+use crate::graph::GraphView;
+use crate::util::Rng;
+
+use super::load::Skew;
+use super::results::ResultsCache;
+use super::router::PlanKey;
+use super::service::{
+    serve_closed_loop_with, setup_from_cache, ServeConfig, ServeReport,
+    ServeSetup,
+};
+
+/// Dynamic-update knobs layered on a [`ServeConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateConfig {
+    /// Rebuild a plan when its outputs' summed PPR L1 drift exceeds
+    /// this (see [`RefreshConfig::l1_tol`]).
+    pub l1_tol: f32,
+}
+
+impl Default for UpdateConfig {
+    fn default() -> Self {
+        UpdateConfig { l1_tol: 0.05 }
+    }
+}
+
+/// What one applied delta did across the whole serve path.
+#[derive(Debug, Clone, Default)]
+pub struct UpdateReport {
+    pub epoch: u64,
+    pub touched_nodes: usize,
+    pub added_nodes: usize,
+    pub feature_updates: usize,
+    pub roots_refreshed: usize,
+    pub plans_total: usize,
+    pub plans_rebuilt: usize,
+    pub plans_patched: usize,
+    pub max_root_l1: f32,
+    /// Router warm-index entries retired + re-registered (rebuilt
+    /// plans) and cold ids dropped (touched nodes).
+    pub router_invalidated: usize,
+    pub cold_ids_dropped: usize,
+    /// Results-memo entries eagerly dropped (changed plans + all cold
+    /// plans).
+    pub memo_dropped: usize,
+    /// Seconds in incremental PPR refresh.
+    pub refresh_s: f64,
+    /// Seconds in plan rebuild/patch.
+    pub replan_s: f64,
+    /// Seconds committing (CSR compaction + cache repack + router
+    /// sync).
+    pub commit_s: f64,
+}
+
+impl UpdateReport {
+    pub fn stale_plans(&self) -> usize {
+        self.plans_rebuilt + self.plans_patched
+    }
+
+    pub fn rebuilt_fraction(&self) -> f64 {
+        if self.plans_total == 0 {
+            0.0
+        } else {
+            self.plans_rebuilt as f64 / self.plans_total as f64
+        }
+    }
+}
+
+/// A serving deployment that admits graph deltas between serving
+/// segments.
+pub struct DynamicServeSession {
+    pub ds: Dataset,
+    pub setup: ServeSetup,
+    pub graph: DynamicGraph,
+    pub plans: DynamicPlanSet,
+    /// Session-lifetime results memo (shared across segments).
+    pub memo: ResultsCache,
+    cfg: ServeConfig,
+    /// Segments served so far — folded into each segment's load seed
+    /// so successive segments draw fresh query streams instead of
+    /// replaying segment 0's.
+    segments: u64,
+}
+
+impl DynamicServeSession {
+    /// Plan `eval_nodes` with the dataset preset (same planner inputs
+    /// as [`super::service::prepare`], but retaining the per-root PPR
+    /// states for incremental repair), synthesize the executor model,
+    /// and build the router. The rebuild node budget is clamped to the
+    /// artifact bucket so replanned batches keep fitting the arenas.
+    pub fn prepare(
+        ds: Dataset,
+        eval_nodes: &[u32],
+        cfg: &ServeConfig,
+        ucfg: &UpdateConfig,
+    ) -> DynamicServeSession {
+        let p = preset_for(&ds.name);
+        let rcfg = RefreshConfig {
+            aux_per_output: p.aux_per_output,
+            max_outputs_per_batch: p.outputs_per_batch,
+            node_budget: p.node_budget,
+            l1_tol: ucfg.l1_tol,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(cfg.seed ^ 0xCAFE);
+        let mut plans =
+            DynamicPlanSet::plan_initial(&ds.graph, eval_nodes, rcfg, &mut rng);
+        let setup = setup_from_cache(&ds, plans.build_cache(), cfg);
+        plans.clamp_node_budget(setup.meta.n_pad);
+        let graph = DynamicGraph::new(ds.graph.clone());
+        let memo = ResultsCache::new(cfg.results_cache_bytes, cfg.results_ttl);
+        DynamicServeSession {
+            ds,
+            setup,
+            graph,
+            plans,
+            memo,
+            cfg: cfg.clone(),
+            segments: 0,
+        }
+    }
+
+    /// Apply one delta batch: overlay → dataset commit → incremental
+    /// refresh → cache repack → router + memo invalidation.
+    pub fn apply(&mut self, delta: &GraphDelta) -> Result<UpdateReport> {
+        for &l in &delta.add_node_labels {
+            anyhow::ensure!(
+                (l as usize) < self.ds.num_classes,
+                "new-node label {l} >= {} classes",
+                self.ds.num_classes
+            );
+        }
+        let applied = self
+            .graph
+            .apply(delta)
+            .map_err(|e| anyhow::anyhow!("bad delta: {e}"))?;
+
+        // dataset commit: labels + feature epochs + contiguous CSR
+        let t_commit = Instant::now();
+        self.ds
+            .labels
+            .extend(delta.add_node_labels.iter().copied());
+        self.ds.feat_epoch.resize(self.ds.labels.len(), 0);
+        for &u in &applied.feature_updates {
+            self.ds.feat_epoch[u as usize] += 1;
+        }
+        // One CSR materialization per *structural* delta (the overlay
+        // keeps its rows and only rebases, paying the extra clone,
+        // once it has grown past a quarter of the node count).
+        // Feature-only deltas change no adjacency, so they skip both
+        // O(graph) commit costs and stay truly delta-local.
+        let structural =
+            !applied.touched.is_empty() || applied.added_nodes > 0;
+        if structural {
+            self.ds.graph = self.graph.snapshot();
+            if self.graph.overlay_rows() * 4 > self.graph.num_nodes() {
+                self.graph.rebase(self.ds.graph.clone());
+            }
+        }
+        let commit_graph_s = t_commit.elapsed().as_secs_f64();
+
+        // incremental influence refresh + staleness-tracked replan
+        let refresh = self.plans.apply_delta(&self.ds.graph, &applied);
+
+        // repack the cache only when some plan's content can actually
+        // have changed (structural delta that rebuilt or patched at
+        // least one plan), sync epochs, invalidate + re-index the
+        // router entries of rebuilt plans, drop touched cold ids
+        let t_sync = Instant::now();
+        if structural && !refresh.changed_plans.is_empty() {
+            self.setup.cache = self.plans.build_cache();
+        }
+        self.setup.epochs = self.plans.epochs().to_vec();
+        let mut router_invalidated = 0usize;
+        for &pid in &refresh.changed_plans {
+            let outputs = self.setup.cache.output_nodes(pid as usize).to_vec();
+            router_invalidated += self.setup.router.invalidate_outputs(&outputs);
+            self.setup.router.index_plan(pid, &outputs);
+        }
+        let cold_ids_dropped =
+            self.setup.router.invalidate_cold(&applied.touched);
+
+        // eager memo sweep; the epoch check on reads is the backstop
+        let changed: std::collections::HashSet<u32> =
+            refresh.changed_plans.iter().copied().collect();
+        let mut memo_dropped = self.memo.invalidate_where(|k| match k {
+            PlanKey::Cached(pid) => changed.contains(pid),
+            PlanKey::Cold(_) => true,
+        });
+        memo_dropped += self.memo.purge_expired(Instant::now());
+        let commit_s = commit_graph_s + t_sync.elapsed().as_secs_f64();
+
+        Ok(UpdateReport {
+            epoch: applied.epoch,
+            touched_nodes: applied.touched.len(),
+            added_nodes: applied.added_nodes,
+            feature_updates: applied.feature_updates.len(),
+            roots_refreshed: refresh.roots_refreshed,
+            plans_total: refresh.plans_total,
+            plans_rebuilt: refresh.plans_rebuilt,
+            plans_patched: refresh.plans_patched,
+            max_root_l1: refresh.max_root_l1,
+            router_invalidated,
+            cold_ids_dropped,
+            memo_dropped,
+            refresh_s: refresh.refresh_s,
+            replan_s: refresh.replan_s,
+            commit_s,
+        })
+    }
+
+    /// Serve one closed-loop segment against the current graph/plan
+    /// epoch, reusing the session memo. `queries` overrides the config
+    /// count (segmented streams split a total budget).
+    pub fn serve_segment(
+        &mut self,
+        population: &[u32],
+        skew: Skew,
+        queries: usize,
+    ) -> Result<ServeReport> {
+        self.segments += 1;
+        let cfg = ServeConfig {
+            queries,
+            // distinct load/shard RNG streams per segment — otherwise
+            // every post-delta segment replays segment 0's queries and
+            // the memo flatters the reported hit rate
+            seed: self
+                .cfg
+                .seed
+                .wrapping_add(self.segments.wrapping_mul(0x9E3779B97F4A7C15)),
+            ..self.cfg.clone()
+        };
+        serve_closed_loop_with(
+            &self.ds,
+            &mut self.setup,
+            population,
+            skew,
+            &cfg,
+            &mut self.memo,
+        )
+    }
+
+    /// The session's current plan cache (inspection/tests).
+    pub fn cache(&self) -> &BatchCache {
+        &self.setup.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{sbm, DatasetSpec};
+    use crate::serve::router::Route;
+    use std::time::Duration;
+
+    fn session() -> DynamicServeSession {
+        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 33);
+        let cfg = ServeConfig {
+            queries: 48,
+            clients: 8,
+            shards: 2,
+            results_cache_bytes: 1 << 20,
+            flush_window: Duration::from_micros(200),
+            ..Default::default()
+        };
+        let eval = ds.splits.train.clone();
+        DynamicServeSession::prepare(ds, &eval, &cfg, &UpdateConfig::default())
+    }
+
+    #[test]
+    fn prepare_matches_static_prepare_shape() {
+        let s = session();
+        assert!(!s.setup.cache.is_empty());
+        assert_eq!(s.setup.epochs.len(), s.setup.cache.len());
+        assert!(s.setup.epochs.iter().all(|&e| e == 0));
+        assert_eq!(s.graph.epoch(), 0);
+    }
+
+    #[test]
+    fn apply_then_serve_round_trips() {
+        let mut s = session();
+        let eval = s.ds.splits.train.clone();
+        let before = s.serve_segment(&eval, Skew::Uniform, 32).unwrap();
+        assert_eq!(before.queries, 32);
+
+        let delta = GraphDelta {
+            add_edges: vec![(eval[0], eval[1]), (eval[2], eval[3])],
+            add_node_labels: vec![0],
+            feature_updates: vec![eval[4]],
+            ..Default::default()
+        };
+        let report = s.apply(&delta).unwrap();
+        assert_eq!(report.epoch, 1);
+        assert!(report.stale_plans() > 0);
+        assert!(report.rebuilt_fraction() < 1.0);
+        assert_eq!(s.ds.labels.len(), s.ds.graph.num_nodes());
+        assert_eq!(s.ds.feat_epoch[eval[4] as usize], 1);
+
+        let after = s.serve_segment(&eval, Skew::Uniform, 32).unwrap();
+        assert_eq!(
+            after.executed_queries + after.cache_hits,
+            32,
+            "updates must not lose queries"
+        );
+        // the appended node is serveable via the cold path
+        let new_node = (s.ds.graph.num_nodes() - 1) as u32;
+        let pop = [new_node];
+        let cold = s.serve_segment(&pop, Skew::Uniform, 4).unwrap();
+        assert_eq!(cold.executed_queries + cold.cache_hits, 4);
+        assert!(cold.cold_routes > 0);
+    }
+
+    #[test]
+    fn bad_deltas_are_rejected_atomically() {
+        let mut s = session();
+        let n = s.ds.graph.num_nodes() as u32;
+        assert!(s
+            .apply(&GraphDelta {
+                add_edges: vec![(0, n + 5)],
+                ..Default::default()
+            })
+            .is_err());
+        assert!(s
+            .apply(&GraphDelta {
+                add_node_labels: vec![u16::MAX],
+                ..Default::default()
+            })
+            .is_err());
+        assert_eq!(s.graph.epoch(), 0);
+        assert_eq!(s.setup.epochs.iter().max().copied().unwrap_or(0), 0);
+    }
+
+    #[test]
+    fn router_survives_updates_totally() {
+        let mut s = session();
+        let eval = s.ds.splits.train.clone();
+        let delta = GraphDelta {
+            add_edges: vec![(eval[0], eval[5]), (eval[1], eval[6])],
+            ..Default::default()
+        };
+        s.apply(&delta).unwrap();
+        let plans = s.setup.cache.len();
+        for &u in &eval {
+            match s.setup.router.route(u) {
+                Route::Cached { plan, pos } => {
+                    assert!((plan as usize) < plans, "dangling plan id");
+                    assert_eq!(
+                        s.setup.cache.output_nodes(plan as usize)[pos as usize],
+                        u,
+                        "output {u} routed to a plan that does not own it"
+                    );
+                }
+                Route::Cold { .. } => {
+                    panic!("output {u} lost warm routing after update")
+                }
+            }
+        }
+    }
+}

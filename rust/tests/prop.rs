@@ -18,7 +18,9 @@ use std::collections::HashSet;
 use ibmb::baselines;
 use ibmb::batching::BatchCache;
 use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::graph::{synth_delta_stream, DynamicGraph, GraphView};
 use ibmb::partition::metis::{partition_graph, MetisConfig};
+use ibmb::ppr::incremental::{push_ppr_state, refresh_ppr_state};
 use ibmb::ppr::power::{batch_ppr, PowerConfig};
 use ibmb::ppr::push::{push_ppr, PushConfig, PushWorkspace};
 use ibmb::scheduler::{
@@ -215,6 +217,91 @@ fn prop_ppr_mass_bounds() {
             mass > 0.5 && mass <= 1.0 + 1e-3,
             "seed {seed}: power mass {mass}"
         );
+    }
+}
+
+#[test]
+fn prop_incremental_ppr_matches_full_recompute() {
+    // Invariant (DESIGN.md §10): repairing a stored push state with
+    // the residual-correction rule and re-draining on the new graph
+    // agrees with recomputing PPR from scratch on the new graph, up to
+    // the push tolerance — for any graph and any random delta.
+    let mut master = Rng::new(0x0E17A);
+    let cfg = PushConfig {
+        alpha: 0.25,
+        epsilon: 1e-5,
+        max_sweeps: 300,
+    };
+    for case in 0..4 {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let ds = random_dataset(&mut rng);
+        let n = ds.graph.num_nodes();
+        let mut ws = PushWorkspace::new(n);
+        let roots: Vec<u32> =
+            (0..5).map(|_| rng.next_below(n) as u32).collect();
+        let states: Vec<_> = roots
+            .iter()
+            .map(|&s| push_ppr_state(&ds.graph, s, &cfg, &mut ws))
+            .collect();
+
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        let delta = synth_delta_stream(
+            &ds.graph,
+            &[],
+            1,
+            10 + rng.next_below(40),
+            rng.next_below(3),
+            0,
+            ds.num_classes,
+            seed ^ 0xD17A,
+        )
+        .pop()
+        .unwrap();
+        let applied = dg.apply(&delta).unwrap_or_else(|e| {
+            panic!("case {case} seed {seed}: bad delta: {e}")
+        });
+
+        for st in &states {
+            let (inc, l1) =
+                refresh_ppr_state(&dg, st, &applied, &cfg, &mut ws);
+            assert!(
+                l1.is_finite() && l1 >= 0.0,
+                "case {case} seed {seed}: l1 {l1}"
+            );
+            let full = push_ppr_state(&dg, st.root, &cfg, &mut ws);
+            let mut inc_p = std::collections::HashMap::new();
+            for (i, &v) in inc.nodes.iter().enumerate() {
+                inc_p.insert(v, inc.p[i]);
+            }
+            let mut full_p = std::collections::HashMap::new();
+            for (i, &v) in full.nodes.iter().enumerate() {
+                full_p.insert(v, full.p[i]);
+            }
+            let keys: HashSet<u32> =
+                inc_p.keys().chain(full_p.keys()).copied().collect();
+            for v in keys {
+                let a = inc_p.get(&v).copied().unwrap_or(0.0);
+                let b = full_p.get(&v).copied().unwrap_or(0.0);
+                // ACL-style bound: each estimate is within
+                // eps * deg(v) of the true new-graph PPR, plus
+                // float-accumulation slack
+                let bound = 10.0 * cfg.epsilon * dg.degree(v) as f32 + 1e-3;
+                assert!(
+                    (a - b).abs() < bound,
+                    "case {case} seed {seed} root {} node {v}: \
+                     inc {a} vs full {b} (bound {bound})",
+                    st.root
+                );
+            }
+            // p + r mass is conserved by correction and pushes alike
+            let mass = inc.total_mass() + inc.residual_mass();
+            assert!(
+                (mass - 1.0).abs() < 2e-3,
+                "case {case} seed {seed} root {}: p+r mass {mass}",
+                st.root
+            );
+        }
     }
 }
 

@@ -1,0 +1,223 @@
+//! End-to-end tests of the dynamic-update subsystem (DESIGN.md §10):
+//! delta application on the overlay, the serve-path invalidation
+//! cascade (router, plan epochs, results memo), and the mid-serve
+//! smoke the CI gate runs against a real delta stream.
+
+use std::time::Duration;
+
+use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::graph::{synth_delta_stream, GraphDelta};
+use ibmb::serve::{
+    DynamicServeSession, Route, ServeConfig, Skew, UpdateConfig,
+};
+
+fn session(results_cache_bytes: usize) -> DynamicServeSession {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 77);
+    let cfg = ServeConfig {
+        clients: 8,
+        shards: 2,
+        results_cache_bytes,
+        flush_window: Duration::from_micros(200),
+        seed: 7,
+        ..Default::default()
+    };
+    let eval = ds.splits.train.clone();
+    DynamicServeSession::prepare(ds, &eval, &cfg, &UpdateConfig::default())
+}
+
+#[test]
+fn fifty_edge_delta_mid_serve_keeps_answering() {
+    // the CI smoke, as a deterministic in-process assertion
+    let mut s = session(1 << 20);
+    let eval = s.ds.splits.train.clone();
+    let before = s.serve_segment(&eval, Skew::Zipf(1.2), 40).unwrap();
+    assert_eq!(before.executed_queries + before.cache_hits, 40);
+
+    let delta = synth_delta_stream(
+        &s.ds.graph,
+        &eval,
+        1,
+        50,
+        0,
+        0,
+        s.ds.num_classes,
+        7,
+    )
+    .pop()
+    .unwrap();
+    let up = s.apply(&delta).unwrap();
+    assert!(up.stale_plans() > 0, "50 focused edges must stale plans");
+    assert!(up.roots_refreshed > 0);
+
+    let after = s.serve_segment(&eval, Skew::Zipf(1.2), 40).unwrap();
+    assert_eq!(
+        after.executed_queries + after.cache_hits,
+        40,
+        "queries lost across the update"
+    );
+    assert!((0.0..=1.0).contains(&after.accuracy));
+}
+
+#[test]
+fn small_delta_repairs_a_strict_subset_of_plans() {
+    // one edge between two outputs: the delta-local repair must leave
+    // most of the precomputed state untouched
+    let mut s = session(0);
+    let eval = s.ds.splits.train.clone();
+    let plans = s.cache().len();
+    assert!(plans > 1, "need several plans for a fraction to mean much");
+    let up = s
+        .apply(&GraphDelta {
+            add_edges: vec![(eval[0], eval[1])],
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(up.stale_plans() > 0);
+    assert!(
+        up.rebuilt_fraction() < 1.0,
+        "a single edge rebuilt every plan: {up:?}"
+    );
+    assert!(
+        up.stale_plans() < up.plans_total,
+        "a single edge staled every plan: {up:?}"
+    );
+    assert!(up.roots_refreshed < eval.len());
+}
+
+#[test]
+fn router_never_routes_to_a_deleted_plan() {
+    let mut s = session(0);
+    let eval = s.ds.splits.train.clone();
+
+    // a cold node picks up an id, then its neighborhood changes
+    let covered: std::collections::HashSet<u32> =
+        eval.iter().copied().collect();
+    let cold_node = (0..s.ds.graph.num_nodes() as u32)
+        .find(|u| !covered.contains(u))
+        .expect("tiny split leaves cold nodes");
+    let old_cold_id = match s.setup.router.route(cold_node) {
+        Route::Cold { id } => id,
+        other => panic!("expected cold, got {other:?}"),
+    };
+
+    let delta = GraphDelta {
+        add_edges: vec![(cold_node, eval[0]), (eval[1], eval[2])],
+        ..Default::default()
+    };
+    let up = s.apply(&delta).unwrap();
+    assert!(up.cold_ids_dropped >= 1, "touched cold id must drop");
+    assert!(up.router_invalidated >= up.plans_rebuilt, "{up:?}");
+
+    // the deleted cold plan id is never handed out again
+    match s.setup.router.route(cold_node) {
+        Route::Cold { id } => assert_ne!(id, old_cold_id),
+        other => panic!("expected cold, got {other:?}"),
+    }
+
+    // warm routing stays total and consistent with the rebuilt cache
+    let plans = s.cache().len();
+    for &u in &eval {
+        match s.setup.router.route(u) {
+            Route::Cached { plan, pos } => {
+                assert!((plan as usize) < plans, "dangling plan id {plan}");
+                assert_eq!(
+                    s.cache().output_nodes(plan as usize)[pos as usize],
+                    u,
+                    "output {u} routed to a plan that does not own it"
+                );
+            }
+            Route::Cold { .. } => {
+                panic!("output {u} lost warm routing after the update")
+            }
+        }
+    }
+}
+
+#[test]
+fn post_update_reads_never_serve_pre_delta_logits() {
+    let mut s = session(1 << 20);
+    let eval = s.ds.splits.train.clone();
+    // sequential repeats of one node: one execution, then memo hits
+    let node = [eval[0]];
+    let cfg_probe = |s: &mut DynamicServeSession| {
+        s.serve_segment(&node, Skew::Uniform, 10).unwrap()
+    };
+    let warm = cfg_probe(&mut s);
+    assert!(warm.cache_hits > 0, "memo never engaged: {warm:?}");
+
+    // an edge incident to the queried node's plan outputs goes in;
+    // the plan's epoch moves and its memo entry must die with it
+    let delta = GraphDelta {
+        add_edges: vec![(eval[0], eval[1])],
+        ..Default::default()
+    };
+    let up = s.apply(&delta).unwrap();
+    assert!(up.stale_plans() > 0);
+    assert!(up.memo_dropped > 0, "stale memo entry survived: {up:?}");
+
+    let fresh = cfg_probe(&mut s);
+    assert!(
+        fresh.executions >= 1,
+        "post-update segment was served entirely from the pre-delta \
+         memo: {fresh:?}"
+    );
+}
+
+#[test]
+fn feature_update_invalidates_serving_state_without_topology_change() {
+    let mut s = session(1 << 20);
+    let eval = s.ds.splits.train.clone();
+    let edges_before = s.ds.graph.num_edges();
+    let target = eval[0];
+    let mut probe = vec![0.0f32; s.ds.feat_dim];
+    s.ds.node_features_into(target, &mut probe);
+
+    let up = s
+        .apply(&GraphDelta {
+            feature_updates: vec![target],
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(s.ds.graph.num_edges(), edges_before, "topology changed");
+    assert_eq!(up.plans_rebuilt, 0);
+    assert!(up.plans_patched > 0, "feature epoch must stale its plans");
+
+    let mut after = vec![0.0f32; s.ds.feat_dim];
+    s.ds.node_features_into(target, &mut after);
+    assert_ne!(probe, after, "feature update did not change features");
+    // other nodes are bit-identical
+    let other = eval[1];
+    let mut a = vec![0.0f32; s.ds.feat_dim];
+    let mut b = vec![0.0f32; s.ds.feat_dim];
+    s.ds.node_features_into(other, &mut a);
+    let up2 = s
+        .apply(&GraphDelta {
+            feature_updates: vec![target],
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(up2.epoch, 2);
+    s.ds.node_features_into(other, &mut b);
+    assert_eq!(a, b, "unrelated node's features drifted");
+}
+
+#[test]
+fn appended_nodes_become_serveable_via_cold_path() {
+    let mut s = session(0);
+    let eval = s.ds.splits.train.clone();
+    let n0 = s.ds.graph.num_nodes();
+    let up = s
+        .apply(&GraphDelta {
+            add_node_labels: vec![1, 2],
+            add_edges: vec![(n0 as u32, eval[0]), (n0 as u32 + 1, eval[1])],
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(up.added_nodes, 2);
+    assert_eq!(s.ds.graph.num_nodes(), n0 + 2);
+    assert_eq!(s.ds.labels.len(), n0 + 2);
+    let pop = [n0 as u32, n0 as u32 + 1];
+    let r = s.serve_segment(&pop, Skew::Uniform, 8).unwrap();
+    assert_eq!(r.executed_queries + r.cache_hits, 8);
+    assert!(r.cold_routes > 0, "new nodes must take the cold path");
+}

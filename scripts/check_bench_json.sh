@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Validate every BENCH_*.json in the repo root: well-formed JSON (the
+# crate's own strict parser) carrying the per-bench required keys, via
+# `ibmb check-bench`. Bench-emitting PRs therefore cannot silently
+# break the perf trajectory by dropping or renaming a recorded metric.
+# No-op (success) when no bench JSONs exist yet — benches are run out
+# of band, not in CI.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+shopt -s nullglob
+files=(BENCH_*.json)
+shopt -u nullglob
+
+if [ ${#files[@]} -eq 0 ]; then
+    echo "check_bench_json: no BENCH_*.json present, skipping"
+    exit 0
+fi
+
+cargo run --release --quiet --bin ibmb -- check-bench "${files[@]}"
