@@ -49,6 +49,33 @@ printf '%s\n' "$smoke_out" | grep -Eq 'stale_plans=[1-9][0-9]*' || {
     exit 1
 }
 
+echo "== zero-quiesce smoke (deltas applied mid-traffic, no pause) =="
+# Same pinned seed; --live-updates feeds a background applier while one
+# continuous closed loop serves. The CLI itself asserts every query was
+# answered; the greps pin the headline invariants: zero dropped
+# queries, both deltas applied, and monotone snapshot epochs.
+live_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 2 --clients 8 --queries 150 --window-us 300 \
+    --seed 7 --results-cache-bytes 1048576 \
+    --live-updates synth --update-batches 2 --update-edges 50)
+printf '%s\n' "$live_out"
+printf '%s\n' "$live_out" | grep -q 'across 2 live updates' || {
+    echo "live smoke FAILED: expected 2 live updates applied" >&2
+    exit 1
+}
+printf '%s\n' "$live_out" | grep -q 'dropped=0' || {
+    echo "live smoke FAILED: queries were dropped mid-update" >&2
+    exit 1
+}
+printf '%s\n' "$live_out" | grep -q 'epochs monotone (final epoch 2' || {
+    echo "live smoke FAILED: snapshot epochs not monotone to 2" >&2
+    exit 1
+}
+printf '%s\n' "$live_out" | grep -Eq 'stale_plans=[1-9][0-9]*' || {
+    echo "live smoke FAILED: expected stale_plans > 0" >&2
+    exit 1
+}
+
 echo "== bench JSON validation (BENCH_*.json, when present) =="
 ./scripts/check_bench_json.sh
 

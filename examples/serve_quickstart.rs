@@ -1,19 +1,24 @@
 //! Serving quickstart: stand the online inference service up on a
 //! tiny synthetic dataset, fire a handful of closed-loop queries at
-//! it, and print the latency/coalescing stats.
+//! it, apply a live graph delta with zero serving pause, and print
+//! the latency/coalescing stats.
 //!
 //! This is the smallest end-to-end tour of the `serve` subsystem
-//! (DESIGN.md §9): node-wise IBMB plans the serveable set once, the
-//! router inverts output node → plan, concurrent queries coalesce in
+//! (DESIGN.md §9 and §11): node-wise IBMB plans the serveable set
+//! once, everything the query path reads is bundled into an immutable
+//! epoch snapshot behind a swap cell, concurrent queries coalesce in
 //! the microbatch queue, and two executor shards answer them with the
-//! CPU reference forward pass — no AOT artifacts needed.
+//! CPU reference forward pass — no AOT artifacts needed. A graph
+//! delta is applied by *building the next snapshot off to the side*
+//! and publishing it with one pointer swap; serving never stops.
 //!
 //! Run with: `cargo run --release --example serve_quickstart`
 
 use std::time::Duration;
 
 use ibmb::datasets::{sbm, DatasetSpec};
-use ibmb::serve::{self, ServeConfig, Skew};
+use ibmb::graph::GraphDelta;
+use ibmb::serve::{self, DynamicServeSession, ServeConfig, Skew, UpdateConfig};
 
 fn main() -> anyhow::Result<()> {
     let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 11);
@@ -34,17 +39,21 @@ fn main() -> anyhow::Result<()> {
     };
     // the train split is the serveable set; anything else cold-paths
     let eval = ds.splits.train.clone();
-    let mut setup = serve::prepare(&ds, &eval, &cfg);
+    let mut session =
+        DynamicServeSession::prepare(ds, &eval, &cfg, &UpdateConfig::default());
+    let state = session.state();
     println!(
-        "prepared {} plans ({} KiB arena), bucket n{}, model {}",
-        setup.cache.len(),
-        setup.cache.memory_bytes() / 1024,
-        setup.meta.n_pad,
-        setup.meta.id
+        "prepared {} plans ({} KiB payloads), bucket n{}, model {} \
+         (epoch {})",
+        state.cache.len(),
+        state.cache.memory_bytes() / 1024,
+        state.meta.n_pad,
+        state.meta.id,
+        state.epoch
     );
+    drop(state);
 
-    let report =
-        serve::serve_closed_loop(&ds, &mut setup, &eval, Skew::Zipf(1.2), &cfg)?;
+    let report = session.serve_segment(&eval, Skew::Zipf(1.2), cfg.queries)?;
     println!(
         "served {} queries in {:.3}s ({:.0} qps)",
         report.queries, report.wall_s, report.qps
@@ -63,5 +72,37 @@ fn main() -> anyhow::Result<()> {
         report.cache_hit_rate * 100.0,
         report.shard_queries
     );
+
+    // a graph delta: the applier builds the next snapshot (only the
+    // touched plan buckets are new allocations) and publishes it with
+    // a single pointer swap — no serving pause, and the zero-quiesce
+    // path (`ibmb serve --live-updates`) runs this same apply on a
+    // background thread mid-traffic
+    let delta = GraphDelta {
+        add_edges: vec![(eval[0], eval[1])],
+        ..Default::default()
+    };
+    let up = session.apply(&delta)?;
+    println!(
+        "delta applied: epoch {} — {} of {} plans refreshed, {} buckets \
+         repacked, the rest pointer-shared with the old snapshot",
+        up.epoch,
+        up.stale_plans(),
+        up.plans_total,
+        up.buckets_patched
+    );
+    let fresh = session.serve_segment(&eval, Skew::Zipf(1.2), 24)?;
+    println!(
+        "post-delta: {} queries at epoch {} ({} memo hits survived the \
+         epoch sweep)",
+        fresh.queries, fresh.final_epoch, fresh.cache_hits
+    );
+
+    // the one-shot static path is still available when the graph
+    // never changes:
+    let ds2 = sbm::generate(&DatasetSpec::tiny_for_tests(), 11);
+    let mut setup = serve::prepare(ds2, &eval, &cfg);
+    let r = serve::serve_closed_loop(&mut setup, &eval, Skew::Uniform, &cfg)?;
+    println!("static deployment: {:.0} qps at epoch {}", r.qps, r.final_epoch);
     Ok(())
 }

@@ -59,12 +59,9 @@ fn main() -> anyhow::Result<()> {
         queries,
         clients
     );
-    let mut setup = serve::prepare(&ds, &eval, &base);
-    println!(
-        "{} plans cached, bucket n{}",
-        setup.cache.len(),
-        setup.meta.n_pad
-    );
+    let mut setup = serve::prepare(ds.clone(), &eval, &base);
+    let plans = setup.state().cache.len();
+    println!("{} plans cached, bucket n{}", plans, setup.state().meta.n_pad);
 
     let mut records: Vec<RunRecord> = Vec::new();
     let mut table = Table::new(&[
@@ -84,7 +81,7 @@ fn main() -> anyhow::Result<()> {
                 ..base.clone()
             };
             let r =
-                serve::serve_closed_loop(&ds, &mut setup, &eval, skew, &cfg)?;
+                serve::serve_closed_loop(&mut setup, &eval, skew, &cfg)?;
             let label = format!("{} s{}", skew.label(), shards);
             table.row(&[
                 label.clone(),
@@ -121,7 +118,7 @@ fn main() -> anyhow::Result<()> {
         ..base.clone()
     };
     let skew = Skew::Zipf(args.get_f64("zipf-s", 1.2));
-    let r = serve::serve_closed_loop(&ds, &mut setup, &eval, skew, &cfg)?;
+    let r = serve::serve_closed_loop(&mut setup, &eval, skew, &cfg)?;
     let label = format!("{} s2 +memo", skew.label());
     table.row(&[
         label.clone(),
@@ -163,7 +160,7 @@ fn main() -> anyhow::Result<()> {
         ("dataset".into(), Json::Str(ds.name.clone())),
         ("nodes".into(), Json::Num(ds.graph.num_nodes() as f64)),
         ("eval_nodes".into(), Json::Num(eval.len() as f64)),
-        ("plans".into(), Json::Num(setup.cache.len() as f64)),
+        ("plans".into(), Json::Num(plans as f64)),
         ("queries".into(), Json::Num(queries as f64)),
         ("clients".into(), Json::Num(clients as f64)),
         (

@@ -1,15 +1,21 @@
 //! Dynamic-update benchmark: incremental PPR refresh + staleness-
-//! tracked replan vs. full replanning, as a function of delta size.
-//! Emits `BENCH_updates.json` recording refresh latency and the
-//! fraction of plans rebuilt — the headline claim of DESIGN.md §10 is
-//! that small deltas repair a small, delta-local slice of the
-//! precomputed state instead of re-running preprocessing.
+//! tracked replan vs. full replanning, as a function of delta size,
+//! plus the **p99-under-churn** head-to-head — quiesced (deltas
+//! applied inline on the serving control thread) vs. zero-quiesce
+//! (background applier publishing epoch snapshots, DESIGN.md §11) vs.
+//! a no-churn baseline. Emits `BENCH_updates.json` recording refresh
+//! latency, the fraction of plans rebuilt, and the churn series — the
+//! headline claims are that small deltas repair a small, delta-local
+//! slice of the precomputed state, and that snapshot swaps keep tail
+//! latency under churn near the no-churn baseline while inline
+//! application spikes it.
 //!
 //! Run: `cargo bench --bench updates` (`--full` for the bigger graph;
-//! `--sizes 8,32,128 --l1-tol F --seed N` to override).
+//! `--sizes 8,32,128 --l1-tol F --seed N --churn-queries N
+//! --churn-batches N --churn-edges N` to override).
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use ibmb::batching::refresh::{DynamicPlanSet, RefreshConfig};
 use ibmb::bench_harness::Table;
@@ -17,6 +23,10 @@ use ibmb::cli::Args;
 use ibmb::config::preset_for;
 use ibmb::datasets::{sbm, spec_by_name};
 use ibmb::graph::{synth_delta_stream, DynamicGraph};
+use ibmb::serve::{
+    serve_with_churn, Churn, DynamicServeSession, ServeConfig, Skew,
+    UpdateConfig,
+};
 use ibmb::util::json::{to_string, Json};
 use ibmb::util::Rng;
 
@@ -164,6 +174,137 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- p99 under churn: quiesced vs zero-quiesce vs no churn ----
+    struct ChurnRecord {
+        mode: &'static str,
+        qps: f64,
+        p50_ms: f64,
+        p99_ms: f64,
+        max_ms: f64,
+        updates_applied: usize,
+        final_epoch: u64,
+        snapshot_swaps: u64,
+    }
+    let churn_queries = args.get_usize("churn-queries", 600);
+    let churn_batches = args.get_usize("churn-batches", 3);
+    let churn_edges = args.get_usize("churn-edges", 64);
+    let scfg = ServeConfig {
+        shards: 2,
+        clients: args.get_usize("churn-clients", 24),
+        queries: churn_queries,
+        flush_window: Duration::from_micros(args.get_u64("window-us", 500)),
+        results_cache_bytes: 1 << 20,
+        seed,
+        ..Default::default()
+    };
+    let ucfg = UpdateConfig { l1_tol };
+    let churn_deltas = synth_delta_stream(
+        &ds.graph,
+        &eval,
+        churn_batches,
+        churn_edges,
+        0,
+        0,
+        ds.num_classes,
+        seed ^ 0xC0,
+    );
+    // identical deltas fire at identical completed-count triggers in
+    // both modes; only *where* the apply runs differs
+    type Trigger = (u64, ibmb::graph::GraphDelta);
+    let triggered = |deltas: &[ibmb::graph::GraphDelta]| -> Vec<Trigger> {
+        deltas
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                (
+                    (churn_queries * (i + 1) / (deltas.len() + 1)) as u64,
+                    d.clone(),
+                )
+            })
+            .collect()
+    };
+    let mut churn_records: Vec<ChurnRecord> = Vec::new();
+    let mut churn_table = Table::new(&[
+        "mode",
+        "qps",
+        "p50 (ms)",
+        "p99 (ms)",
+        "max (ms)",
+        "updates",
+        "epoch",
+    ]);
+    for mode in ["baseline", "quiesced", "zero_quiesce"] {
+        let mut session =
+            DynamicServeSession::prepare(ds.clone(), &eval, &scfg, &ucfg);
+        let churn = match mode {
+            "baseline" => None,
+            "quiesced" => Some(Churn::Inline {
+                applier: &mut session.applier,
+                deltas: triggered(&churn_deltas),
+            }),
+            _ => Some(Churn::Background {
+                applier: &mut session.applier,
+                deltas: triggered(&churn_deltas),
+            }),
+        };
+        let (r, ups) = serve_with_churn(
+            &mut session.setup,
+            &eval,
+            Skew::Zipf(1.2),
+            &scfg,
+            &mut session.memo,
+            churn,
+        )?;
+        assert_eq!(
+            r.executed_queries + r.cache_hits,
+            churn_queries as u64,
+            "{mode}: dropped queries"
+        );
+        churn_table.row(&[
+            mode.to_string(),
+            format!("{:.0}", r.qps),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.2}", r.max_ms),
+            format!("{}", ups.len()),
+            format!("{}", r.final_epoch),
+        ]);
+        churn_records.push(ChurnRecord {
+            mode,
+            qps: r.qps,
+            p50_ms: r.p50_ms,
+            p99_ms: r.p99_ms,
+            max_ms: r.max_ms,
+            updates_applied: ups.len(),
+            final_epoch: r.final_epoch,
+            snapshot_swaps: r.snapshot_swaps,
+        });
+    }
+    let p99_of = |mode: &str| {
+        churn_records
+            .iter()
+            .find(|r| r.mode == mode)
+            .map(|r| r.p99_ms)
+            .unwrap_or(0.0)
+    };
+    let (base_p99, zero_p99, quiesced_p99) = (
+        p99_of("baseline"),
+        p99_of("zero_quiesce"),
+        p99_of("quiesced"),
+    );
+    println!(
+        "churn p99: baseline {base_p99:.2}ms, zero-quiesce {zero_p99:.2}ms \
+         ({:.2}x), quiesced {quiesced_p99:.2}ms ({:.2}x)",
+        zero_p99 / base_p99.max(1e-9),
+        quiesced_p99 / base_p99.max(1e-9)
+    );
+    if zero_p99 > 2.0 * base_p99 {
+        eprintln!(
+            "WARNING: zero-quiesce p99 {zero_p99:.2}ms exceeds 2x the \
+             no-churn baseline {base_p99:.2}ms"
+        );
+    }
+
     let json = Json::Obj(BTreeMap::from([
         ("bench".into(), Json::Str("updates".into())),
         ("dataset".into(), Json::Str(ds.name.clone())),
@@ -221,9 +362,58 @@ fn main() -> anyhow::Result<()> {
             ),
         ),
     ]));
+    let json = match json {
+        Json::Obj(mut m) => {
+            m.insert(
+                "churn".into(),
+                Json::Arr(
+                    churn_records
+                        .iter()
+                        .map(|r| {
+                            Json::Obj(BTreeMap::from([
+                                (
+                                    "mode".into(),
+                                    Json::Str(r.mode.to_string()),
+                                ),
+                                ("qps".into(), Json::Num(r.qps)),
+                                ("p50_ms".into(), Json::Num(r.p50_ms)),
+                                ("p99_ms".into(), Json::Num(r.p99_ms)),
+                                ("max_ms".into(), Json::Num(r.max_ms)),
+                                (
+                                    "updates_applied".into(),
+                                    Json::Num(r.updates_applied as f64),
+                                ),
+                                (
+                                    "final_epoch".into(),
+                                    Json::Num(r.final_epoch as f64),
+                                ),
+                                (
+                                    "snapshot_swaps".into(),
+                                    Json::Num(r.snapshot_swaps as f64),
+                                ),
+                            ]))
+                        })
+                        .collect(),
+                ),
+            );
+            m.insert(
+                "churn_queries".into(),
+                Json::Num(churn_queries as f64),
+            );
+            m.insert(
+                "churn_batches".into(),
+                Json::Num(churn_batches as f64),
+            );
+            m.insert("churn_edges".into(), Json::Num(churn_edges as f64));
+            Json::Obj(m)
+        }
+        other => other,
+    };
     let out_path = args.get_or("out", "BENCH_updates.json").to_string();
     std::fs::write(&out_path, to_string(&json))?;
     println!("wrote {out_path}");
     table.print("updates — incremental refresh vs full replan by delta size");
+    churn_table
+        .print("updates — p99 under churn: quiesced vs zero-quiesce swap");
     Ok(())
 }

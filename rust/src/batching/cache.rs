@@ -12,6 +12,8 @@
 //! plan once, the cache streams those plans through the ring prefetcher
 //! every epoch.
 
+use std::sync::Arc;
+
 use super::batch::{BatchPlan, DenseBatch};
 use crate::datasets::Dataset;
 
@@ -161,6 +163,179 @@ impl BatchCache {
     }
 }
 
+/// One plan's packed payload: the per-bucket unit of structural
+/// sharing in a [`CowCache`]. Edge endpoints are pre-split into
+/// parallel arrays (the executor builds a
+/// [`crate::inference::fullgraph::SparseGraphRef`] from slices with no
+/// per-query work), mirroring the [`BatchCache`] arena views.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanPayload {
+    /// Plan node list (global ids, outputs first).
+    pub nodes: Vec<u32>,
+    pub num_outputs: usize,
+    /// Edge sources (local ids), parallel to `edge_dst` / `weights`.
+    pub edge_src: Vec<u32>,
+    pub edge_dst: Vec<u32>,
+    pub weights: Vec<f32>,
+}
+
+impl PlanPayload {
+    pub fn from_plan(b: &BatchPlan) -> PlanPayload {
+        debug_assert!(b.validate().is_ok());
+        let (edge_src, edge_dst): (Vec<u32>, Vec<u32>) =
+            b.edges.iter().copied().unzip();
+        PlanPayload {
+            nodes: b.nodes.clone(),
+            num_outputs: b.num_outputs,
+            edge_src,
+            edge_dst,
+            weights: b.weights.clone(),
+        }
+    }
+
+    pub fn to_plan(&self) -> BatchPlan {
+        BatchPlan {
+            nodes: self.nodes.clone(),
+            num_outputs: self.num_outputs,
+            edges: self
+                .edge_src
+                .iter()
+                .zip(&self.edge_dst)
+                .map(|(&s, &d)| (s, d))
+                .collect(),
+            weights: self.weights.clone(),
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes.len() * 4
+            + self.edge_src.len() * 4
+            + self.edge_dst.len() * 4
+            + self.weights.len() * 4
+    }
+}
+
+/// Copy-on-write plan store: per-plan `Arc<PlanPayload>` buckets, so
+/// cloning the whole store is `len()` pointer bumps and a patch copies
+/// *only the touched buckets* — the plan-cache half of the serving
+/// snapshot contract (DESIGN.md §11). Accessors mirror [`BatchCache`];
+/// the flat arena cache remains the training/epoch-scan layout, the
+/// cow store is the layout serving snapshots share across epochs.
+#[derive(Debug, Clone, Default)]
+pub struct CowCache {
+    plans: Vec<Arc<PlanPayload>>,
+}
+
+impl CowCache {
+    pub fn from_plans(plans: &[BatchPlan]) -> CowCache {
+        CowCache {
+            plans: plans
+                .iter()
+                .map(|b| Arc::new(PlanPayload::from_plan(b)))
+                .collect(),
+        }
+    }
+
+    /// Re-bucket a flat arena cache (e.g. one reloaded from disk).
+    pub fn from_cache(cache: &BatchCache) -> CowCache {
+        CowCache {
+            plans: (0..cache.len())
+                .map(|i| {
+                    Arc::new(PlanPayload {
+                        nodes: cache.batch_nodes(i).to_vec(),
+                        num_outputs: cache.num_outputs(i),
+                        edge_src: cache.edge_src_of(i).to_vec(),
+                        edge_dst: cache.edge_dst_of(i).to_vec(),
+                        weights: cache.edge_weights_of(i).to_vec(),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Flatten into a contiguous [`BatchCache`] (persistence path).
+    pub fn to_batch_cache(&self) -> BatchCache {
+        let plans: Vec<BatchPlan> =
+            self.plans.iter().map(|p| p.to_plan()).collect();
+        BatchCache::build(&plans)
+    }
+
+    /// Structural-sharing patch: the new store aliases every untouched
+    /// bucket (pointer copy) and owns fresh payloads only for the
+    /// `replacements`. Plan ids out of range are ignored (the plan set
+    /// is size-stable across deltas — outputs never migrate).
+    pub fn with_patched(
+        &self,
+        replacements: impl IntoIterator<Item = (u32, PlanPayload)>,
+    ) -> CowCache {
+        let mut plans = self.plans.clone();
+        for (pid, payload) in replacements {
+            if let Some(slot) = plans.get_mut(pid as usize) {
+                *slot = Arc::new(payload);
+            }
+        }
+        CowCache { plans }
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    pub fn num_nodes(&self, i: usize) -> usize {
+        self.plans[i].nodes.len()
+    }
+    pub fn num_edges(&self, i: usize) -> usize {
+        self.plans[i].edge_src.len()
+    }
+    pub fn num_outputs(&self, i: usize) -> usize {
+        self.plans[i].num_outputs
+    }
+    pub fn batch_nodes(&self, i: usize) -> &[u32] {
+        &self.plans[i].nodes
+    }
+    pub fn output_nodes(&self, i: usize) -> &[u32] {
+        &self.plans[i].nodes[..self.plans[i].num_outputs]
+    }
+    pub fn edge_src_of(&self, i: usize) -> &[u32] {
+        &self.plans[i].edge_src
+    }
+    pub fn edge_dst_of(&self, i: usize) -> &[u32] {
+        &self.plans[i].edge_dst
+    }
+    pub fn edge_weights_of(&self, i: usize) -> &[f32] {
+        &self.plans[i].weights
+    }
+
+    pub fn to_plan(&self, i: usize) -> BatchPlan {
+        self.plans[i].to_plan()
+    }
+
+    /// Largest plan node count — picks the artifact bucket.
+    pub fn max_batch_nodes(&self) -> usize {
+        self.plans.iter().map(|p| p.nodes.len()).max().unwrap_or(0)
+    }
+
+    /// Payload bytes (shared buckets counted once per store).
+    pub fn memory_bytes(&self) -> usize {
+        self.plans.iter().map(|p| p.memory_bytes()).sum::<usize>()
+            + self.plans.len() * std::mem::size_of::<Arc<PlanPayload>>()
+    }
+
+    /// How many buckets this store shares (same allocation) with
+    /// `other` — the structural-sharing meter the snapshot tests
+    /// assert on.
+    pub fn shared_with(&self, other: &CowCache) -> usize {
+        self.plans
+            .iter()
+            .zip(&other.plans)
+            .filter(|(a, b)| Arc::ptr_eq(a, b))
+            .count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,5 +413,54 @@ mod tests {
         // arena holds same payload (+ offsets overhead)
         assert!(cache.memory_bytes() >= loose);
         assert!(cache.memory_bytes() < loose + 64 * (plans.len() + 2));
+    }
+
+    #[test]
+    fn cow_cache_mirrors_flat_cache() {
+        let (_, plans, cache) = build();
+        for cow in [CowCache::from_plans(&plans), CowCache::from_cache(&cache)]
+        {
+            assert_eq!(cow.len(), cache.len());
+            assert_eq!(cow.max_batch_nodes(), cache.max_batch_nodes());
+            for i in 0..cache.len() {
+                assert_eq!(cow.batch_nodes(i), cache.batch_nodes(i));
+                assert_eq!(cow.output_nodes(i), cache.output_nodes(i));
+                assert_eq!(cow.num_outputs(i), cache.num_outputs(i));
+                assert_eq!(cow.edge_src_of(i), cache.edge_src_of(i));
+                assert_eq!(cow.edge_dst_of(i), cache.edge_dst_of(i));
+                assert_eq!(cow.edge_weights_of(i), cache.edge_weights_of(i));
+            }
+        }
+        // roundtrip back to the flat layout is lossless
+        let flat = CowCache::from_plans(&plans).to_batch_cache();
+        for i in 0..cache.len() {
+            assert_eq!(flat.to_plan(i).nodes, cache.to_plan(i).nodes);
+            assert_eq!(flat.to_plan(i).edges, cache.to_plan(i).edges);
+        }
+    }
+
+    #[test]
+    fn patch_copies_only_touched_buckets() {
+        let (_, plans, _) = build();
+        assert!(plans.len() >= 2, "need two plans to patch one");
+        let cow = CowCache::from_plans(&plans);
+        let clone = cow.clone();
+        assert_eq!(
+            clone.shared_with(&cow),
+            cow.len(),
+            "a clone shares every bucket"
+        );
+        let mut replacement = PlanPayload::from_plan(&plans[1]);
+        replacement.weights.iter_mut().for_each(|w| *w *= 2.0);
+        let patched = cow.with_patched([(1u32, replacement)]);
+        assert_eq!(patched.shared_with(&cow), cow.len() - 1);
+        assert_eq!(patched.batch_nodes(0), cow.batch_nodes(0));
+        assert_ne!(patched.edge_weights_of(1), cow.edge_weights_of(1));
+        // out-of-range patches are ignored, not panics
+        let same = cow.with_patched([(
+            u32::MAX,
+            PlanPayload::from_plan(&plans[0]),
+        )]);
+        assert_eq!(same.shared_with(&cow), cow.len());
     }
 }

@@ -1,25 +1,34 @@
-//! Batch-cache disk persistence.
+//! Versioned `IBMBCACH` container: batch-cache, router-index, and
+//! delta-log persistence.
 //!
 //! The paper: "preprocessing rarely needs to be re-run. Instead, its
 //! result can be saved to disk and re-used for training different
-//! models." This module serializes the arena-packed [`BatchCache`] to a
-//! flat binary file so one preprocessing pass serves every model and
-//! every seed. Format (little endian):
+//! models." This module serializes the arena-packed [`BatchCache`] —
+//! and, since format 3, the serving router's inverted output-node →
+//! plan index and dynamic-update delta logs — into one sectioned
+//! binary container, so a cold-started `ibmb serve` skips both the
+//! planning pass *and* the index inversion, and update streams replay
+//! from the same versioned format. Layout (little endian):
 //!
 //! ```text
-//! magic "IBMBCACH" | u64 version (=2)
-//! | u64 batches | u64 nodes | u64 edges
-//! | u64 node_off[batches+1] | u64 edge_off[batches+1]
-//! | u64 num_outputs[batches]
-//! | u32 nodes[nodes] | u32 edge_src[edges] | u32 edge_dst[edges]
-//! | f32 weights[edges]
+//! magic "IBMBCACH" | u64 version (=3) | u64 section_count
+//! then per section: u64 tag | u64 byte_len | payload
+//!
+//! tag 1 = PLANS:   u64 batches | u64 nodes | u64 edges
+//!                  | u64 node_off[batches+1] | u64 edge_off[batches+1]
+//!                  | u64 num_outputs[batches]
+//!                  | u32 nodes[nodes] | u32 edge_src[edges]
+//!                  | u32 edge_dst[edges] | f32 weights[edges]
+//! tag 2 = ROUTER:  u64 n | u64 packed[n]      (router.rs packed form)
+//! tag 3 = DELTALOG: utf-8 text in the graph::delta line grammar
 //! ```
 //!
-//! The version field lets the serving router persist/reload plan
-//! indexes safely across format changes: readers reject files whose
-//! version they do not understand instead of misparsing them. Version
-//! history: 1 = headerless seed format (no version field; now
-//! rejected), 2 = current.
+//! The version field lets readers reject files whose layout they do
+//! not understand instead of misparsing them, and **unknown section
+//! tags are rejected the same way** — a future section is a version
+//! bump, never a silent skip. Version history: 1 = headerless seed
+//! format (no version field; rejected), 2 = single unsectioned plan
+//! payload (rejected — regenerate), 3 = current sectioned container.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -29,61 +38,84 @@ use anyhow::{bail, Context, Result};
 
 use super::batch::BatchPlan;
 use super::cache::BatchCache;
+use crate::graph::delta::{format_delta_log, parse_delta_log, GraphDelta};
 
 const MAGIC: &[u8; 8] = b"IBMBCACH";
 
 /// Current on-disk format version. Bump on any layout change and
 /// keep the history note in the module docs in sync.
-pub const FORMAT_VERSION: u64 = 2;
+pub const FORMAT_VERSION: u64 = 3;
 
-/// Serialize a cache to disk.
-pub fn save(cache: &BatchCache, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(
-        File::create(path).with_context(|| format!("create {path:?}"))?,
-    );
-    w.write_all(MAGIC)?;
+/// Section tags. Readers reject tags they do not know.
+const SECTION_PLANS: u64 = 1;
+const SECTION_ROUTER: u64 = 2;
+const SECTION_DELTA_LOG: u64 = 3;
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn plans_section(cache: &BatchCache) -> Vec<u8> {
     let b = cache.len();
     let total_nodes: usize = (0..b).map(|i| cache.num_nodes(i)).sum();
     let total_edges: usize = (0..b).map(|i| cache.num_edges(i)).sum();
-    for v in [FORMAT_VERSION, b as u64, total_nodes as u64, total_edges as u64] {
-        w.write_all(&v.to_le_bytes())?;
+    let mut buf = Vec::with_capacity(
+        24 + 8 * (3 * b + 2) + 4 * total_nodes + 12 * total_edges,
+    );
+    for v in [b as u64, total_nodes as u64, total_edges as u64] {
+        push_u64(&mut buf, v);
     }
     let mut off = 0u64;
-    w.write_all(&off.to_le_bytes())?;
+    push_u64(&mut buf, off);
     for i in 0..b {
         off += cache.num_nodes(i) as u64;
-        w.write_all(&off.to_le_bytes())?;
+        push_u64(&mut buf, off);
     }
     off = 0;
-    w.write_all(&off.to_le_bytes())?;
+    push_u64(&mut buf, off);
     for i in 0..b {
         off += cache.num_edges(i) as u64;
-        w.write_all(&off.to_le_bytes())?;
+        push_u64(&mut buf, off);
     }
     for i in 0..b {
-        w.write_all(&(cache.num_outputs(i) as u64).to_le_bytes())?;
+        push_u64(&mut buf, cache.num_outputs(i) as u64);
     }
     for i in 0..b {
         for &u in cache.batch_nodes(i) {
-            w.write_all(&u.to_le_bytes())?;
+            buf.extend_from_slice(&u.to_le_bytes());
         }
     }
     // edges straight from the arena slice views (src then dst then
     // weights, per batch order so offsets line up)
     for i in 0..b {
         for &s in cache.edge_src_of(i) {
-            w.write_all(&s.to_le_bytes())?;
+            buf.extend_from_slice(&s.to_le_bytes());
         }
     }
     for i in 0..b {
         for &d in cache.edge_dst_of(i) {
-            w.write_all(&d.to_le_bytes())?;
+            buf.extend_from_slice(&d.to_le_bytes());
         }
     }
     for i in 0..b {
         for &wt in cache.edge_weights_of(i) {
-            w.write_all(&wt.to_le_bytes())?;
+            buf.extend_from_slice(&wt.to_le_bytes());
         }
+    }
+    buf
+}
+
+fn write_container(path: &Path, sections: &[(u64, Vec<u8>)]) -> Result<()> {
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    w.write_all(MAGIC)?;
+    w.write_all(&FORMAT_VERSION.to_le_bytes())?;
+    w.write_all(&(sections.len() as u64).to_le_bytes())?;
+    for (tag, body) in sections {
+        w.write_all(&tag.to_le_bytes())?;
+        w.write_all(&(body.len() as u64).to_le_bytes())?;
+        w.write_all(body)?;
     }
     // Drop would swallow a flush failure (ENOSPC etc.) and report a
     // truncated file as a successful save; flush explicitly.
@@ -91,70 +123,87 @@ pub fn save(cache: &BatchCache, path: &Path) -> Result<()> {
     Ok(())
 }
 
-fn read_u64s(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
-    let mut buf = vec![0u8; n * 8];
-    r.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(8)
-        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+/// Serialize a cache to disk (plan section only).
+pub fn save(cache: &BatchCache, path: &Path) -> Result<()> {
+    write_container(path, &[(SECTION_PLANS, plans_section(cache))])
 }
 
-fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+/// Serialize a cache plus the serving router's packed warm index
+/// (`RouterIndex::to_packed`) so a cold-started server skips the
+/// index inversion.
+pub fn save_with_index(
+    cache: &BatchCache,
+    packed_index: &[u64],
+    path: &Path,
+) -> Result<()> {
+    let mut router = Vec::with_capacity(8 + 8 * packed_index.len());
+    push_u64(&mut router, packed_index.len() as u64);
+    for &p in packed_index {
+        push_u64(&mut router, p);
+    }
+    write_container(
+        path,
+        &[
+            (SECTION_PLANS, plans_section(cache)),
+            (SECTION_ROUTER, router),
+        ],
+    )
 }
 
-/// Load a cache previously written by [`save`].
-pub fn load(path: &Path) -> Result<BatchCache> {
-    let mut r = BufReader::new(
-        File::open(path).with_context(|| format!("open {path:?}"))?,
-    );
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)
-        .with_context(|| format!("{path:?}: truncated (no magic)"))?;
-    if &magic != MAGIC {
-        bail!("{path:?}: bad magic (not an IBMB cache file)");
+/// Serialize a delta stream (the `graph::delta` line grammar) into the
+/// versioned container — `ibmb update --save-log`.
+pub fn save_delta_log(batches: &[GraphDelta], path: &Path) -> Result<()> {
+    let text = format_delta_log(batches);
+    write_container(path, &[(SECTION_DELTA_LOG, text.into_bytes())])
+}
+
+fn take_u64s(buf: &[u8], n: usize) -> Result<(Vec<u64>, &[u8])> {
+    if buf.len() < n * 8 {
+        bail!("truncated section (wanted {} bytes, had {})", n * 8, buf.len());
     }
-    let version = read_u64s(&mut r, 1)
-        .with_context(|| format!("{path:?}: truncated (no version)"))?[0];
-    if version != FORMAT_VERSION {
-        bail!(
-            "{path:?}: unsupported IBMBCACH version {version} \
-             (this build reads version {FORMAT_VERSION}; version-1 \
-             files predate the version field — regenerate the cache)"
-        );
+    let (head, rest) = buf.split_at(n * 8);
+    Ok((
+        head.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        rest,
+    ))
+}
+
+fn take_u32s(buf: &[u8], n: usize) -> Result<(Vec<u32>, &[u8])> {
+    if buf.len() < n * 4 {
+        bail!("truncated section (wanted {} bytes, had {})", n * 4, buf.len());
     }
-    let head = read_u64s(&mut r, 3)
-        .with_context(|| format!("{path:?}: truncated header"))?;
+    let (head, rest) = buf.split_at(n * 4);
+    Ok((
+        head.chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        rest,
+    ))
+}
+
+fn parse_plans_section(body: &[u8]) -> Result<BatchCache> {
+    let (head, rest) = take_u64s(body, 3)?;
     let (b, total_nodes, total_edges) =
         (head[0] as usize, head[1] as usize, head[2] as usize);
-    // Sanity-check the declared counts against the file length BEFORE
-    // sizing any allocation from them, so a corrupt count is a clean
-    // error instead of a multi-petabyte Vec or an OOB slice. The
-    // format has no padding: the expected size is exact.
-    let file_len = std::fs::metadata(path)
-        .with_context(|| format!("{path:?}: stat"))?
-        .len() as u128;
-    let expected: u128 = 8  // magic
-        + 8 // version
-        + 24 // batches/nodes/edges
+    // Sanity-check the declared counts against the section length
+    // BEFORE sizing any allocation from them, so a corrupt count is a
+    // clean error instead of a multi-petabyte Vec or an OOB slice.
+    // The layout has no padding: the expected size is exact.
+    let expected: u128 = 24
         + 8 * (3 * b as u128 + 2) // node_off + edge_off + num_outputs
-        + 4 * total_nodes as u128 // nodes
-        + 12 * total_edges as u128; // edge_src + edge_dst + weights
-    if expected != file_len {
+        + 4 * total_nodes as u128
+        + 12 * total_edges as u128;
+    if expected != body.len() as u128 {
         bail!(
-            "{path:?}: header counts ({b} batches, {total_nodes} nodes, \
-             {total_edges} edges) imply {expected} bytes but the file \
-             has {file_len} (corrupt header)"
+            "plan section counts ({b} batches, {total_nodes} nodes, \
+             {total_edges} edges) imply {expected} bytes but the section \
+             has {} (corrupt header)",
+            body.len()
         );
     }
-    let offsets = read_u64s(&mut r, 2 * (b + 1) + b)
-        .with_context(|| format!("{path:?}: truncated offset tables"))?;
+    let (offsets, rest) = take_u64s(rest, 2 * (b + 1) + b)?;
     let node_off = &offsets[..b + 1];
     let edge_off = &offsets[b + 1..2 * (b + 1)];
     let num_outputs = &offsets[2 * (b + 1)..];
@@ -163,26 +212,21 @@ pub fn load(path: &Path) -> Result<BatchCache> {
         || node_off.last().copied() != Some(total_nodes as u64)
         || edge_off.last().copied() != Some(total_edges as u64)
     {
-        bail!("{path:?}: inconsistent offsets");
+        bail!("inconsistent plan-section offsets");
     }
     if node_off.windows(2).any(|w| w[1] < w[0])
         || edge_off.windows(2).any(|w| w[1] < w[0])
     {
-        bail!("{path:?}: non-monotonic offsets (corrupt file)");
+        bail!("non-monotonic plan-section offsets (corrupt file)");
     }
-    let nodes = read_u32s(&mut r, total_nodes)
-        .with_context(|| format!("{path:?}: truncated node arena"))?;
-    let edge_src = read_u32s(&mut r, total_edges)
-        .with_context(|| format!("{path:?}: truncated edge sources"))?;
-    let edge_dst = read_u32s(&mut r, total_edges)
-        .with_context(|| format!("{path:?}: truncated edge destinations"))?;
-    let mut wbuf = vec![0u8; total_edges * 4];
-    r.read_exact(&mut wbuf)
-        .with_context(|| format!("{path:?}: truncated edge weights"))?;
-    let weights: Vec<f32> = wbuf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
+    let (nodes, rest) = take_u32s(rest, total_nodes)?;
+    let (edge_src, rest) = take_u32s(rest, total_edges)?;
+    let (edge_dst, rest) = take_u32s(rest, total_edges)?;
+    let (wbits, rest) = take_u32s(rest, total_edges)?;
+    if !rest.is_empty() {
+        bail!("{} trailing bytes in plan section", rest.len());
+    }
+    let weights: Vec<f32> = wbits.into_iter().map(f32::from_bits).collect();
 
     // rebuild through BatchPlan (validates ranges on the way)
     let mut batches = Vec::with_capacity(b);
@@ -200,22 +244,159 @@ pub fn load(path: &Path) -> Result<BatchCache> {
             weights: weights[es..ee].to_vec(),
         };
         if let Err(e) = cb.validate() {
-            bail!("{path:?}: batch {i}: {e}");
+            bail!("batch {i}: {e}");
         }
         batches.push(cb);
     }
     Ok(BatchCache::build(&batches))
 }
 
+fn parse_router_section(body: &[u8]) -> Result<Vec<u64>> {
+    let (head, rest) = take_u64s(body, 1)?;
+    let n = head[0] as usize;
+    if rest.len() != n * 8 {
+        bail!(
+            "router section declares {n} entries ({} bytes) but carries {}",
+            n * 8,
+            rest.len()
+        );
+    }
+    let (packed, _) = take_u64s(rest, n)?;
+    Ok(packed)
+}
+
+/// Sections of one parsed container file.
+struct Container {
+    plans: Option<BatchCache>,
+    router: Option<Vec<u64>>,
+    delta_log: Option<Vec<GraphDelta>>,
+}
+
+fn read_container(path: &Path) -> Result<Container> {
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("{path:?}: stat"))?
+        .len();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{path:?}: truncated (no magic)"))?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic (not an IBMB cache file)");
+    }
+    let mut head = [0u8; 16];
+    r.read_exact(&mut head)
+        .with_context(|| format!("{path:?}: truncated header"))?;
+    let version = u64::from_le_bytes(head[..8].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        bail!(
+            "{path:?}: unsupported IBMBCACH version {version} \
+             (this build reads version {FORMAT_VERSION}; older versions \
+             predate the sectioned container — regenerate the file)"
+        );
+    }
+    let nsections = u64::from_le_bytes(head[8..].try_into().unwrap());
+    let mut out = Container {
+        plans: None,
+        router: None,
+        delta_log: None,
+    };
+    let mut consumed = 24u64; // magic + version + count
+    for s in 0..nsections {
+        let mut shead = [0u8; 16];
+        r.read_exact(&mut shead)
+            .with_context(|| format!("{path:?}: truncated section {s}"))?;
+        let tag = u64::from_le_bytes(shead[..8].try_into().unwrap());
+        let len = u64::from_le_bytes(shead[8..].try_into().unwrap());
+        consumed += 16;
+        // bound the declared length by the actual file size before
+        // allocating for it (saturating: a crafted len near u64::MAX
+        // must not wrap the comparison past the guard)
+        if len > file_len.saturating_sub(consumed) {
+            bail!(
+                "{path:?}: section {s} (tag {tag}) declares {len} bytes \
+                 past end of file"
+            );
+        }
+        let mut body = vec![0u8; len as usize];
+        r.read_exact(&mut body)
+            .with_context(|| format!("{path:?}: truncated section {s}"))?;
+        consumed += len;
+        match tag {
+            SECTION_PLANS => {
+                out.plans = Some(
+                    parse_plans_section(&body)
+                        .with_context(|| format!("{path:?}: plan section"))?,
+                );
+            }
+            SECTION_ROUTER => {
+                out.router = Some(
+                    parse_router_section(&body)
+                        .with_context(|| format!("{path:?}: router section"))?,
+                );
+            }
+            SECTION_DELTA_LOG => {
+                let text = String::from_utf8(body).map_err(|_| {
+                    anyhow::anyhow!("{path:?}: delta log is not utf-8")
+                })?;
+                out.delta_log = Some(parse_delta_log(&text).map_err(|e| {
+                    anyhow::anyhow!("{path:?}: delta log: {e}")
+                })?);
+            }
+            // reject-unknown preserved across the format bump: a tag
+            // from the future means a version this reader cannot parse
+            other => bail!("{path:?}: unknown section tag {other}"),
+        }
+    }
+    if consumed != file_len {
+        bail!(
+            "{path:?}: {} trailing bytes after {nsections} sections",
+            file_len - consumed
+        );
+    }
+    Ok(out)
+}
+
+/// Load a cache previously written by [`save`] /
+/// [`save_with_index`].
+pub fn load(path: &Path) -> Result<BatchCache> {
+    load_with_index(path).map(|(cache, _)| cache)
+}
+
+/// Load a cache and, when the file carries one, the packed router
+/// index (validate it with `RouterIndex::from_packed` before use).
+pub fn load_with_index(path: &Path) -> Result<(BatchCache, Option<Vec<u64>>)> {
+    let c = read_container(path)?;
+    let cache = c
+        .plans
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: no plan section"))?;
+    Ok((cache, c.router))
+}
+
+/// Load a delta stream previously written by [`save_delta_log`] —
+/// `ibmb update --load-log`.
+pub fn load_delta_log(path: &Path) -> Result<Vec<GraphDelta>> {
+    read_container(path)?
+        .delta_log
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: no delta-log section"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::batching::{BatchGenerator, NodeWiseIbmb};
+    use crate::batching::{BatchGenerator, CowCache, NodeWiseIbmb};
     use crate::datasets::{sbm, DatasetSpec};
+    use crate::serve::RouterIndex;
     use crate::util::Rng;
 
-    #[test]
-    fn roundtrip_preserves_everything() {
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ibmb_cache_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn build_cache() -> (crate::datasets::Dataset, BatchCache) {
         let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 150);
         let mut gen = NodeWiseIbmb {
             aux_per_output: 6,
@@ -226,9 +407,13 @@ mod tests {
         let mut rng = Rng::new(15);
         let cache =
             BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
-        let dir = std::env::temp_dir().join("ibmb_cache_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("cache.bin");
+        (ds, cache)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let (_, cache) = build_cache();
+        let path = tmp("cache.bin");
         save(&cache, &path).unwrap();
         let loaded = load(&path).unwrap();
         assert_eq!(loaded.len(), cache.len());
@@ -240,17 +425,98 @@ mod tests {
             assert_eq!(a.edges, b.edges);
             assert_eq!(a.weights, b.weights);
         }
+        // a plans-only file reports no router index
+        let (_, idx) = load_with_index(&path).unwrap();
+        assert!(idx.is_none());
         std::fs::remove_file(path).ok();
     }
 
     #[test]
-    fn rejects_corrupt_files() {
-        let dir = std::env::temp_dir().join("ibmb_cache_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.bin");
+    fn router_index_rides_alongside_the_cache() {
+        let (ds, cache) = build_cache();
+        let cow = CowCache::from_cache(&cache);
+        let index = RouterIndex::build(ds.graph.num_nodes(), &cow);
+        let path = tmp("cache_with_index.bin");
+        save_with_index(&cache, &index.to_packed(), &path).unwrap();
+        let (loaded, packed) = load_with_index(&path).unwrap();
+        assert_eq!(loaded.len(), cache.len());
+        let packed = packed.expect("router section present");
+        let back =
+            RouterIndex::from_packed(packed, &CowCache::from_cache(&loaded))
+                .unwrap();
+        assert_eq!(back.coverage(), index.coverage());
+        for u in 0..ds.graph.num_nodes() as u32 {
+            assert_eq!(back.lookup(u), index.lookup(u), "node {u}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn delta_logs_roundtrip_through_the_container() {
+        let batches = vec![
+            GraphDelta {
+                add_edges: vec![(0, 1), (2, 3)],
+                remove_edges: vec![(1, 2)],
+                add_node_labels: vec![4],
+                feature_updates: vec![0],
+            },
+            GraphDelta {
+                add_edges: vec![(3, 0)],
+                ..Default::default()
+            },
+        ];
+        let path = tmp("deltas.bin");
+        save_delta_log(&batches, &path).unwrap();
+        let back = load_delta_log(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].add_edges, batches[0].add_edges);
+        assert_eq!(back[0].remove_edges, batches[0].remove_edges);
+        assert_eq!(back[0].add_node_labels, batches[0].add_node_labels);
+        assert_eq!(back[0].feature_updates, batches[0].feature_updates);
+        assert_eq!(back[1].add_edges, batches[1].add_edges);
+        // a delta-log container is not a plan cache and vice versa
+        assert!(load(&path).is_err());
+        let (_, cache) = build_cache();
+        let cpath = tmp("not_deltas.bin");
+        save(&cache, &cpath).unwrap();
+        assert!(load_delta_log(&cpath).is_err());
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(cpath).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_unknown_and_old_files() {
+        let path = tmp("bad.bin");
         std::fs::write(&path, b"IBMBCACHgarbage").unwrap();
         assert!(load(&path).is_err());
         std::fs::write(&path, b"WRONGMAG").unwrap();
+        assert!(load(&path).is_err());
+        // an old version-2 file is rejected, not misparsed
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(MAGIC);
+        v2.extend_from_slice(&2u64.to_le_bytes());
+        v2.extend_from_slice(&[0u8; 24]);
+        std::fs::write(&path, &v2).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("version 2"), "{err}");
+        // an unknown section tag is rejected, not skipped
+        let mut future = Vec::new();
+        future.extend_from_slice(MAGIC);
+        future.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        future.extend_from_slice(&1u64.to_le_bytes()); // one section
+        future.extend_from_slice(&99u64.to_le_bytes()); // unknown tag
+        future.extend_from_slice(&0u64.to_le_bytes()); // empty body
+        std::fs::write(&path, &future).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("unknown section tag 99"), "{err}");
+        // a section running past end-of-file is a clean error
+        let mut truncated = Vec::new();
+        truncated.extend_from_slice(MAGIC);
+        truncated.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        truncated.extend_from_slice(&1u64.to_le_bytes());
+        truncated.extend_from_slice(&1u64.to_le_bytes()); // PLANS
+        truncated.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        std::fs::write(&path, &truncated).unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(path).ok();
     }

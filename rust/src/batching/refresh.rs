@@ -28,7 +28,7 @@ use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 use super::batch::BatchPlan;
-use super::cache::BatchCache;
+use super::cache::{BatchCache, CowCache, PlanPayload};
 use super::ibmb_node::assemble_plan;
 use crate::graph::delta::AppliedDelta;
 use crate::graph::{induced_subgraph, GraphView};
@@ -223,6 +223,28 @@ impl DynamicPlanSet {
     /// Pack the current plans into a fresh contiguous [`BatchCache`].
     pub fn build_cache(&self) -> BatchCache {
         BatchCache::build(&self.plans)
+    }
+
+    /// Bucket the current plans into a copy-on-write store (the
+    /// serving snapshot's plan cache, DESIGN.md §11).
+    pub fn cow_cache(&self) -> CowCache {
+        CowCache::from_plans(&self.plans)
+    }
+
+    /// Build the *next* snapshot's plan store from the previous one by
+    /// replacing only the `changed` buckets (typically
+    /// [`RefreshReport::changed_plans`]) — every untouched plan is a
+    /// pointer copy, so the per-delta cost scales with the delta, not
+    /// the deployment.
+    pub fn patch_cow(&self, prev: &CowCache, changed: &[u32]) -> CowCache {
+        debug_assert_eq!(
+            prev.len(),
+            self.plans.len(),
+            "plan set is size-stable across deltas"
+        );
+        prev.with_patched(changed.iter().map(|&pid| {
+            (pid, PlanPayload::from_plan(&self.plans[pid as usize]))
+        }))
     }
 
     /// Clamp the node budget for *future* rebuilds (the serving bucket
@@ -517,6 +539,40 @@ mod tests {
         for &pid in &report.changed_plans {
             assert!(set.plans()[pid as usize].nodes.contains(&target));
         }
+    }
+
+    #[test]
+    fn cow_patch_matches_full_rebuild_and_shares_untouched_buckets() {
+        let (ds, mut set) = setup();
+        let before = set.cow_cache();
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        let (a, b) = (ds.splits.train[0], ds.splits.train[2]);
+        let applied = dg
+            .apply(&GraphDelta {
+                add_edges: vec![(a, b)],
+                ..Default::default()
+            })
+            .unwrap();
+        let report = set.apply_delta(&dg, &applied);
+        assert!(!report.changed_plans.is_empty());
+        let patched = set.patch_cow(&before, &report.changed_plans);
+        let full = set.cow_cache();
+        assert_eq!(patched.len(), full.len());
+        for i in 0..full.len() {
+            assert_eq!(patched.batch_nodes(i), full.batch_nodes(i), "{i}");
+            assert_eq!(patched.edge_src_of(i), full.edge_src_of(i), "{i}");
+            assert_eq!(patched.edge_dst_of(i), full.edge_dst_of(i), "{i}");
+            assert_eq!(
+                patched.edge_weights_of(i),
+                full.edge_weights_of(i),
+                "{i}"
+            );
+        }
+        assert_eq!(
+            patched.shared_with(&before),
+            full.len() - report.changed_plans.len(),
+            "every untouched bucket must be pointer-shared"
+        );
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! [`DynamicGraph::compact`] rebases the overlay onto that snapshot.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::csr::{CsrGraph, GraphView};
 use crate::util::Rng;
@@ -99,6 +100,10 @@ pub struct DynamicGraph {
     num_edges: usize,
     inv_sqrt_deg: Vec<f32>,
     epoch: u64,
+    /// Epoch-tagged memo of the last [`Self::snapshot_shared`] — the
+    /// handle the snapshot applier consumes. Invalidated implicitly by
+    /// the tag when `apply` bumps the epoch.
+    snap: Option<(u64, Arc<CsrGraph>)>,
 }
 
 impl DynamicGraph {
@@ -113,6 +118,7 @@ impl DynamicGraph {
             num_edges,
             inv_sqrt_deg,
             epoch: 0,
+            snap: None,
         }
     }
 
@@ -230,6 +236,36 @@ impl DynamicGraph {
             indptr.push(indices.len() as u32);
         }
         CsrGraph::from_csr(indptr, indices)
+    }
+
+    /// Shared snapshot handle: splice once per epoch, then hand out
+    /// `Arc` clones. The update applier calls this once per structural
+    /// delta to build both the published dataset view and (when the
+    /// overlay has grown) the rebase target, without paying for the
+    /// CSR splice twice at the same epoch.
+    pub fn snapshot_shared(&mut self) -> Arc<CsrGraph> {
+        if let Some((epoch, g)) = &self.snap {
+            if *epoch == self.epoch {
+                return g.clone();
+            }
+        }
+        let g = Arc::new(self.snapshot());
+        self.snap = Some((self.epoch, g.clone()));
+        g
+    }
+
+    /// Consume the memoized snapshot handle. The applier calls this
+    /// once the epoch's consumers are done with it, so the splice is
+    /// not retained as an extra full adjacency copy between deltas —
+    /// and a caller holding no other clone gets the `Arc` back
+    /// exclusively, letting it *move* the CSR (e.g. into
+    /// [`Self::rebase`]) instead of cloning it. Stale-epoch memos are
+    /// discarded.
+    pub fn take_snapshot(&mut self) -> Option<Arc<CsrGraph>> {
+        match self.snap.take() {
+            Some((epoch, g)) if epoch == self.epoch => Some(g),
+            _ => None,
+        }
     }
 
     /// Rebase the overlay onto a caller-provided snapshot of the
@@ -538,6 +574,35 @@ mod tests {
             assert_eq!(dg.neighbors(u), &before[u as usize][..]);
             assert_eq!(snap.neighbors(u), &before[u as usize][..]);
         }
+    }
+
+    #[test]
+    fn snapshot_shared_memoizes_per_epoch() {
+        let mut dg = DynamicGraph::new(square());
+        let a = dg.snapshot_shared();
+        let b = dg.snapshot_shared();
+        assert!(Arc::ptr_eq(&a, &b), "same epoch, same allocation");
+        dg.apply(&GraphDelta {
+            add_edges: vec![(0, 2)],
+            ..Default::default()
+        })
+        .unwrap();
+        let c = dg.snapshot_shared();
+        assert!(!Arc::ptr_eq(&a, &c), "epoch moved, fresh splice");
+        assert_eq!(c.neighbors(0), dg.neighbors(0));
+        assert!(c.validate().is_ok());
+        // rebase keeps the view (and thus the memo) coherent
+        dg.rebase((*c).clone());
+        let d = dg.snapshot_shared();
+        assert!(Arc::ptr_eq(&c, &d), "rebase does not change the view");
+        // the applier consumes the memo once the epoch is committed;
+        // the next request re-splices instead of retaining a copy
+        let taken = dg.take_snapshot().expect("memo present");
+        assert!(Arc::ptr_eq(&taken, &d));
+        assert!(dg.take_snapshot().is_none(), "memo consumed");
+        let e = dg.snapshot_shared();
+        assert!(!Arc::ptr_eq(&e, &d), "fresh splice after take");
+        assert_eq!(e.neighbors(0), d.neighbors(0));
     }
 
     #[test]

@@ -44,31 +44,43 @@
 //! API (`xla` crate; an offline stub is vendored under `vendor/xla`) —
 //! Python is never on the request path.
 //!
-//! ## Online serving
+//! ## Online serving on immutable snapshots
 //!
-//! The [`serve`] subsystem (DESIGN.md §9, `ibmb serve`) turns the
-//! offline pipeline into a concurrent inference service: an
-//! influence-routed query router (output node → precomputed plan, with
-//! a top-k-PPR cold path), a microbatch queue that coalesces
-//! concurrent queries to the same plan into one materialize+execute,
+//! The [`serve`] subsystem (DESIGN.md §9 and §11, `ibmb serve`) turns
+//! the offline pipeline into a concurrent inference service whose
+//! entire query path reads one immutable, `Arc`-shared
+//! [`serve::ServeState`] snapshot published through a
+//! [`serve::SwapCell`]: an influence-routed query router (an
+//! immutable output-node → plan index in the snapshot, with a
+//! top-k-PPR cold path), a microbatch queue that coalesces concurrent
+//! queries to the same (plan, epoch) into one materialize+execute,
 //! N executor shards each owning a [`batching::BatchArena`] and
-//! prefetch ring (plans placed by the METIS partition for memory
-//! locality), a byte-bounded LRU memo of plan logits, and p50/p95/p99
-//! latency metrics. `benches/serving.rs` records qps / tail latency /
-//! coalescing factor vs. shard count in `BENCH_serving.json`.
+//! prefetch ring (work placed by METIS partition cells for memory
+//! locality), a byte-bounded, epoch-keyed LRU memo of plan logits,
+//! and p50/p95/p99 latency metrics. `benches/serving.rs` records
+//! qps / tail latency / coalescing factor vs. shard count in
+//! `BENCH_serving.json`; the `IBMBCACH` container persists the plan
+//! cache together with the router index for cold starts
+//! (`ibmb serve --cache/--save-cache`).
 //!
-//! ## Dynamic graph updates
+//! ## Dynamic graph updates, zero-quiesce
 //!
 //! The precomputed state stays fresh under streaming graph changes
-//! (DESIGN.md §10): [`graph::GraphDelta`]s land on the
+//! (DESIGN.md §10–§11): [`graph::GraphDelta`]s land on the
 //! [`graph::DynamicGraph`] overlay, [`ppr::incremental`] repairs the
 //! per-root push states with an exact residual correction local to
 //! the touched edges, [`batching::DynamicPlanSet`] rebuilds only the
 //! plans whose influence drifted past an L1 tolerance (patching the
-//! rest), and [`serve::DynamicServeSession`] cascades the
-//! invalidation through the router, plan epochs, and the results memo
-//! (`ibmb serve --update-stream`, `ibmb update`;
-//! `benches/updates.rs` → `BENCH_updates.json`).
+//! rest), and [`serve::UpdateApplier`] assembles the next snapshot by
+//! structural sharing — only touched plan buckets
+//! ([`batching::CowCache`]) are new allocations — and publishes it
+//! with a single pointer swap, so serving never pauses
+//! (`ibmb serve --live-updates`; the segmented
+//! [`serve::DynamicServeSession`] baseline remains as
+//! `ibmb serve --update-stream`, and `ibmb update` replays delta logs
+//! offline with `--save-log/--load-log` persistence;
+//! `benches/updates.rs` → `BENCH_updates.json`, including the
+//! quiesced-vs-zero-quiesce p99-under-churn series).
 //!
 //! See `rust/DESIGN.md` for the full system inventory and the
 //! experiment index mapping each paper table/figure to a bench target.

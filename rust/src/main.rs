@@ -5,23 +5,30 @@
 //! ibmb infer   --dataset synth-arxiv --model gcn --method "node-wise IBMB"
 //! ibmb serve   --dataset synth-arxiv --shards 2 --queries 2000 --skew zipf
 //! ibmb serve   --dataset synth-arxiv --update-stream synth --update-edges 50
-//! ibmb update  --dataset synth-arxiv --deltas updates.log
+//! ibmb serve   --dataset synth-arxiv --live-updates synth --update-batches 2
+//! ibmb serve   --dataset synth-arxiv --save-cache plans.ibmb
+//! ibmb serve   --dataset synth-arxiv --cache plans.ibmb
+//! ibmb update  --dataset synth-arxiv --deltas updates.log --save-log updates.ibmb
+//! ibmb update  --dataset synth-arxiv --load-log updates.ibmb
 //! ibmb check-bench BENCH_serving.json BENCH_updates.json
 //! ibmb gen-data --dataset synth-arxiv --out data/arxiv.bin
 //! ibmb fig2|fig3|...|table7 [--full] [--dataset ...] [--model ...]
 //! ibmb list    # artifacts + datasets
 //! ```
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use anyhow::Result;
 
+use ibmb::batching::{cache_io, CowCache};
 use ibmb::cli::Args;
 use ibmb::config::ExpScale;
 use ibmb::datasets::ALL_DATASETS;
 use ibmb::experiments::{self, runner};
 use ibmb::graph::{parse_delta_log, synth_delta_stream, GraphDelta};
-use ibmb::serve::{self, ServeConfig, Skew};
+use ibmb::serve::{self, Churn, RouterIndex, ServeConfig, Skew};
 use ibmb::util::json::Json;
 
 fn usage() -> ! {
@@ -33,9 +40,12 @@ fn usage() -> ! {
          serve options: [--shards N] [--clients N] [--queries N] \
          [--skew uniform|zipf] [--zipf-s F] [--window-us N] [--coalesce N] \
          [--results-cache-bytes N] [--results-ttl-ms N] [--cold-aux N] \
-         [--hidden N] [--layers N] [--heads N]\n\
-         update options (serve --update-stream / ibmb update): \
-         [--update-stream FILE|synth] [--deltas FILE|synth] \
+         [--hidden N] [--layers N] [--heads N] \
+         [--cache FILE] [--save-cache FILE]\n\
+         update options (serve --update-stream segments serving, \
+         serve --live-updates applies mid-traffic, ibmb update replays \
+         offline): [--update-stream FILE|synth] [--live-updates FILE|synth] \
+         [--deltas FILE|synth] [--load-log FILE] [--save-log FILE] \
          [--update-batches N] [--update-edges N] [--update-nodes N] \
          [--update-feats N] [--l1-tol F]\n\
          check-bench: ibmb check-bench BENCH_*.json"
@@ -74,7 +84,7 @@ fn print_update_report(i: usize, up: &serve::UpdateReport) {
     println!(
         "update[{i}]: epoch={} touched={} (+{} nodes, {} feats) \
          roots_refreshed={} stale_plans={} (rebuilt={} patched={} of {}) \
-         router_inval={} cold_dropped={} memo_dropped={} \
+         buckets_patched={} index_extended={} \
          refresh {:.2}ms replan {:.2}ms commit {:.2}ms",
         up.epoch,
         up.touched_nodes,
@@ -85,13 +95,54 @@ fn print_update_report(i: usize, up: &serve::UpdateReport) {
         up.plans_rebuilt,
         up.plans_patched,
         up.plans_total,
-        up.router_invalidated,
-        up.cold_ids_dropped,
-        up.memo_dropped,
+        up.buckets_patched,
+        up.index_extended,
         up.refresh_s * 1e3,
         up.replan_s * 1e3,
         up.commit_s * 1e3,
     );
+}
+
+/// File-follow delta tailer for `ibmb serve --live-updates FILE`: poll
+/// the file for newly appended batches (in the `graph::delta` line
+/// grammar) and forward each complete one over a channel, until the
+/// serve loop raises `stop`. Only batches closed by a `---` separator
+/// (or followed by a later batch) are forwarded — a writer caught
+/// mid-append is retried on the next poll.
+fn spawn_delta_tailer(
+    path: String,
+    stop: Arc<AtomicBool>,
+) -> (mpsc::Receiver<GraphDelta>, std::thread::JoinHandle<usize>) {
+    let (tx, rx) = mpsc::channel::<GraphDelta>();
+    let handle = std::thread::spawn(move || {
+        let mut sent = 0usize;
+        loop {
+            let done = stop.load(Ordering::Acquire);
+            let text = std::fs::read_to_string(&path).unwrap_or_default();
+            match parse_delta_log(&text) {
+                Ok(batches) => {
+                    let closed = text.trim_end().ends_with("---");
+                    let complete = if closed || done {
+                        batches.len()
+                    } else {
+                        batches.len().saturating_sub(1)
+                    };
+                    for d in batches.into_iter().take(complete).skip(sent) {
+                        if tx.send(d).is_err() {
+                            return sent;
+                        }
+                        sent += 1;
+                    }
+                }
+                Err(e) => eprintln!("delta tailer: unparsable {path}: {e}"),
+            }
+            if done {
+                return sent;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    });
+    (rx, handle)
 }
 
 /// Required-key validation for `BENCH_*.json` artifacts (the
@@ -127,6 +178,26 @@ fn validate_bench_json(text: &str) -> Result<String, String> {
         }
         "updates" => {
             need(&["dataset", "plans", "l1_tol"])?;
+            // the p99-under-churn series: quiesced (inline apply) vs
+            // zero-quiesce (background applier) vs no-churn baseline
+            let churn = doc
+                .get("churn")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| {
+                    format!("bench {bench:?}: missing array \"churn\"")
+                })?;
+            if churn.is_empty() {
+                return Err(format!("bench {bench:?}: empty \"churn\""));
+            }
+            for (i, run) in churn.iter().enumerate() {
+                for k in ["mode", "p99_ms", "qps", "updates_applied"] {
+                    if run.get(k).is_none() {
+                        return Err(format!(
+                            "bench {bench:?}: churn[{i}] missing key {k:?}"
+                        ));
+                    }
+                }
+            }
             (
                 "runs",
                 &[
@@ -366,8 +437,10 @@ fn main() -> Result<()> {
                 eval.len()
             );
             if let Some(stream) = args.get("update-stream") {
-                // dynamic mode: serve in segments, applying one delta
-                // batch between segments (DESIGN.md §10)
+                // segmented dynamic mode: quiesce serving between
+                // segments and apply one delta batch in the gap
+                // (DESIGN.md §10; the zero-quiesce alternative is
+                // --live-updates)
                 let deltas = delta_stream(stream, &ds, &eval, &args)?;
                 anyhow::ensure!(!deltas.is_empty(), "empty update stream");
                 let ucfg = serve::UpdateConfig {
@@ -379,7 +452,7 @@ fn main() -> Result<()> {
                     "{} plans cached, bucket n{}, {} update batches, \
                      l1_tol {}",
                     session.cache().len(),
-                    session.setup.meta.n_pad,
+                    session.state().meta.n_pad,
                     deltas.len(),
                     ucfg.l1_tol
                 );
@@ -423,19 +496,163 @@ fn main() -> Result<()> {
                 );
                 return Ok(());
             }
-            let mut setup = serve::prepare(&ds, &eval, &cfg);
+            if let Some(stream) = args.get("live-updates") {
+                // zero-quiesce dynamic mode (DESIGN.md §11): one
+                // continuous serving run; a background applier thread
+                // builds and publishes epoch snapshots mid-traffic
+                let ucfg = serve::UpdateConfig {
+                    l1_tol: args.get_f64("l1-tol", 0.05) as f32,
+                };
+                let mut session =
+                    serve::DynamicServeSession::prepare(ds, &eval, &cfg, &ucfg);
+                println!(
+                    "{} plans cached, bucket n{}, live updates from \
+                     {stream:?}, l1_tol {}",
+                    session.cache().len(),
+                    session.state().meta.n_pad,
+                    ucfg.l1_tol
+                );
+                let mut tailer: Option<(
+                    Arc<AtomicBool>,
+                    std::thread::JoinHandle<usize>,
+                )> = None;
+                let churn = if stream == "synth" {
+                    // deterministic triggers: deltas fire as completed
+                    // counts cross evenly spaced thresholds, feeding
+                    // the background applier (CI-reproducible)
+                    let ds_view = session.state().ds.clone();
+                    let deltas = delta_stream("synth", &ds_view, &eval, &args)?;
+                    anyhow::ensure!(!deltas.is_empty(), "empty update stream");
+                    let n = deltas.len();
+                    Churn::Background {
+                        applier: &mut session.applier,
+                        deltas: deltas
+                            .into_iter()
+                            .enumerate()
+                            .map(|(i, d)| {
+                                ((cfg.queries * (i + 1) / (n + 1)) as u64, d)
+                            })
+                            .collect(),
+                    }
+                } else {
+                    // file-follow tailer: apply batches as the file
+                    // grows, on the tailer's clock
+                    let stop = Arc::new(AtomicBool::new(false));
+                    let (rx, handle) =
+                        spawn_delta_tailer(stream.to_string(), stop.clone());
+                    tailer = Some((stop, handle));
+                    Churn::Stream {
+                        applier: &mut session.applier,
+                        rx,
+                    }
+                };
+                let (r, ups) = serve::serve_with_churn(
+                    &mut session.setup,
+                    &eval,
+                    skew,
+                    &cfg,
+                    &mut session.memo,
+                    Some(churn),
+                )?;
+                if let Some((stop, handle)) = tailer {
+                    stop.store(true, Ordering::Release);
+                    let fed = handle.join().unwrap_or(0);
+                    println!("tailer fed {fed} delta batches");
+                }
+                for (i, up) in ups.iter().enumerate() {
+                    print_update_report(i + 1, up);
+                }
+                let answered = r.executed_queries + r.cache_hits;
+                let stale: usize = ups.iter().map(|u| u.stale_plans()).sum();
+                println!(
+                    "live segment: {} queries, {:.0} qps, p50 {:.2}ms \
+                     p99 {:.2}ms, {} memo hits, {} cold, acc {:.1}%",
+                    r.queries,
+                    r.qps,
+                    r.p50_ms,
+                    r.p99_ms,
+                    r.cache_hits,
+                    r.cold_routes,
+                    r.accuracy * 100.0
+                );
+                println!(
+                    "served {} queries across {} live updates: dropped={}, \
+                     epochs monotone (final epoch {}, {} snapshot swaps, \
+                     {} stale plans, {} memo entries swept)",
+                    r.queries,
+                    ups.len(),
+                    r.queries as u64 - answered,
+                    r.final_epoch,
+                    r.snapshot_swaps,
+                    stale,
+                    r.memo_swept
+                );
+                anyhow::ensure!(
+                    answered == r.queries as u64,
+                    "dropped {} queries",
+                    r.queries as u64 - answered
+                );
+                return Ok(());
+            }
+            let save_cache = args.get("save-cache").map(str::to_string);
+            let mut setup = match args.get("cache") {
+                Some(file) => {
+                    // cold start: adopt the persisted plan cache (and
+                    // router index, when the file carries one) instead
+                    // of planning
+                    let path = std::path::Path::new(file);
+                    let (flat, packed) = cache_io::load_with_index(path)?;
+                    let cache = CowCache::from_cache(&flat);
+                    let index = match packed {
+                        Some(p) => Some(
+                            RouterIndex::from_packed(p, &cache).map_err(
+                                |e| anyhow::anyhow!("{file}: router index: {e}"),
+                            )?,
+                        ),
+                        None => None,
+                    };
+                    println!(
+                        "loaded {} plans from {file} ({}, router index {})",
+                        cache.len(),
+                        "IBMBCACH v3",
+                        if index.is_some() {
+                            "reloaded — cold start skips the index build"
+                        } else {
+                            "absent — rebuilding"
+                        }
+                    );
+                    serve::prepare_from_cache(ds, cache, index, &cfg)?
+                }
+                None => serve::prepare(ds, &eval, &cfg),
+            };
+            if let Some(file) = save_cache {
+                let state = setup.state();
+                let path = std::path::Path::new(&file);
+                cache_io::save_with_index(
+                    &state.cache.to_batch_cache(),
+                    &state.index.to_packed(),
+                    path,
+                )?;
+                println!(
+                    "saved {} plans + router index to {file} (IBMBCACH v{})",
+                    state.cache.len(),
+                    cache_io::FORMAT_VERSION
+                );
+            }
+            let state = setup.state();
             println!(
                 "{} plans cached ({} KiB), bucket n{}, {} shard(s), \
                  {} skew, {} clients",
-                setup.cache.len(),
-                setup.cache.memory_bytes() / 1024,
-                setup.meta.n_pad,
+                state.cache.len(),
+                state.cache.memory_bytes() / 1024,
+                state.meta.n_pad,
                 cfg.shards,
                 skew.label(),
                 cfg.clients
             );
+            drop(state);
             let report =
-                serve::serve_closed_loop(&ds, &mut setup, &eval, skew, &cfg)?;
+                serve::serve_closed_loop(&mut setup, &eval, skew, &cfg)?;
             println!(
                 "served {} queries in {:.3}s: {:.0} qps, latency \
                  p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms (mean {:.2}ms)",
@@ -483,9 +700,34 @@ fn main() -> Result<()> {
             let ds_name = args.get_or("dataset", "synth-arxiv");
             let ds = runner::dataset(ds_name, &scale, args.get_u64("seed", 0));
             let eval = ds.splits.test.clone();
-            let deltas =
-                delta_stream(args.get_or("deltas", "synth"), &ds, &eval, &args)?;
+            let deltas = match args.get("load-log") {
+                // versioned IBMBCACH delta-log container
+                Some(file) => {
+                    let batches =
+                        cache_io::load_delta_log(std::path::Path::new(file))?;
+                    println!(
+                        "loaded {} delta batches from {file} (IBMBCACH v{})",
+                        batches.len(),
+                        cache_io::FORMAT_VERSION
+                    );
+                    batches
+                }
+                None => delta_stream(
+                    args.get_or("deltas", "synth"),
+                    &ds,
+                    &eval,
+                    &args,
+                )?,
+            };
             anyhow::ensure!(!deltas.is_empty(), "empty delta stream");
+            if let Some(file) = args.get("save-log") {
+                cache_io::save_delta_log(&deltas, std::path::Path::new(file))?;
+                println!(
+                    "saved {} delta batches to {file} (IBMBCACH v{})",
+                    deltas.len(),
+                    cache_io::FORMAT_VERSION
+                );
+            }
             let p = preset_for(ds_name);
             let rcfg = RefreshConfig {
                 aux_per_output: p.aux_per_output,

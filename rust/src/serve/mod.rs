@@ -1,41 +1,52 @@
-//! Online inference serving (DESIGN.md §9).
+//! Online inference serving (DESIGN.md §9, §11).
 //!
 //! The paper's headline inference result — up to 130× faster than
 //! sampling baselines at equal accuracy — comes from batches being
 //! *fixed and reusable* at query time: all the expensive influence
 //! computation happens once, offline. This module turns that property
 //! into an online, concurrent service that answers "what is node v's
-//! prediction?" requests:
+//! prediction?" requests — and, since the zero-quiesce refactor, keeps
+//! answering them *while the graph churns*:
 //!
-//! * [`router`] — inverted index from output node → precomputed plan id
-//!   (built from a [`crate::batching::BatchCache`]), with a cold path
-//!   for nodes no precomputed batch covers: the router assigns a
-//!   stable cold-plan id (so cold queries coalesce too) and the node's
-//!   home shard synthesizes + memoizes a personal top-k-PPR plan off
+//! * [`state`] — the immutable [`state::ServeState`] snapshot (graph
+//!   view + plan cache + router index + plan epochs + placement +
+//!   model) and the [`state::SwapCell`] it is published through: the
+//!   whole query path reads one consistent epoch per admission, and a
+//!   delta lands as a single pointer swap (DESIGN.md §11).
+//! * [`router`] — immutable inverted index from output node →
+//!   precomputed plan id (lives in the snapshot), plus the control
+//!   loop's cold-id memo for nodes no precomputed batch covers: cold
+//!   queries coalesce under a stable id and the node's home shard
+//!   synthesizes + memoizes a personal top-k-PPR plan per epoch, off
 //!   the control loop.
 //! * [`queue`] — admission/microbatch queue that coalesces concurrent
-//!   queries routed to the same plan into one materialize+execute
-//!   (deadline- and size-based flush), so a popular plan runs once per
-//!   window instead of once per query (cf. "Cooperative Minibatching
-//!   in GNNs", arXiv 2310.12403).
+//!   queries routed to the same (plan, epoch) into one
+//!   materialize+execute (deadline- and size-based flush), each group
+//!   pinning the snapshot it opened under (cf. "Cooperative
+//!   Minibatching in GNNs", arXiv 2310.12403).
 //! * [`shard`] — N executor worker shards, each owning its own
-//!   [`crate::batching::BatchArena`] and prefetch ring; plans are
-//!   assigned to shards by the METIS graph partition so each shard's
-//!   working set stays memory-local.
+//!   [`crate::batching::BatchArena`] and prefetch ring; work is placed
+//!   by the [`shard::Placement`] partition-cell table (METIS cells
+//!   folded onto the run's shard count) so each shard's working set
+//!   stays memory-local.
 //! * [`results`] — byte-bounded LRU memo of recently executed plan
-//!   logits with hit/miss accounting (and an optional freshness TTL
-//!   for periodically refreshed models).
+//!   logits, epoch-keyed on read *and* eagerly swept on snapshot swaps
+//!   so stale entries release their bytes immediately.
 //! * [`metrics`] — log-bucketed per-query latency histogram
 //!   (p50/p95/p99), throughput, coalescing factor, cache hit rate.
 //! * [`load`] — closed-loop load generator with configurable arrival
 //!   skew (uniform or zipf over the query population).
 //! * [`service`] — the event loop tying all of the above together
-//!   behind the `ibmb serve` subcommand and `benches/serving.rs`.
-//! * [`update`] — dynamic graph updates between serving segments
-//!   (DESIGN.md §10): graph deltas land on a mutable overlay,
-//!   incremental PPR refresh repairs per-root influence, stale plans
-//!   rebuild past an L1 tolerance, and the router / results memo
-//!   invalidate by plan epoch (`ibmb serve --update-stream`,
+//!   behind `ibmb serve` / `benches/serving.rs`, including the churn
+//!   harness ([`service::Churn`]) that attaches a delta source to a
+//!   run: inline (quiesced baseline) or background/stream
+//!   (zero-quiesce, `ibmb serve --live-updates`).
+//! * [`update`] — the snapshot builder: [`update::UpdateApplier`]
+//!   turns graph deltas into new published snapshots (delta overlay →
+//!   incremental PPR refresh → plan rebuild/patch → structural-sharing
+//!   snapshot assembly → pointer swap), either on a background thread
+//!   ([`update::run_applier`]) or synchronously between segments
+//!   ([`update::DynamicServeSession`], `ibmb serve --update-stream`,
 //!   `ibmb update`, `benches/updates.rs`).
 //!
 //! Execution uses the exact CPU reference forward pass
@@ -52,16 +63,23 @@ pub mod results;
 pub mod router;
 pub mod service;
 pub mod shard;
+pub mod state;
 pub mod update;
 
 pub use load::{LoadGen, Skew};
 pub use metrics::{LatencyHistogram, ServeMetrics};
 pub use queue::{MicrobatchQueue, PendingGroup, QueryTicket};
 pub use results::ResultsCache;
-pub use router::{PlanKey, QueryRouter, Route};
+pub use router::{PlanKey, QueryRouter, Route, RouterIndex};
 pub use service::{
-    prepare, serve_closed_loop, serve_closed_loop_with, ServeConfig,
-    ServeReport, ServeSetup,
+    prepare, prepare_from_cache, serve_closed_loop, serve_closed_loop_with,
+    serve_with_churn, Churn, ServeConfig, ServeReport, ServeSetup,
 };
-pub use shard::{reference_artifact, synthesize_cold, ColdPlan, ShardMap};
-pub use update::{DynamicServeSession, UpdateConfig, UpdateReport};
+pub use shard::{
+    reference_artifact, synthesize_cold, ColdPlan, Placement, PLACEMENT_CELLS,
+};
+pub use state::{ServeState, ServeStateCell, SwapCell};
+pub use update::{
+    run_applier, DynamicServeSession, UpdateApplier, UpdateConfig,
+    UpdateReport,
+};

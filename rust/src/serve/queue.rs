@@ -8,12 +8,23 @@
 //! GNNs", arXiv 2310.12403: concurrent queries sharing neighborhoods
 //! multiply the reuse win).
 //!
+//! Groups are keyed by **(plan, epoch)** and pin the snapshot they
+//! were opened under (DESIGN.md §11): a query admitted after an epoch
+//! swap whose plan changed opens a *new* group against the new
+//! snapshot instead of riding a group whose pinned plan no longer owns
+//! its output row — that separation is what makes "no query ever
+//! observes mixed-epoch state" hold through the queue. Queries for a
+//! plan the swap did *not* change keep coalescing into the old group
+//! (its epoch, and therefore its content, is identical).
+//!
 //! Flush policy is the usual two-sided one: a group flushes when it
 //! reaches `max_coalesce` queries (size flush, bounds per-query work)
 //! or when its oldest query has waited `window` (deadline flush,
 //! bounds added latency). The queue is purely synchronous and clocked
 //! by caller-supplied [`Instant`]s, so its behavior is deterministic
-//! and unit-testable without threads or sleeps.
+//! and unit-testable without threads or sleeps; the snapshot payload
+//! is generic (`S`), so tests drive it with `()` while the service
+//! pins `Arc<ServeState>`.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -31,26 +42,32 @@ pub struct QueryTicket {
     pub pos: u32,
 }
 
-/// A coalesced group of queries for one plan, ready to execute.
+/// A coalesced group of queries for one (plan, epoch), ready to
+/// execute against the snapshot it pinned at creation.
 #[derive(Debug)]
-pub struct PendingGroup {
+pub struct PendingGroup<S> {
     pub key: PlanKey,
+    /// Freshness epoch of the group's plan at admission time.
+    pub epoch: u64,
+    /// Snapshot the group was opened under; execution and shard
+    /// placement read this, never "the current" state.
+    pub snap: S,
     /// Admission time of the group's first query (deadline anchor).
     pub created: Instant,
     pub queries: Vec<QueryTicket>,
 }
 
-/// Deadline- and size-flushed per-plan coalescing queue.
-pub struct MicrobatchQueue {
+/// Deadline- and size-flushed per-(plan, epoch) coalescing queue.
+pub struct MicrobatchQueue<S> {
     window: Duration,
     max_coalesce: usize,
-    groups: HashMap<PlanKey, PendingGroup>,
+    groups: HashMap<(PlanKey, u64), PendingGroup<S>>,
 }
 
-impl MicrobatchQueue {
+impl<S: Clone> MicrobatchQueue<S> {
     /// `window` = max time a query waits for co-riders; `max_coalesce`
     /// = size flush threshold (≥ 1).
-    pub fn new(window: Duration, max_coalesce: usize) -> MicrobatchQueue {
+    pub fn new(window: Duration, max_coalesce: usize) -> MicrobatchQueue<S> {
         MicrobatchQueue {
             window,
             max_coalesce: max_coalesce.max(1),
@@ -58,29 +75,37 @@ impl MicrobatchQueue {
         }
     }
 
-    /// Admit one query at time `now`. Returns the full group if this
-    /// admission triggered a size flush.
+    /// Admit one query at time `now`, under plan-epoch `epoch` and
+    /// snapshot `snap`. Returns the full group if this admission
+    /// triggered a size flush.
     pub fn push(
         &mut self,
         key: PlanKey,
+        epoch: u64,
+        snap: &S,
         q: QueryTicket,
         now: Instant,
-    ) -> Option<PendingGroup> {
-        let g = self.groups.entry(key).or_insert_with(|| PendingGroup {
-            key,
-            created: now,
-            queries: Vec::new(),
-        });
+    ) -> Option<PendingGroup<S>> {
+        let g = self
+            .groups
+            .entry((key, epoch))
+            .or_insert_with(|| PendingGroup {
+                key,
+                epoch,
+                snap: snap.clone(),
+                created: now,
+                queries: Vec::new(),
+            });
         g.queries.push(q);
         if g.queries.len() >= self.max_coalesce {
-            return self.groups.remove(&key);
+            return self.groups.remove(&(key, epoch));
         }
         None
     }
 
     /// Remove and return every group whose deadline has passed.
-    pub fn due(&mut self, now: Instant) -> Vec<PendingGroup> {
-        let keys: Vec<PlanKey> = self
+    pub fn due(&mut self, now: Instant) -> Vec<PendingGroup<S>> {
+        let keys: Vec<(PlanKey, u64)> = self
             .groups
             .iter()
             .filter(|(_, g)| now.duration_since(g.created) >= self.window)
@@ -101,7 +126,7 @@ impl MicrobatchQueue {
     }
 
     /// Remove and return everything (shutdown).
-    pub fn drain(&mut self) -> Vec<PendingGroup> {
+    pub fn drain(&mut self) -> Vec<PendingGroup<S>> {
         self.groups.drain().map(|(_, g)| g).collect()
     }
 
@@ -126,12 +151,18 @@ mod tests {
         }
     }
 
+    fn queue(window: Duration, max: usize) -> MicrobatchQueue<()> {
+        MicrobatchQueue::new(window, max)
+    }
+
     #[test]
     fn coalesces_same_plan_until_deadline() {
-        let mut q = MicrobatchQueue::new(Duration::from_millis(10), 100);
+        let mut q = queue(Duration::from_millis(10), 100);
         let t0 = Instant::now();
         for i in 0..5 {
-            assert!(q.push(PlanKey::Cached(3), ticket(i), t0).is_none());
+            assert!(q
+                .push(PlanKey::Cached(3), 0, &(), ticket(i), t0)
+                .is_none());
         }
         assert_eq!(q.pending_groups(), 1);
         assert_eq!(q.pending_queries(), 5);
@@ -145,25 +176,25 @@ mod tests {
 
     #[test]
     fn size_flush_returns_full_group() {
-        let mut q = MicrobatchQueue::new(Duration::from_secs(1), 3);
+        let mut q = queue(Duration::from_secs(1), 3);
         let t0 = Instant::now();
-        assert!(q.push(PlanKey::Cached(0), ticket(0), t0).is_none());
-        assert!(q.push(PlanKey::Cached(0), ticket(1), t0).is_none());
-        let g = q.push(PlanKey::Cached(0), ticket(2), t0).unwrap();
+        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(0), t0).is_none());
+        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(1), t0).is_none());
+        let g = q.push(PlanKey::Cached(0), 0, &(), ticket(2), t0).unwrap();
         assert_eq!(g.queries.len(), 3);
         assert_eq!(q.pending_groups(), 0);
         // a new query for the same plan starts a fresh group
-        assert!(q.push(PlanKey::Cached(0), ticket(3), t0).is_none());
+        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(3), t0).is_none());
         assert_eq!(q.pending_queries(), 1);
     }
 
     #[test]
     fn distinct_plans_do_not_coalesce() {
-        let mut q = MicrobatchQueue::new(Duration::from_millis(5), 10);
+        let mut q = queue(Duration::from_millis(5), 10);
         let t0 = Instant::now();
-        assert!(q.push(PlanKey::Cached(1), ticket(0), t0).is_none());
-        assert!(q.push(PlanKey::Cold(1), ticket(1), t0).is_none());
-        assert!(q.push(PlanKey::Cached(2), ticket(2), t0).is_none());
+        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t0).is_none());
+        assert!(q.push(PlanKey::Cold(1), 0, &(), ticket(1), t0).is_none());
+        assert!(q.push(PlanKey::Cached(2), 0, &(), ticket(2), t0).is_none());
         assert_eq!(q.pending_groups(), 3);
         let due = q.due(t0 + Duration::from_millis(5));
         assert_eq!(due.len(), 3);
@@ -171,12 +202,43 @@ mod tests {
     }
 
     #[test]
+    fn epochs_partition_groups_for_the_same_plan() {
+        // the mixed-epoch guard: a post-swap query for a *changed*
+        // plan must not ride a pre-swap group
+        let mut q = queue(Duration::from_millis(50), 10);
+        let t0 = Instant::now();
+        assert!(q.push(PlanKey::Cached(7), 0, &(), ticket(0), t0).is_none());
+        assert!(q.push(PlanKey::Cached(7), 1, &(), ticket(1), t0).is_none());
+        assert_eq!(q.pending_groups(), 2, "epochs must not share a group");
+        // same epoch still coalesces
+        assert!(q.push(PlanKey::Cached(7), 0, &(), ticket(2), t0).is_none());
+        let due = q.due(t0 + Duration::from_millis(50));
+        let mut sizes: Vec<(u64, usize)> =
+            due.iter().map(|g| (g.epoch, g.queries.len())).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![(0, 2), (1, 1)]);
+    }
+
+    #[test]
+    fn group_pins_the_snapshot_it_was_opened_under() {
+        let mut q: MicrobatchQueue<u64> =
+            MicrobatchQueue::new(Duration::from_secs(1), 2);
+        let t0 = Instant::now();
+        assert!(q.push(PlanKey::Cached(0), 3, &30, ticket(0), t0).is_none());
+        // the rider joins under a "newer" payload; the group keeps the
+        // snapshot of its first query
+        let g = q.push(PlanKey::Cached(0), 3, &99, ticket(1), t0).unwrap();
+        assert_eq!(g.snap, 30);
+        assert_eq!(g.epoch, 3);
+    }
+
+    #[test]
     fn next_deadline_is_earliest_group() {
-        let mut q = MicrobatchQueue::new(Duration::from_millis(10), 10);
+        let mut q = queue(Duration::from_millis(10), 10);
         let t0 = Instant::now();
         let t1 = t0 + Duration::from_millis(4);
-        assert!(q.push(PlanKey::Cached(1), ticket(0), t1).is_none());
-        assert!(q.push(PlanKey::Cached(2), ticket(1), t0).is_none());
+        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t1).is_none());
+        assert!(q.push(PlanKey::Cached(2), 0, &(), ticket(1), t0).is_none());
         assert_eq!(q.next_deadline(), Some(t0 + Duration::from_millis(10)));
         // staggered deadlines flush separately
         let due = q.due(t0 + Duration::from_millis(10));
@@ -187,10 +249,10 @@ mod tests {
 
     #[test]
     fn drain_empties_everything() {
-        let mut q = MicrobatchQueue::new(Duration::from_secs(1), 10);
+        let mut q = queue(Duration::from_secs(1), 10);
         let t0 = Instant::now();
-        assert!(q.push(PlanKey::Cached(1), ticket(0), t0).is_none());
-        assert!(q.push(PlanKey::Cold(0), ticket(1), t0).is_none());
+        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t0).is_none());
+        assert!(q.push(PlanKey::Cold(0), 0, &(), ticket(1), t0).is_none());
         let all = q.drain();
         assert_eq!(all.len(), 2);
         assert_eq!(q.pending_groups(), 0);

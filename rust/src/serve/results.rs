@@ -15,9 +15,14 @@
 //! the spot, so after a graph delta bumps a plan's epoch
 //! (DESIGN.md §10) a read can never return logits computed from the
 //! pre-delta plan, even before any proactive invalidation sweep runs.
-//! TTL is likewise checked on read. [`ResultsCache::invalidate_where`]
-//! and [`ResultsCache::purge_expired`] are the eager companions the
-//! update path calls.
+//! TTL is likewise checked on read. The eager companions —
+//! [`ResultsCache::invalidate_where`] (predicate over key *and* stored
+//! epoch), [`ResultsCache::purge_stale`] (drop everything not at its
+//! plan's current epoch), and [`ResultsCache::purge_expired`] (TTL
+//! sweep) — reclaim the accounted bytes immediately, so capacity is
+//! not held hostage by epoch-expired entries that nobody re-reads
+//! (the serving loop runs `purge_stale` once per observed snapshot
+//! swap, DESIGN.md §11).
 //!
 //! LRU is the standard lazy scheme: a monotone tick stamps each
 //! access, a FIFO of `(key, tick)` pairs is popped on eviction and
@@ -146,7 +151,12 @@ impl ResultsCache {
     /// Insert (or replace) a plan's logits computed at plan epoch
     /// `epoch`, evicting least-recently used entries until the byte
     /// budget holds. Entries larger than the whole budget are dropped
-    /// on the floor.
+    /// on the floor. An insert at an *older* epoch than the stored
+    /// entry's is dropped instead: a group pinned to a pre-swap
+    /// snapshot can finish after a post-swap group for the same plan
+    /// already memoized fresh logits, and clobbering those would force
+    /// a redundant re-execution on the next read (epochs are monotone
+    /// per key, so newer always wins).
     pub fn insert(
         &mut self,
         key: PlanKey,
@@ -156,6 +166,11 @@ impl ResultsCache {
     ) {
         if self.budget == 0 {
             return;
+        }
+        if let Some(e) = self.map.get(&key) {
+            if e.epoch > epoch {
+                return;
+            }
         }
         // executors hand over Vecs truncated from larger buffers;
         // release the excess capacity the byte accounting would charge
@@ -222,18 +237,38 @@ impl ResultsCache {
         keys.len()
     }
 
-    /// Eagerly drop every entry whose key matches `stale` (graph-delta
-    /// invalidation: changed cached plans, all cold plans). Returns the
-    /// number of entries dropped.
+    /// Eagerly drop every entry matching `stale(key, stored_epoch)`
+    /// (graph-delta invalidation). The predicate sees the epoch the
+    /// logits were computed at, so epoch-expired entries are
+    /// reclaimable — bytes and all — without waiting for a read to
+    /// stumble over them. Returns the number of entries dropped.
     pub fn invalidate_where(
         &mut self,
-        stale: impl Fn(&PlanKey) -> bool,
+        stale: impl Fn(&PlanKey, u64) -> bool,
     ) -> usize {
-        let keys: Vec<PlanKey> =
-            self.map.keys().filter(|&k| stale(k)).copied().collect();
+        let keys: Vec<PlanKey> = self
+            .map
+            .iter()
+            .filter(|(k, e)| stale(k, e.epoch))
+            .map(|(&k, _)| k)
+            .collect();
         let dropped = self.remove_keys(&keys);
         self.epoch_evictions += dropped as u64;
         dropped
+    }
+
+    /// Eagerly drop every entry whose stored epoch is not its plan's
+    /// *current* epoch (`current_epoch_of`). This is the
+    /// snapshot-swap sweep: the read path would expire these entries
+    /// one by one, but their bytes would stay charged against the
+    /// budget until each key happened to be re-queried — evicting
+    /// still-fresh neighbors in the meantime. Returns the number
+    /// dropped.
+    pub fn purge_stale(
+        &mut self,
+        current_epoch_of: impl Fn(&PlanKey) -> u64,
+    ) -> usize {
+        self.invalidate_where(|k, e| e != current_epoch_of(k))
     }
 
     /// Eagerly drop every TTL-expired entry (read-path expiry only
@@ -342,6 +377,26 @@ mod tests {
     }
 
     #[test]
+    fn stale_epoch_insert_never_clobbers_a_fresher_entry() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(1 << 20, None);
+        // a post-swap execution memoized epoch-1 logits...
+        c.insert(key(1), 1, vec![2.0], t0);
+        let bytes = c.bytes();
+        // ...then a pre-swap group for the same plan finally finishes
+        c.insert(key(1), 0, vec![1.0], t0);
+        assert_eq!(
+            c.get(key(1), 1, t0).unwrap(),
+            &[2.0],
+            "older-epoch insert must not clobber the fresher entry"
+        );
+        assert_eq!(c.bytes(), bytes, "dropped insert must not be charged");
+        // newer epochs still replace
+        c.insert(key(1), 2, vec![3.0], t0);
+        assert_eq!(c.get(key(1), 2, t0).unwrap(), &[3.0]);
+    }
+
+    #[test]
     fn epoch_mismatch_expires_on_read() {
         let t0 = Instant::now();
         let mut c = ResultsCache::new(1 << 20, None);
@@ -364,12 +419,49 @@ mod tests {
         c.insert(key(1), 0, vec![1.0], t0);
         c.insert(key(2), 0, vec![2.0], t0);
         c.insert(PlanKey::Cold(7), 0, vec![3.0], t0);
-        let dropped =
-            c.invalidate_where(|k| matches!(k, PlanKey::Cold(_)) || *k == key(2));
+        let dropped = c.invalidate_where(|k, _| {
+            matches!(k, PlanKey::Cold(_)) || *k == key(2)
+        });
         assert_eq!(dropped, 2);
         assert_eq!(c.len(), 1);
         assert!(c.get(key(1), 0, t0).is_some());
         assert!(c.get(PlanKey::Cold(7), 0, t0).is_none());
+    }
+
+    #[test]
+    fn purge_stale_reclaims_epoch_expired_bytes_eagerly() {
+        let t0 = Instant::now();
+        let mut c = ResultsCache::new(1 << 20, None);
+        c.insert(key(1), 0, vec![0.0; 64], t0);
+        c.insert(key(2), 3, vec![0.0; 64], t0);
+        c.insert(PlanKey::Cold(9), 1, vec![0.0; 64], t0);
+        let full = c.bytes();
+        assert!(full > 0);
+        // plan 1 moved to epoch 2, plan 2 is current at 3, snapshot
+        // epoch for cold keys is now 2 — without any reads, the sweep
+        // must reclaim the two stale entries' bytes immediately
+        let dropped = c.purge_stale(|k| match k {
+            PlanKey::Cached(1) => 2,
+            PlanKey::Cached(_) => 3,
+            PlanKey::Cold(_) => 2,
+        });
+        assert_eq!(dropped, 2);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.epoch_evictions, 2);
+        assert!(
+            c.bytes() < full / 2,
+            "stale bytes still accounted: {} of {full}",
+            c.bytes()
+        );
+        assert!(c.get(key(2), 3, t0).is_some(), "fresh entry survives");
+        // idempotent: nothing left to reclaim
+        assert_eq!(
+            c.purge_stale(|k| match k {
+                PlanKey::Cached(_) => 3,
+                PlanKey::Cold(_) => 2,
+            }),
+            0
+        );
     }
 
     #[test]

@@ -3,30 +3,37 @@
 //! Routing exploits the structural fact the paper's inference numbers
 //! rest on: IBMB's output partition is *disjoint and covering*, so
 //! every serveable node belongs to exactly one precomputed plan. The
-//! router inverts that mapping once — node id → (plan id, position
-//! among the plan's outputs) — into a flat array, making the hot-path
-//! lookup one bounds-checked load.
+//! [`RouterIndex`] inverts that mapping once — node id → (plan id,
+//! position among the plan's outputs) — into a flat array, making the
+//! hot-path lookup one bounds-checked load. The index is **immutable**
+//! and lives inside the serving snapshot
+//! ([`super::state::ServeState`]): because outputs never migrate
+//! between plans across graph deltas (DESIGN.md §10), the only patch a
+//! delta ever needs is [`RouterIndex::extended`] for appended nodes —
+//! a clone + tail fill, structurally cheap. The packed form round-trips
+//! through the `IBMBCACH` container ([`crate::batching::cache_io`]) so
+//! a cold-started server skips the build entirely.
 //!
 //! Nodes outside every plan (new nodes, non-eval splits) take the
-//! **cold path**: the router assigns the node a stable cold-plan id so
-//! concurrent and repeat cold queries coalesce exactly like warm ones,
-//! and the node's home shard synthesizes (and memoizes) the actual
-//! top-k-PPR plan off the control loop —
-//! [`super::shard::synthesize_cold`]. Keeping synthesis off this
-//! thread means a trickle of cold traffic cannot stall deadline
-//! flushes for in-flight warm queries.
+//! **cold path**: the [`QueryRouter`] — the only mutable routing state,
+//! owned by the single-threaded control loop — assigns the node a
+//! stable cold-plan id so concurrent and repeat cold queries coalesce
+//! exactly like warm ones, and the node's home shard synthesizes (and
+//! memoizes per epoch) the actual top-k-PPR plan off the control loop —
+//! [`super::shard::synthesize_cold`]. Cold ids are pure coalescing
+//! identities: plan *content* is derived from whatever snapshot a
+//! group was admitted under, so stale ids never need invalidating.
 
 use std::collections::HashMap;
 
-use crate::batching::BatchCache;
-use crate::datasets::Dataset;
+use crate::batching::CowCache;
 
 /// Identity of an executable plan: a precomputed cache entry or a
 /// cold plan (keyed by router-assigned id). The coalescing queue and
-/// the results memo key on this.
+/// the results memo key on this (plus an epoch).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum PlanKey {
-    /// Index into the [`BatchCache`].
+    /// Index into the snapshot's plan cache.
     Cached(u32),
     /// Router-assigned id of a cold (shard-synthesized) plan.
     Cold(u32),
@@ -69,92 +76,52 @@ const ABSENT: u64 = u64::MAX;
 /// results cache; only coalescing continuity is briefly lost.
 const MAX_COLD_IDS: usize = 1 << 20;
 
-/// Output-node → plan inverted index plus stable cold-plan ids.
-pub struct QueryRouter {
+/// Immutable warm index: output node → packed (plan, pos).
+#[derive(Debug, Clone)]
+pub struct RouterIndex {
     index: Vec<u64>,
-    cold: HashMap<u32, u32>,
     /// Output nodes that appeared in more than one plan while building
     /// the index (0 for a valid IBMB partition).
     pub duplicates: usize,
-    /// Cold-plan ids handed out so far.
-    pub cold_built: usize,
-    /// Entries (warm slots + cold ids) dropped by graph-delta
-    /// invalidation.
-    pub invalidations: usize,
 }
 
-impl QueryRouter {
-    /// Invert `cache`'s output lists over `ds`'s node id space.
-    pub fn build(ds: &Dataset, cache: &BatchCache) -> QueryRouter {
-        let n = ds.graph.num_nodes();
-        let mut index = vec![ABSENT; n];
+impl RouterIndex {
+    /// Invert `cache`'s output lists over a `num_nodes`-wide id space.
+    pub fn build(num_nodes: usize, cache: &CowCache) -> RouterIndex {
+        let mut index = vec![ABSENT; num_nodes];
         let mut duplicates = 0usize;
         for pid in 0..cache.len() {
             for (pos, &u) in cache.output_nodes(pid).iter().enumerate() {
-                let slot = &mut index[u as usize];
-                if *slot != ABSENT {
-                    duplicates += 1;
-                    continue;
-                }
-                *slot = ((pid as u64) << 32) | pos as u64;
-            }
-        }
-        QueryRouter {
-            index,
-            cold: HashMap::new(),
-            duplicates,
-            cold_built: 0,
-            invalidations: 0,
-        }
-    }
-
-    /// Drop the warm-index entries of `outputs` (a plan being retired
-    /// or replanned). Until [`Self::index_plan`] re-registers them the
-    /// nodes take the cold path — never a dangling plan id.
-    pub fn invalidate_outputs(&mut self, outputs: &[u32]) -> usize {
-        let mut dropped = 0;
-        for &u in outputs {
-            if let Some(slot) = self.index.get_mut(u as usize) {
-                if *slot != ABSENT {
-                    *slot = ABSENT;
-                    dropped += 1;
+                match index.get_mut(u as usize) {
+                    Some(slot) if *slot == ABSENT => {
+                        *slot = ((pid as u64) << 32) | pos as u64;
+                    }
+                    _ => duplicates += 1,
                 }
             }
         }
-        self.invalidations += dropped;
-        dropped
+        RouterIndex { index, duplicates }
     }
 
-    /// (Re-)register plan `pid`'s output nodes in the warm index,
-    /// clearing any cold id the nodes may have picked up while
-    /// unrouted. Slots already owned by another plan are counted as
-    /// duplicates, as in [`Self::build`].
-    pub fn index_plan(&mut self, pid: u32, outputs: &[u32]) {
-        for (pos, &u) in outputs.iter().enumerate() {
-            match self.index.get_mut(u as usize) {
-                Some(slot) if *slot == ABSENT => {
-                    *slot = ((pid as u64) << 32) | pos as u64;
-                    self.cold.remove(&u);
-                }
-                Some(_) => self.duplicates += 1,
-                None => self.duplicates += 1,
+    /// Warm lookup: `Some((plan, pos))` when a precomputed plan owns
+    /// the node.
+    #[inline]
+    pub fn lookup(&self, node: u32) -> Option<(u32, u32)> {
+        match self.index.get(node as usize) {
+            Some(&packed) if packed != ABSENT => {
+                Some(((packed >> 32) as u32, (packed & u32::MAX as u64) as u32))
             }
+            _ => None,
         }
     }
 
-    /// Forget the cold-plan ids of `nodes` (their synthesized
-    /// neighborhoods went stale under a graph delta). The next query
-    /// gets a *fresh* id, so shards re-synthesize against the new
-    /// graph and memo entries for the old id become unreachable.
-    pub fn invalidate_cold(&mut self, nodes: &[u32]) -> usize {
-        let mut dropped = 0;
-        for u in nodes {
-            if self.cold.remove(u).is_some() {
-                dropped += 1;
-            }
-        }
-        self.invalidations += dropped;
-        dropped
+    /// Node-id space the index covers.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
     }
 
     /// Number of nodes covered by a precomputed plan.
@@ -162,16 +129,85 @@ impl QueryRouter {
         self.index.iter().filter(|&&p| p != ABSENT).count()
     }
 
-    /// Route a query node: cached-plan lookup, else a memoized cold id
-    /// (assigning a fresh one is the only mutating case).
-    pub fn route(&mut self, node: u32) -> Route {
-        if let Some(&packed) = self.index.get(node as usize) {
-            if packed != ABSENT {
-                return Route::Cached {
-                    plan: (packed >> 32) as u32,
-                    pos: (packed & u32::MAX as u64) as u32,
-                };
+    /// The next snapshot's index after `num_nodes` grew (node
+    /// appends): same warm entries, fresh `ABSENT` tail. The only
+    /// index patch deltas ever need, because outputs never migrate.
+    pub fn extended(&self, num_nodes: usize) -> RouterIndex {
+        debug_assert!(num_nodes >= self.index.len());
+        let mut index = self.index.clone();
+        index.resize(num_nodes.max(index.len()), ABSENT);
+        RouterIndex {
+            index,
+            duplicates: self.duplicates,
+        }
+    }
+
+    /// Packed on-disk form (one u64 per node), for the `IBMBCACH`
+    /// router-index section.
+    pub fn to_packed(&self) -> Vec<u64> {
+        self.index.clone()
+    }
+
+    /// Rebuild from the packed form, verifying every warm entry
+    /// against `cache` so a mismatched cache/index pair is a clean
+    /// load error instead of silent misrouting.
+    pub fn from_packed(
+        packed: Vec<u64>,
+        cache: &CowCache,
+    ) -> Result<RouterIndex, String> {
+        for (u, &p) in packed.iter().enumerate() {
+            if p == ABSENT {
+                continue;
             }
+            let (pid, pos) = ((p >> 32) as usize, (p & u32::MAX as u64) as usize);
+            if pid >= cache.len() {
+                return Err(format!(
+                    "node {u}: plan {pid} out of range ({} plans)",
+                    cache.len()
+                ));
+            }
+            if pos >= cache.num_outputs(pid)
+                || cache.output_nodes(pid)[pos] != u as u32
+            {
+                return Err(format!(
+                    "node {u}: plan {pid} pos {pos} does not own it"
+                ));
+            }
+        }
+        Ok(RouterIndex {
+            index: packed,
+            duplicates: 0,
+        })
+    }
+}
+
+/// Mutable cold-routing state: node → stable cold-plan id. Owned by
+/// the control loop (the only router writer); warm routing reads the
+/// snapshot's [`RouterIndex`]. Survives snapshot swaps — a cold id is
+/// a coalescing identity, not plan content.
+#[derive(Debug, Default)]
+pub struct QueryRouter {
+    cold: HashMap<u32, u32>,
+    /// Cold-plan ids handed out so far.
+    pub cold_built: usize,
+}
+
+impl QueryRouter {
+    pub fn new() -> QueryRouter {
+        QueryRouter::default()
+    }
+
+    /// Distinct cold nodes currently holding an id.
+    pub fn cold_ids(&self) -> usize {
+        self.cold.len()
+    }
+
+    /// Route a query node against `index`: warm lookup, else a
+    /// memoized cold id (assigning a fresh one is the only mutating
+    /// case).
+    pub fn route(&mut self, index: &RouterIndex, node: u32) -> Route {
+        if let Some((plan, pos)) = index.lookup(node) {
+            return Route::Cached { plan, pos };
         }
         if let Some(&id) = self.cold.get(&node) {
             return Route::Cold { id };
@@ -189,11 +225,11 @@ impl QueryRouter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::batching::{BatchGenerator, NodeWiseIbmb};
-    use crate::datasets::{sbm, DatasetSpec};
+    use crate::batching::{BatchGenerator, CowCache, NodeWiseIbmb};
+    use crate::datasets::{sbm, Dataset, DatasetSpec};
     use crate::util::Rng;
 
-    fn setup() -> (Dataset, BatchCache) {
+    fn setup() -> (Dataset, CowCache) {
         let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 77);
         let mut g = NodeWiseIbmb {
             aux_per_output: 6,
@@ -203,18 +239,19 @@ mod tests {
         };
         let mut rng = Rng::new(3);
         let out = ds.splits.train.clone();
-        let cache = BatchCache::build(&g.plan(&ds, &out, &mut rng));
+        let cache = CowCache::from_plans(&g.plan(&ds, &out, &mut rng));
         (ds, cache)
     }
 
     #[test]
     fn every_output_node_routes_to_its_plan() {
         let (ds, cache) = setup();
-        let mut router = QueryRouter::build(&ds, &cache);
-        assert_eq!(router.duplicates, 0);
-        assert_eq!(router.coverage(), ds.splits.train.len());
+        let index = RouterIndex::build(ds.graph.num_nodes(), &cache);
+        let mut router = QueryRouter::new();
+        assert_eq!(index.duplicates, 0);
+        assert_eq!(index.coverage(), ds.splits.train.len());
         for &u in &ds.splits.train {
-            match router.route(u) {
+            match router.route(&index, u) {
                 Route::Cached { plan, pos } => {
                     assert_eq!(
                         cache.output_nodes(plan as usize)[pos as usize],
@@ -230,16 +267,17 @@ mod tests {
     #[test]
     fn uncovered_nodes_get_stable_cold_ids() {
         let (ds, cache) = setup();
-        let mut router = QueryRouter::build(&ds, &cache);
+        let index = RouterIndex::build(ds.graph.num_nodes(), &cache);
+        let mut router = QueryRouter::new();
         let covered: std::collections::HashSet<u32> =
             ds.splits.train.iter().copied().collect();
         let mut cold_nodes = (0..ds.graph.num_nodes() as u32)
             .filter(|u| !covered.contains(u));
         let a = cold_nodes.next().expect("tiny split leaves cold nodes");
         let b = cold_nodes.next().expect("need two cold nodes");
-        let ra = router.route(a);
-        let rb = router.route(b);
-        let ra2 = router.route(a);
+        let ra = router.route(&index, a);
+        let rb = router.route(&index, b);
+        let ra2 = router.route(&index, a);
         match (ra, rb, ra2) {
             (
                 Route::Cold { id: ia },
@@ -252,54 +290,45 @@ mod tests {
             other => panic!("expected cold routes, got {other:?}"),
         }
         assert_eq!(router.cold_built, 2);
-        assert_eq!(router.route(a).pos(), 0);
+        assert_eq!(router.cold_ids(), 2);
+        assert_eq!(router.route(&index, a).pos(), 0);
     }
 
     #[test]
-    fn invalidation_retires_and_reindexes_entries() {
+    fn extended_index_keeps_warm_entries_and_cold_tails() {
         let (ds, cache) = setup();
-        let mut router = QueryRouter::build(&ds, &cache);
-        let outputs = cache.output_nodes(0).to_vec();
-        let dropped = router.invalidate_outputs(&outputs);
-        assert_eq!(dropped, outputs.len());
-        assert_eq!(router.invalidations, outputs.len());
-        // unrouted outputs fall back to the cold path, never a stale id
-        match router.route(outputs[0]) {
-            Route::Cold { .. } => {}
-            other => panic!("expected cold after invalidation, got {other:?}"),
+        let n = ds.graph.num_nodes();
+        let index = RouterIndex::build(n, &cache);
+        let grown = index.extended(n + 3);
+        assert_eq!(grown.len(), n + 3);
+        assert_eq!(grown.coverage(), index.coverage());
+        for u in 0..n as u32 {
+            assert_eq!(grown.lookup(u), index.lookup(u), "node {u}");
         }
-        // re-registering restores warm routing and clears the cold id
-        router.index_plan(0, &outputs);
-        match router.route(outputs[0]) {
-            Route::Cached { plan, pos } => {
-                assert_eq!(plan, 0);
-                assert_eq!(cache.output_nodes(0)[pos as usize], outputs[0]);
-            }
-            other => panic!("expected warm after reindex, got {other:?}"),
+        for u in n..n + 3 {
+            assert_eq!(grown.lookup(u as u32), None, "appended node {u}");
         }
-        assert_eq!(router.coverage(), ds.splits.train.len());
     }
 
     #[test]
-    fn cold_invalidation_hands_out_fresh_ids() {
+    fn packed_roundtrip_validates_against_the_cache() {
         let (ds, cache) = setup();
-        let mut router = QueryRouter::build(&ds, &cache);
-        let covered: std::collections::HashSet<u32> =
-            ds.splits.train.iter().copied().collect();
-        let node = (0..ds.graph.num_nodes() as u32)
-            .find(|u| !covered.contains(u))
-            .unwrap();
-        let before = match router.route(node) {
-            Route::Cold { id } => id,
-            other => panic!("{other:?}"),
-        };
-        assert_eq!(router.invalidate_cold(&[node]), 1);
-        assert_eq!(router.invalidate_cold(&[node]), 0, "already dropped");
-        match router.route(node) {
-            Route::Cold { id } => {
-                assert_ne!(id, before, "stale cold plan must not be reused")
-            }
-            other => panic!("{other:?}"),
+        let n = ds.graph.num_nodes();
+        let index = RouterIndex::build(n, &cache);
+        let packed = index.to_packed();
+        let back = RouterIndex::from_packed(packed.clone(), &cache).unwrap();
+        assert_eq!(back.coverage(), index.coverage());
+        for u in 0..n as u32 {
+            assert_eq!(back.lookup(u), index.lookup(u));
         }
+        // a corrupted entry is rejected, not trusted
+        let mut bad = packed.clone();
+        let victim = (0..n).find(|&u| bad[u] != super::ABSENT).unwrap();
+        bad[victim] ^= 1; // flip pos
+        assert!(RouterIndex::from_packed(bad, &cache).is_err());
+        let mut oob = packed;
+        let victim = (0..n).find(|&u| oob[u] != super::ABSENT).unwrap();
+        oob[victim] = (cache.len() as u64) << 32; // plan out of range
+        assert!(RouterIndex::from_packed(oob, &cache).is_err());
     }
 }

@@ -1,28 +1,50 @@
 //! The serving event loop: closed-loop clients → router → coalescing
-//! queue → sharded executors → results memo → latency metrics.
+//! queue → sharded executors → results memo → latency metrics, all
+//! reading immutable epoch snapshots (DESIGN.md §11).
 //!
 //! The loop is single-threaded on the control side (routing, queueing,
 //! memoization, accounting) with N executor shard threads; queries
-//! complete out of the shards' result channel. Clients are closed-loop:
-//! each of `clients` logical clients keeps exactly one query in flight
-//! and issues its next the moment the previous completes, which is what
-//! makes throughput self-limiting and the coalescing factor an honest
-//! function of concurrency × skew rather than of an open-loop arrival
-//! schedule.
+//! complete out of the shards' result channel. Every admission round
+//! loads the current [`ServeState`] from the shared [`ServeStateCell`]
+//! — one pointer clone — and routes, memo-probes, and enqueues against
+//! that snapshot, so a query's (plan id, output row, memo epoch)
+//! triple is internally consistent by construction even while the
+//! background [`super::update::UpdateApplier`] publishes new epochs
+//! mid-run. Nothing quiesces on a swap: in-flight groups execute
+//! against the snapshot they pinned, and the only swap-time work on
+//! the control thread is an eager memo sweep
+//! ([`ResultsCache::purge_stale`]) reclaiming epoch-expired bytes.
 //!
-//! A query's life: admit (route + memo probe) → coalesce in the queue
-//! (size/deadline flush) → execute once per *group* on its plan's home
-//! shard → complete every rider, memoize the plan's output logits.
+//! Clients are closed-loop: each of `clients` logical clients keeps
+//! exactly one query in flight and issues its next the moment the
+//! previous completes, which is what makes throughput self-limiting
+//! and the coalescing factor an honest function of concurrency × skew
+//! rather than of an open-loop arrival schedule.
+//!
+//! A query's life: admit (route + memo probe against the loaded
+//! snapshot) → coalesce in the queue (size/deadline flush, grouped by
+//! plan *and* epoch) → execute once per group on its plan's home shard
+//! → complete every rider, memoize the plan's output logits at the
+//! group's epoch.
+//!
+//! [`serve_with_churn`] is the same loop with a delta source attached:
+//! `Inline` churn applies deltas on the control thread (the quiesced
+//! baseline — the stall lands on every pending deadline) while
+//! `Background`/`Stream` churn feeds a scoped applier thread that
+//! builds and publishes snapshots off to the side — the zero-quiesce
+//! path `benches/updates.rs` measures against it.
 
-use std::collections::HashMap;
-use std::sync::mpsc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::batching::{BatchCache, BatchGenerator, NodeWiseIbmb};
+use crate::batching::{BatchGenerator, CowCache, NodeWiseIbmb};
 use crate::config::preset_for;
 use crate::datasets::Dataset;
+use crate::graph::GraphDelta;
 use crate::runtime::{ArtifactMeta, ModelState};
 use crate::util::Rng;
 
@@ -30,11 +52,13 @@ use super::load::{LoadGen, Skew};
 use super::metrics::ServeMetrics;
 use super::queue::{MicrobatchQueue, PendingGroup, QueryTicket};
 use super::results::ResultsCache;
-use super::router::{PlanKey, QueryRouter, Route};
+use super::router::{PlanKey, QueryRouter, Route, RouterIndex};
 use super::shard::{
-    argmax, reference_artifact, shard_worker, ShardCtx, ShardMap, ShardMsg,
-    Work, WorkItem,
+    argmax, reference_artifact, shard_worker, Placement, ShardCtx, ShardMsg,
+    Work, WorkItem, PLACEMENT_CELLS,
 };
+use super::state::{ServeState, ServeStateCell};
+use super::update::{run_applier, UpdateApplier, UpdateReport};
 
 /// Serving configuration (CLI: `ibmb serve`).
 #[derive(Debug, Clone)]
@@ -87,40 +111,41 @@ impl Default for ServeConfig {
     }
 }
 
-/// Everything [`serve_closed_loop`] needs that is built once per
-/// deployment: the precomputed plan cache, the executor model, and the
-/// query router (whose cold-plan memo persists across runs). The
-/// [`ShardMap`] is rebuilt per run because it depends on the run's
-/// shard count.
+/// A serving deployment handle: the snapshot cell every run (and the
+/// background applier) shares, plus the control loop's only mutable
+/// routing state — the cold-id memo, which stays warm across repeated
+/// runs (the bench's shard sweep reuses one setup).
 pub struct ServeSetup {
-    pub cache: BatchCache,
-    pub meta: ArtifactMeta,
-    pub state: ModelState,
+    pub cell: Arc<ServeStateCell>,
     pub router: QueryRouter,
-    /// Per-plan epochs, parallel to `cache`: the graph epoch each plan
-    /// last reflected (all zero for a static deployment). The results
-    /// memo keys freshness on these — see
-    /// [`super::update::DynamicServeSession`].
-    pub epochs: Vec<u64>,
 }
 
-/// Build a [`ServeSetup`] around an already-planned cache: pick the
-/// artifact bucket, synthesize the reference executor model, init its
-/// state, and invert the router index. Shared by the static
-/// [`prepare`] and the dynamic session
+impl ServeSetup {
+    /// The snapshot currently published (inspection / tests).
+    pub fn state(&self) -> Arc<ServeState> {
+        self.cell.load()
+    }
+}
+
+/// Build the initial (epoch 0) snapshot around an already-planned
+/// cache: pick the artifact bucket, synthesize the reference executor
+/// model, init its state, invert (or adopt) the router index, and
+/// place plans on partition cells. Shared by the static [`prepare`],
+/// the cold-start [`prepare_from_cache`], and the dynamic session
 /// ([`super::update::DynamicServeSession::prepare`]) so the bucket
-/// formula and seeds cannot drift between the two.
-pub(crate) fn setup_from_cache(
-    ds: &Dataset,
-    cache: BatchCache,
+/// formula and seeds cannot drift between them.
+pub(crate) fn build_initial_state(
+    ds: Arc<Dataset>,
+    cache: CowCache,
     cfg: &ServeConfig,
-) -> ServeSetup {
+    index: Option<RouterIndex>,
+) -> (Arc<ServeStateCell>, Arc<ArtifactMeta>, Arc<ModelState>) {
     let bucket = cache
         .max_batch_nodes()
         .max(cfg.cold_aux + 1)
         .next_power_of_two()
         .max(16);
-    let meta = reference_artifact(
+    let meta = Arc::new(reference_artifact(
         &cfg.model,
         ds.feat_dim,
         ds.num_classes,
@@ -128,23 +153,34 @@ pub(crate) fn setup_from_cache(
         cfg.layers,
         cfg.heads,
         bucket,
-    );
-    let state = ModelState::init(&meta, cfg.seed ^ 0x51A7E);
-    let router = QueryRouter::build(ds, &cache);
-    let epochs = vec![0u64; cache.len()];
-    ServeSetup {
-        cache,
-        meta,
-        state,
-        router,
+    ));
+    let model = Arc::new(ModelState::init(&meta, cfg.seed ^ 0x51A7E));
+    let index = Arc::new(index.unwrap_or_else(|| {
+        RouterIndex::build(ds.graph.num_nodes(), &cache)
+    }));
+    let mut rng = Rng::new(cfg.seed ^ 0x5E21);
+    let placement =
+        Arc::new(Placement::build(&ds, &cache, PLACEMENT_CELLS, &mut rng));
+    let epochs = Arc::new(vec![0u64; cache.len()]);
+    let state = Arc::new(ServeState {
+        epoch: 0,
+        ds,
+        cache: Arc::new(cache),
+        index,
         epochs,
-    }
+        placement,
+        meta: meta.clone(),
+        model: model.clone(),
+    });
+    debug_assert!(state.validate().is_ok(), "{:?}", state.validate());
+    (Arc::new(ServeStateCell::new(state)), meta, model)
 }
 
 /// Plan the serveable node set with node-wise IBMB (dataset preset),
 /// synthesize the reference executor model sized to the resulting
-/// bucket, and build the query router over the plan set.
-pub fn prepare(ds: &Dataset, eval_nodes: &[u32], cfg: &ServeConfig) -> ServeSetup {
+/// bucket, and publish the epoch-0 snapshot. Takes the dataset by
+/// value: it becomes part of the immutable snapshot.
+pub fn prepare(ds: Dataset, eval_nodes: &[u32], cfg: &ServeConfig) -> ServeSetup {
     let p = preset_for(&ds.name);
     let mut g = NodeWiseIbmb {
         aux_per_output: p.aux_per_output,
@@ -153,8 +189,39 @@ pub fn prepare(ds: &Dataset, eval_nodes: &[u32], cfg: &ServeConfig) -> ServeSetu
         ..Default::default()
     };
     let mut rng = Rng::new(cfg.seed ^ 0xCAFE);
-    let cache = BatchCache::build(&g.plan(ds, eval_nodes, &mut rng));
-    setup_from_cache(ds, cache, cfg)
+    let cache = CowCache::from_plans(&g.plan(&ds, eval_nodes, &mut rng));
+    let (cell, _, _) = build_initial_state(Arc::new(ds), cache, cfg, None);
+    ServeSetup {
+        cell,
+        router: QueryRouter::new(),
+    }
+}
+
+/// Cold-start [`prepare`]: adopt a plan cache (and optionally its
+/// persisted router index — see [`crate::batching::cache_io`])
+/// reloaded from disk instead of re-planning. The index, when given,
+/// must already be validated against `cache`
+/// ([`RouterIndex::from_packed`] does).
+pub fn prepare_from_cache(
+    ds: Dataset,
+    cache: CowCache,
+    index: Option<RouterIndex>,
+    cfg: &ServeConfig,
+) -> Result<ServeSetup> {
+    anyhow::ensure!(!cache.is_empty(), "empty plan cache");
+    if let Some(ix) = &index {
+        anyhow::ensure!(
+            ix.len() == ds.graph.num_nodes(),
+            "router index covers {} nodes, dataset has {}",
+            ix.len(),
+            ds.graph.num_nodes()
+        );
+    }
+    let (cell, _, _) = build_initial_state(Arc::new(ds), cache, cfg, index);
+    Ok(ServeSetup {
+        cell,
+        router: QueryRouter::new(),
+    })
 }
 
 /// Aggregate outcome of one closed-loop serving run.
@@ -186,7 +253,7 @@ pub struct ServeReport {
     pub accuracy: f64,
     pub shard_queries: Vec<u64>,
     pub shard_balance: f64,
-    /// Precomputed plans available to the router.
+    /// Precomputed plans available to the router (final snapshot).
     pub plans: usize,
     /// Shard-side seconds in the forward pass (summed over shards).
     pub exec_s: f64,
@@ -199,26 +266,64 @@ pub struct ServeReport {
     pub arena_allocations: usize,
     /// Bytes resident in the results memo at shutdown.
     pub results_cache_bytes: usize,
+    /// Snapshot swaps the control loop observed mid-run (0 for a
+    /// static deployment).
+    pub snapshot_swaps: u64,
+    /// Graph epoch of the last snapshot the loop served from.
+    pub final_epoch: u64,
+    /// Memo entries reclaimed eagerly by swap-time stale sweeps.
+    pub memo_swept: u64,
+}
+
+/// A delta source attached to a serving run — the quiesced-vs-zero-
+/// quiesce axis of `benches/updates.rs`.
+pub enum Churn<'a> {
+    /// Apply each delta **on the control thread** once `completed`
+    /// reaches its trigger: the quiesced baseline. Admission and
+    /// deadline flushes stall for the whole rebuild, which is exactly
+    /// the latency cliff the snapshot refactor removes.
+    Inline {
+        applier: &'a mut UpdateApplier,
+        deltas: Vec<(u64, GraphDelta)>,
+    },
+    /// Feed each delta to a **background applier thread** at the same
+    /// completed-count triggers: zero-quiesce. The loop keeps serving;
+    /// the new snapshot lands via the cell swap. The run drains all
+    /// fed deltas before returning, so reports are complete.
+    Background {
+        applier: &'a mut UpdateApplier,
+        deltas: Vec<(u64, GraphDelta)>,
+    },
+    /// Zero-quiesce with an external delta source (a file tailer):
+    /// deltas arrive on `rx` on their own clock; whatever lands before
+    /// the run finishes is applied.
+    Stream {
+        applier: &'a mut UpdateApplier,
+        rx: mpsc::Receiver<GraphDelta>,
+    },
 }
 
 fn dispatch_group(
-    g: PendingGroup,
-    work_of: &HashMap<PlanKey, Work>,
-    map: &ShardMap,
+    g: PendingGroup<Arc<ServeState>>,
+    shards: usize,
     txs: &[mpsc::Sender<WorkItem>],
     metrics: &mut ServeMetrics,
 ) -> Result<()> {
-    let work = *work_of
-        .get(&g.key)
-        .expect("dispatched group without registered work");
+    let work = match g.key {
+        PlanKey::Cached(pid) => Work::Cached(pid),
+        // all riders of a cold group query the same node
+        PlanKey::Cold(_) => Work::Cold(g.queries[0].node),
+    };
     let shard = match work {
-        Work::Cached(pid) => map.shard_of_plan(pid),
-        Work::Cold(node) => map.shard_of_node(node),
+        Work::Cached(pid) => g.snap.placement.shard_of_plan(pid, shards),
+        Work::Cold(node) => g.snap.placement.shard_of_node(node, shards),
     };
     metrics.record_dispatch(shard, g.queries.len() as u64);
     txs[shard]
         .send(WorkItem {
             key: g.key,
+            epoch: g.epoch,
+            state: g.snap,
             work,
             queries: g.queries,
         })
@@ -229,80 +334,128 @@ fn dispatch_group(
 /// Serve `cfg.queries` queries drawn from `population` with `skew`,
 /// closed-loop, with a per-run results memo sized by
 /// `cfg.results_cache_bytes`. `setup` is borrowed mutably for the
-/// router's cold-plan memo, which stays warm across repeated runs
-/// (the bench's shard sweep reuses one setup).
+/// router's cold-id memo, which stays warm across repeated runs.
 pub fn serve_closed_loop(
-    ds: &Dataset,
     setup: &mut ServeSetup,
     population: &[u32],
     skew: Skew,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
     let mut results = ResultsCache::new(cfg.results_cache_bytes, cfg.results_ttl);
-    serve_closed_loop_with(ds, setup, population, skew, cfg, &mut results)
+    serve_closed_loop_with(setup, population, skew, cfg, &mut results)
 }
 
 /// [`serve_closed_loop`] against a caller-owned results memo — the
 /// dynamic-update session keeps one memo alive across serving
 /// segments so post-delta epoch eviction is actually observable.
-/// Memo lookups and inserts are keyed by the plan's current epoch
-/// (`setup.epochs`); cold plans use epoch 0 (their router ids are
-/// never reused across deltas). Blocks until every query completes
-/// and all shards have shut down; returns the aggregate report.
+/// Memo lookups and inserts are keyed by the plan's epoch in the
+/// snapshot the query was admitted under (cold plans key on the
+/// snapshot epoch itself). Blocks until every query completes and all
+/// shards have shut down; returns the aggregate report.
 pub fn serve_closed_loop_with(
-    ds: &Dataset,
     setup: &mut ServeSetup,
     population: &[u32],
     skew: Skew,
     cfg: &ServeConfig,
     results: &mut ResultsCache,
 ) -> Result<ServeReport> {
-    let cache = &setup.cache;
-    let meta = &setup.meta;
-    let state = &setup.state;
-    let epochs = &setup.epochs;
+    serve_with_churn(setup, population, skew, cfg, results, None)
+        .map(|(report, _)| report)
+}
+
+/// The full loop: [`serve_closed_loop_with`] plus an optional [`Churn`]
+/// source. Returns the serve report and the [`UpdateReport`]s of every
+/// delta applied during the run (empty without churn).
+pub fn serve_with_churn(
+    setup: &mut ServeSetup,
+    population: &[u32],
+    skew: Skew,
+    cfg: &ServeConfig,
+    results: &mut ResultsCache,
+    churn: Option<Churn<'_>>,
+) -> Result<(ServeReport, Vec<UpdateReport>)> {
+    let state0 = setup.cell.load();
     let router = &mut setup.router;
     // ServeSetup persists across runs; report this run's delta
     let cold_ids_at_start = router.cold_built;
     anyhow::ensure!(!population.is_empty(), "empty query population");
     anyhow::ensure!(cfg.queries > 0, "need at least one query");
     anyhow::ensure!(
-        meta.feat == ds.feat_dim,
+        state0.meta.feat == state0.ds.feat_dim,
         "artifact feat {} != dataset feat {}",
-        meta.feat,
-        ds.feat_dim
+        state0.meta.feat,
+        state0.ds.feat_dim
     );
     let shards = cfg.shards.max(1);
     let total = cfg.queries as u64;
     let clients = cfg.clients.max(1).min(cfg.queries) as u64;
-    let classes = meta.classes;
+    let classes = state0.meta.classes;
 
-    let mut rng = Rng::new(cfg.seed ^ 0x5E21);
-    let map = ShardMap::build(ds, cache, shards, &mut rng);
-    let mut queue = MicrobatchQueue::new(cfg.flush_window, cfg.max_coalesce);
+    let mut queue: MicrobatchQueue<Arc<ServeState>> =
+        MicrobatchQueue::new(cfg.flush_window, cfg.max_coalesce);
     let mut metrics = ServeMetrics::new(shards);
-    let epoch_of = |key: &PlanKey| -> u64 {
-        match key {
-            PlanKey::Cached(pid) => {
-                epochs.get(*pid as usize).copied().unwrap_or(0)
-            }
-            PlanKey::Cold(_) => 0,
-        }
-    };
     let mut load = LoadGen::new(population, skew, cfg.seed ^ 0x10AD);
+    let cell = setup.cell.clone();
 
-    std::thread::scope(|scope| -> Result<ServeReport> {
+    // churn plumbing: triggers fire as `completed` crosses them
+    let stop = Arc::new(AtomicBool::new(false));
+    let (urep_tx, urep_rx) = mpsc::channel::<UpdateReport>();
+    enum ChurnRt<'a> {
+        None,
+        Inline {
+            applier: &'a mut UpdateApplier,
+            pending: VecDeque<(u64, GraphDelta)>,
+        },
+        Background {
+            tx: mpsc::Sender<GraphDelta>,
+            pending: VecDeque<(u64, GraphDelta)>,
+        },
+        Stream,
+    }
+
+    std::thread::scope(|scope| -> Result<(ServeReport, Vec<UpdateReport>)> {
+        let mut applier_handle = None;
+        let mut churn_rt = match churn {
+            None => ChurnRt::None,
+            Some(Churn::Inline { applier, deltas }) => {
+                let mut pending: VecDeque<_> = deltas.into_iter().collect();
+                pending
+                    .make_contiguous()
+                    .sort_by_key(|(trigger, _)| *trigger);
+                ChurnRt::Inline { applier, pending }
+            }
+            Some(Churn::Background { applier, deltas }) => {
+                let mut pending: VecDeque<_> = deltas.into_iter().collect();
+                pending
+                    .make_contiguous()
+                    .sort_by_key(|(trigger, _)| *trigger);
+                let (tx, rx) = mpsc::channel::<GraphDelta>();
+                let stop = stop.clone();
+                let reports = urep_tx.clone();
+                applier_handle = Some(
+                    scope.spawn(move || run_applier(applier, rx, &stop, reports)),
+                );
+                ChurnRt::Background { tx, pending }
+            }
+            Some(Churn::Stream { applier, rx }) => {
+                let stop = stop.clone();
+                let reports = urep_tx.clone();
+                applier_handle = Some(
+                    scope.spawn(move || run_applier(applier, rx, &stop, reports)),
+                );
+                ChurnRt::Stream
+            }
+        };
+        drop(urep_tx);
+
         let (res_tx, res_rx) = mpsc::channel::<ShardMsg>();
         let mut txs: Vec<mpsc::Sender<WorkItem>> = Vec::with_capacity(shards);
         for shard_id in 0..shards {
             let (tx, rx) = mpsc::channel::<WorkItem>();
             let ctx = ShardCtx {
                 shard_id,
-                ds,
-                cache,
-                meta,
-                state,
-                bucket: meta.n_pad,
+                feat_dim: state0.ds.feat_dim,
+                bucket: state0.meta.n_pad,
                 ring_depth: cfg.ring_depth,
                 cold_aux: cfg.cold_aux,
             };
@@ -312,12 +465,63 @@ pub fn serve_closed_loop_with(
         }
         drop(res_tx);
 
-        let mut work_of: HashMap<PlanKey, Work> = HashMap::new();
         let mut arrivals: HashMap<u64, Instant> = HashMap::new();
+        let mut inline_reports: Vec<UpdateReport> = Vec::new();
         let mut issued = 0u64;
         let mut completed = 0u64;
+        let mut seen_epoch = state0.epoch;
+        let mut snapshot_swaps = 0u64;
+        let mut memo_swept = 0u64;
+        drop(state0);
         let t0 = Instant::now();
         let wall_s = loop {
+            // churn triggers keyed on progress
+            match &mut churn_rt {
+                ChurnRt::Inline { applier, pending } => {
+                    while pending
+                        .front()
+                        .map(|(at, _)| *at <= completed)
+                        .unwrap_or(false)
+                    {
+                        let (_, delta) = pending.pop_front().unwrap();
+                        // quiesced baseline: the rebuild runs here, on
+                        // the control thread — every pending deadline
+                        // and admission waits it out
+                        inline_reports.push(applier.apply(&delta)?);
+                    }
+                }
+                ChurnRt::Background { tx, pending } => {
+                    while pending
+                        .front()
+                        .map(|(at, _)| *at <= completed)
+                        .unwrap_or(false)
+                    {
+                        let (_, delta) = pending.pop_front().unwrap();
+                        let _ = tx.send(delta);
+                    }
+                }
+                _ => {}
+            }
+
+            // one consistent snapshot per admission round
+            let state = cell.load();
+            if state.epoch != seen_epoch {
+                anyhow::ensure!(
+                    state.epoch > seen_epoch,
+                    "snapshot epoch regressed: {} -> {}",
+                    seen_epoch,
+                    state.epoch
+                );
+                snapshot_swaps += 1;
+                seen_epoch = state.epoch;
+                // eager sweep: reclaim epoch-expired memo bytes now
+                // instead of entry-by-entry on future reads
+                let sweep_state = state.clone();
+                memo_swept += results
+                    .purge_stale(move |k| sweep_state.plan_epoch(k))
+                    as u64;
+            }
+
             // closed-loop admission: top up to `clients` in flight;
             // memo hits complete synchronously and free their client
             // slot immediately.
@@ -326,16 +530,17 @@ pub fn serve_closed_loop_with(
                 let id = issued;
                 issued += 1;
                 let now = Instant::now();
-                let route = router.route(node);
+                let route = router.route(&state.index, node);
                 let key = route.key();
                 let pos = route.pos();
-                if let Some(logits) = results.get(key, epoch_of(&key), now) {
+                let epoch = state.plan_epoch(&key);
+                if let Some(logits) = results.get(key, epoch, now) {
                     let start = pos as usize * classes;
                     let pred = argmax(&logits[start..start + classes]);
                     metrics.cache_hit_queries += 1;
                     metrics.record_completion(
                         0.0,
-                        pred == ds.labels[node as usize] as usize,
+                        pred == state.ds.labels[node as usize] as usize,
                     );
                     completed += 1;
                     continue;
@@ -345,17 +550,15 @@ pub fn serve_closed_loop_with(
                 if matches!(route, Route::Cold { .. }) {
                     metrics.cold_routes += 1;
                 }
-                let work = match route {
-                    Route::Cached { plan, .. } => Work::Cached(plan),
-                    // the node's home shard synthesizes + memoizes
-                    Route::Cold { .. } => Work::Cold(node),
-                };
-                work_of.entry(key).or_insert(work);
                 arrivals.insert(id, now);
-                if let Some(group) =
-                    queue.push(key, QueryTicket { id, node, pos }, now)
-                {
-                    dispatch_group(group, &work_of, &map, &txs, &mut metrics)?;
+                if let Some(group) = queue.push(
+                    key,
+                    epoch,
+                    &state,
+                    QueryTicket { id, node, pos },
+                    now,
+                ) {
+                    dispatch_group(group, shards, &txs, &mut metrics)?;
                 }
             }
             if completed >= total {
@@ -364,7 +567,7 @@ pub fn serve_closed_loop_with(
             // deadline flushes
             let now = Instant::now();
             for group in queue.due(now) {
-                dispatch_group(group, &work_of, &map, &txs, &mut metrics)?;
+                dispatch_group(group, shards, &txs, &mut metrics)?;
             }
             // sleep until the next deadline or the next completion
             let timeout = queue
@@ -384,7 +587,7 @@ pub fn serve_closed_loop_with(
                         completed += 1;
                     }
                     metrics.exec_s += r.exec_s;
-                    results.insert(r.key, epoch_of(&r.key), r.out_logits, now);
+                    results.insert(r.key, r.epoch, r.out_logits, now);
                 }
                 Ok(ShardMsg::Done(_)) => {
                     anyhow::bail!("shard exited early");
@@ -395,6 +598,46 @@ pub fn serve_closed_loop_with(
                 }
             }
         };
+
+        // flush triggers the final completions skipped past (a memo
+        // burst can advance `completed` across a trigger and straight
+        // to `total` within one admission round) — every trigger-fed
+        // delta is applied exactly once, deterministically
+        match &mut churn_rt {
+            ChurnRt::Inline { applier, pending } => {
+                while let Some((_, delta)) = pending.pop_front() {
+                    inline_reports.push(applier.apply(&delta)?);
+                }
+            }
+            ChurnRt::Background { tx, pending } => {
+                while let Some((_, delta)) = pending.pop_front() {
+                    let _ = tx.send(delta);
+                }
+            }
+            _ => {}
+        }
+
+        // retire the applier: Background closes its channel (the
+        // applier drains every fed delta, then sees Disconnected);
+        // Stream raises the stop flag (best effort — the tailer owns
+        // the sender). Joining BEFORE draining the report channel
+        // makes the collected reports complete: nothing can arrive
+        // after the join, so no 30s-per-missing-report timeouts and no
+        // silently dropped late reports.
+        let mut update_reports = inline_reports;
+        match churn_rt {
+            ChurnRt::Background { tx, .. } => drop(tx),
+            _ => stop.store(true, Ordering::Release),
+        }
+        if let Some(handle) = applier_handle {
+            handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("update applier panicked"))?;
+            while let Ok(r) = urep_rx.try_recv() {
+                update_reports.push(r);
+            }
+        }
+        stop.store(true, Ordering::Release);
 
         // shut shards down and collect their final accounting
         drop(txs);
@@ -409,8 +652,9 @@ pub fn serve_closed_loop_with(
             }
         }
 
+        let final_state = cell.load();
         let lat = &metrics.latency;
-        Ok(ServeReport {
+        let report = ServeReport {
             queries: cfg.queries,
             wall_s,
             qps: total as f64 / wall_s.max(1e-9),
@@ -429,13 +673,17 @@ pub fn serve_closed_loop_with(
             accuracy: metrics.accuracy(),
             shard_queries: metrics.shard_queries.clone(),
             shard_balance: metrics.shard_balance(),
-            plans: cache.len(),
+            plans: final_state.cache.len(),
             exec_s: metrics.exec_s,
             mat_wait_s,
             arena_bytes,
             arena_allocations,
             results_cache_bytes: results.bytes(),
-        })
+            snapshot_swaps,
+            final_epoch: final_state.epoch,
+            memo_swept,
+        };
+        Ok((report, update_reports))
     })
 }
 
@@ -459,10 +707,10 @@ mod tests {
             ..Default::default()
         };
         let eval = ds.splits.train.clone();
-        let mut setup = prepare(&ds, &eval, &cfg);
-        assert!(!setup.cache.is_empty());
+        let mut setup = prepare(ds, &eval, &cfg);
+        assert!(!setup.state().cache.is_empty());
         let report =
-            serve_closed_loop(&ds, &mut setup, &eval, Skew::Zipf(1.2), &cfg)
+            serve_closed_loop(&mut setup, &eval, Skew::Zipf(1.2), &cfg)
                 .unwrap();
         assert_eq!(report.queries, 64);
         assert_eq!(
@@ -480,6 +728,9 @@ mod tests {
         );
         // closed loop with no warm memo must execute at least once
         assert!(report.executions >= 1);
+        // static deployment: epoch 0 throughout, no swaps observed
+        assert_eq!(report.snapshot_swaps, 0);
+        assert_eq!(report.final_epoch, 0);
     }
 
     #[test]
@@ -494,13 +745,46 @@ mod tests {
             ..Default::default()
         };
         let eval = ds.splits.train.clone();
-        let mut setup = prepare(&ds, &eval, &cfg);
         let node = [eval[0]];
+        let mut setup = prepare(ds, &eval, &cfg);
         let report =
-            serve_closed_loop(&ds, &mut setup, &node, Skew::Uniform, &cfg)
-                .unwrap();
+            serve_closed_loop(&mut setup, &node, Skew::Uniform, &cfg).unwrap();
         assert_eq!(report.executions, 1, "one execution, then memo hits");
         assert_eq!(report.cache_hits, 39);
         assert!(report.cache_hit_rate > 0.9);
+    }
+
+    #[test]
+    fn cold_start_from_cache_matches_planned_prepare() {
+        let ds = tiny();
+        let cfg = ServeConfig::default();
+        let eval = ds.splits.train.clone();
+        let planned = prepare(ds.clone(), &eval, &cfg);
+        let planned_state = planned.state();
+        // rebuild the deployment from the "persisted" cache + index
+        let cache = CowCache::from_cache(
+            &planned_state.cache.to_batch_cache(),
+        );
+        let index = RouterIndex::from_packed(
+            planned_state.index.to_packed(),
+            &cache,
+        )
+        .unwrap();
+        let cold =
+            prepare_from_cache(ds, cache, Some(index), &cfg).unwrap();
+        let cold_state = cold.state();
+        assert_eq!(cold_state.cache.len(), planned_state.cache.len());
+        assert_eq!(
+            cold_state.index.coverage(),
+            planned_state.index.coverage()
+        );
+        for u in 0..cold_state.ds.graph.num_nodes() as u32 {
+            assert_eq!(
+                cold_state.index.lookup(u),
+                planned_state.index.lookup(u),
+                "node {u}"
+            );
+        }
+        assert_eq!(cold_state.meta.n_pad, planned_state.meta.n_pad);
     }
 }

@@ -1,31 +1,40 @@
-//! Sharded executor workers.
+//! Sharded executor workers over immutable snapshots.
 //!
 //! Each shard is one worker thread owning its own
 //! [`BatchArena`] and prefetch ring — the serving analogue of the
 //! training pipeline's materialize/execute overlap (DESIGN.md §7, cf.
 //! "Accelerating Training and Inference of GNNs with Fast Sampling and
 //! Pipelining", arXiv 2110.08450: keep executors saturated while batch
-//! preparation overlaps). Plans are assigned to shards through the
-//! METIS graph partition, so the plans a shard executes cover adjacent
-//! regions of the graph and its arena + feature working set stays
-//! memory-local; cold plans follow their root node's partition cell.
+//! preparation overlaps). Every [`WorkItem`] carries the
+//! `Arc<ServeState>` snapshot its group was admitted under
+//! (DESIGN.md §11): the shard reads graph, plan payloads, features,
+//! and labels from *that* snapshot, so an epoch swap mid-drain never
+//! tears a group — items of different epochs simply read different
+//! (immutable) states, and the shard needs no locks and no quiesce.
+//!
+//! Plans and nodes are placed on shards through the [`Placement`]
+//! partition-cell table (a fixed-granularity METIS partition folded
+//! onto the run's shard count), so the plans a shard executes cover
+//! adjacent regions of the graph and its arena + feature working set
+//! stays memory-local; cold plans follow their root node's cell.
 //!
 //! Execution runs the exact CPU reference forward pass
 //! ([`forward`]) over the plan's induced subgraph, reading
-//! edge topology zero-copy from the [`BatchCache`] arena slices and
-//! dense features from the arena-pooled [`DenseBatch`]. The artifact
-//! metadata is synthesized by [`reference_artifact`] in the exact AOT
-//! manifest layout, so swapping in `Runtime::infer_step` when PJRT
-//! artifacts exist is a local change to [`shard_worker`]'s consume
-//! closure.
+//! edge topology zero-copy from the snapshot's [`CowCache`] payloads
+//! and dense features from the arena-pooled [`DenseBatch`]. The
+//! artifact metadata is synthesized by [`reference_artifact`] in the
+//! exact AOT manifest layout, so swapping in `Runtime::infer_step`
+//! when PJRT artifacts exist is a local change to [`shard_worker`]'s
+//! consume closure.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::batching::{BatchArena, BatchCache, DenseBatch};
+use crate::batching::{BatchArena, CowCache, DenseBatch};
 use crate::datasets::Dataset;
-use crate::graph::induced_subgraph;
+use crate::graph::{induced_subgraph, CsrGraph};
 use crate::inference::fullgraph::{forward, SparseGraphRef};
 use crate::partition::metis::{partition_graph, MetisConfig};
 use crate::pipeline::run_prefetched;
@@ -36,6 +45,7 @@ use crate::util::Rng;
 
 use super::queue::QueryTicket;
 use super::router::PlanKey;
+use super::state::ServeState;
 
 /// Max work items a shard drains from its channel per prefetch run.
 const MAX_DRAIN: usize = 64;
@@ -45,6 +55,12 @@ const MAX_DRAIN: usize = 64;
 /// from growing the memo without limit (each plan holds up to
 /// `bucket` nodes plus its edge arrays).
 const MAX_COLD_PLANS: usize = 1024;
+
+/// Partition-cell granularity of [`Placement`]: fixed so the cell
+/// table is shard-count independent (one table serves every run and
+/// survives snapshot patches) yet fine enough that folding cells onto
+/// 1–16 shards stays balanced.
+pub const PLACEMENT_CELLS: usize = 32;
 
 /// Index of the largest logit (deterministic: first max wins).
 pub fn argmax(row: &[f32]) -> usize {
@@ -152,60 +168,108 @@ pub fn reference_artifact(
     }
 }
 
-/// Plan → shard and node → shard assignment derived from the METIS
-/// graph partition (memory locality: a shard's plans cover adjacent
-/// graph regions).
+/// Node → partition cell and plan → home cell, derived from the METIS
+/// graph partition at a fixed [`PLACEMENT_CELLS`] granularity (memory
+/// locality: a shard's plans cover adjacent graph regions). Cells fold
+/// onto the run's shard count with a modulus, so one immutable table
+/// inside the snapshot serves any shard count, and graph deltas patch
+/// it structurally: outputs never migrate between plans, so plan
+/// homes are stable, and appended nodes only *extend* the node table
+/// ([`Placement::extended`]).
 #[derive(Debug, Clone)]
-pub struct ShardMap {
-    pub num_shards: usize,
-    node_part: Vec<u32>,
-    plan_shard: Vec<u32>,
+pub struct Placement {
+    cells: usize,
+    node_cell: Vec<u32>,
+    plan_cell: Vec<u32>,
 }
 
-impl ShardMap {
+impl Placement {
     pub fn build(
         ds: &Dataset,
-        cache: &BatchCache,
-        num_shards: usize,
+        cache: &CowCache,
+        cells: usize,
         rng: &mut Rng,
-    ) -> ShardMap {
-        let k = num_shards.max(1);
-        let node_part = partition_graph(&ds.graph, k, &MetisConfig::default(), rng);
-        let mut plan_shard = Vec::with_capacity(cache.len());
-        for pid in 0..cache.len() {
-            // majority vote of the plan's output nodes
-            let mut votes = vec![0usize; k];
-            for &u in cache.output_nodes(pid) {
-                votes[node_part[u as usize] as usize] += 1;
-            }
-            let mut best = 0usize;
-            for s in 1..k {
-                if votes[s] > votes[best] {
-                    best = s;
-                }
-            }
-            plan_shard.push(best as u32);
-        }
-        ShardMap {
-            num_shards: k,
-            node_part,
-            plan_shard,
+    ) -> Placement {
+        let cells = cells.clamp(1, ds.graph.num_nodes().max(1));
+        let node_cell =
+            partition_graph(&ds.graph, cells, &MetisConfig::default(), rng);
+        let plan_cell = (0..cache.len())
+            .map(|pid| Self::majority_cell(cache.output_nodes(pid), &node_cell, cells))
+            .collect();
+        Placement {
+            cells,
+            node_cell,
+            plan_cell,
         }
     }
 
-    pub fn shard_of_plan(&self, pid: u32) -> usize {
-        self.plan_shard[pid as usize] as usize
+    fn majority_cell(outputs: &[u32], node_cell: &[u32], cells: usize) -> u32 {
+        let mut votes = vec![0usize; cells];
+        for &u in outputs {
+            votes[node_cell[u as usize] as usize] += 1;
+        }
+        let mut best = 0usize;
+        for c in 1..cells {
+            if votes[c] > votes[best] {
+                best = c;
+            }
+        }
+        best as u32
     }
 
-    pub fn shard_of_node(&self, node: u32) -> usize {
-        self.node_part[node as usize] as usize
+    /// The next snapshot's placement after node appends: existing
+    /// cells are untouched (plan homes are majority votes over output
+    /// nodes, which never change), appended nodes adopt the cell of
+    /// their first already-placed neighbor — locality for nodes that
+    /// arrived with edges — or fall back to a round-robin cell.
+    pub fn extended(&self, graph: &CsrGraph) -> Placement {
+        let n = graph.num_nodes();
+        debug_assert!(n >= self.node_cell.len());
+        let mut node_cell = self.node_cell.clone();
+        for u in node_cell.len()..n {
+            let inherited = graph
+                .neighbors(u as u32)
+                .iter()
+                .find(|&&v| (v as usize) < node_cell.len() && v as usize != u)
+                .map(|&v| node_cell[v as usize]);
+            node_cell.push(
+                inherited.unwrap_or((u % self.cells.max(1)) as u32),
+            );
+        }
+        Placement {
+            cells: self.cells,
+            node_cell,
+            plan_cell: self.plan_cell.clone(),
+        }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.cells
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.node_cell.len()
+    }
+
+    pub fn num_plans(&self) -> usize {
+        self.plan_cell.len()
+    }
+
+    /// Fold plan `pid`'s home cell onto `shards` workers.
+    pub fn shard_of_plan(&self, pid: u32, shards: usize) -> usize {
+        self.plan_cell[pid as usize] as usize % shards.max(1)
+    }
+
+    /// Fold node `node`'s cell onto `shards` workers.
+    pub fn shard_of_node(&self, node: u32, shards: usize) -> usize {
+        self.node_cell[node as usize] as usize % shards.max(1)
     }
 }
 
 /// A synthesized single-output plan for a node absent from every
-/// precomputed batch, memoized shard-locally. The query node is
-/// always local id 0 / the single output. Edge endpoints are stored
-/// *only* pre-split into parallel arrays (the tuple form a
+/// precomputed batch, memoized shard-locally per (node, epoch). The
+/// query node is always local id 0 / the single output. Edge endpoints
+/// are stored *only* pre-split into parallel arrays (the tuple form a
 /// `BatchPlan` carries would double the memo's edge bytes) so the
 /// executor can build a [`SparseGraphRef`] without per-query work.
 #[derive(Debug)]
@@ -258,17 +322,22 @@ pub fn synthesize_cold(
 }
 
 /// What a shard executes: a cached plan id or a cold query node whose
-/// plan the shard synthesizes (once) and memoizes locally.
+/// plan the shard synthesizes (once per epoch) and memoizes locally.
 #[derive(Debug, Clone, Copy)]
 pub enum Work {
     Cached(u32),
     Cold(u32),
 }
 
-/// One coalesced group dispatched to a shard.
+/// One coalesced group dispatched to a shard, pinned to the snapshot
+/// it was admitted under.
 #[derive(Debug)]
 pub struct WorkItem {
     pub key: PlanKey,
+    /// Freshness epoch of the group's plan (stamps the memo insert).
+    pub epoch: u64,
+    /// The snapshot this group executes against.
+    pub state: Arc<ServeState>,
     pub work: Work,
     pub queries: Vec<QueryTicket>,
 }
@@ -287,6 +356,8 @@ pub struct QueryOutcome {
 pub struct ShardResult {
     pub shard_id: usize,
     pub key: PlanKey,
+    /// Plan epoch the logits were computed at (memo freshness stamp).
+    pub epoch: u64,
     pub outcomes: Vec<QueryOutcome>,
     /// Logits of the plan's output nodes, row-major
     /// `[num_outputs * classes]` — feeds the results memo.
@@ -318,15 +389,16 @@ pub enum ShardMsg {
     Done(ShardDone),
 }
 
-/// Borrowed execution context of one shard (all shared state is
-/// immutable; the arena and cold-plan memo are shard-private).
-#[derive(Clone, Copy)]
-pub struct ShardCtx<'a> {
+/// Plain-data execution context of one shard. Everything the shard
+/// reads per group travels inside [`WorkItem::state`]; the context
+/// only fixes run-wide constants (the arena bucket is pinned at
+/// prepare time — rebuilt plans are budget-clamped to keep fitting
+/// it).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardCtx {
     pub shard_id: usize,
-    pub ds: &'a Dataset,
-    pub cache: &'a BatchCache,
-    pub meta: &'a ArtifactMeta,
-    pub state: &'a ModelState,
+    /// Dataset feature width (arena pool key; stable across epochs).
+    pub feat_dim: usize,
     /// Dense-buffer bucket (n_pad) every plan must fit — also the
     /// node cap for synthesized cold plans.
     pub bucket: usize,
@@ -361,25 +433,26 @@ fn fill_features(
 }
 
 fn execute_one(
-    ctx: &ShardCtx<'_>,
+    ctx: &ShardCtx,
     item: &WorkItem,
-    cold_plans: &HashMap<u32, ColdPlan>,
+    cold_plans: &HashMap<(u32, u64), ColdPlan>,
     buf: &DenseBatch,
 ) -> ShardResult {
     let t = Instant::now();
+    let state = &item.state;
     let n = buf.num_real;
-    let classes = ctx.meta.classes;
+    let classes = state.meta.classes;
     let (edge_src, edge_dst, weights) = match &item.work {
         Work::Cached(pid) => {
             let p = *pid as usize;
             (
-                ctx.cache.edge_src_of(p),
-                ctx.cache.edge_dst_of(p),
-                ctx.cache.edge_weights_of(p),
+                state.cache.edge_src_of(p),
+                state.cache.edge_dst_of(p),
+                state.cache.edge_weights_of(p),
             )
         }
         Work::Cold(node) => {
-            let cp = &cold_plans[node];
+            let cp = &cold_plans[&(*node, item.epoch)];
             (
                 cp.edge_src.as_slice(),
                 cp.edge_dst.as_slice(),
@@ -393,8 +466,12 @@ fn execute_one(
         edge_dst,
         weights,
     };
-    let mut out_logits =
-        forward(ctx.meta, ctx.state, &g, &buf.x[..n * ctx.meta.feat]);
+    let mut out_logits = forward(
+        &state.meta,
+        &state.model,
+        &g,
+        &buf.x[..n * state.meta.feat],
+    );
     out_logits.truncate(buf.num_outputs * classes);
     let outcomes = item
         .queries
@@ -406,13 +483,14 @@ fn execute_one(
                 id: q.id,
                 node: q.node,
                 pred: pred as u16,
-                correct: pred == ctx.ds.labels[q.node as usize] as usize,
+                correct: pred == state.ds.labels[q.node as usize] as usize,
             }
         })
         .collect();
     ShardResult {
         shard_id: ctx.shard_id,
         key: item.key,
+        epoch: item.epoch,
         outcomes,
         out_logits,
         num_outputs: buf.num_outputs,
@@ -424,16 +502,19 @@ fn execute_one(
 /// Shard worker loop: drain up to [`MAX_DRAIN`] pending groups, stream
 /// them through the prefetch ring (materialize overlapped with
 /// execute), send one [`ShardResult`] per group, repeat until the work
-/// channel closes; then report [`ShardDone`].
+/// channel closes; then report [`ShardDone`]. Cold plans are memoized
+/// per **(node, epoch)** — a delta that publishes a new snapshot makes
+/// the next cold query for the node synthesize against the new graph,
+/// while an in-flight old-epoch group still reads its own synthesis.
 pub fn shard_worker(
-    ctx: ShardCtx<'_>,
+    ctx: ShardCtx,
     rx: Receiver<WorkItem>,
     tx: Sender<ShardMsg>,
 ) {
-    let mut arena = BatchArena::new(ctx.ds.feat_dim);
-    let mut cold_plans: HashMap<u32, ColdPlan> = HashMap::new();
-    let mut cold_order: VecDeque<u32> = VecDeque::new();
-    let mut ws = PushWorkspace::new(ctx.ds.graph.num_nodes());
+    let mut arena = BatchArena::new(ctx.feat_dim);
+    let mut cold_plans: HashMap<(u32, u64), ColdPlan> = HashMap::new();
+    let mut cold_order: VecDeque<(u32, u64)> = VecDeque::new();
+    let mut ws = PushWorkspace::new(0);
     let push_cfg = PushConfig::default();
     let mut wait_s = 0.0;
     let mut consume_s = 0.0;
@@ -450,21 +531,24 @@ pub fn shard_worker(
                 Err(_) => break,
             }
         }
-        // synthesize any first-seen cold plans up front so the ring
-        // closures below only read the memo
+        // synthesize any first-seen (node, epoch) cold plans up front
+        // so the ring closures below only read the memo
         for item in &items {
             if let Work::Cold(node) = item.work {
-                if !cold_plans.contains_key(&node) {
+                let key = (node, item.epoch);
+                if !cold_plans.contains_key(&key) {
+                    let ds = &item.state.ds;
+                    ws.ensure(ds.graph.num_nodes());
                     let cp = synthesize_cold(
-                        ctx.ds,
+                        ds,
                         node,
                         ctx.cold_aux,
                         ctx.bucket,
                         &push_cfg,
                         &mut ws,
                     );
-                    cold_plans.insert(node, cp);
-                    cold_order.push_back(node);
+                    cold_plans.insert(key, cp);
+                    cold_order.push_back(key);
                 }
             }
         }
@@ -476,19 +560,22 @@ pub fn shard_worker(
         let (stats, ring) = run_prefetched(
             &order,
             ring,
-            |i, buf| match &items_ref[i].work {
-                Work::Cached(pid) => {
-                    let p = *pid as usize;
-                    fill_features(
-                        ctx.ds,
-                        ctx.cache.batch_nodes(p),
-                        ctx.cache.num_outputs(p),
-                        buf,
-                    )
-                }
-                Work::Cold(node) => {
-                    let cp = &cold_ref[node];
-                    fill_features(ctx.ds, &cp.nodes, 1, buf)
+            |i, buf| {
+                let item = &items_ref[i];
+                match &item.work {
+                    Work::Cached(pid) => {
+                        let p = *pid as usize;
+                        fill_features(
+                            &item.state.ds,
+                            item.state.cache.batch_nodes(p),
+                            item.state.cache.num_outputs(p),
+                            buf,
+                        )
+                    }
+                    Work::Cold(node) => {
+                        let cp = &cold_ref[&(*node, item.epoch)];
+                        fill_features(&item.state.ds, &cp.nodes, 1, buf)
+                    }
                 }
             },
             |i, buf| {
@@ -497,6 +584,8 @@ pub fn shard_worker(
             },
         );
         arena.release_many(ring);
+        // items drop here — releasing their pinned snapshots promptly
+        drop(items);
         // FIFO-bound the cold memo AFTER the drain: evicting mid-drain
         // could drop a plan another item of this drain still reads.
         // The cap is exceeded by at most one drain's worth of plans.
@@ -527,8 +616,10 @@ mod tests {
     use super::*;
     use crate::batching::{BatchGenerator, NodeWiseIbmb};
     use crate::datasets::{sbm, DatasetSpec};
+    use crate::serve::service::build_initial_state;
+    use crate::serve::ServeConfig;
 
-    fn setup() -> (Dataset, BatchCache) {
+    fn setup() -> (Dataset, CowCache) {
         let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 21);
         let mut g = NodeWiseIbmb {
             aux_per_output: 6,
@@ -538,7 +629,7 @@ mod tests {
         };
         let mut rng = Rng::new(9);
         let out = ds.splits.train.clone();
-        let cache = BatchCache::build(&g.plan(&ds, &out, &mut rng));
+        let cache = CowCache::from_plans(&g.plan(&ds, &out, &mut rng));
         (ds, cache)
     }
 
@@ -585,76 +676,81 @@ mod tests {
     }
 
     #[test]
-    fn shard_map_covers_all_plans_and_nodes() {
+    fn placement_covers_all_plans_and_nodes_at_any_shard_count() {
         let (ds, cache) = setup();
         let mut rng = Rng::new(4);
-        for shards in [1usize, 2, 4] {
-            let map = ShardMap::build(&ds, &cache, shards, &mut rng);
-            assert_eq!(map.num_shards, shards);
+        let p = Placement::build(&ds, &cache, PLACEMENT_CELLS, &mut rng);
+        assert_eq!(p.num_nodes(), ds.graph.num_nodes());
+        assert_eq!(p.num_plans(), cache.len());
+        for shards in [1usize, 2, 4, 7] {
             for pid in 0..cache.len() as u32 {
-                assert!(map.shard_of_plan(pid) < shards);
+                assert!(p.shard_of_plan(pid, shards) < shards);
             }
             for u in 0..ds.graph.num_nodes() as u32 {
-                assert!(map.shard_of_node(u) < shards);
+                assert!(p.shard_of_node(u, shards) < shards);
             }
+        }
+        // the fold is consistent: same cell → same shard
+        for pid in 0..cache.len() as u32 {
+            assert_eq!(
+                p.shard_of_plan(pid, 2),
+                p.plan_cell[pid as usize] as usize % 2
+            );
         }
     }
 
     #[test]
-    fn plan_shard_follows_output_majority() {
+    fn extended_placement_inherits_neighbor_cells() {
         let (ds, cache) = setup();
         let mut rng = Rng::new(4);
-        let map = ShardMap::build(&ds, &cache, 2, &mut rng);
-        for pid in 0..cache.len() {
-            let shard = map.shard_of_plan(pid as u32);
-            let on_shard = cache
-                .output_nodes(pid)
-                .iter()
-                .filter(|&&u| map.shard_of_node(u) == shard)
-                .count();
-            assert!(
-                2 * on_shard >= cache.num_outputs(pid),
-                "plan {pid}: {} of {} outputs on shard {shard}",
-                on_shard,
-                cache.num_outputs(pid)
-            );
-        }
+        let p = Placement::build(&ds, &cache, PLACEMENT_CELLS, &mut rng);
+        // append two nodes: one wired to node 0, one isolated
+        let mut dg = crate::graph::DynamicGraph::new(ds.graph.clone());
+        let n0 = ds.graph.num_nodes() as u32;
+        dg.apply(&crate::graph::GraphDelta {
+            add_node_labels: vec![0, 1],
+            add_edges: vec![(n0, 0)],
+            ..Default::default()
+        })
+        .unwrap();
+        let grown = dg.snapshot();
+        let q = p.extended(&grown);
+        assert_eq!(q.num_nodes(), ds.graph.num_nodes() + 2);
+        assert_eq!(q.num_plans(), p.num_plans());
+        // wired node adopts its neighbor's cell; old nodes unchanged
+        assert_eq!(q.node_cell[n0 as usize], p.node_cell[0]);
+        assert_eq!(q.node_cell[..p.num_nodes()], p.node_cell[..]);
     }
 
     #[test]
     fn worker_executes_groups_and_reports_done() {
         use std::sync::mpsc;
         let (ds, cache) = setup();
-        let meta = reference_artifact(
-            "gcn",
-            ds.feat_dim,
-            ds.num_classes,
-            8,
-            2,
-            2,
-            cache.max_batch_nodes().next_power_of_two().max(16),
-        );
-        let state = ModelState::init(&meta, 1);
+        let cfg = ServeConfig::default();
+        let (cell, meta, _model) =
+            build_initial_state(Arc::new(ds), cache, &cfg, None);
+        let state = cell.load();
+        let cache_len = state.cache.len();
         let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
         let (res_tx, res_rx) = mpsc::channel::<ShardMsg>();
         std::thread::scope(|scope| {
             let ctx = ShardCtx {
                 shard_id: 0,
-                ds: &ds,
-                cache: &cache,
-                meta: &meta,
-                state: &state,
+                feat_dim: state.ds.feat_dim,
                 bucket: meta.n_pad,
                 ring_depth: 2,
                 cold_aux: 8,
             };
             scope.spawn(move || shard_worker(ctx, work_rx, res_tx));
-            // one group per cached plan, one query each (its first output)
-            for pid in 0..cache.len() as u32 {
-                let node = cache.output_nodes(pid as usize)[0];
+            // one group per cached plan, one query each (its first
+            // output), plus one cold group for an uncovered node
+            for pid in 0..cache_len as u32 {
+                let node = state.cache.output_nodes(pid as usize)[0];
                 work_tx
                     .send(WorkItem {
                         key: PlanKey::Cached(pid),
+                        epoch: 0,
+                        state: state.clone(),
                         work: Work::Cached(pid),
                         queries: vec![QueryTicket {
                             id: pid as u64,
@@ -664,6 +760,22 @@ mod tests {
                     })
                     .unwrap();
             }
+            let cold_node = (0..state.ds.graph.num_nodes() as u32)
+                .find(|&u| state.index.lookup(u).is_none())
+                .expect("tiny split leaves cold nodes");
+            work_tx
+                .send(WorkItem {
+                    key: PlanKey::Cold(0),
+                    epoch: 0,
+                    state: state.clone(),
+                    work: Work::Cold(cold_node),
+                    queries: vec![QueryTicket {
+                        id: 10_000,
+                        node: cold_node,
+                        pos: 0,
+                    }],
+                })
+                .unwrap();
             drop(work_tx);
             let mut results = 0usize;
             let mut done = 0usize;
@@ -672,12 +784,15 @@ mod tests {
                     ShardMsg::Result(r) => {
                         results += 1;
                         assert_eq!(r.outcomes.len(), 1);
+                        assert_eq!(r.epoch, 0);
                         assert_eq!(
                             r.out_logits.len(),
-                            r.num_outputs * meta.classes
+                            r.num_outputs * state.meta.classes
                         );
                         assert!(r.out_logits.iter().all(|v| v.is_finite()));
-                        assert!((r.outcomes[0].pred as usize) < meta.classes);
+                        assert!(
+                            (r.outcomes[0].pred as usize) < state.meta.classes
+                        );
                     }
                     ShardMsg::Done(d) => {
                         done += 1;
@@ -687,7 +802,7 @@ mod tests {
                     }
                 }
             }
-            assert_eq!(results, cache.len());
+            assert_eq!(results, cache_len + 1);
             assert_eq!(done, 1);
         });
     }

@@ -1,53 +1,68 @@
-//! Dynamic graph updates on the serve path (DESIGN.md §10).
+//! Dynamic graph updates on the serve path: the snapshot builder
+//! (DESIGN.md §10 for the repair math, §11 for the publish protocol).
 //!
-//! [`DynamicServeSession`] owns everything a long-lived deployment
-//! mutates when the graph churns: the dataset (labels, feature
-//! epochs, and the contiguous CSR swap), the [`DynamicGraph`] overlay
-//! the deltas land on, the [`DynamicPlanSet`] keeping per-root
-//! influence fresh, the [`ServeSetup`] (plan cache + router + plan
-//! epochs), and one results memo that *survives across serving
-//! segments* — which is what makes epoch-keyed freshness observable.
+//! [`UpdateApplier`] owns everything a long-lived deployment *mutates*
+//! when the graph churns — the dataset master copy, the
+//! [`DynamicGraph`] overlay deltas land on, and the [`DynamicPlanSet`]
+//! keeping per-root influence fresh — and turns each delta into a new
+//! immutable [`super::state::ServeState`] published through the shared
+//! cell. Serving never quiesces: the applier works on its own private
+//! state, structurally sharing everything a delta did not touch with
+//! the previous snapshot, and the publish is a single pointer swap.
 //!
-//! One [`DynamicServeSession::apply`] runs the full invalidation
-//! cascade:
+//! One [`UpdateApplier::apply`] runs the full build:
 //!
 //! 1. the delta lands on the overlay (symmetrize, normalize, epoch++);
-//! 2. dataset commit: labels/feature epochs extend, the overlay
-//!    compacts into a fresh CSR the executor shards read;
+//! 2. dataset commit on a copy-on-write master (labels/feature epochs
+//!    extend, the overlay splices into a fresh CSR via the shared
+//!    snapshot handle);
 //! 3. incremental PPR refresh repairs the touched roots, plans past
 //!    the L1 tolerance are rebuilt, plans merely containing touched
 //!    nodes are patched, their epochs bump;
-//! 4. the plan cache is repacked and the router's entries for rebuilt
-//!    plans are invalidated + re-indexed; cold-plan ids of touched
-//!    nodes are dropped so shards lazily re-synthesize against the
-//!    new graph;
-//! 5. the results memo eagerly drops changed-plan and cold entries
-//!    (the epoch check on the read path is the backstop — a pre-delta
-//!    logit can never be served even if this sweep were skipped).
+//! 4. the next snapshot is assembled by **patching** the previous one:
+//!    only changed plan buckets get new payloads
+//!    ([`DynamicPlanSet::patch_cow`]), the router index and placement
+//!    only extend when nodes were appended (outputs never migrate
+//!    between plans, so warm routing and plan homes are stable), and
+//!    the epoch vector is refreshed;
+//! 5. the swap publishes it. In-flight groups finish on the snapshot
+//!    they pinned; the epoch-keyed results memo expires their logits
+//!    on read, and the serving loop's swap-time
+//!    [`super::results::ResultsCache::purge_stale`] sweep reclaims the
+//!    bytes eagerly. Cold plans need no invalidation protocol at all:
+//!    shards memoize them per (node, epoch), so a new epoch lazily
+//!    re-synthesizes against the new graph.
 //!
-//! Serving itself is segment-granular: queries in flight drain before
-//! a delta applies, so shard threads always read a consistent
-//! `(graph, cache, epochs)` triple without locks on the hot path.
+//! [`run_applier`] is the background-thread driver
+//! ([`super::service::Churn::Background`] / `Stream`), and
+//! [`DynamicServeSession`] the segment-granular harness: the same
+//! applier used synchronously between serving segments — which is
+//! exactly the quiesced baseline the zero-quiesce bench compares
+//! against.
 
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::batching::refresh::{DynamicPlanSet, RefreshConfig};
-use crate::batching::BatchCache;
+use crate::batching::CowCache;
 use crate::config::preset_for;
 use crate::datasets::Dataset;
 use crate::graph::delta::{DynamicGraph, GraphDelta};
 use crate::graph::GraphView;
+use crate::runtime::{ArtifactMeta, ModelState};
 use crate::util::Rng;
 
 use super::load::Skew;
 use super::results::ResultsCache;
-use super::router::PlanKey;
+use super::router::QueryRouter;
 use super::service::{
-    serve_closed_loop_with, setup_from_cache, ServeConfig, ServeReport,
+    build_initial_state, serve_closed_loop_with, ServeConfig, ServeReport,
     ServeSetup,
 };
+use super::state::{ServeState, ServeStateCell};
 
 /// Dynamic-update knobs layered on a [`ServeConfig`].
 #[derive(Debug, Clone, Copy)]
@@ -75,19 +90,18 @@ pub struct UpdateReport {
     pub plans_rebuilt: usize,
     pub plans_patched: usize,
     pub max_root_l1: f32,
-    /// Router warm-index entries retired + re-registered (rebuilt
-    /// plans) and cold ids dropped (touched nodes).
-    pub router_invalidated: usize,
-    pub cold_ids_dropped: usize,
-    /// Results-memo entries eagerly dropped (changed plans + all cold
-    /// plans).
-    pub memo_dropped: usize,
+    /// Plan buckets whose payload was re-packed into the new snapshot
+    /// (0 when the delta was feature-only: epochs move, payloads are
+    /// pointer-shared).
+    pub buckets_patched: usize,
+    /// Router-index slots appended for new nodes (warm entries are
+    /// never rewritten — outputs do not migrate between plans).
+    pub index_extended: usize,
     /// Seconds in incremental PPR refresh.
     pub refresh_s: f64,
     /// Seconds in plan rebuild/patch.
     pub replan_s: f64,
-    /// Seconds committing (CSR compaction + cache repack + router
-    /// sync).
+    /// Seconds committing (CSR splice + snapshot assembly + publish).
     pub commit_s: f64,
 }
 
@@ -105,13 +119,208 @@ impl UpdateReport {
     }
 }
 
-/// A serving deployment that admits graph deltas between serving
-/// segments.
+/// The snapshot builder: private mutable state on one side, published
+/// immutable [`ServeState`]s on the other. Runs synchronously (the
+/// segmented [`DynamicServeSession`]) or on a background thread
+/// ([`run_applier`]) — `apply` is the same either way; only *where the
+/// stall lands* differs.
+pub struct UpdateApplier {
+    /// Master dataset; copy-on-write so each published snapshot owns
+    /// an immutable view while the next delta mutates a fresh copy.
+    ds: Arc<Dataset>,
+    graph: DynamicGraph,
+    plans: DynamicPlanSet,
+    cell: Arc<ServeStateCell>,
+    /// Executor identity (stable across epochs, shared by pointer).
+    meta: Arc<ArtifactMeta>,
+    model: Arc<ModelState>,
+}
+
+impl UpdateApplier {
+    /// The shared cell this applier publishes to.
+    pub fn cell(&self) -> Arc<ServeStateCell> {
+        self.cell.clone()
+    }
+
+    /// Current graph epoch (== the last published snapshot's).
+    pub fn epoch(&self) -> u64 {
+        self.graph.epoch()
+    }
+
+    /// Apply one delta batch and publish the resulting snapshot:
+    /// overlay → dataset commit → incremental refresh → structural
+    /// patch → pointer swap.
+    pub fn apply(&mut self, delta: &GraphDelta) -> Result<UpdateReport> {
+        for &l in &delta.add_node_labels {
+            anyhow::ensure!(
+                (l as usize) < self.ds.num_classes,
+                "new-node label {l} >= {} classes",
+                self.ds.num_classes
+            );
+        }
+        let applied = self
+            .graph
+            .apply(delta)
+            .map_err(|e| anyhow::anyhow!("bad delta: {e}"))?;
+
+        // dataset commit: the previous snapshot keeps its own Arc, so
+        // the next dataset is built as a fresh value — sized vectors
+        // are cloned once each, and the CSR is cloned exactly once per
+        // delta (for a structural delta that one clone IS the new
+        // splice, so the soon-to-be-replaced old adjacency is never
+        // copied; one O(m) graph copy per delta is the floor while
+        // `Dataset` owns its CSR by value).
+        let t_commit = Instant::now();
+        let structural =
+            !applied.touched.is_empty() || applied.added_nodes > 0;
+        {
+            let prev_ds = &self.ds;
+            let graph = if structural {
+                (*self.graph.snapshot_shared()).clone()
+            } else {
+                prev_ds.graph.clone()
+            };
+            let mut labels = prev_ds.labels.clone();
+            labels.extend(delta.add_node_labels.iter().copied());
+            let mut feat_epoch = prev_ds.feat_epoch.clone();
+            feat_epoch.resize(labels.len(), 0);
+            for &u in &applied.feature_updates {
+                feat_epoch[u as usize] += 1;
+            }
+            self.ds = Arc::new(Dataset {
+                name: prev_ds.name.clone(),
+                graph,
+                labels,
+                num_classes: prev_ds.num_classes,
+                feat_dim: prev_ds.feat_dim,
+                class_means: prev_ds.class_means.clone(),
+                noise: prev_ds.noise,
+                seed: prev_ds.seed,
+                splits: prev_ds.splits.clone(),
+                feat_epoch,
+            });
+        }
+        if structural {
+            // consume the memoized splice so it is not retained as a
+            // third adjacency copy between deltas; holding the last
+            // Arc lets the rebase MOVE the CSR instead of cloning it
+            let snap = self.graph.take_snapshot();
+            if self.graph.overlay_rows() * 4 > self.graph.num_nodes() {
+                if let Some(snap) = snap {
+                    let g = Arc::try_unwrap(snap)
+                        .unwrap_or_else(|shared| (*shared).clone());
+                    self.graph.rebase(g);
+                }
+            }
+        }
+        let commit_graph_s = t_commit.elapsed().as_secs_f64();
+
+        // incremental influence refresh + staleness-tracked replan
+        let refresh = self.plans.apply_delta(&self.ds.graph, &applied);
+
+        // assemble the next snapshot by patching the previous one:
+        // only touched buckets are new allocations
+        let t_sync = Instant::now();
+        let prev = self.cell.load();
+        let cache = if structural && !refresh.changed_plans.is_empty() {
+            Arc::new(self.plans.patch_cow(&prev.cache, &refresh.changed_plans))
+        } else {
+            // feature-only (or no-op) delta: payloads are identical,
+            // share the whole store — epochs alone carry the staleness
+            prev.cache.clone()
+        };
+        let buckets_patched = if structural {
+            refresh.changed_plans.len()
+        } else {
+            0
+        };
+        let n = self.ds.graph.num_nodes();
+        let index = if applied.added_nodes > 0 {
+            Arc::new(prev.index.extended(n))
+        } else {
+            prev.index.clone()
+        };
+        let placement = if applied.added_nodes > 0 {
+            Arc::new(prev.placement.extended(&self.ds.graph))
+        } else {
+            prev.placement.clone()
+        };
+        let next = Arc::new(ServeState {
+            epoch: applied.epoch,
+            ds: self.ds.clone(),
+            cache,
+            index,
+            epochs: Arc::new(self.plans.epochs().to_vec()),
+            placement,
+            meta: self.meta.clone(),
+            model: self.model.clone(),
+        });
+        debug_assert!(next.validate().is_ok(), "{:?}", next.validate());
+        self.cell.store(next);
+        let commit_s = commit_graph_s + t_sync.elapsed().as_secs_f64();
+
+        Ok(UpdateReport {
+            epoch: applied.epoch,
+            touched_nodes: applied.touched.len(),
+            added_nodes: applied.added_nodes,
+            feature_updates: applied.feature_updates.len(),
+            roots_refreshed: refresh.roots_refreshed,
+            plans_total: refresh.plans_total,
+            plans_rebuilt: refresh.plans_rebuilt,
+            plans_patched: refresh.plans_patched,
+            max_root_l1: refresh.max_root_l1,
+            buckets_patched,
+            index_extended: applied.added_nodes,
+            refresh_s: refresh.refresh_s,
+            replan_s: refresh.replan_s,
+            commit_s,
+        })
+    }
+}
+
+/// Background-thread driver: apply deltas as they arrive on `rx`,
+/// publishing one snapshot each, until `stop` is set or the sender
+/// hangs up. A closed channel drains its backlog before the thread
+/// exits, so a caller that feeds N deltas and drops the sender gets N
+/// snapshots; the stop flag is the early-exit path for external
+/// streams that never close. A delta the graph rejects is logged and
+/// skipped — serving must outlive a malformed update.
+pub fn run_applier(
+    applier: &mut UpdateApplier,
+    rx: mpsc::Receiver<GraphDelta>,
+    stop: &AtomicBool,
+    reports: mpsc::Sender<UpdateReport>,
+) {
+    loop {
+        // checked every iteration (not only on idle timeouts): a
+        // stream that sends faster than the timeout must still stop
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(delta) => match applier.apply(&delta) {
+                Ok(report) => {
+                    let _ = reports.send(report);
+                }
+                Err(e) => {
+                    eprintln!("update applier: skipping bad delta: {e}");
+                }
+            },
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+/// A serving deployment that admits graph deltas **between** serving
+/// segments — the quiesced harness. It wires the same
+/// [`UpdateApplier`] and snapshot cell the zero-quiesce path uses, so
+/// `ibmb serve --update-stream` (segmented) and `--live-updates`
+/// (mid-traffic) differ only in *when* `apply` runs relative to
+/// queries.
 pub struct DynamicServeSession {
-    pub ds: Dataset,
+    pub applier: UpdateApplier,
     pub setup: ServeSetup,
-    pub graph: DynamicGraph,
-    pub plans: DynamicPlanSet,
     /// Session-lifetime results memo (shared across segments).
     pub memo: ResultsCache,
     cfg: ServeConfig,
@@ -125,8 +334,9 @@ impl DynamicServeSession {
     /// Plan `eval_nodes` with the dataset preset (same planner inputs
     /// as [`super::service::prepare`], but retaining the per-root PPR
     /// states for incremental repair), synthesize the executor model,
-    /// and build the router. The rebuild node budget is clamped to the
-    /// artifact bucket so replanned batches keep fitting the arenas.
+    /// and publish the epoch-0 snapshot. The rebuild node budget is
+    /// clamped to the artifact bucket so replanned batches keep
+    /// fitting the arenas.
     pub fn prepare(
         ds: Dataset,
         eval_nodes: &[u32],
@@ -144,113 +354,47 @@ impl DynamicServeSession {
         let mut rng = Rng::new(cfg.seed ^ 0xCAFE);
         let mut plans =
             DynamicPlanSet::plan_initial(&ds.graph, eval_nodes, rcfg, &mut rng);
-        let setup = setup_from_cache(&ds, plans.build_cache(), cfg);
-        plans.clamp_node_budget(setup.meta.n_pad);
+        let cow = plans.cow_cache();
+        let ds = Arc::new(ds);
+        let (cell, meta, model) =
+            build_initial_state(ds.clone(), cow, cfg, None);
+        plans.clamp_node_budget(meta.n_pad);
         let graph = DynamicGraph::new(ds.graph.clone());
-        let memo = ResultsCache::new(cfg.results_cache_bytes, cfg.results_ttl);
-        DynamicServeSession {
+        let applier = UpdateApplier {
             ds,
-            setup,
             graph,
             plans,
+            cell: cell.clone(),
+            meta,
+            model,
+        };
+        let memo = ResultsCache::new(cfg.results_cache_bytes, cfg.results_ttl);
+        DynamicServeSession {
+            applier,
+            setup: ServeSetup {
+                cell,
+                router: QueryRouter::new(),
+            },
             memo,
             cfg: cfg.clone(),
             segments: 0,
         }
     }
 
-    /// Apply one delta batch: overlay → dataset commit → incremental
-    /// refresh → cache repack → router + memo invalidation.
+    /// Apply one delta batch synchronously (between segments) and
+    /// eagerly sweep the session memo against the new snapshot — in
+    /// live mode the serving loop performs the same sweep when it
+    /// observes the swap.
     pub fn apply(&mut self, delta: &GraphDelta) -> Result<UpdateReport> {
-        for &l in &delta.add_node_labels {
-            anyhow::ensure!(
-                (l as usize) < self.ds.num_classes,
-                "new-node label {l} >= {} classes",
-                self.ds.num_classes
-            );
-        }
-        let applied = self
-            .graph
-            .apply(delta)
-            .map_err(|e| anyhow::anyhow!("bad delta: {e}"))?;
-
-        // dataset commit: labels + feature epochs + contiguous CSR
-        let t_commit = Instant::now();
-        self.ds
-            .labels
-            .extend(delta.add_node_labels.iter().copied());
-        self.ds.feat_epoch.resize(self.ds.labels.len(), 0);
-        for &u in &applied.feature_updates {
-            self.ds.feat_epoch[u as usize] += 1;
-        }
-        // One CSR materialization per *structural* delta (the overlay
-        // keeps its rows and only rebases, paying the extra clone,
-        // once it has grown past a quarter of the node count).
-        // Feature-only deltas change no adjacency, so they skip both
-        // O(graph) commit costs and stay truly delta-local.
-        let structural =
-            !applied.touched.is_empty() || applied.added_nodes > 0;
-        if structural {
-            self.ds.graph = self.graph.snapshot();
-            if self.graph.overlay_rows() * 4 > self.graph.num_nodes() {
-                self.graph.rebase(self.ds.graph.clone());
-            }
-        }
-        let commit_graph_s = t_commit.elapsed().as_secs_f64();
-
-        // incremental influence refresh + staleness-tracked replan
-        let refresh = self.plans.apply_delta(&self.ds.graph, &applied);
-
-        // repack the cache only when some plan's content can actually
-        // have changed (structural delta that rebuilt or patched at
-        // least one plan), sync epochs, invalidate + re-index the
-        // router entries of rebuilt plans, drop touched cold ids
-        let t_sync = Instant::now();
-        if structural && !refresh.changed_plans.is_empty() {
-            self.setup.cache = self.plans.build_cache();
-        }
-        self.setup.epochs = self.plans.epochs().to_vec();
-        let mut router_invalidated = 0usize;
-        for &pid in &refresh.changed_plans {
-            let outputs = self.setup.cache.output_nodes(pid as usize).to_vec();
-            router_invalidated += self.setup.router.invalidate_outputs(&outputs);
-            self.setup.router.index_plan(pid, &outputs);
-        }
-        let cold_ids_dropped =
-            self.setup.router.invalidate_cold(&applied.touched);
-
-        // eager memo sweep; the epoch check on reads is the backstop
-        let changed: std::collections::HashSet<u32> =
-            refresh.changed_plans.iter().copied().collect();
-        let mut memo_dropped = self.memo.invalidate_where(|k| match k {
-            PlanKey::Cached(pid) => changed.contains(pid),
-            PlanKey::Cold(_) => true,
-        });
-        memo_dropped += self.memo.purge_expired(Instant::now());
-        let commit_s = commit_graph_s + t_sync.elapsed().as_secs_f64();
-
-        Ok(UpdateReport {
-            epoch: applied.epoch,
-            touched_nodes: applied.touched.len(),
-            added_nodes: applied.added_nodes,
-            feature_updates: applied.feature_updates.len(),
-            roots_refreshed: refresh.roots_refreshed,
-            plans_total: refresh.plans_total,
-            plans_rebuilt: refresh.plans_rebuilt,
-            plans_patched: refresh.plans_patched,
-            max_root_l1: refresh.max_root_l1,
-            router_invalidated,
-            cold_ids_dropped,
-            memo_dropped,
-            refresh_s: refresh.refresh_s,
-            replan_s: refresh.replan_s,
-            commit_s,
-        })
+        let report = self.applier.apply(delta)?;
+        let state = self.setup.cell.load();
+        self.memo.purge_stale(move |k| state.plan_epoch(k));
+        Ok(report)
     }
 
-    /// Serve one closed-loop segment against the current graph/plan
-    /// epoch, reusing the session memo. `queries` overrides the config
-    /// count (segmented streams split a total budget).
+    /// Serve one closed-loop segment against the current snapshot,
+    /// reusing the session memo. `queries` overrides the config count
+    /// (segmented streams split a total budget).
     pub fn serve_segment(
         &mut self,
         population: &[u32],
@@ -270,7 +414,6 @@ impl DynamicServeSession {
             ..self.cfg.clone()
         };
         serve_closed_loop_with(
-            &self.ds,
             &mut self.setup,
             population,
             skew,
@@ -279,21 +422,32 @@ impl DynamicServeSession {
         )
     }
 
+    /// The currently published snapshot.
+    pub fn state(&self) -> Arc<ServeState> {
+        self.setup.cell.load()
+    }
+
     /// The session's current plan cache (inspection/tests).
-    pub fn cache(&self) -> &BatchCache {
-        &self.setup.cache
+    pub fn cache(&self) -> Arc<CowCache> {
+        self.state().cache.clone()
+    }
+
+    /// The session's current dataset view (inspection/tests).
+    pub fn dataset(&self) -> Arc<Dataset> {
+        self.state().ds.clone()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datasets::{sbm, DatasetSpec};
     use crate::serve::router::Route;
-    use std::time::Duration;
 
     fn session() -> DynamicServeSession {
-        let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 33);
+        let ds = crate::datasets::sbm::generate(
+            &crate::datasets::DatasetSpec::tiny_for_tests(),
+            33,
+        );
         let cfg = ServeConfig {
             queries: 48,
             clients: 8,
@@ -307,18 +461,92 @@ mod tests {
     }
 
     #[test]
-    fn prepare_matches_static_prepare_shape() {
+    fn prepare_publishes_a_valid_epoch0_snapshot() {
         let s = session();
-        assert!(!s.setup.cache.is_empty());
-        assert_eq!(s.setup.epochs.len(), s.setup.cache.len());
-        assert!(s.setup.epochs.iter().all(|&e| e == 0));
-        assert_eq!(s.graph.epoch(), 0);
+        let state = s.state();
+        assert!(!state.cache.is_empty());
+        assert_eq!(state.epoch, 0);
+        assert_eq!(state.epochs.len(), state.cache.len());
+        assert!(state.epochs.iter().all(|&e| e == 0));
+        assert_eq!(s.applier.epoch(), 0);
+        state.validate().unwrap();
+    }
+
+    #[test]
+    fn apply_publishes_a_patched_snapshot_with_structural_sharing() {
+        let mut s = session();
+        let before = s.state();
+        let eval = s.dataset().splits.train.clone();
+        let delta = GraphDelta {
+            add_edges: vec![(eval[0], eval[1]), (eval[2], eval[3])],
+            add_node_labels: vec![0],
+            feature_updates: vec![eval[4]],
+            ..Default::default()
+        };
+        let report = s.applier.apply(&delta).unwrap();
+        assert_eq!(report.epoch, 1);
+        assert!(report.stale_plans() > 0);
+        assert!(report.rebuilt_fraction() < 1.0);
+        assert_eq!(report.buckets_patched, report.stale_plans());
+        assert_eq!(report.index_extended, 1);
+
+        let after = s.state();
+        assert_eq!(after.epoch, 1);
+        after.validate().unwrap();
+        // the old snapshot is untouched — in-flight readers are safe
+        assert_eq!(before.epoch, 0);
+        before.validate().unwrap();
+        assert_eq!(
+            before.ds.graph.num_nodes() + 1,
+            after.ds.graph.num_nodes()
+        );
+        // untouched buckets are pointer-shared between the snapshots
+        assert_eq!(
+            after.cache.shared_with(&before.cache),
+            after.cache.len() - report.stale_plans()
+        );
+        // changed plans carry the new epoch, unchanged keep the old
+        for (pid, (&a, &b)) in
+            after.epochs.iter().zip(before.epochs.iter()).enumerate()
+        {
+            assert!(a == b || a == 1, "plan {pid}: {b} -> {a}");
+        }
+        assert_eq!(after.ds.labels.len(), after.ds.graph.num_nodes());
+        assert_eq!(after.ds.feat_epoch[eval[4] as usize], 1);
+    }
+
+    #[test]
+    fn feature_only_delta_shares_every_bucket() {
+        let mut s = session();
+        let before = s.state();
+        let eval = s.dataset().splits.train.clone();
+        let report = s
+            .apply(&GraphDelta {
+                feature_updates: vec![eval[0]],
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(report.plans_rebuilt, 0);
+        assert!(report.plans_patched > 0, "feature epoch must stale plans");
+        assert_eq!(report.buckets_patched, 0, "payloads must be shared");
+        let after = s.state();
+        assert_eq!(
+            after.cache.shared_with(&before.cache),
+            after.cache.len(),
+            "feature-only delta must share the whole plan store"
+        );
+        // ... while the epochs still record the staleness
+        assert!(after
+            .epochs
+            .iter()
+            .zip(before.epochs.iter())
+            .any(|(&a, &b)| a > b));
     }
 
     #[test]
     fn apply_then_serve_round_trips() {
         let mut s = session();
-        let eval = s.ds.splits.train.clone();
+        let eval = s.dataset().splits.train.clone();
         let before = s.serve_segment(&eval, Skew::Uniform, 32).unwrap();
         assert_eq!(before.queries, 32);
 
@@ -331,9 +559,6 @@ mod tests {
         let report = s.apply(&delta).unwrap();
         assert_eq!(report.epoch, 1);
         assert!(report.stale_plans() > 0);
-        assert!(report.rebuilt_fraction() < 1.0);
-        assert_eq!(s.ds.labels.len(), s.ds.graph.num_nodes());
-        assert_eq!(s.ds.feat_epoch[eval[4] as usize], 1);
 
         let after = s.serve_segment(&eval, Skew::Uniform, 32).unwrap();
         assert_eq!(
@@ -341,8 +566,9 @@ mod tests {
             32,
             "updates must not lose queries"
         );
+        assert_eq!(after.final_epoch, 1);
         // the appended node is serveable via the cold path
-        let new_node = (s.ds.graph.num_nodes() - 1) as u32;
+        let new_node = (s.dataset().graph.num_nodes() - 1) as u32;
         let pop = [new_node];
         let cold = s.serve_segment(&pop, Skew::Uniform, 4).unwrap();
         assert_eq!(cold.executed_queries + cold.cache_hits, 4);
@@ -352,7 +578,7 @@ mod tests {
     #[test]
     fn bad_deltas_are_rejected_atomically() {
         let mut s = session();
-        let n = s.ds.graph.num_nodes() as u32;
+        let n = s.dataset().graph.num_nodes() as u32;
         assert!(s
             .apply(&GraphDelta {
                 add_edges: vec![(0, n + 5)],
@@ -365,26 +591,29 @@ mod tests {
                 ..Default::default()
             })
             .is_err());
-        assert_eq!(s.graph.epoch(), 0);
-        assert_eq!(s.setup.epochs.iter().max().copied().unwrap_or(0), 0);
+        assert_eq!(s.applier.epoch(), 0);
+        let state = s.state();
+        assert_eq!(state.epoch, 0, "no snapshot published on failure");
+        assert_eq!(state.epochs.iter().max().copied().unwrap_or(0), 0);
     }
 
     #[test]
-    fn router_survives_updates_totally() {
+    fn warm_routing_stays_total_across_updates() {
         let mut s = session();
-        let eval = s.ds.splits.train.clone();
+        let eval = s.dataset().splits.train.clone();
         let delta = GraphDelta {
             add_edges: vec![(eval[0], eval[5]), (eval[1], eval[6])],
             ..Default::default()
         };
         s.apply(&delta).unwrap();
-        let plans = s.setup.cache.len();
+        let state = s.state();
+        let plans = state.cache.len();
         for &u in &eval {
-            match s.setup.router.route(u) {
+            match s.setup.router.route(&state.index, u) {
                 Route::Cached { plan, pos } => {
                     assert!((plan as usize) < plans, "dangling plan id");
                     assert_eq!(
-                        s.setup.cache.output_nodes(plan as usize)[pos as usize],
+                        state.cache.output_nodes(plan as usize)[pos as usize],
                         u,
                         "output {u} routed to a plan that does not own it"
                     );
@@ -394,5 +623,42 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn background_applier_drains_queue_then_stops() {
+        let mut s = session();
+        let eval = s.dataset().splits.train.clone();
+        let (tx, rx) = mpsc::channel::<GraphDelta>();
+        let (rep_tx, rep_rx) = mpsc::channel::<UpdateReport>();
+        let stop = AtomicBool::new(false);
+        for i in 0..3u32 {
+            tx.send(GraphDelta {
+                add_edges: vec![(
+                    eval[i as usize],
+                    eval[(i + 7) as usize],
+                )],
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        // a malformed delta must be skipped, not kill the applier
+        tx.send(GraphDelta {
+            add_edges: vec![(0, u32::MAX)],
+            ..Default::default()
+        })
+        .unwrap();
+        drop(tx);
+        std::thread::scope(|scope| {
+            let applier = &mut s.applier;
+            let h = scope
+                .spawn(move || run_applier(applier, rx, &stop, rep_tx));
+            h.join().unwrap();
+        });
+        let reports: Vec<UpdateReport> = rep_rx.try_iter().collect();
+        assert_eq!(reports.len(), 3, "3 good deltas, 1 skipped");
+        assert_eq!(s.applier.epoch(), 3);
+        assert_eq!(s.state().epoch, 3);
+        s.state().validate().unwrap();
     }
 }

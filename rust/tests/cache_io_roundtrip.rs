@@ -125,7 +125,7 @@ fn rejects_truncated_file() {
     save(&cache, &p).unwrap();
     let bytes = std::fs::read(&p).unwrap();
     // cut at several depths: header reads fail with "truncated", and
-    // payload cuts trip the header-vs-file-length cross-check
+    // payload cuts trip the section-length-vs-file-length cross-check
     for cut in [4usize, 12, 30, bytes.len() / 2, bytes.len() - 1] {
         let cut = cut.min(bytes.len() - 1);
         std::fs::write(&p, &bytes[..cut]).unwrap();
@@ -133,7 +133,8 @@ fn rejects_truncated_file() {
         assert!(
             err.contains("truncated")
                 || err.contains("bad magic")
-                || err.contains("corrupt header"),
+                || err.contains("corrupt header")
+                || err.contains("past end of file"),
             "cut {cut}: {err}"
         );
     }
@@ -153,9 +154,18 @@ fn rejects_corrupt_batch_count_without_allocating() {
     let p = tmp("hugecount.bin");
     save(&cache, &p).unwrap();
     let mut bytes = std::fs::read(&p).unwrap();
-    bytes[16..24].copy_from_slice(&(1u64 << 48).to_le_bytes());
+    // v3 layout: magic(8) version(8) nsections(8) tag(8) len(8), then
+    // the plan section's batches count at offset 40
+    bytes[40..48].copy_from_slice(&(1u64 << 48).to_le_bytes());
     std::fs::write(&p, &bytes).unwrap();
     let err = format!("{:#}", load(&p).unwrap_err());
     assert!(err.contains("corrupt header"), "{err}");
+    // a section length pointing past end-of-file is caught before any
+    // allocation as well
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes[32..40].copy_from_slice(&(1u64 << 48).to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    let err = format!("{:#}", load(&p).unwrap_err());
+    assert!(err.contains("past end of file"), "{err}");
     std::fs::remove_file(p).ok();
 }

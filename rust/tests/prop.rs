@@ -346,3 +346,88 @@ fn prop_json_roundtrip() {
         assert_eq!(doc, back, "case {case}: {text}");
     }
 }
+
+#[test]
+fn prop_cow_patch_matches_full_rebuild_over_random_delta_sequences() {
+    // Snapshot contract (DESIGN.md §11): after ANY sequence of deltas,
+    // patching the previous cow store by the refresh report's changed
+    // set must equal a from-scratch rebuild bucket-for-bucket, and
+    // every unchanged bucket must be pointer-shared (the patch copies
+    // only what the delta touched).
+    use ibmb::batching::refresh::{DynamicPlanSet, RefreshConfig};
+
+    let mut rng = Rng::new(0xC0575 ^ 0xBEEF);
+    for case in 0..6 {
+        let seed = rng.next_u64();
+        let mut case_rng = Rng::new(seed);
+        let ds = random_dataset(&mut case_rng);
+        let eval = ds.splits.train.clone();
+        let cfg = RefreshConfig {
+            aux_per_output: 4 + case_rng.next_below(6),
+            max_outputs_per_batch: 20 + case_rng.next_below(20),
+            node_budget: 128 + case_rng.next_below(128),
+            l1_tol: 0.01 + case_rng.next_f64() as f32 * 0.05,
+            ..Default::default()
+        };
+        let mut set = DynamicPlanSet::plan_initial(
+            &ds.graph,
+            &eval,
+            cfg,
+            &mut Rng::new(seed ^ 1),
+        );
+        let mut dg = DynamicGraph::new(ds.graph.clone());
+        let mut cow = set.cow_cache();
+        let deltas = synth_delta_stream(
+            &ds.graph,
+            &eval,
+            3,
+            4 + case_rng.next_below(40),
+            case_rng.next_below(3),
+            case_rng.next_below(4),
+            ds.num_classes,
+            seed ^ 2,
+        );
+        for (step, delta) in deltas.iter().enumerate() {
+            let applied = dg.apply(delta).unwrap_or_else(|e| {
+                panic!("case {case} seed {seed} step {step}: {e}")
+            });
+            let report = set.apply_delta(&dg, &applied);
+            let patched = set.patch_cow(&cow, &report.changed_plans);
+            let full = set.cow_cache();
+            assert_eq!(patched.len(), full.len());
+            for i in 0..full.len() {
+                assert_eq!(
+                    patched.batch_nodes(i),
+                    full.batch_nodes(i),
+                    "case {case} seed {seed} step {step} plan {i} nodes"
+                );
+                assert_eq!(
+                    patched.edge_src_of(i),
+                    full.edge_src_of(i),
+                    "case {case} seed {seed} step {step} plan {i} src"
+                );
+                assert_eq!(
+                    patched.edge_dst_of(i),
+                    full.edge_dst_of(i),
+                    "case {case} seed {seed} step {step} plan {i} dst"
+                );
+                assert_eq!(
+                    patched.edge_weights_of(i),
+                    full.edge_weights_of(i),
+                    "case {case} seed {seed} step {step} plan {i} weights"
+                );
+                assert_eq!(
+                    patched.num_outputs(i),
+                    full.num_outputs(i),
+                    "case {case} seed {seed} step {step} plan {i} outputs"
+                );
+            }
+            assert_eq!(
+                patched.shared_with(&cow),
+                full.len() - report.changed_plans.len(),
+                "case {case} seed {seed} step {step}: sharing accounting"
+            );
+            cow = patched;
+        }
+    }
+}

@@ -6,12 +6,12 @@
 use std::collections::HashSet;
 use std::time::Duration;
 
-use ibmb::batching::{BatchCache, BatchGenerator, NodeWiseIbmb};
+use ibmb::batching::{BatchGenerator, CowCache, NodeWiseIbmb};
 use ibmb::datasets::{sbm, Dataset, DatasetSpec};
-use ibmb::serve::{self, QueryRouter, Route, ServeConfig, Skew};
+use ibmb::serve::{self, QueryRouter, Route, RouterIndex, ServeConfig, Skew};
 use ibmb::util::Rng;
 
-fn setup() -> (Dataset, BatchCache) {
+fn setup() -> (Dataset, CowCache) {
     let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 101);
     let mut gen = NodeWiseIbmb {
         aux_per_output: 6,
@@ -21,22 +21,23 @@ fn setup() -> (Dataset, BatchCache) {
     };
     let mut rng = Rng::new(17);
     let eval = ds.splits.train.clone();
-    let cache = BatchCache::build(&gen.plan(&ds, &eval, &mut rng));
+    let cache = CowCache::from_plans(&gen.plan(&ds, &eval, &mut rng));
     (ds, cache)
 }
 
 #[test]
 fn every_node_routes_to_exactly_one_plan_or_cold_path() {
     let (ds, cache) = setup();
-    let mut router = QueryRouter::build(&ds, &cache);
-    assert_eq!(router.duplicates, 0, "IBMB partition must be disjoint");
+    let index = RouterIndex::build(ds.graph.num_nodes(), &cache);
+    let mut router = QueryRouter::new();
+    assert_eq!(index.duplicates, 0, "IBMB partition must be disjoint");
     let eval: HashSet<u32> = ds.splits.train.iter().copied().collect();
-    assert_eq!(router.coverage(), eval.len());
+    assert_eq!(index.coverage(), eval.len());
 
     let mut routed_per_plan = vec![0usize; cache.len()];
     let mut cold_ids = HashSet::new();
     for u in 0..ds.graph.num_nodes() as u32 {
-        match router.route(u) {
+        match router.route(&index, u) {
             Route::Cached { plan, pos } => {
                 assert!(
                     eval.contains(&u),
@@ -82,11 +83,11 @@ fn k_concurrent_queries_to_one_plan_materialize_once() {
         ..Default::default()
     };
     let eval = ds.splits.train.clone();
-    let mut setup = serve::prepare(&ds, &eval, &cfg);
     // all K queries target the same node → same plan
     let population = [eval[0]];
+    let mut setup = serve::prepare(ds, &eval, &cfg);
     let report =
-        serve::serve_closed_loop(&ds, &mut setup, &population, Skew::Uniform, &cfg)
+        serve::serve_closed_loop(&mut setup, &population, Skew::Uniform, &cfg)
             .unwrap();
     assert_eq!(report.queries, k);
     assert_eq!(
@@ -111,10 +112,10 @@ fn size_flush_bounds_group_size_end_to_end() {
         ..Default::default()
     };
     let eval = ds.splits.train.clone();
-    let mut setup = serve::prepare(&ds, &eval, &cfg);
     let population = [eval[0]];
+    let mut setup = serve::prepare(ds, &eval, &cfg);
     let report =
-        serve::serve_closed_loop(&ds, &mut setup, &population, Skew::Uniform, &cfg)
+        serve::serve_closed_loop(&mut setup, &population, Skew::Uniform, &cfg)
             .unwrap();
     assert_eq!(report.executions, 3);
     assert!((report.coalescing_factor - 3.0).abs() < 1e-9);
@@ -131,7 +132,6 @@ fn cold_queries_are_served_end_to_end() {
         ..Default::default()
     };
     let eval = ds.splits.train.clone();
-    let mut setup = serve::prepare(&ds, &eval, &cfg);
     // population drawn entirely from NON-eval nodes
     let covered: HashSet<u32> = eval.iter().copied().collect();
     let cold: Vec<u32> = (0..ds.graph.num_nodes() as u32)
@@ -139,8 +139,9 @@ fn cold_queries_are_served_end_to_end() {
         .take(5)
         .collect();
     assert!(!cold.is_empty());
+    let mut setup = serve::prepare(ds, &eval, &cfg);
     let report =
-        serve::serve_closed_loop(&ds, &mut setup, &cold, Skew::Uniform, &cfg)
+        serve::serve_closed_loop(&mut setup, &cold, Skew::Uniform, &cfg)
             .unwrap();
     assert_eq!(report.cold_routes, 20, "every query took the cold path");
     assert!(report.cold_plans <= 5, "cold plans memoized per node");

@@ -1,0 +1,203 @@
+//! Zero-quiesce snapshot semantics (DESIGN.md §11): the property test
+//! that loads racing a published swap never observe mixed-epoch state,
+//! and end-to-end churn runs proving queries are never dropped while a
+//! background applier publishes snapshots mid-traffic.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ibmb::graph::synth_delta_stream;
+use ibmb::serve::{
+    serve_with_churn, Churn, DynamicServeSession, ResultsCache, ServeConfig,
+    Skew, UpdateConfig,
+};
+
+fn session(seed: u64, results_cache_bytes: usize) -> DynamicServeSession {
+    let ds = ibmb::datasets::sbm::generate(
+        &ibmb::datasets::DatasetSpec::tiny_for_tests(),
+        seed,
+    );
+    let cfg = ServeConfig {
+        clients: 8,
+        shards: 2,
+        results_cache_bytes,
+        flush_window: Duration::from_micros(200),
+        seed,
+        ..Default::default()
+    };
+    let eval = ds.splits.train.clone();
+    DynamicServeSession::prepare(ds, &eval, &cfg, &UpdateConfig::default())
+}
+
+/// The mixed-epoch property: while an applier publishes a stream of
+/// snapshots, concurrent readers loading from the cell must always
+/// see a snapshot whose router index, plan cache buckets, plan
+/// epochs, placement, and dataset sizes agree with each other —
+/// `ServeState::validate` is exactly that cross-component contract —
+/// and whose epoch never regresses. Seeded deltas drive the writer;
+/// reader threads hammer `load()` the whole time.
+#[test]
+fn racing_loads_never_observe_mixed_epoch_state() {
+    let mut s = session(42, 0);
+    let ds = s.dataset();
+    let eval = ds.splits.train.clone();
+    let deltas = synth_delta_stream(
+        &ds.graph,
+        &eval,
+        10,
+        24,
+        1, // node appends exercise index/placement extension races
+        2,
+        ds.num_classes,
+        42,
+    );
+    drop(ds);
+    let cell = s.applier.cell();
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let cell = cell.clone();
+            let stop = stop.clone();
+            readers.push(scope.spawn(move || {
+                let mut last_epoch = 0u64;
+                let mut loads = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    let state = cell.load();
+                    assert!(
+                        state.epoch >= last_epoch,
+                        "epoch regressed {last_epoch} -> {}",
+                        state.epoch
+                    );
+                    last_epoch = state.epoch;
+                    // the full cross-component consistency contract:
+                    // index ↔ cache ↔ epochs ↔ placement ↔ dataset
+                    state.validate().unwrap_or_else(|e| {
+                        panic!("mixed-epoch state at load {loads}: {e}")
+                    });
+                    // memo-epoch agreement: a cached key's freshness
+                    // epoch is bounded by the snapshot epoch and
+                    // matches the plan's entry in the same snapshot
+                    for pid in 0..state.cache.len() as u32 {
+                        let key = ibmb::serve::PlanKey::Cached(pid);
+                        assert_eq!(
+                            state.plan_epoch(&key),
+                            state.epochs[pid as usize]
+                        );
+                    }
+                    loads += 1;
+                }
+                loads
+            }));
+        }
+        for d in &deltas {
+            s.applier.apply(d).unwrap();
+        }
+        stop.store(true, Ordering::Release);
+        let total_loads: u64 =
+            readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total_loads > 0, "readers never ran");
+    });
+    assert_eq!(s.applier.epoch(), deltas.len() as u64);
+    let last = s.state();
+    assert_eq!(last.epoch, deltas.len() as u64);
+    last.validate().unwrap();
+}
+
+/// Zero-quiesce end-to-end: a background applier publishes snapshots
+/// while the closed loop serves — every query is answered, every fed
+/// delta is applied, epochs stay monotone, and the memo's swap-time
+/// sweep engages.
+#[test]
+fn background_churn_drops_no_queries_and_applies_every_delta() {
+    let mut s = session(7, 1 << 20);
+    let ds = s.dataset();
+    let eval = ds.splits.train.clone();
+    let deltas =
+        synth_delta_stream(&ds.graph, &eval, 3, 40, 0, 0, ds.num_classes, 7);
+    drop(ds);
+    let queries = 120usize;
+    let cfg = ServeConfig {
+        queries,
+        clients: 8,
+        shards: 2,
+        results_cache_bytes: 1 << 20,
+        flush_window: Duration::from_micros(200),
+        seed: 7,
+        ..Default::default()
+    };
+    let triggers: Vec<(u64, _)> = deltas
+        .into_iter()
+        .enumerate()
+        .map(|(i, d)| ((queries * (i + 1) / 4) as u64, d))
+        .collect();
+    let churn = Churn::Background {
+        applier: &mut s.applier,
+        deltas: triggers,
+    };
+    let (r, ups) = serve_with_churn(
+        &mut s.setup,
+        &eval,
+        Skew::Zipf(1.2),
+        &cfg,
+        &mut s.memo,
+        Some(churn),
+    )
+    .unwrap();
+    assert_eq!(
+        r.executed_queries + r.cache_hits,
+        queries as u64,
+        "zero-quiesce run dropped queries: {r:?}"
+    );
+    assert_eq!(ups.len(), 3, "every fed delta must be applied");
+    assert_eq!(r.final_epoch, 3);
+    // epochs the applier reported are strictly increasing
+    for (i, up) in ups.iter().enumerate() {
+        assert_eq!(up.epoch, i as u64 + 1);
+    }
+    assert_eq!(s.state().epoch, 3);
+    s.state().validate().unwrap();
+}
+
+/// The quiesced baseline through the same loop: inline applies block
+/// the control thread but still lose nothing and apply in order.
+#[test]
+fn inline_churn_applies_between_admissions() {
+    let mut s = session(9, 0);
+    let ds = s.dataset();
+    let eval = ds.splits.train.clone();
+    let deltas =
+        synth_delta_stream(&ds.graph, &eval, 2, 30, 0, 0, ds.num_classes, 9);
+    drop(ds);
+    let queries = 60usize;
+    let cfg = ServeConfig {
+        queries,
+        clients: 6,
+        shards: 1,
+        flush_window: Duration::from_micros(200),
+        seed: 9,
+        ..Default::default()
+    };
+    let triggers: Vec<(u64, _)> = deltas
+        .into_iter()
+        .enumerate()
+        .map(|(i, d)| ((queries * (i + 1) / 3) as u64, d))
+        .collect();
+    let (r, ups) = serve_with_churn(
+        &mut s.setup,
+        &eval,
+        Skew::Uniform,
+        &cfg,
+        &mut ResultsCache::new(0, None),
+        Some(Churn::Inline {
+            applier: &mut s.applier,
+            deltas: triggers,
+        }),
+    )
+    .unwrap();
+    assert_eq!(r.executed_queries + r.cache_hits, queries as u64);
+    assert_eq!(ups.len(), 2);
+    assert_eq!(r.final_epoch, 2);
+    assert_eq!(r.snapshot_swaps, 2, "loop must observe both swaps");
+}

@@ -1,18 +1,21 @@
-//! End-to-end tests of the dynamic-update subsystem (DESIGN.md §10):
-//! delta application on the overlay, the serve-path invalidation
-//! cascade (router, plan epochs, results memo), and the mid-serve
-//! smoke the CI gate runs against a real delta stream.
+//! End-to-end tests of the dynamic-update subsystem (DESIGN.md §10 /
+//! §11): delta application on the overlay, the snapshot publish
+//! cascade (plan buckets, router index, plan epochs, results memo),
+//! and the mid-serve smoke the CI gate runs against a real delta
+//! stream.
 
 use std::time::Duration;
 
-use ibmb::datasets::{sbm, DatasetSpec};
 use ibmb::graph::{synth_delta_stream, GraphDelta};
 use ibmb::serve::{
     DynamicServeSession, Route, ServeConfig, Skew, UpdateConfig,
 };
 
 fn session(results_cache_bytes: usize) -> DynamicServeSession {
-    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 77);
+    let ds = ibmb::datasets::sbm::generate(
+        &ibmb::datasets::DatasetSpec::tiny_for_tests(),
+        77,
+    );
     let cfg = ServeConfig {
         clients: 8,
         shards: 2,
@@ -29,22 +32,16 @@ fn session(results_cache_bytes: usize) -> DynamicServeSession {
 fn fifty_edge_delta_mid_serve_keeps_answering() {
     // the CI smoke, as a deterministic in-process assertion
     let mut s = session(1 << 20);
-    let eval = s.ds.splits.train.clone();
+    let ds = s.dataset();
+    let eval = ds.splits.train.clone();
     let before = s.serve_segment(&eval, Skew::Zipf(1.2), 40).unwrap();
     assert_eq!(before.executed_queries + before.cache_hits, 40);
 
-    let delta = synth_delta_stream(
-        &s.ds.graph,
-        &eval,
-        1,
-        50,
-        0,
-        0,
-        s.ds.num_classes,
-        7,
-    )
-    .pop()
-    .unwrap();
+    let delta =
+        synth_delta_stream(&ds.graph, &eval, 1, 50, 0, 0, ds.num_classes, 7)
+            .pop()
+            .unwrap();
+    drop(ds);
     let up = s.apply(&delta).unwrap();
     assert!(up.stale_plans() > 0, "50 focused edges must stale plans");
     assert!(up.roots_refreshed > 0);
@@ -55,6 +52,7 @@ fn fifty_edge_delta_mid_serve_keeps_answering() {
         40,
         "queries lost across the update"
     );
+    assert_eq!(after.final_epoch, 1);
     assert!((0.0..=1.0).contains(&after.accuracy));
 }
 
@@ -63,9 +61,10 @@ fn small_delta_repairs_a_strict_subset_of_plans() {
     // one edge between two outputs: the delta-local repair must leave
     // most of the precomputed state untouched
     let mut s = session(0);
-    let eval = s.ds.splits.train.clone();
+    let eval = s.dataset().splits.train.clone();
     let plans = s.cache().len();
     assert!(plans > 1, "need several plans for a fraction to mean much");
+    let before = s.cache();
     let up = s
         .apply(&GraphDelta {
             add_edges: vec![(eval[0], eval[1])],
@@ -82,20 +81,31 @@ fn small_delta_repairs_a_strict_subset_of_plans() {
         "a single edge staled every plan: {up:?}"
     );
     assert!(up.roots_refreshed < eval.len());
+    // the published snapshot shares every untouched plan bucket with
+    // the pre-delta one — the patch copied only what changed
+    let after = s.cache();
+    assert_eq!(
+        after.shared_with(&before),
+        plans - up.stale_plans(),
+        "structural sharing accounting"
+    );
 }
 
 #[test]
-fn router_never_routes_to_a_deleted_plan() {
+fn router_index_stays_total_and_consistent_across_updates() {
     let mut s = session(0);
-    let eval = s.ds.splits.train.clone();
+    let eval = s.dataset().splits.train.clone();
 
-    // a cold node picks up an id, then its neighborhood changes
+    // a cold node keeps a stable coalescing id across updates — its
+    // *plan content* refreshes per epoch shard-side, so the id itself
+    // never dangles
     let covered: std::collections::HashSet<u32> =
         eval.iter().copied().collect();
-    let cold_node = (0..s.ds.graph.num_nodes() as u32)
+    let cold_node = (0..s.dataset().graph.num_nodes() as u32)
         .find(|u| !covered.contains(u))
         .expect("tiny split leaves cold nodes");
-    let old_cold_id = match s.setup.router.route(cold_node) {
+    let state0 = s.state();
+    let old_cold_id = match s.setup.router.route(&state0.index, cold_node) {
         Route::Cold { id } => id,
         other => panic!("expected cold, got {other:?}"),
     };
@@ -105,23 +115,30 @@ fn router_never_routes_to_a_deleted_plan() {
         ..Default::default()
     };
     let up = s.apply(&delta).unwrap();
-    assert!(up.cold_ids_dropped >= 1, "touched cold id must drop");
-    assert!(up.router_invalidated >= up.plans_rebuilt, "{up:?}");
+    assert!(up.stale_plans() > 0, "{up:?}");
 
-    // the deleted cold plan id is never handed out again
-    match s.setup.router.route(cold_node) {
-        Route::Cold { id } => assert_ne!(id, old_cold_id),
+    let state1 = s.state();
+    assert_eq!(state1.epoch, 1);
+    // same id, different epoch: coalescing continuity without stale
+    // plan content (the memo keys cold entries on the snapshot epoch)
+    match s.setup.router.route(&state1.index, cold_node) {
+        Route::Cold { id } => assert_eq!(id, old_cold_id),
         other => panic!("expected cold, got {other:?}"),
     }
+    assert_ne!(
+        state0.plan_epoch(&ibmb::serve::PlanKey::Cold(old_cold_id)),
+        state1.plan_epoch(&ibmb::serve::PlanKey::Cold(old_cold_id)),
+        "cold freshness epoch must move with the snapshot"
+    );
 
-    // warm routing stays total and consistent with the rebuilt cache
-    let plans = s.cache().len();
+    // warm routing stays total and consistent with the new snapshot
+    let plans = state1.cache.len();
     for &u in &eval {
-        match s.setup.router.route(u) {
+        match s.setup.router.route(&state1.index, u) {
             Route::Cached { plan, pos } => {
                 assert!((plan as usize) < plans, "dangling plan id {plan}");
                 assert_eq!(
-                    s.cache().output_nodes(plan as usize)[pos as usize],
+                    state1.cache.output_nodes(plan as usize)[pos as usize],
                     u,
                     "output {u} routed to a plan that does not own it"
                 );
@@ -136,7 +153,7 @@ fn router_never_routes_to_a_deleted_plan() {
 #[test]
 fn post_update_reads_never_serve_pre_delta_logits() {
     let mut s = session(1 << 20);
-    let eval = s.ds.splits.train.clone();
+    let eval = s.dataset().splits.train.clone();
     // sequential repeats of one node: one execution, then memo hits
     let node = [eval[0]];
     let cfg_probe = |s: &mut DynamicServeSession| {
@@ -151,9 +168,13 @@ fn post_update_reads_never_serve_pre_delta_logits() {
         add_edges: vec![(eval[0], eval[1])],
         ..Default::default()
     };
+    let evictions_before = s.memo.epoch_evictions;
     let up = s.apply(&delta).unwrap();
     assert!(up.stale_plans() > 0);
-    assert!(up.memo_dropped > 0, "stale memo entry survived: {up:?}");
+    assert!(
+        s.memo.epoch_evictions > evictions_before,
+        "apply must eagerly sweep the stale memo entry: {up:?}"
+    );
 
     let fresh = cfg_probe(&mut s);
     assert!(
@@ -166,11 +187,11 @@ fn post_update_reads_never_serve_pre_delta_logits() {
 #[test]
 fn feature_update_invalidates_serving_state_without_topology_change() {
     let mut s = session(1 << 20);
-    let eval = s.ds.splits.train.clone();
-    let edges_before = s.ds.graph.num_edges();
+    let eval = s.dataset().splits.train.clone();
+    let edges_before = s.dataset().graph.num_edges();
     let target = eval[0];
-    let mut probe = vec![0.0f32; s.ds.feat_dim];
-    s.ds.node_features_into(target, &mut probe);
+    let mut probe = vec![0.0f32; s.dataset().feat_dim];
+    s.dataset().node_features_into(target, &mut probe);
 
     let up = s
         .apply(&GraphDelta {
@@ -178,18 +199,23 @@ fn feature_update_invalidates_serving_state_without_topology_change() {
             ..Default::default()
         })
         .unwrap();
-    assert_eq!(s.ds.graph.num_edges(), edges_before, "topology changed");
+    assert_eq!(
+        s.dataset().graph.num_edges(),
+        edges_before,
+        "topology changed"
+    );
     assert_eq!(up.plans_rebuilt, 0);
     assert!(up.plans_patched > 0, "feature epoch must stale its plans");
+    assert_eq!(up.buckets_patched, 0, "feature-only: payloads shared");
 
-    let mut after = vec![0.0f32; s.ds.feat_dim];
-    s.ds.node_features_into(target, &mut after);
+    let mut after = vec![0.0f32; s.dataset().feat_dim];
+    s.dataset().node_features_into(target, &mut after);
     assert_ne!(probe, after, "feature update did not change features");
     // other nodes are bit-identical
     let other = eval[1];
-    let mut a = vec![0.0f32; s.ds.feat_dim];
-    let mut b = vec![0.0f32; s.ds.feat_dim];
-    s.ds.node_features_into(other, &mut a);
+    let mut a = vec![0.0f32; s.dataset().feat_dim];
+    let mut b = vec![0.0f32; s.dataset().feat_dim];
+    s.dataset().node_features_into(other, &mut a);
     let up2 = s
         .apply(&GraphDelta {
             feature_updates: vec![target],
@@ -197,15 +223,15 @@ fn feature_update_invalidates_serving_state_without_topology_change() {
         })
         .unwrap();
     assert_eq!(up2.epoch, 2);
-    s.ds.node_features_into(other, &mut b);
+    s.dataset().node_features_into(other, &mut b);
     assert_eq!(a, b, "unrelated node's features drifted");
 }
 
 #[test]
 fn appended_nodes_become_serveable_via_cold_path() {
     let mut s = session(0);
-    let eval = s.ds.splits.train.clone();
-    let n0 = s.ds.graph.num_nodes();
+    let eval = s.dataset().splits.train.clone();
+    let n0 = s.dataset().graph.num_nodes();
     let up = s
         .apply(&GraphDelta {
             add_node_labels: vec![1, 2],
@@ -214,8 +240,11 @@ fn appended_nodes_become_serveable_via_cold_path() {
         })
         .unwrap();
     assert_eq!(up.added_nodes, 2);
-    assert_eq!(s.ds.graph.num_nodes(), n0 + 2);
-    assert_eq!(s.ds.labels.len(), n0 + 2);
+    assert_eq!(up.index_extended, 2);
+    let ds = s.dataset();
+    assert_eq!(ds.graph.num_nodes(), n0 + 2);
+    assert_eq!(ds.labels.len(), n0 + 2);
+    drop(ds);
     let pop = [n0 as u32, n0 as u32 + 1];
     let r = s.serve_segment(&pop, Skew::Uniform, 8).unwrap();
     assert_eq!(r.executed_queries + r.cache_hits, 8);

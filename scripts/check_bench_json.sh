@@ -3,8 +3,11 @@
 # crate's own strict parser) carrying the per-bench required keys, via
 # `ibmb check-bench`. Bench-emitting PRs therefore cannot silently
 # break the perf trajectory by dropping or renaming a recorded metric.
-# No-op (success) when no bench JSONs exist yet — benches are run out
-# of band, not in CI.
+# For the "updates" bench this includes the p99-under-churn series
+# (`churn: [{mode, p99_ms, qps, updates_applied}, ...]` — baseline vs
+# quiesced vs zero_quiesce) introduced with the snapshot-swap serving
+# refactor. No-op (success) when no bench JSONs exist yet — benches
+# are run out of band, not in CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
