@@ -76,6 +76,36 @@ printf '%s\n' "$live_out" | grep -Eq 'stale_plans=[1-9][0-9]*' || {
     exit 1
 }
 
+echo "== overload + trace smoke (open loop ≫ capacity, tight deadline) =="
+# Offered load far past what a tiny SBM on one shard can serve, with a
+# 2ms deadline: the admission gate must shed, every *admitted* query
+# must still be answered, and the --trace JSONL must reassemble into
+# per-query call trees.
+trace_file=$(mktemp /tmp/ibmb_trace.XXXXXX.jsonl)
+overload_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 1 --clients 8 --queries 400 --window-us 300 \
+    --seed 7 --offered-qps 200000 --deadline-ms 2 --tenants 2 \
+    --trace "$trace_file")
+printf '%s\n' "$overload_out"
+printf '%s\n' "$overload_out" | grep -Eq 'shed=[1-9][0-9]*' || {
+    echo "overload smoke FAILED: expected shed > 0 at 200k offered qps" >&2
+    exit 1
+}
+printf '%s\n' "$overload_out" | grep -q 'unanswered=0' || {
+    echo "overload smoke FAILED: admitted queries went unanswered" >&2
+    exit 1
+}
+printf '%s\n' "$overload_out" | grep -q 'trace: wrote' || {
+    echo "overload smoke FAILED: trace writer did not report" >&2
+    exit 1
+}
+cargo run --release --bin ibmb -- trace-report "$trace_file" \
+    | grep -q 'queries traced' || {
+    echo "overload smoke FAILED: trace-report could not parse $trace_file" >&2
+    exit 1
+}
+rm -f "$trace_file"
+
 echo "== bench JSON validation (BENCH_*.json, when present) =="
 ./scripts/check_bench_json.sh
 

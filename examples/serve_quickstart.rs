@@ -1,7 +1,8 @@
 //! Serving quickstart: stand the online inference service up on a
 //! tiny synthetic dataset, fire a handful of closed-loop queries at
-//! it, apply a live graph delta with zero serving pause, and print
-//! the latency/coalescing stats.
+//! it, apply a live graph delta with zero serving pause, print the
+//! latency/coalescing stats, and trace one run into per-query call
+//! trees (the `--trace` / `trace-report` flow).
 //!
 //! This is the smallest end-to-end tour of the `serve` subsystem
 //! (DESIGN.md §9 and §11): node-wise IBMB plans the serveable set
@@ -19,6 +20,7 @@ use std::time::Duration;
 use ibmb::datasets::{sbm, DatasetSpec};
 use ibmb::graph::GraphDelta;
 use ibmb::serve::{self, DynamicServeSession, ServeConfig, Skew, UpdateConfig};
+use ibmb::telemetry::{assemble, render_tree, TraceSink, Tracer};
 
 fn main() -> anyhow::Result<()> {
     let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 11);
@@ -99,10 +101,44 @@ fn main() -> anyhow::Result<()> {
     );
 
     // the one-shot static path is still available when the graph
-    // never changes:
+    // never changes — and it takes a tracer: the same per-query JSONL
+    // flight recorder behind `ibmb serve --trace <path>` /
+    // `ibmb trace-report <path>` (DESIGN.md §12)
     let ds2 = sbm::generate(&DatasetSpec::tiny_for_tests(), 11);
     let mut setup = serve::prepare(ds2, &eval, &cfg);
+    let trace_path = std::env::temp_dir().join("ibmb_quickstart_trace.jsonl");
+    let (sink, writer) = TraceSink::to_file(&trace_path)?;
+    setup.tracer = Tracer::attached(sink);
     let r = serve::serve_closed_loop(&mut setup, &eval, Skew::Uniform, &cfg)?;
     println!("static deployment: {:.0} qps at epoch {}", r.qps, r.final_epoch);
+    // detach before finish(): the writer drains until every sink
+    // handle is gone, and the setup still holds one
+    setup.tracer = Tracer::disabled();
+    let summary = writer.finish()?;
+    println!(
+        "trace: {} events to {} ({} dropped)",
+        summary.events_written,
+        trace_path.display(),
+        summary.events_dropped
+    );
+
+    // what `ibmb trace-report` does: reassemble the JSONL into
+    // per-query call trees and print one
+    let rep = assemble(&std::fs::read_to_string(&trace_path)?)
+        .map_err(anyhow::Error::msg)?;
+    println!(
+        "trace-report: {} queries traced, {} complete; stages recorded: {}",
+        rep.queries.len(),
+        rep.complete_queries,
+        rep.stages
+            .keys()
+            .copied()
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    if let Some(q) = rep.queries.iter().find(|q| q.complete) {
+        print!("{}", render_tree(q));
+    }
+    std::fs::remove_file(&trace_path).ok();
     Ok(())
 }

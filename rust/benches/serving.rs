@@ -6,8 +6,17 @@
 //! headline — precomputed influence batches are reusable at query
 //! time; coalescing and memoization multiply that reuse).
 //!
+//! The second act is goodput under overload: the closed-loop sweep
+//! calibrates capacity, then an open-loop series drives 1x–10x that
+//! offered load with a deadline and records goodput, shed fraction,
+//! and p99 *of admitted queries* per multiplier (uniform + zipf).
+//! With the admission gate, goodput should plateau near capacity while
+//! shedding absorbs the excess — without it the queue would grow
+//! without bound and p99 with it.
+//!
 //! Run: `cargo bench --bench serving` (`--full` for the bigger graph;
-//! `--shards 1,2,4 --queries N --clients N` to override).
+//! `--shards 1,2,4 --queries N --clients N --deadline-ms F` to
+//! override).
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -155,6 +164,90 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- goodput under overload ------------------------------------
+    // capacity = best memo-less closed-loop throughput observed above;
+    // the open-loop series offers multiples of it under a deadline
+    let capacity_qps = records
+        .iter()
+        .filter(|r| r.memo_bytes == 0)
+        .map(|r| r.qps)
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    let deadline_ms = args.get_f64("deadline-ms", 25.0);
+    let overload_queries = args.get_usize("overload-queries", queries.min(800));
+    println!(
+        "overload series: capacity {capacity_qps:.0} qps, deadline \
+         {deadline_ms:.1}ms, {overload_queries} queries per point"
+    );
+    let mut otable = Table::new(&[
+        "config",
+        "offered (qps)",
+        "goodput (qps)",
+        "shed frac",
+        "p99 adm (ms)",
+        "degraded",
+    ]);
+    struct OverloadRecord {
+        skew: String,
+        offered_x: f64,
+        offered_qps: f64,
+        goodput_qps: f64,
+        shed_fraction: f64,
+        p99_admitted_ms: f64,
+        admitted: u64,
+        shed: u64,
+        shed_rate_limited: u64,
+        degraded: u64,
+    }
+    let mut overload: Vec<OverloadRecord> = Vec::new();
+    for skew in skews {
+        for mult in [1.0, 2.0, 4.0, 6.0, 8.0, 10.0] {
+            let cfg = ServeConfig {
+                shards: 2,
+                offered_qps: capacity_qps * mult,
+                deadline: Some(Duration::from_secs_f64(deadline_ms * 1e-3)),
+                tenants: 4,
+                queries: overload_queries,
+                results_cache_bytes: memo_bytes,
+                results_ttl: Some(Duration::from_millis(
+                    args.get_u64("results-ttl-ms", 50),
+                )),
+                ..base.clone()
+            };
+            let r = serve::serve_closed_loop(&mut setup, &eval, skew, &cfg)?;
+            otable.row(&[
+                format!("{} {mult:.0}x", skew.label()),
+                format!("{:.0}", r.offered_qps),
+                format!("{:.0}", r.goodput_qps),
+                format!("{:.3}", r.shed_fraction),
+                format!("{:.2}", r.p99_ms),
+                format!("{}", r.degraded),
+            ]);
+            overload.push(OverloadRecord {
+                skew: skew.label(),
+                offered_x: mult,
+                offered_qps: r.offered_qps,
+                goodput_qps: r.goodput_qps,
+                shed_fraction: r.shed_fraction,
+                p99_admitted_ms: r.p99_ms,
+                admitted: r.admitted,
+                shed: r.shed,
+                shed_rate_limited: r.shed_rate_limited,
+                degraded: r.degraded,
+            });
+        }
+    }
+    let peak_goodput = overload
+        .iter()
+        .map(|o| o.goodput_qps)
+        .fold(0.0f64, f64::max);
+    if peak_goodput < capacity_qps * 0.5 {
+        eprintln!(
+            "WARNING: peak goodput {peak_goodput:.0} qps < half of \
+             calibrated capacity {capacity_qps:.0} — deadline too tight?"
+        );
+    }
+
     let json = Json::Obj(BTreeMap::from([
         ("bench".into(), Json::Str("serving".into())),
         ("dataset".into(), Json::Str(ds.name.clone())),
@@ -166,6 +259,45 @@ fn main() -> anyhow::Result<()> {
         (
             "window_us".into(),
             Json::Num(base.flush_window.as_micros() as f64),
+        ),
+        ("capacity_qps".into(), Json::Num(capacity_qps)),
+        ("deadline_ms".into(), Json::Num(deadline_ms)),
+        (
+            "overload".into(),
+            Json::Arr(
+                overload
+                    .iter()
+                    .map(|o| {
+                        Json::Obj(BTreeMap::from([
+                            ("skew".into(), Json::Str(o.skew.clone())),
+                            ("offered_x".into(), Json::Num(o.offered_x)),
+                            ("offered_qps".into(), Json::Num(o.offered_qps)),
+                            ("goodput_qps".into(), Json::Num(o.goodput_qps)),
+                            (
+                                "shed_fraction".into(),
+                                Json::Num(o.shed_fraction),
+                            ),
+                            (
+                                "p99_admitted_ms".into(),
+                                Json::Num(o.p99_admitted_ms),
+                            ),
+                            (
+                                "admitted".into(),
+                                Json::Num(o.admitted as f64),
+                            ),
+                            ("shed".into(), Json::Num(o.shed as f64)),
+                            (
+                                "shed_rate_limited".into(),
+                                Json::Num(o.shed_rate_limited as f64),
+                            ),
+                            (
+                                "degraded".into(),
+                                Json::Num(o.degraded as f64),
+                            ),
+                        ]))
+                    })
+                    .collect(),
+            ),
         ),
         (
             "runs".into(),
@@ -207,5 +339,6 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(&out_path, to_string(&json))?;
     println!("wrote {out_path}");
     table.print("serving — qps / tail latency / coalescing vs shards");
+    otable.print("serving — goodput under overload (1x–10x capacity)");
     Ok(())
 }

@@ -82,6 +82,25 @@
 //! `benches/updates.rs` → `BENCH_updates.json`, including the
 //! quiesced-vs-zero-quiesce p99-under-churn series).
 //!
+//! ## Telemetry & admission control
+//!
+//! The [`telemetry`] subsystem (DESIGN.md §12) gives every serving run
+//! per-query observability at production overhead: scoped spans stamp
+//! monotonic enter/exit events into lossy per-thread buffers that
+//! drain through a bounded channel to a background JSONL writer
+//! (`ibmb serve --trace`), and `ibmb trace-report` reassembles the
+//! stream offline into per-query call trees (admission → routing →
+//! queue wait → coalesce → fill → forward → memo) with per-stage
+//! self/total times and dropped-event accounting. On the control
+//! side, [`serve::AdmissionGate`] keeps an overloaded service on its
+//! goodput plateau: per-shard depth × a service-time EWMA predicts
+//! each arrival's completion, queries predicted past their deadline
+//! are shed (or degraded to a memo-only answer), and per-tenant token
+//! buckets stop one hot tenant from starving the rest.
+//! `benches/serving.rs` sweeps offered load from 1× to 10× capacity
+//! and records the goodput / shed-fraction / p99-of-admitted curves in
+//! `BENCH_serving.json`.
+//!
 //! See `rust/DESIGN.md` for the full system inventory and the
 //! experiment index mapping each paper table/figure to a bench target.
 
@@ -100,5 +119,6 @@ pub mod ppr;
 pub mod runtime;
 pub mod scheduler;
 pub mod serve;
+pub mod telemetry;
 pub mod training;
 pub mod util;

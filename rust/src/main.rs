@@ -8,6 +8,8 @@
 //! ibmb serve   --dataset synth-arxiv --live-updates synth --update-batches 2
 //! ibmb serve   --dataset synth-arxiv --save-cache plans.ibmb
 //! ibmb serve   --dataset synth-arxiv --cache plans.ibmb
+//! ibmb serve   --dataset synth-arxiv --offered-qps 50000 --deadline-ms 5 --trace trace.jsonl
+//! ibmb trace-report trace.jsonl
 //! ibmb update  --dataset synth-arxiv --deltas updates.log --save-log updates.ibmb
 //! ibmb update  --dataset synth-arxiv --load-log updates.ibmb
 //! ibmb check-bench BENCH_serving.json BENCH_updates.json
@@ -29,12 +31,13 @@ use ibmb::datasets::ALL_DATASETS;
 use ibmb::experiments::{self, runner};
 use ibmb::graph::{parse_delta_log, synth_delta_stream, GraphDelta};
 use ibmb::serve::{self, Churn, RouterIndex, ServeConfig, Skew};
+use ibmb::telemetry::{self, TraceSink, TraceWriter, Tracer};
 use ibmb::util::json::Json;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ibmb <train|infer|serve|update|check-bench|gen-data|list|\
-         fig2..fig9|table5..table7> \
+        "usage: ibmb <train|infer|serve|update|trace-report|check-bench|\
+         gen-data|list|fig2..fig9|table5..table7> \
          [--dataset NAME] [--model gcn|gat|sage] [--method NAME] \
          [--epochs N] [--seed N] [--scale F] [--prefetch-depth N] [--full]\n\
          serve options: [--shards N] [--clients N] [--queries N] \
@@ -42,15 +45,83 @@ fn usage() -> ! {
          [--results-cache-bytes N] [--results-ttl-ms N] [--cold-aux N] \
          [--hidden N] [--layers N] [--heads N] \
          [--cache FILE] [--save-cache FILE]\n\
+         admission/telemetry: [--offered-qps F] (0 = closed loop) \
+         [--deadline-ms F] [--tenants N] [--tenant-rate F] \
+         [--tenant-burst F] [--trace FILE.jsonl]\n\
          update options (serve --update-stream segments serving, \
          serve --live-updates applies mid-traffic, ibmb update replays \
          offline): [--update-stream FILE|synth] [--live-updates FILE|synth] \
          [--deltas FILE|synth] [--load-log FILE] [--save-log FILE] \
          [--update-batches N] [--update-edges N] [--update-nodes N] \
          [--update-feats N] [--l1-tol F]\n\
+         trace-report: ibmb trace-report trace.jsonl [--limit N]\n\
          check-bench: ibmb check-bench BENCH_*.json"
     );
     std::process::exit(2);
+}
+
+/// Attach a `--trace FILE` JSONL writer to the serve setup, returning
+/// the writer handle to join after the run.
+fn attach_trace(
+    args: &Args,
+    setup: &mut serve::ServeSetup,
+) -> Result<Option<(String, TraceWriter)>> {
+    match args.get("trace") {
+        None => Ok(None),
+        Some(path) => {
+            let (sink, writer) =
+                TraceSink::to_file(std::path::Path::new(path))?;
+            setup.tracer = Tracer::attached(sink);
+            println!("tracing to {path}");
+            Ok(Some((path.to_string(), writer)))
+        }
+    }
+}
+
+/// Detach the tracer (closing the sink channel) and join the writer.
+fn finish_trace(
+    setup: &mut serve::ServeSetup,
+    trace: Option<(String, TraceWriter)>,
+) -> Result<()> {
+    if let Some((path, writer)) = trace {
+        setup.tracer = Tracer::disabled();
+        let s = writer.finish()?;
+        println!(
+            "trace: wrote {} events to {path} ({} dropped)",
+            s.events_written, s.events_dropped
+        );
+    }
+    Ok(())
+}
+
+/// The per-run admission/goodput line every serve mode prints —
+/// `unanswered` must be 0 (every admitted query was answered) and CI
+/// greps for it.
+fn print_admission(r: &serve::ServeReport) {
+    let answered = r.executed_queries + r.cache_hits;
+    println!(
+        "  admission: admitted={} shed={} rate_limited={} degraded={} \
+         (goodput {:.0} qps, shed fraction {:.3}, offered {:.0} qps, \
+         deadline {:.2}ms), unanswered={}",
+        r.admitted,
+        r.shed,
+        r.shed_rate_limited,
+        r.degraded,
+        r.goodput_qps,
+        r.shed_fraction,
+        r.offered_qps,
+        r.deadline_ms,
+        r.admitted.saturating_sub(answered)
+    );
+    if r.tenant_stats.len() > 1 {
+        for (t, c) in r.tenant_stats.iter().enumerate() {
+            println!(
+                "    tenant[{t}]: admitted={} degraded={} shed_deadline={} \
+                 shed_rate={}",
+                c.admitted, c.degraded, c.shed_deadline, c.shed_rate_limited
+            );
+        }
+    }
 }
 
 /// Build the delta stream a dynamic subcommand replays: a delta log
@@ -166,7 +237,34 @@ fn validate_bench_json(text: &str) -> Result<String, String> {
     // per bench (micro_pipeline records one entry per ring depth)
     let (runs_key, run_keys): (&str, &[&str]) = match bench.as_str() {
         "serving" => {
-            need(&["dataset", "queries"])?;
+            need(&["dataset", "queries", "capacity_qps", "deadline_ms"])?;
+            // the goodput-under-overload series: offered load swept
+            // from 1x to 10x calibrated capacity, uniform + zipf
+            let overload = doc
+                .get("overload")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| {
+                    format!("bench {bench:?}: missing array \"overload\"")
+                })?;
+            if overload.is_empty() {
+                return Err(format!("bench {bench:?}: empty \"overload\""));
+            }
+            for (i, run) in overload.iter().enumerate() {
+                for k in [
+                    "offered_x",
+                    "offered_qps",
+                    "goodput_qps",
+                    "shed_fraction",
+                    "p99_admitted_ms",
+                    "skew",
+                ] {
+                    if run.get(k).is_none() {
+                        return Err(format!(
+                            "bench {bench:?}: overload[{i}] missing key {k:?}"
+                        ));
+                    }
+                }
+            }
             (
                 "runs",
                 &["qps", "p50_ms", "p99_ms", "coalescing_factor", "hit_rate", "shards"],
@@ -398,6 +496,16 @@ fn main() -> Result<()> {
                 layers: args.get_usize("layers", 2),
                 heads: args.get_usize("heads", 2),
                 seed: args.get_u64("seed", 0),
+                offered_qps: args.get_f64("offered-qps", 0.0).max(0.0),
+                deadline: match args.get_f64("deadline-ms", 0.0) {
+                    ms if ms > 0.0 => {
+                        Some(Duration::from_secs_f64(ms * 1e-3))
+                    }
+                    _ => None,
+                },
+                tenants: args.get_usize("tenants", 1).max(1),
+                tenant_rate: args.get_f64("tenant-rate", 0.0).max(0.0),
+                tenant_burst: args.get_f64("tenant-burst", 32.0).max(1.0),
             };
             if !["gcn", "sage", "gat"].contains(&cfg.model.as_str()) {
                 eprintln!(
@@ -448,6 +556,7 @@ fn main() -> Result<()> {
                 };
                 let mut session =
                     serve::DynamicServeSession::prepare(ds, &eval, &cfg, &ucfg);
+                let trace = attach_trace(&args, &mut session.setup)?;
                 println!(
                     "{} plans cached, bucket n{}, {} update batches, \
                      l1_tol {}",
@@ -494,6 +603,7 @@ fn main() -> Result<()> {
                     deltas.len(),
                     session.memo.epoch_evictions
                 );
+                finish_trace(&mut session.setup, trace)?;
                 return Ok(());
             }
             if let Some(stream) = args.get("live-updates") {
@@ -505,6 +615,7 @@ fn main() -> Result<()> {
                 };
                 let mut session =
                     serve::DynamicServeSession::prepare(ds, &eval, &cfg, &ucfg);
+                let trace = attach_trace(&args, &mut session.setup)?;
                 println!(
                     "{} plans cached, bucket n{}, live updates from \
                      {stream:?}, l1_tol {}",
@@ -581,17 +692,25 @@ fn main() -> Result<()> {
                      {} stale plans, {} memo entries swept)",
                     r.queries,
                     ups.len(),
-                    r.queries as u64 - answered,
+                    r.admitted - answered,
                     r.final_epoch,
                     r.snapshot_swaps,
                     stale,
                     r.memo_swept
                 );
-                anyhow::ensure!(
-                    answered == r.queries as u64,
-                    "dropped {} queries",
-                    r.queries as u64 - answered
+                println!(
+                    "  gc: {} old-epoch straggler groups observed at swaps, \
+                     peak {} KiB snapshot bytes retained",
+                    r.gc_retained_groups,
+                    r.gc_retained_bytes_peak / 1024
                 );
+                print_admission(&r);
+                anyhow::ensure!(
+                    answered == r.admitted,
+                    "dropped {} admitted queries",
+                    r.admitted - answered
+                );
+                finish_trace(&mut session.setup, trace)?;
                 return Ok(());
             }
             let save_cache = args.get("save-cache").map(str::to_string);
@@ -625,6 +744,7 @@ fn main() -> Result<()> {
                 }
                 None => serve::prepare(ds, &eval, &cfg),
             };
+            let trace = attach_trace(&args, &mut setup)?;
             if let Some(file) = save_cache {
                 let state = setup.state();
                 let path = std::path::Path::new(&file);
@@ -687,6 +807,8 @@ fn main() -> Result<()> {
                 report.mat_wait_s,
                 report.accuracy * 100.0
             );
+            print_admission(&report);
+            finish_trace(&mut setup, trace)?;
         }
         Some("update") => {
             // Offline delta replay: apply each batch to the overlay and
@@ -787,6 +909,51 @@ fn main() -> Result<()> {
                 refresh_s * 1e3,
                 dg.epoch()
             );
+        }
+        Some("trace-report") => {
+            // offline assembly of `--trace` JSONL into per-query call
+            // trees + per-stage aggregates (telemetry::tree)
+            anyhow::ensure!(
+                !args.positional.is_empty(),
+                "usage: ibmb trace-report trace.jsonl [--limit N]"
+            );
+            let limit = args.get_usize("limit", 3);
+            for f in &args.positional {
+                let text = std::fs::read_to_string(f)?;
+                let rep = telemetry::assemble(&text)
+                    .map_err(|e| anyhow::anyhow!("{f}: {e}"))?;
+                println!(
+                    "{f}: {} events, {} queries traced ({} complete), \
+                     {} events dropped",
+                    rep.events,
+                    rep.queries.len(),
+                    rep.complete_queries,
+                    rep.dropped
+                );
+                println!(
+                    "  {:<14} {:>8} {:>8} {:>12} {:>10}",
+                    "stage", "count", "spans", "total_ms", "max_ms"
+                );
+                for (name, agg) in &rep.stages {
+                    println!(
+                        "  {:<14} {:>8} {:>8} {:>12.3} {:>10.3}",
+                        name,
+                        agg.count,
+                        agg.spans,
+                        agg.total_us as f64 / 1e3,
+                        agg.max_us as f64 / 1e3
+                    );
+                }
+                for q in rep.queries.iter().take(limit) {
+                    println!("{}", telemetry::render_tree(q));
+                }
+                if rep.queries.len() > limit {
+                    println!(
+                        "  … {} more queries (--limit N to show)",
+                        rep.queries.len() - limit
+                    );
+                }
+            }
         }
         Some("check-bench") => {
             let files = if args.positional.is_empty() {

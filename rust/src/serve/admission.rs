@@ -1,0 +1,335 @@
+//! Deadline-aware admission control for the serve loop.
+//!
+//! Past saturation a closed queue just grows: every admitted query
+//! waits behind everything admitted before it, p99 explodes, and
+//! goodput (completions that still meet their deadline) collapses even
+//! though raw throughput looks fine. The gate keeps the system on the
+//! goodput plateau instead: it tracks per-shard in-flight group depth
+//! and an EWMA of group service time, predicts a new query's completion
+//! as `(depth + 1) × ewma_service`, and rejects queries whose waited
+//! time plus prediction exceeds their deadline — or *degrades* them to
+//! a memo-only lookup when the results cache still holds their plan's
+//! logits (a stale-tolerant answer beats no answer). A per-tenant
+//! token bucket caps each tenant's admission rate ahead of the
+//! deadline predicate, so one hot tenant cannot starve the rest.
+//!
+//! The gate is synchronous and clocked by caller-supplied [`Instant`]s
+//! (like [`super::queue::MicrobatchQueue`]), so every decision path is
+//! deterministic and unit-testable. The EWMA starts from a positive
+//! prior ([`AdmissionConfig::service_prior_s`]) instead of zero:
+//! before the first group completes, a zero estimate would predict
+//! zero wait at any depth and admit an unbounded burst.
+
+use std::time::{Duration, Instant};
+
+/// Gate tuning. `Default` admits everything (no deadline, no rate
+/// limit) — the closed-loop paths are untouched unless configured.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Completion deadline; `None` disables the deadline predicate.
+    pub deadline: Option<Duration>,
+    /// EWMA smoothing for observed group service times.
+    pub ewma_alpha: f64,
+    /// Service-time estimate before any observation (seconds). Must
+    /// be > 0 so cold-start bursts are still depth-limited.
+    pub service_prior_s: f64,
+    /// Per-tenant token refill rate (queries/s; 0 = unlimited).
+    pub tenant_rate: f64,
+    /// Per-tenant token-bucket burst capacity.
+    pub tenant_burst: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            deadline: None,
+            ewma_alpha: 0.2,
+            service_prior_s: 5e-4,
+            tenant_rate: 0.0,
+            tenant_burst: 32.0,
+        }
+    }
+}
+
+/// Gate decision for one arriving query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Predicted to complete in time: enqueue normally.
+    Admit,
+    /// Predicted to miss its deadline: answer from the results memo
+    /// if possible (degraded), otherwise shed.
+    OverDeadline,
+    /// Tenant exhausted its token bucket: shed before any other work.
+    RateLimited,
+}
+
+/// Per-tenant admission accounting (surfaced in `ServeReport`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Queries answered at full fidelity (execution or fresh memo).
+    pub admitted: u64,
+    /// Over-deadline queries answered from the memo.
+    pub degraded: u64,
+    /// Queries shed by the deadline predicate (memo miss).
+    pub shed_deadline: u64,
+    /// Queries shed by the token bucket.
+    pub shed_rate_limited: u64,
+}
+
+impl TenantCounters {
+    pub fn total(&self) -> u64 {
+        self.admitted + self.degraded + self.shed_deadline + self.shed_rate_limited
+    }
+}
+
+/// The admission gate: per-shard depth, service EWMA, tenant buckets.
+#[derive(Debug)]
+pub struct AdmissionGate {
+    cfg: AdmissionConfig,
+    /// Groups enqueued-or-executing per shard.
+    depth: Vec<u64>,
+    ewma_s: f64,
+    observations: u64,
+    tokens: Vec<f64>,
+    refilled: Vec<Option<Instant>>,
+    /// Per-tenant outcome counters (index = tenant id).
+    pub tenants: Vec<TenantCounters>,
+}
+
+impl AdmissionGate {
+    pub fn new(shards: usize, tenants: usize, cfg: AdmissionConfig) -> Self {
+        let tenants = tenants.max(1);
+        AdmissionGate {
+            tokens: vec![cfg.tenant_burst.max(1.0); tenants],
+            refilled: vec![None; tenants],
+            tenants: vec![TenantCounters::default(); tenants],
+            depth: vec![0; shards.max(1)],
+            ewma_s: 0.0,
+            observations: 0,
+            cfg,
+        }
+    }
+
+    /// Current group service-time estimate (prior until observed).
+    pub fn service_estimate_s(&self) -> f64 {
+        if self.observations == 0 {
+            self.cfg.service_prior_s.max(1e-9)
+        } else {
+            self.ewma_s
+        }
+    }
+
+    /// Predicted completion wait for a query admitted to `shard` now:
+    /// everything queued there, plus its own group, at the estimated
+    /// per-group service time.
+    pub fn predicted_wait_s(&self, shard: usize) -> f64 {
+        (self.depth[shard] + 1) as f64 * self.service_estimate_s()
+    }
+
+    /// In-flight group depth of `shard`.
+    pub fn depth(&self, shard: usize) -> u64 {
+        self.depth[shard]
+    }
+
+    /// Decide one arrival: token bucket first, then the deadline
+    /// predicate over `waited_s` (time already spent since the
+    /// query's scheduled arrival) plus the predicted wait.
+    pub fn assess(
+        &mut self,
+        tenant: u16,
+        shard: usize,
+        waited_s: f64,
+        now: Instant,
+    ) -> Verdict {
+        if self.cfg.tenant_rate > 0.0 && !self.take_token(tenant, now) {
+            return Verdict::RateLimited;
+        }
+        if let Some(deadline) = self.cfg.deadline {
+            if waited_s + self.predicted_wait_s(shard)
+                > deadline.as_secs_f64()
+            {
+                return Verdict::OverDeadline;
+            }
+        }
+        Verdict::Admit
+    }
+
+    fn take_token(&mut self, tenant: u16, now: Instant) -> bool {
+        let t = (tenant as usize).min(self.tokens.len() - 1);
+        if let Some(last) = self.refilled[t] {
+            let dt = now.saturating_duration_since(last).as_secs_f64();
+            self.tokens[t] = (self.tokens[t] + dt * self.cfg.tenant_rate)
+                .min(self.cfg.tenant_burst.max(1.0));
+        }
+        self.refilled[t] = Some(now);
+        if self.tokens[t] >= 1.0 {
+            self.tokens[t] -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A new group entered the queue for `shard`.
+    pub fn group_enqueued(&mut self, shard: usize) {
+        self.depth[shard] += 1;
+    }
+
+    /// A group finished on `shard` after `service_s` seconds of
+    /// execution: release its depth and fold the observation into the
+    /// EWMA.
+    pub fn group_done(&mut self, shard: usize, service_s: f64) {
+        self.depth[shard] = self.depth[shard].saturating_sub(1);
+        if service_s.is_finite() && service_s >= 0.0 {
+            if self.observations == 0 {
+                self.ewma_s = service_s;
+            } else {
+                let a = self.cfg.ewma_alpha.clamp(0.0, 1.0);
+                self.ewma_s = a * service_s + (1.0 - a) * self.ewma_s;
+            }
+            self.observations += 1;
+        }
+    }
+
+    fn tenant_mut(&mut self, tenant: u16) -> &mut TenantCounters {
+        let t = (tenant as usize).min(self.tenants.len() - 1);
+        &mut self.tenants[t]
+    }
+
+    pub fn note_admitted(&mut self, tenant: u16) {
+        self.tenant_mut(tenant).admitted += 1;
+    }
+
+    pub fn note_degraded(&mut self, tenant: u16) {
+        self.tenant_mut(tenant).degraded += 1;
+    }
+
+    pub fn note_shed_deadline(&mut self, tenant: u16) {
+        self.tenant_mut(tenant).shed_deadline += 1;
+    }
+
+    pub fn note_shed_rate(&mut self, tenant: u16) {
+        self.tenant_mut(tenant).shed_rate_limited += 1;
+    }
+
+    /// Sum of all tenants' counters.
+    pub fn totals(&self) -> TenantCounters {
+        let mut out = TenantCounters::default();
+        for t in &self.tenants {
+            out.admitted += t.admitted;
+            out.degraded += t.degraded;
+            out.shed_deadline += t.shed_deadline;
+            out.shed_rate_limited += t.shed_rate_limited;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(cfg: AdmissionConfig) -> AdmissionGate {
+        AdmissionGate::new(2, 2, cfg)
+    }
+
+    #[test]
+    fn admits_everything_by_default() {
+        let mut g = gate(AdmissionConfig::default());
+        let now = Instant::now();
+        for i in 0..100 {
+            g.group_enqueued(i % 2);
+            assert_eq!(g.assess(0, i % 2, 0.0, now), Verdict::Admit);
+        }
+    }
+
+    #[test]
+    fn deadline_predicate_uses_depth_times_ewma() {
+        let mut g = gate(AdmissionConfig {
+            deadline: Some(Duration::from_millis(2)),
+            service_prior_s: 5e-4,
+            ..Default::default()
+        });
+        let now = Instant::now();
+        // prior 500µs: (depth+1)*500µs exceeds 2ms once depth >= 4
+        for _ in 0..3 {
+            assert_eq!(g.assess(0, 0, 0.0, now), Verdict::Admit);
+            g.group_enqueued(0);
+        }
+        assert_eq!(g.depth(0), 3);
+        assert_eq!(g.assess(0, 0, 0.0, now), Verdict::Admit);
+        g.group_enqueued(0);
+        assert_eq!(g.assess(0, 0, 0.0, now), Verdict::OverDeadline);
+        // the other shard is idle and still admits
+        assert_eq!(g.assess(0, 1, 0.0, now), Verdict::Admit);
+        // waited time counts against the budget too
+        g.group_done(0, 5e-4);
+        g.group_done(0, 5e-4);
+        g.group_done(0, 5e-4);
+        assert_eq!(g.assess(0, 0, 0.0, now), Verdict::Admit);
+        assert_eq!(g.assess(0, 0, 1.9e-3, now), Verdict::OverDeadline);
+    }
+
+    #[test]
+    fn ewma_tracks_observed_service_times() {
+        let mut g = gate(AdmissionConfig {
+            ewma_alpha: 0.5,
+            service_prior_s: 1e-3,
+            ..Default::default()
+        });
+        assert!((g.service_estimate_s() - 1e-3).abs() < 1e-12, "prior");
+        g.group_enqueued(0);
+        g.group_done(0, 4e-3);
+        assert!((g.service_estimate_s() - 4e-3).abs() < 1e-12, "first obs");
+        g.group_enqueued(0);
+        g.group_done(0, 2e-3);
+        assert!((g.service_estimate_s() - 3e-3).abs() < 1e-12, "ewma");
+        assert_eq!(g.depth(0), 0);
+        // depth never underflows
+        g.group_done(0, 1e-3);
+        assert_eq!(g.depth(0), 0);
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_per_tenant() {
+        let mut g = gate(AdmissionConfig {
+            tenant_rate: 10.0,
+            tenant_burst: 2.0,
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        // burst of 2, then dry
+        assert_eq!(g.assess(0, 0, 0.0, t0), Verdict::Admit);
+        assert_eq!(g.assess(0, 0, 0.0, t0), Verdict::Admit);
+        assert_eq!(g.assess(0, 0, 0.0, t0), Verdict::RateLimited);
+        // tenant 1 has its own bucket
+        assert_eq!(g.assess(1, 0, 0.0, t0), Verdict::Admit);
+        // 100ms at 10/s refills one token
+        let t1 = t0 + Duration::from_millis(100);
+        assert_eq!(g.assess(0, 0, 0.0, t1), Verdict::Admit);
+        assert_eq!(g.assess(0, 0, 0.0, t1), Verdict::RateLimited);
+        // refill clamps at the burst cap
+        let t2 = t1 + Duration::from_secs(10);
+        assert_eq!(g.assess(0, 0, 0.0, t2), Verdict::Admit);
+        assert_eq!(g.assess(0, 0, 0.0, t2), Verdict::Admit);
+        assert_eq!(g.assess(0, 0, 0.0, t2), Verdict::RateLimited);
+    }
+
+    #[test]
+    fn tenant_counters_accumulate_and_total() {
+        let mut g = gate(AdmissionConfig::default());
+        g.note_admitted(0);
+        g.note_admitted(1);
+        g.note_degraded(1);
+        g.note_shed_deadline(0);
+        g.note_shed_rate(1);
+        // out-of-range tenants clamp to the last bucket
+        g.note_admitted(9);
+        assert_eq!(g.tenants[0].admitted, 1);
+        assert_eq!(g.tenants[1].admitted, 2);
+        assert_eq!(g.tenants[1].degraded, 1);
+        let t = g.totals();
+        assert_eq!(t.admitted, 3);
+        assert_eq!(t.total(), 6);
+    }
+}

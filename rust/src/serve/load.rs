@@ -43,6 +43,14 @@ impl Skew {
     }
 }
 
+/// One generated arrival: the queried node plus the tenant issuing
+/// it (tenant ids feed the admission gate's per-tenant token buckets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub node: u32,
+    pub tenant: u16,
+}
+
 /// Seeded query-node sampler. Zipf rank r (0-based) maps to
 /// `nodes[r]`, so the head of the population list is the hot set.
 pub struct LoadGen {
@@ -50,10 +58,24 @@ pub struct LoadGen {
     /// Normalized CDF over ranks (empty for uniform).
     cdf: Vec<f64>,
     rng: Rng,
+    tenants: u16,
 }
 
 impl LoadGen {
     pub fn new(nodes: &[u32], skew: Skew, seed: u64) -> LoadGen {
+        LoadGen::with_tenants(nodes, skew, 1, seed)
+    }
+
+    /// Like [`LoadGen::new`] with arrivals spread uniformly over
+    /// `tenants` logical tenants. With a single tenant the rng draw
+    /// for the tenant id is skipped entirely, so the node sequence is
+    /// bit-identical to the tenant-less generator.
+    pub fn with_tenants(
+        nodes: &[u32],
+        skew: Skew,
+        tenants: usize,
+        seed: u64,
+    ) -> LoadGen {
         assert!(!nodes.is_empty(), "empty query population");
         let cdf = match skew {
             Skew::Uniform => Vec::new(),
@@ -74,6 +96,7 @@ impl LoadGen {
             nodes: nodes.to_vec(),
             cdf,
             rng: Rng::new(seed),
+            tenants: tenants.clamp(1, u16::MAX as usize) as u16,
         }
     }
 
@@ -87,8 +110,23 @@ impl LoadGen {
         self.nodes[r.min(self.nodes.len() - 1)]
     }
 
+    /// Draw the next arrival (node + issuing tenant).
+    pub fn next_arrival(&mut self) -> Arrival {
+        let node = self.next_node();
+        let tenant = if self.tenants <= 1 {
+            0
+        } else {
+            self.rng.next_below(self.tenants as usize) as u16
+        };
+        Arrival { node, tenant }
+    }
+
     pub fn population(&self) -> usize {
         self.nodes.len()
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.tenants as usize
     }
 }
 
@@ -124,6 +162,28 @@ mod tests {
             "head {head} should dominate tail {tail}"
         );
         assert!(counts[0] > counts[50], "{:?}", &counts[..5]);
+    }
+
+    #[test]
+    fn tenants_cover_range_and_single_tenant_matches_tenantless() {
+        let nodes: Vec<u32> = (0..20).collect();
+        let mut g = LoadGen::with_tenants(&nodes, Skew::Uniform, 3, 7);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            let a = g.next_arrival();
+            assert!(a.tenant < 3);
+            seen.insert(a.tenant);
+        }
+        assert_eq!(seen.len(), 3, "all tenants drawn");
+        // tenants=1 must not perturb the node stream
+        let mut plain = LoadGen::new(&nodes, Skew::Zipf(1.2), 9);
+        let mut tagged = LoadGen::with_tenants(&nodes, Skew::Zipf(1.2), 1, 9);
+        for _ in 0..200 {
+            let a = tagged.next_arrival();
+            assert_eq!(a.node, plain.next_node());
+            assert_eq!(a.tenant, 0);
+        }
+        assert_eq!(tagged.tenants(), 1);
     }
 
     #[test]

@@ -35,7 +35,12 @@
 //! * [`metrics`] — log-bucketed per-query latency histogram
 //!   (p50/p95/p99), throughput, coalescing factor, cache hit rate.
 //! * [`load`] — closed-loop load generator with configurable arrival
-//!   skew (uniform or zipf over the query population).
+//!   skew (uniform or zipf over the query population) and per-arrival
+//!   tenant ids.
+//! * [`admission`] — deadline-aware admission gate: per-shard depth ×
+//!   service-time EWMA predicts completion, over-deadline queries are
+//!   shed (or degraded to a memo-only answer), and per-tenant token
+//!   buckets cap each tenant's admission rate (DESIGN.md §12).
 //! * [`service`] — the event loop tying all of the above together
 //!   behind `ibmb serve` / `benches/serving.rs`, including the churn
 //!   harness ([`service::Churn`]) that attaches a delta source to a
@@ -56,6 +61,7 @@
 //! driven by ([`shard::reference_artifact`]) matches the AOT layout, so
 //! swapping the executor for `Runtime::infer_step` is a local change.
 
+pub mod admission;
 pub mod load;
 pub mod metrics;
 pub mod queue;
@@ -66,7 +72,8 @@ pub mod shard;
 pub mod state;
 pub mod update;
 
-pub use load::{LoadGen, Skew};
+pub use admission::{AdmissionConfig, AdmissionGate, TenantCounters, Verdict};
+pub use load::{Arrival, LoadGen, Skew};
 pub use metrics::{LatencyHistogram, ServeMetrics};
 pub use queue::{MicrobatchQueue, PendingGroup, QueryTicket};
 pub use results::ResultsCache;

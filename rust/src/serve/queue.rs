@@ -46,6 +46,10 @@ pub struct QueryTicket {
 /// execute against the snapshot it pinned at creation.
 #[derive(Debug)]
 pub struct PendingGroup<S> {
+    /// Queue-assigned group id, unique within a run — the correlation
+    /// id tying trace spans, dispatch accounting, and shard results
+    /// back to one coalesced execution.
+    pub gid: u64,
     pub key: PlanKey,
     /// Freshness epoch of the group's plan at admission time.
     pub epoch: u64,
@@ -62,6 +66,8 @@ pub struct MicrobatchQueue<S> {
     window: Duration,
     max_coalesce: usize,
     groups: HashMap<(PlanKey, u64), PendingGroup<S>>,
+    /// Next group id (monotonic over the queue's lifetime).
+    next_gid: u64,
 }
 
 impl<S: Clone> MicrobatchQueue<S> {
@@ -72,12 +78,14 @@ impl<S: Clone> MicrobatchQueue<S> {
             window,
             max_coalesce: max_coalesce.max(1),
             groups: HashMap::new(),
+            next_gid: 0,
         }
     }
 
     /// Admit one query at time `now`, under plan-epoch `epoch` and
-    /// snapshot `snap`. Returns the full group if this admission
-    /// triggered a size flush.
+    /// snapshot `snap`. Returns the id of the group the query joined
+    /// (or opened), plus the full group if this admission triggered a
+    /// size flush.
     pub fn push(
         &mut self,
         key: PlanKey,
@@ -85,22 +93,42 @@ impl<S: Clone> MicrobatchQueue<S> {
         snap: &S,
         q: QueryTicket,
         now: Instant,
-    ) -> Option<PendingGroup<S>> {
+    ) -> (u64, Option<PendingGroup<S>>) {
+        let next_gid = &mut self.next_gid;
         let g = self
             .groups
             .entry((key, epoch))
-            .or_insert_with(|| PendingGroup {
-                key,
-                epoch,
-                snap: snap.clone(),
-                created: now,
-                queries: Vec::new(),
+            .or_insert_with(|| {
+                let gid = *next_gid;
+                *next_gid += 1;
+                PendingGroup {
+                    gid,
+                    key,
+                    epoch,
+                    snap: snap.clone(),
+                    created: now,
+                    queries: Vec::new(),
+                }
             });
         g.queries.push(q);
+        let gid = g.gid;
         if g.queries.len() >= self.max_coalesce {
-            return self.groups.remove(&(key, epoch));
+            return (gid, self.groups.remove(&(key, epoch)));
         }
-        None
+        (gid, None)
+    }
+
+    /// Whether a group is already open for (plan, epoch) — the
+    /// admission gate's depth accounting increments only when a push
+    /// *opens* a group (riders add no queue depth).
+    pub fn contains(&self, key: PlanKey, epoch: u64) -> bool {
+        self.groups.contains_key(&(key, epoch))
+    }
+
+    /// Iterate the open groups (snapshot-GC accounting reads the
+    /// epochs their pinned snapshots hold alive).
+    pub fn groups(&self) -> impl Iterator<Item = &PendingGroup<S>> {
+        self.groups.values()
     }
 
     /// Remove and return every group whose deadline has passed.
@@ -161,8 +189,7 @@ mod tests {
         let t0 = Instant::now();
         for i in 0..5 {
             assert!(q
-                .push(PlanKey::Cached(3), 0, &(), ticket(i), t0)
-                .is_none());
+                .push(PlanKey::Cached(3), 0, &(), ticket(i), t0).1.is_none());
         }
         assert_eq!(q.pending_groups(), 1);
         assert_eq!(q.pending_queries(), 5);
@@ -178,13 +205,13 @@ mod tests {
     fn size_flush_returns_full_group() {
         let mut q = queue(Duration::from_secs(1), 3);
         let t0 = Instant::now();
-        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(0), t0).is_none());
-        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(1), t0).is_none());
-        let g = q.push(PlanKey::Cached(0), 0, &(), ticket(2), t0).unwrap();
+        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(0), t0).1.is_none());
+        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(1), t0).1.is_none());
+        let g = q.push(PlanKey::Cached(0), 0, &(), ticket(2), t0).1.unwrap();
         assert_eq!(g.queries.len(), 3);
         assert_eq!(q.pending_groups(), 0);
         // a new query for the same plan starts a fresh group
-        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(3), t0).is_none());
+        assert!(q.push(PlanKey::Cached(0), 0, &(), ticket(3), t0).1.is_none());
         assert_eq!(q.pending_queries(), 1);
     }
 
@@ -192,9 +219,9 @@ mod tests {
     fn distinct_plans_do_not_coalesce() {
         let mut q = queue(Duration::from_millis(5), 10);
         let t0 = Instant::now();
-        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t0).is_none());
-        assert!(q.push(PlanKey::Cold(1), 0, &(), ticket(1), t0).is_none());
-        assert!(q.push(PlanKey::Cached(2), 0, &(), ticket(2), t0).is_none());
+        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t0).1.is_none());
+        assert!(q.push(PlanKey::Cold(1), 0, &(), ticket(1), t0).1.is_none());
+        assert!(q.push(PlanKey::Cached(2), 0, &(), ticket(2), t0).1.is_none());
         assert_eq!(q.pending_groups(), 3);
         let due = q.due(t0 + Duration::from_millis(5));
         assert_eq!(due.len(), 3);
@@ -207,11 +234,11 @@ mod tests {
         // plan must not ride a pre-swap group
         let mut q = queue(Duration::from_millis(50), 10);
         let t0 = Instant::now();
-        assert!(q.push(PlanKey::Cached(7), 0, &(), ticket(0), t0).is_none());
-        assert!(q.push(PlanKey::Cached(7), 1, &(), ticket(1), t0).is_none());
+        assert!(q.push(PlanKey::Cached(7), 0, &(), ticket(0), t0).1.is_none());
+        assert!(q.push(PlanKey::Cached(7), 1, &(), ticket(1), t0).1.is_none());
         assert_eq!(q.pending_groups(), 2, "epochs must not share a group");
         // same epoch still coalesces
-        assert!(q.push(PlanKey::Cached(7), 0, &(), ticket(2), t0).is_none());
+        assert!(q.push(PlanKey::Cached(7), 0, &(), ticket(2), t0).1.is_none());
         let due = q.due(t0 + Duration::from_millis(50));
         let mut sizes: Vec<(u64, usize)> =
             due.iter().map(|g| (g.epoch, g.queries.len())).collect();
@@ -224,10 +251,10 @@ mod tests {
         let mut q: MicrobatchQueue<u64> =
             MicrobatchQueue::new(Duration::from_secs(1), 2);
         let t0 = Instant::now();
-        assert!(q.push(PlanKey::Cached(0), 3, &30, ticket(0), t0).is_none());
+        assert!(q.push(PlanKey::Cached(0), 3, &30, ticket(0), t0).1.is_none());
         // the rider joins under a "newer" payload; the group keeps the
         // snapshot of its first query
-        let g = q.push(PlanKey::Cached(0), 3, &99, ticket(1), t0).unwrap();
+        let g = q.push(PlanKey::Cached(0), 3, &99, ticket(1), t0).1.unwrap();
         assert_eq!(g.snap, 30);
         assert_eq!(g.epoch, 3);
     }
@@ -237,8 +264,8 @@ mod tests {
         let mut q = queue(Duration::from_millis(10), 10);
         let t0 = Instant::now();
         let t1 = t0 + Duration::from_millis(4);
-        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t1).is_none());
-        assert!(q.push(PlanKey::Cached(2), 0, &(), ticket(1), t0).is_none());
+        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t1).1.is_none());
+        assert!(q.push(PlanKey::Cached(2), 0, &(), ticket(1), t0).1.is_none());
         assert_eq!(q.next_deadline(), Some(t0 + Duration::from_millis(10)));
         // staggered deadlines flush separately
         let due = q.due(t0 + Duration::from_millis(10));
@@ -251,11 +278,50 @@ mod tests {
     fn drain_empties_everything() {
         let mut q = queue(Duration::from_secs(1), 10);
         let t0 = Instant::now();
-        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t0).is_none());
-        assert!(q.push(PlanKey::Cold(0), 0, &(), ticket(1), t0).is_none());
+        assert!(q.push(PlanKey::Cached(1), 0, &(), ticket(0), t0).1.is_none());
+        assert!(q.push(PlanKey::Cold(0), 0, &(), ticket(1), t0).1.is_none());
         let all = q.drain();
         assert_eq!(all.len(), 2);
         assert_eq!(q.pending_groups(), 0);
         assert_eq!(q.next_deadline(), None);
+    }
+
+    #[test]
+    fn group_ids_are_unique_and_riders_share_them() {
+        let mut q = queue(Duration::from_secs(1), 2);
+        let t0 = Instant::now();
+        let (g0, none) = q.push(PlanKey::Cached(0), 0, &(), ticket(0), t0);
+        assert!(none.is_none());
+        // the rider joins the open group and reports the same id
+        let (g0b, flushed) = q.push(PlanKey::Cached(0), 0, &(), ticket(1), t0);
+        assert_eq!(g0, g0b);
+        assert_eq!(flushed.unwrap().gid, g0);
+        // a fresh group for the same plan gets a new id
+        let (g1, _) = q.push(PlanKey::Cached(0), 0, &(), ticket(2), t0);
+        assert_ne!(g0, g1);
+        let (g2, _) = q.push(PlanKey::Cached(9), 0, &(), ticket(3), t0);
+        assert!(g2 > g1);
+        // deadline-flushed groups carry their ids out too
+        let due = q.due(t0 + Duration::from_secs(1));
+        let mut gids: Vec<u64> = due.iter().map(|g| g.gid).collect();
+        gids.sort_unstable();
+        assert_eq!(gids, vec![g1, g2]);
+    }
+
+    #[test]
+    fn contains_and_groups_reflect_open_groups() {
+        let mut q = queue(Duration::from_secs(1), 10);
+        let t0 = Instant::now();
+        assert!(!q.contains(PlanKey::Cached(1), 0));
+        q.push(PlanKey::Cached(1), 0, &(), ticket(0), t0);
+        q.push(PlanKey::Cached(1), 1, &(), ticket(1), t0);
+        assert!(q.contains(PlanKey::Cached(1), 0));
+        assert!(q.contains(PlanKey::Cached(1), 1));
+        assert!(!q.contains(PlanKey::Cached(2), 0));
+        assert_eq!(q.groups().count(), 2);
+        assert!(q.groups().all(|g| g.key == PlanKey::Cached(1)));
+        q.drain();
+        assert!(!q.contains(PlanKey::Cached(1), 0));
+        assert_eq!(q.groups().count(), 0);
     }
 }

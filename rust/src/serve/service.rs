@@ -48,6 +48,7 @@ use crate::graph::GraphDelta;
 use crate::runtime::{ArtifactMeta, ModelState};
 use crate::util::Rng;
 
+use super::admission::{AdmissionConfig, AdmissionGate, TenantCounters, Verdict};
 use super::load::{LoadGen, Skew};
 use super::metrics::ServeMetrics;
 use super::queue::{MicrobatchQueue, PendingGroup, QueryTicket};
@@ -59,6 +60,11 @@ use super::shard::{
 };
 use super::state::{ServeState, ServeStateCell};
 use super::update::{run_applier, UpdateApplier, UpdateReport};
+use crate::telemetry::span::{
+    Stage, ADMIT_DEGRADED, ADMIT_EXEC, ADMIT_MEMO, NO_GROUP, NO_QUERY,
+    NO_SHARD, SHED_DEADLINE, SHED_RATE,
+};
+use crate::telemetry::{TraceBuf, Tracer};
 
 /// Serving configuration (CLI: `ibmb serve`).
 #[derive(Debug, Clone)]
@@ -88,6 +94,21 @@ pub struct ServeConfig {
     pub layers: usize,
     pub heads: usize,
     pub seed: u64,
+    /// Open-loop offered load (queries/s). 0 keeps the classic
+    /// closed-loop behavior; > 0 paces arrivals on a deterministic
+    /// schedule regardless of completions, so the loop can be driven
+    /// past capacity (the overload bench) and latency is measured from
+    /// the *scheduled* arrival — coordinated-omission safe.
+    pub offered_qps: f64,
+    /// Per-query completion deadline for the admission gate and the
+    /// goodput counter (None disables shedding).
+    pub deadline: Option<Duration>,
+    /// Logical tenants the load generator spreads arrivals over.
+    pub tenants: usize,
+    /// Per-tenant token-bucket refill rate (queries/s; 0 disables).
+    pub tenant_rate: f64,
+    /// Per-tenant token-bucket burst capacity.
+    pub tenant_burst: f64,
 }
 
 impl Default for ServeConfig {
@@ -107,6 +128,11 @@ impl Default for ServeConfig {
             layers: 2,
             heads: 2,
             seed: 0,
+            offered_qps: 0.0,
+            deadline: None,
+            tenants: 1,
+            tenant_rate: 0.0,
+            tenant_burst: 32.0,
         }
     }
 }
@@ -118,6 +144,9 @@ impl Default for ServeConfig {
 pub struct ServeSetup {
     pub cell: Arc<ServeStateCell>,
     pub router: QueryRouter,
+    /// Trace event sink attached to serving runs (disabled by
+    /// default; `ibmb serve --trace` attaches a JSONL writer).
+    pub tracer: Tracer,
 }
 
 impl ServeSetup {
@@ -194,6 +223,7 @@ pub fn prepare(ds: Dataset, eval_nodes: &[u32], cfg: &ServeConfig) -> ServeSetup
     ServeSetup {
         cell,
         router: QueryRouter::new(),
+        tracer: Tracer::disabled(),
     }
 }
 
@@ -221,6 +251,7 @@ pub fn prepare_from_cache(
     Ok(ServeSetup {
         cell,
         router: QueryRouter::new(),
+        tracer: Tracer::disabled(),
     })
 }
 
@@ -273,6 +304,33 @@ pub struct ServeReport {
     pub final_epoch: u64,
     /// Memo entries reclaimed eagerly by swap-time stale sweeps.
     pub memo_swept: u64,
+    /// Offered load the run was driven at (0 = closed loop).
+    pub offered_qps: f64,
+    /// Admission deadline in ms (0 when no deadline was set).
+    pub deadline_ms: f64,
+    /// Queries admitted and answered (execution, memo, or degraded).
+    pub admitted: u64,
+    /// Queries shed by the deadline predicate (memo miss).
+    pub shed: u64,
+    /// Queries shed by the per-tenant token bucket.
+    pub shed_rate_limited: u64,
+    /// Over-deadline queries answered from the memo anyway.
+    pub degraded: u64,
+    /// (shed + rate-limited) / total offered.
+    pub shed_fraction: f64,
+    /// Completions within the deadline per wall second — the number
+    /// the overload bench tracks against capacity.
+    pub goodput_qps: f64,
+    /// Per-tenant admitted/degraded/shed counters.
+    pub tenant_stats: Vec<TenantCounters>,
+    /// Peak bytes of old-epoch snapshot state held live by slow
+    /// in-flight or queued groups, sampled at swap observations — the
+    /// PR-5 "GC pressure" metric: how much memory zero-quiesce serving
+    /// retains until stragglers finish.
+    pub gc_retained_bytes_peak: usize,
+    /// Cumulative count of old-epoch groups observed still holding a
+    /// superseded snapshot at swap time.
+    pub gc_retained_groups: u64,
 }
 
 /// A delta source attached to a serving run — the quiesced-vs-zero-
@@ -303,24 +361,52 @@ pub enum Churn<'a> {
     },
 }
 
+/// The shard a query for `key`/`node` will execute on under `state` —
+/// computable at admission time, which is what lets the gate judge
+/// per-shard queue depth before the query ever enters the queue.
+fn home_shard(
+    state: &ServeState,
+    key: &PlanKey,
+    node: u32,
+    shards: usize,
+) -> usize {
+    match key {
+        PlanKey::Cached(pid) => state.placement.shard_of_plan(*pid, shards),
+        PlanKey::Cold(_) => state.placement.shard_of_node(node, shards),
+    }
+}
+
 fn dispatch_group(
     g: PendingGroup<Arc<ServeState>>,
     shards: usize,
     txs: &[mpsc::Sender<WorkItem>],
     metrics: &mut ServeMetrics,
+    inflight: &mut HashMap<u64, (u64, usize)>,
+    tbuf: &mut TraceBuf,
 ) -> Result<()> {
     let work = match g.key {
         PlanKey::Cached(pid) => Work::Cached(pid),
         // all riders of a cold group query the same node
         PlanKey::Cold(_) => Work::Cold(g.queries[0].node),
     };
-    let shard = match work {
-        Work::Cached(pid) => g.snap.placement.shard_of_plan(pid, shards),
-        Work::Cold(node) => g.snap.placement.shard_of_node(node, shards),
-    };
+    let shard = home_shard(&g.snap, &g.key, g.queries[0].node, shards);
     metrics.record_dispatch(shard, g.queries.len() as u64);
+    tbuf.instant(
+        Stage::Coalesce,
+        NO_QUERY,
+        g.gid,
+        shard as u32,
+        g.queries.len() as u64,
+    );
+    for q in &g.queries {
+        tbuf.exit(Stage::QueueWait, q.id, g.gid, shard as u32);
+    }
+    // accounted until the group's ShardResult arrives: the bytes of
+    // snapshot state the group pins (GC-pressure metric at swap time)
+    inflight.insert(g.gid, (g.snap.epoch, g.snap.cache.memory_bytes()));
     txs[shard]
         .send(WorkItem {
+            gid: g.gid,
             key: g.key,
             epoch: g.epoch,
             state: g.snap,
@@ -375,6 +461,7 @@ pub fn serve_with_churn(
     churn: Option<Churn<'_>>,
 ) -> Result<(ServeReport, Vec<UpdateReport>)> {
     let state0 = setup.cell.load();
+    let tracer = setup.tracer.clone();
     let router = &mut setup.router;
     // ServeSetup persists across runs; report this run's delta
     let cold_ids_at_start = router.cold_built;
@@ -394,7 +481,31 @@ pub fn serve_with_churn(
     let mut queue: MicrobatchQueue<Arc<ServeState>> =
         MicrobatchQueue::new(cfg.flush_window, cfg.max_coalesce);
     let mut metrics = ServeMetrics::new(shards);
-    let mut load = LoadGen::new(population, skew, cfg.seed ^ 0x10AD);
+    metrics.deadline_s = cfg.deadline.map(|d| d.as_secs_f64());
+    let mut load = LoadGen::with_tenants(
+        population,
+        skew,
+        cfg.tenants.max(1),
+        cfg.seed ^ 0x10AD,
+    );
+    let mut gate = AdmissionGate::new(
+        shards,
+        cfg.tenants.max(1),
+        AdmissionConfig {
+            deadline: cfg.deadline,
+            tenant_rate: cfg.tenant_rate,
+            tenant_burst: cfg.tenant_burst,
+            ..Default::default()
+        },
+    );
+    // open loop: arrivals follow a fixed schedule, not completions
+    let open_loop = cfg.offered_qps > 0.0;
+    let interarrival = if open_loop {
+        Duration::from_secs_f64(1.0 / cfg.offered_qps)
+    } else {
+        Duration::ZERO
+    };
+    let mut tbuf = tracer.buffer();
     let cell = setup.cell.clone();
 
     // churn plumbing: triggers fire as `completed` crosses them
@@ -460,7 +571,8 @@ pub fn serve_with_churn(
                 cold_aux: cfg.cold_aux,
             };
             let out = res_tx.clone();
-            scope.spawn(move || shard_worker(ctx, rx, out));
+            let strace = tracer.clone();
+            scope.spawn(move || shard_worker(ctx, rx, out, strace));
             txs.push(tx);
         }
         drop(res_tx);
@@ -472,8 +584,14 @@ pub fn serve_with_churn(
         let mut seen_epoch = state0.epoch;
         let mut snapshot_swaps = 0u64;
         let mut memo_swept = 0u64;
+        // dispatched-but-unfinished groups: gid → (snapshot epoch,
+        // snapshot cache bytes) for the swap-time GC-pressure sample
+        let mut inflight: HashMap<u64, (u64, usize)> = HashMap::new();
+        let mut gc_retained_groups = 0u64;
+        let mut gc_retained_bytes_peak = 0usize;
         drop(state0);
         let t0 = Instant::now();
+        let mut next_arrival = t0;
         let wall_s = loop {
             // churn triggers keyed on progress
             match &mut churn_rt {
@@ -514,6 +632,45 @@ pub fn serve_with_churn(
                 );
                 snapshot_swaps += 1;
                 seen_epoch = state.epoch;
+                // GC-pressure sample: every queued or in-flight group
+                // still pinning an older snapshot keeps that whole
+                // snapshot's plan store alive past the swap. Distinct
+                // old epochs are counted once — groups sharing a
+                // snapshot share the retained bytes.
+                let mut old_epochs: HashMap<u64, usize> = HashMap::new();
+                let mut stragglers = 0u64;
+                for g in queue.groups() {
+                    if g.snap.epoch < state.epoch {
+                        stragglers += 1;
+                        old_epochs
+                            .insert(g.snap.epoch, g.snap.cache.memory_bytes());
+                    }
+                }
+                for &(epoch, bytes) in inflight.values() {
+                    if epoch < state.epoch {
+                        stragglers += 1;
+                        old_epochs.insert(epoch, bytes);
+                    }
+                }
+                let retained: usize = old_epochs.values().sum();
+                gc_retained_groups += stragglers;
+                gc_retained_bytes_peak = gc_retained_bytes_peak.max(retained);
+                tbuf.instant(
+                    Stage::SnapshotSwap,
+                    NO_QUERY,
+                    NO_GROUP,
+                    NO_SHARD,
+                    state.epoch,
+                );
+                if retained > 0 {
+                    tbuf.instant(
+                        Stage::GcRetained,
+                        NO_QUERY,
+                        NO_GROUP,
+                        NO_SHARD,
+                        retained as u64,
+                    );
+                }
                 // eager sweep: reclaim epoch-expired memo bytes now
                 // instead of entry-by-entry on future reads
                 let sweep_state = state.clone();
@@ -522,43 +679,149 @@ pub fn serve_with_churn(
                     as u64;
             }
 
-            // closed-loop admission: top up to `clients` in flight;
-            // memo hits complete synchronously and free their client
-            // slot immediately.
-            while issued < total && issued - completed < clients {
-                let node = load.next_node();
+            // admission: closed loop tops up to `clients` in flight;
+            // open loop drains every arrival whose scheduled time has
+            // passed, regardless of completions (that backlog is what
+            // the gate sheds against). Memo hits complete
+            // synchronously and free their client slot immediately.
+            loop {
+                if issued >= total {
+                    break;
+                }
+                let now = Instant::now();
+                let arrived_at = if open_loop {
+                    if now < next_arrival {
+                        break;
+                    }
+                    let at = next_arrival;
+                    next_arrival += interarrival;
+                    at
+                } else {
+                    if issued - completed >= clients {
+                        break;
+                    }
+                    now
+                };
+                let arr = load.next_arrival();
+                let node = arr.node;
                 let id = issued;
                 issued += 1;
-                let now = Instant::now();
                 let route = router.route(&state.index, node);
                 let key = route.key();
                 let pos = route.pos();
                 let epoch = state.plan_epoch(&key);
-                if let Some(logits) = results.get(key, epoch, now) {
-                    let start = pos as usize * classes;
-                    let pred = argmax(&logits[start..start + classes]);
-                    metrics.cache_hit_queries += 1;
-                    metrics.record_completion(
-                        0.0,
-                        pred == state.ds.labels[node as usize] as usize,
+                let shard = home_shard(&state, &key, node, shards);
+                // time already burned waiting behind the arrival
+                // schedule counts against the deadline budget
+                let waited_s =
+                    now.saturating_duration_since(arrived_at).as_secs_f64();
+                let verdict = gate.assess(arr.tenant, shard, waited_s, now);
+                if verdict == Verdict::RateLimited {
+                    gate.note_shed_rate(arr.tenant);
+                    metrics.shed_rate_limited += 1;
+                    tbuf.instant(
+                        Stage::Admission,
+                        id,
+                        NO_GROUP,
+                        shard as u32,
+                        SHED_RATE,
                     );
                     completed += 1;
                     continue;
                 }
+                if let Some(logits) = results.get(key, epoch, now) {
+                    let start = pos as usize * classes;
+                    let pred = argmax(&logits[start..start + classes]);
+                    metrics.cache_hit_queries += 1;
+                    // an over-deadline query the memo can still answer
+                    // is served degraded instead of shed
+                    let code = if verdict == Verdict::OverDeadline {
+                        gate.note_degraded(arr.tenant);
+                        metrics.degraded += 1;
+                        ADMIT_DEGRADED
+                    } else {
+                        gate.note_admitted(arr.tenant);
+                        ADMIT_MEMO
+                    };
+                    tbuf.instant(
+                        Stage::Admission,
+                        id,
+                        NO_GROUP,
+                        shard as u32,
+                        code,
+                    );
+                    let lat =
+                        now.saturating_duration_since(arrived_at).as_secs_f64();
+                    metrics.record_completion(
+                        lat,
+                        pred == state.ds.labels[node as usize] as usize,
+                    );
+                    tbuf.instant(
+                        Stage::Complete,
+                        id,
+                        NO_GROUP,
+                        shard as u32,
+                        (lat * 1e6) as u64,
+                    );
+                    completed += 1;
+                    continue;
+                }
+                if verdict == Verdict::OverDeadline {
+                    gate.note_shed_deadline(arr.tenant);
+                    metrics.shed_deadline += 1;
+                    tbuf.instant(
+                        Stage::Admission,
+                        id,
+                        NO_GROUP,
+                        shard as u32,
+                        SHED_DEADLINE,
+                    );
+                    completed += 1;
+                    continue;
+                }
+                gate.note_admitted(arr.tenant);
+                tbuf.instant(
+                    Stage::Admission,
+                    id,
+                    NO_GROUP,
+                    shard as u32,
+                    ADMIT_EXEC,
+                );
                 // counted after the memo probe: memo-served repeats
                 // never reach the synthesized-plan path
-                if matches!(route, Route::Cold { .. }) {
+                let cold = matches!(route, Route::Cold { .. });
+                if cold {
                     metrics.cold_routes += 1;
                 }
-                arrivals.insert(id, now);
-                if let Some(group) = queue.push(
+                tbuf.instant(
+                    Stage::Routing,
+                    id,
+                    NO_GROUP,
+                    shard as u32,
+                    cold as u64,
+                );
+                arrivals.insert(id, arrived_at);
+                let new_group = !queue.contains(key, epoch);
+                let (gid, flushed) = queue.push(
                     key,
                     epoch,
                     &state,
                     QueryTicket { id, node, pos },
                     now,
-                ) {
-                    dispatch_group(group, shards, &txs, &mut metrics)?;
+                );
+                if new_group {
+                    gate.group_enqueued(shard);
+                }
+                tbuf.enter(Stage::QueueWait, id, gid, shard as u32);
+                if let Some(group) = flushed {
+                    dispatch_group(
+                        group,
+                        shards,
+                        &txs,
+                        &mut metrics,
+                        &mut inflight,
+                        &mut tbuf,
+                    )?;
                 }
             }
             if completed >= total {
@@ -567,26 +830,56 @@ pub fn serve_with_churn(
             // deadline flushes
             let now = Instant::now();
             for group in queue.due(now) {
-                dispatch_group(group, shards, &txs, &mut metrics)?;
+                dispatch_group(
+                    group,
+                    shards,
+                    &txs,
+                    &mut metrics,
+                    &mut inflight,
+                    &mut tbuf,
+                )?;
             }
-            // sleep until the next deadline or the next completion
-            let timeout = queue
+            // sleep until the next deadline, the next scheduled
+            // arrival, or the next completion
+            let mut timeout = queue
                 .next_deadline()
                 .map(|d| d.saturating_duration_since(Instant::now()))
                 .unwrap_or(Duration::from_millis(10))
                 .min(Duration::from_millis(10));
+            if open_loop && issued < total {
+                timeout = timeout
+                    .min(next_arrival.saturating_duration_since(Instant::now()));
+            }
             match res_rx.recv_timeout(timeout) {
                 Ok(ShardMsg::Result(r)) => {
                     let now = Instant::now();
+                    inflight.remove(&r.gid);
+                    gate.group_done(r.shard_id, r.exec_s);
                     for o in &r.outcomes {
                         let lat = arrivals
                             .remove(&o.id)
-                            .map(|a| now.duration_since(a).as_secs_f64())
+                            .map(|a| {
+                                now.saturating_duration_since(a).as_secs_f64()
+                            })
                             .unwrap_or(0.0);
                         metrics.record_completion(lat, o.correct);
+                        tbuf.instant(
+                            Stage::Complete,
+                            o.id,
+                            r.gid,
+                            r.shard_id as u32,
+                            (lat * 1e6) as u64,
+                        );
                         completed += 1;
                     }
                     metrics.exec_s += r.exec_s;
+                    tbuf.instant(
+                        Stage::Memo,
+                        NO_QUERY,
+                        r.gid,
+                        r.shard_id as u32,
+                        (r.out_logits.len() * 4) as u64,
+                    );
                     results.insert(r.key, r.epoch, r.out_logits, now);
                 }
                 Ok(ShardMsg::Done(_)) => {
@@ -653,6 +946,8 @@ pub fn serve_with_churn(
         }
 
         let final_state = cell.load();
+        tbuf.flush();
+        let shed_total = metrics.shed();
         let lat = &metrics.latency;
         let report = ServeReport {
             queries: cfg.queries,
@@ -682,6 +977,20 @@ pub fn serve_with_churn(
             snapshot_swaps,
             final_epoch: final_state.epoch,
             memo_swept,
+            offered_qps: cfg.offered_qps,
+            deadline_ms: cfg
+                .deadline
+                .map(|d| d.as_secs_f64() * 1e3)
+                .unwrap_or(0.0),
+            admitted: metrics.completed,
+            shed: metrics.shed_deadline,
+            shed_rate_limited: metrics.shed_rate_limited,
+            degraded: metrics.degraded,
+            shed_fraction: shed_total as f64 / total.max(1) as f64,
+            goodput_qps: metrics.within_deadline as f64 / wall_s.max(1e-9),
+            tenant_stats: gate.tenants.clone(),
+            gc_retained_bytes_peak,
+            gc_retained_groups,
         };
         Ok((report, update_reports))
     })
@@ -731,6 +1040,75 @@ mod tests {
         // static deployment: epoch 0 throughout, no swaps observed
         assert_eq!(report.snapshot_swaps, 0);
         assert_eq!(report.final_epoch, 0);
+    }
+
+    #[test]
+    fn open_loop_overload_sheds_and_accounts_every_query() {
+        let ds = tiny();
+        let cfg = ServeConfig {
+            queries: 300,
+            shards: 1,
+            // offered far past any plausible capacity with a deadline
+            // the backlog cannot meet: the gate must shed
+            offered_qps: 1e6,
+            deadline: Some(Duration::from_millis(2)),
+            tenants: 2,
+            flush_window: Duration::from_micros(200),
+            results_cache_bytes: 0, // memo off: over-deadline = shed
+            ..Default::default()
+        };
+        let eval = ds.splits.train.clone();
+        let mut setup = prepare(ds, &eval, &cfg);
+        let r = serve_closed_loop(&mut setup, &eval, Skew::Uniform, &cfg)
+            .unwrap();
+        // every offered query is accounted exactly once
+        assert_eq!(
+            r.admitted + r.shed + r.shed_rate_limited,
+            300,
+            "admitted {} shed {} rate {}",
+            r.admitted,
+            r.shed,
+            r.shed_rate_limited
+        );
+        assert_eq!(
+            r.executed_queries + r.cache_hits,
+            r.admitted,
+            "every admitted query answered"
+        );
+        assert!(r.shed > 0, "1e6 qps at a 2ms deadline must shed");
+        assert!(r.shed_fraction > 0.0 && r.shed_fraction <= 1.0);
+        assert!(r.goodput_qps >= 0.0);
+        assert!((r.deadline_ms - 2.0).abs() < 1e-9);
+        let tenant_total: u64 =
+            r.tenant_stats.iter().map(|t| t.total()).sum();
+        assert_eq!(tenant_total, 300, "tenant counters cover the run");
+    }
+
+    #[test]
+    fn tenant_rate_limit_sheds_excess() {
+        let ds = tiny();
+        let cfg = ServeConfig {
+            queries: 50,
+            clients: 4,
+            shards: 1,
+            tenants: 2,
+            // ~zero refill with a burst of 2 per tenant: at most ~4
+            // admissions can ever pass the buckets
+            tenant_rate: 1e-3,
+            tenant_burst: 2.0,
+            ..Default::default()
+        };
+        let eval = ds.splits.train.clone();
+        let mut setup = prepare(ds, &eval, &cfg);
+        let r = serve_closed_loop(&mut setup, &eval, Skew::Uniform, &cfg)
+            .unwrap();
+        assert!(
+            r.shed_rate_limited >= 40,
+            "rate limiter passed {} of 50",
+            50 - r.shed_rate_limited
+        );
+        assert_eq!(r.admitted + r.shed + r.shed_rate_limited, 50);
+        assert_eq!(r.executed_queries + r.cache_hits, r.admitted);
     }
 
     #[test]

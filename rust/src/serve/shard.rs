@@ -46,6 +46,8 @@ use crate::util::Rng;
 use super::queue::QueryTicket;
 use super::router::PlanKey;
 use super::state::ServeState;
+use crate::telemetry::span::{Stage, NO_QUERY};
+use crate::telemetry::Tracer;
 
 /// Max work items a shard drains from its channel per prefetch run.
 const MAX_DRAIN: usize = 64;
@@ -333,6 +335,9 @@ pub enum Work {
 /// it was admitted under.
 #[derive(Debug)]
 pub struct WorkItem {
+    /// Queue-assigned group id (trace correlation + in-flight
+    /// accounting on the control side).
+    pub gid: u64,
     pub key: PlanKey,
     /// Freshness epoch of the group's plan (stamps the memo insert).
     pub epoch: u64,
@@ -355,6 +360,8 @@ pub struct QueryOutcome {
 #[derive(Debug)]
 pub struct ShardResult {
     pub shard_id: usize,
+    /// Group id of the [`WorkItem`] this answers.
+    pub gid: u64,
     pub key: PlanKey,
     /// Plan epoch the logits were computed at (memo freshness stamp).
     pub epoch: u64,
@@ -489,6 +496,7 @@ fn execute_one(
         .collect();
     ShardResult {
         shard_id: ctx.shard_id,
+        gid: item.gid,
         key: item.key,
         epoch: item.epoch,
         outcomes,
@@ -506,11 +514,22 @@ fn execute_one(
 /// per **(node, epoch)** — a delta that publishes a new snapshot makes
 /// the next cold query for the node synthesize against the new graph,
 /// while an in-flight old-epoch group still reads its own synthesis.
+///
+/// Tracing: the worker owns two event buffers — one on the execute
+/// side (cold synthesis + forward spans) and one behind a mutex for
+/// the fill closure, which [`run_prefetched`] runs on the materialize
+/// thread. Both are group-scoped (`gid`), so the offline assembler
+/// attaches their spans to every rider of the group.
 pub fn shard_worker(
     ctx: ShardCtx,
     rx: Receiver<WorkItem>,
     tx: Sender<ShardMsg>,
+    trace: Tracer,
 ) {
+    let sh = ctx.shard_id as u32;
+    let traced = trace.enabled();
+    let mut tb = trace.buffer();
+    let fill_tb = std::sync::Mutex::new(trace.buffer());
     let mut arena = BatchArena::new(ctx.feat_dim);
     let mut cold_plans: HashMap<(u32, u64), ColdPlan> = HashMap::new();
     let mut cold_order: VecDeque<(u32, u64)> = VecDeque::new();
@@ -537,6 +556,7 @@ pub fn shard_worker(
             if let Work::Cold(node) = item.work {
                 let key = (node, item.epoch);
                 if !cold_plans.contains_key(&key) {
+                    tb.enter(Stage::ColdSynth, NO_QUERY, item.gid, sh);
                     let ds = &item.state.ds;
                     ws.ensure(ds.graph.num_nodes());
                     let cp = synthesize_cold(
@@ -549,6 +569,7 @@ pub fn shard_worker(
                     );
                     cold_plans.insert(key, cp);
                     cold_order.push_back(key);
+                    tb.exit(Stage::ColdSynth, NO_QUERY, item.gid, sh);
                 }
             }
         }
@@ -557,11 +578,17 @@ pub fn shard_worker(
         let ring = arena.acquire_many(ctx.bucket, depth);
         let items_ref = &items;
         let cold_ref = &cold_plans;
+        let fill_tb_ref = &fill_tb;
         let (stats, ring) = run_prefetched(
             &order,
             ring,
             |i, buf| {
                 let item = &items_ref[i];
+                if traced {
+                    if let Ok(mut t) = fill_tb_ref.lock() {
+                        t.enter(Stage::Fill, NO_QUERY, item.gid, sh);
+                    }
+                }
                 match &item.work {
                     Work::Cached(pid) => {
                         let p = *pid as usize;
@@ -577,9 +604,17 @@ pub fn shard_worker(
                         fill_features(&item.state.ds, &cp.nodes, 1, buf)
                     }
                 }
+                if traced {
+                    if let Ok(mut t) = fill_tb_ref.lock() {
+                        t.exit(Stage::Fill, NO_QUERY, item.gid, sh);
+                    }
+                }
             },
             |i, buf| {
-                let result = execute_one(&ctx, &items_ref[i], cold_ref, buf);
+                let item = &items_ref[i];
+                tb.enter(Stage::Forward, NO_QUERY, item.gid, sh);
+                let result = execute_one(&ctx, item, cold_ref, buf);
+                tb.exit(Stage::Forward, NO_QUERY, item.gid, sh);
                 let _ = tx.send(ShardMsg::Result(result));
             },
         );
@@ -741,13 +776,16 @@ mod tests {
                 ring_depth: 2,
                 cold_aux: 8,
             };
-            scope.spawn(move || shard_worker(ctx, work_rx, res_tx));
+            scope.spawn(move || {
+                shard_worker(ctx, work_rx, res_tx, Tracer::disabled())
+            });
             // one group per cached plan, one query each (its first
             // output), plus one cold group for an uncovered node
             for pid in 0..cache_len as u32 {
                 let node = state.cache.output_nodes(pid as usize)[0];
                 work_tx
                     .send(WorkItem {
+                        gid: pid as u64,
                         key: PlanKey::Cached(pid),
                         epoch: 0,
                         state: state.clone(),
@@ -765,6 +803,7 @@ mod tests {
                 .expect("tiny split leaves cold nodes");
             work_tx
                 .send(WorkItem {
+                    gid: 9999,
                     key: PlanKey::Cold(0),
                     epoch: 0,
                     state: state.clone(),

@@ -374,6 +374,7 @@ impl DynamicServeSession {
             setup: ServeSetup {
                 cell,
                 router: QueryRouter::new(),
+                tracer: crate::telemetry::Tracer::disabled(),
             },
             memo,
             cfg: cfg.clone(),

@@ -1,0 +1,29 @@
+//! Per-query tracing: spans, lossy buffered collection, offline call
+//! trees (DESIGN.md §12).
+//!
+//! The serve stack (DESIGN.md §9–§11) reports aggregate histograms;
+//! this layer adds the *per-query* view needed to attribute latency to
+//! routing vs. queue wait vs. fill vs. forward vs. memo (cf. the
+//! overlap accounting argument of "Accelerating Training and Inference
+//! of GNNs with Fast Sampling and Pipelining", arXiv 2110.08450):
+//!
+//! * [`span`] — plain-data [`span::Event`]s: enter/exit/instant
+//!   records stamped on a process-wide monotonic clock, correlated by
+//!   query/group/shard ids.
+//! * [`sink`] — per-thread [`sink::TraceBuf`]s flushing batches
+//!   through a bounded channel into a background JSONL writer; lossy
+//!   by design (`try_send` + dropped-event counter) so tracing can
+//!   never stall the serve loop. [`sink::Tracer`] is the nullable
+//!   handle the serve stack carries; disabled tracing is a branch.
+//! * [`tree`] — `ibmb trace-report`: reassemble a flushed JSONL file
+//!   into per-query call trees (admission → routing → queue wait →
+//!   coalesce → fill → forward → memo → complete) with per-stage
+//!   totals, self times, and dropped-event accounting.
+
+pub mod sink;
+pub mod span;
+pub mod tree;
+
+pub use sink::{TraceBuf, TraceSink, TraceSummary, TraceWriter, Tracer};
+pub use span::{Event, EventKind, Span, Stage};
+pub use tree::{assemble, render_tree, QueryTree, TraceReport};

@@ -1,0 +1,375 @@
+//! Lossy buffered trace collection: per-thread event buffers flushing
+//! batches through a bounded channel into a background JSONL writer.
+//!
+//! The design goal is that tracing can never stall the serve loop:
+//!
+//! * each instrumented thread owns a [`TraceBuf`] — plain `Vec` pushes,
+//!   no locks — which flushes a whole batch when full (or on drop);
+//! * flushes go through a **bounded** [`std::sync::mpsc::sync_channel`]
+//!   with `try_send`: when the writer falls behind the batch is
+//!   *dropped* and counted, never waited on (lossy by design);
+//! * one background thread drains batches and writes JSONL lines,
+//!   ending the file with a summary trailer carrying the final
+//!   dropped-event count.
+//!
+//! The [`Tracer`] wrapper is the nullable handle the serve stack
+//! threads through: `Tracer::disabled()` produces buffers whose every
+//! method is a branch on `None` and an immediate return, so the
+//! untraced hot path stays effectively free.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::span::{pin_clock, Event, EventKind, Stage};
+
+/// Bounded-channel capacity in *batches* (not events).
+pub const DEFAULT_QUEUE_BATCHES: usize = 256;
+/// Per-thread buffer capacity in events (one batch).
+pub const DEFAULT_BUF_EVENTS: usize = 256;
+
+/// File header line (version-stamps the format for `trace-report`).
+pub const TRACE_HEADER: &str = "{\"trace\":\"ibmb\",\"version\":1}";
+
+#[derive(Debug, Default)]
+struct SinkStats {
+    dropped: AtomicU64,
+}
+
+/// Cheap-clone handle feeding the writer thread. Every clone (and
+/// every buffer made from one) holds the channel open; the writer
+/// finishes when the last clone drops.
+#[derive(Debug, Clone)]
+pub struct TraceSink {
+    tx: SyncSender<Vec<Event>>,
+    stats: Arc<SinkStats>,
+}
+
+/// Summary returned by [`TraceWriter::finish`].
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSummary {
+    pub events_written: u64,
+    pub events_dropped: u64,
+}
+
+/// Join handle for the background JSONL writer.
+pub struct TraceWriter {
+    handle: JoinHandle<io::Result<u64>>,
+    stats: Arc<SinkStats>,
+}
+
+impl TraceWriter {
+    /// Join the writer thread. Blocks until every [`TraceSink`] clone
+    /// and [`TraceBuf`] has dropped (they hold the channel open), so
+    /// detach the tracer from the serve setup first.
+    pub fn finish(self) -> io::Result<TraceSummary> {
+        let events_written = self
+            .handle
+            .join()
+            .map_err(|_| {
+                io::Error::new(io::ErrorKind::Other, "trace writer panicked")
+            })??;
+        Ok(TraceSummary {
+            events_written,
+            events_dropped: self.stats.dropped.load(Ordering::Relaxed),
+        })
+    }
+}
+
+impl TraceSink {
+    /// Sink draining into an arbitrary writer (tests trace into a
+    /// shared `Vec<u8>`). `queue_batches` bounds the channel.
+    pub fn with_writer(
+        mut out: Box<dyn Write + Send>,
+        queue_batches: usize,
+    ) -> (TraceSink, TraceWriter) {
+        pin_clock();
+        let (tx, rx) = sync_channel::<Vec<Event>>(queue_batches.max(1));
+        let stats = Arc::new(SinkStats::default());
+        let tstats = stats.clone();
+        let handle = std::thread::spawn(move || -> io::Result<u64> {
+            let mut written = 0u64;
+            writeln!(out, "{TRACE_HEADER}")?;
+            // rx.iter() ends when the last sender drops; every flush
+            // that made it into the channel is already in, so the
+            // trailer's dropped count is final
+            for batch in rx.iter() {
+                for ev in &batch {
+                    writeln!(out, "{}", ev.to_jsonl())?;
+                    written += 1;
+                }
+            }
+            writeln!(
+                out,
+                "{{\"summary\":true,\"events\":{written},\"dropped\":{}}}",
+                tstats.dropped.load(Ordering::Relaxed)
+            )?;
+            out.flush()?;
+            Ok(written)
+        });
+        (TraceSink { tx, stats: stats.clone() }, TraceWriter { handle, stats })
+    }
+
+    /// Sink writing JSONL to `path` (the `ibmb serve --trace` flight
+    /// recorder).
+    pub fn to_file(path: &Path) -> io::Result<(TraceSink, TraceWriter)> {
+        let f = File::create(path)?;
+        Ok(Self::with_writer(
+            Box::new(BufWriter::new(f)),
+            DEFAULT_QUEUE_BATCHES,
+        ))
+    }
+
+    /// Test hook: a sink whose channel nobody drains, exposing the
+    /// receiver — overflow behavior becomes deterministic.
+    pub fn unconsumed(
+        queue_batches: usize,
+    ) -> (TraceSink, Receiver<Vec<Event>>) {
+        pin_clock();
+        let (tx, rx) = sync_channel::<Vec<Event>>(queue_batches.max(1));
+        (
+            TraceSink {
+                tx,
+                stats: Arc::new(SinkStats::default()),
+            },
+            rx,
+        )
+    }
+
+    /// A per-thread buffer flushing into this sink.
+    pub fn buffer(&self) -> TraceBuf {
+        self.buffer_with(DEFAULT_BUF_EVENTS)
+    }
+
+    pub fn buffer_with(&self, cap: usize) -> TraceBuf {
+        TraceBuf {
+            sink: Some(self.clone()),
+            buf: Vec::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Events dropped so far because the bounded channel was full.
+    pub fn dropped(&self) -> u64 {
+        self.stats.dropped.load(Ordering::Relaxed)
+    }
+
+    fn offer(&self, batch: Vec<Event>) {
+        match self.tx.try_send(batch) {
+            Ok(()) => {}
+            // lossy by design: a slow writer costs events, never time
+            Err(TrySendError::Full(batch))
+            | Err(TrySendError::Disconnected(batch)) => {
+                self.stats
+                    .dropped
+                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Nullable tracer handle carried by the serve setup and cloned into
+/// shard workers. `disabled()` is the default: zero allocation, every
+/// event call is a no-op.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    sink: Option<TraceSink>,
+}
+
+impl Tracer {
+    pub fn attached(sink: TraceSink) -> Tracer {
+        Tracer { sink: Some(sink) }
+    }
+
+    pub fn disabled() -> Tracer {
+        Tracer::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// A thread-local event buffer (disabled buffers are free).
+    pub fn buffer(&self) -> TraceBuf {
+        match &self.sink {
+            Some(s) => s.buffer(),
+            None => TraceBuf::disabled(),
+        }
+    }
+}
+
+/// Per-thread event buffer. Push-only until `cap` events accumulate,
+/// then the whole batch is offered to the sink channel (non-blocking);
+/// dropping the buffer flushes the remainder.
+#[derive(Debug)]
+pub struct TraceBuf {
+    sink: Option<TraceSink>,
+    buf: Vec<Event>,
+    cap: usize,
+}
+
+impl TraceBuf {
+    pub fn disabled() -> TraceBuf {
+        TraceBuf {
+            sink: None,
+            buf: Vec::new(),
+            cap: 1,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        if self.sink.is_none() {
+            return;
+        }
+        self.buf.push(ev);
+        if self.buf.len() >= self.cap {
+            self.flush();
+        }
+    }
+
+    #[inline]
+    pub fn enter(&mut self, stage: Stage, query: u64, group: u64, shard: u32) {
+        if self.sink.is_none() {
+            return;
+        }
+        self.push(Event::new(EventKind::Enter, stage, query, group, shard, 0));
+    }
+
+    #[inline]
+    pub fn exit(&mut self, stage: Stage, query: u64, group: u64, shard: u32) {
+        if self.sink.is_none() {
+            return;
+        }
+        self.push(Event::new(EventKind::Exit, stage, query, group, shard, 0));
+    }
+
+    #[inline]
+    pub fn instant(
+        &mut self,
+        stage: Stage,
+        query: u64,
+        group: u64,
+        shard: u32,
+        detail: u64,
+    ) {
+        if self.sink.is_none() {
+            return;
+        }
+        self.push(Event::new(
+            EventKind::Instant,
+            stage,
+            query,
+            group,
+            shard,
+            detail,
+        ));
+    }
+
+    /// Scoped span over this buffer ([`super::span::Span`]).
+    pub fn span(
+        &mut self,
+        stage: Stage,
+        query: u64,
+        group: u64,
+        shard: u32,
+    ) -> super::span::Span<'_> {
+        super::span::Span::new(self, stage, query, group, shard)
+    }
+
+    /// Offer the buffered batch to the sink (never blocks).
+    pub fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        if let Some(sink) = &self.sink {
+            let batch = std::mem::take(&mut self.buf);
+            sink.offer(batch);
+        } else {
+            self.buf.clear();
+        }
+    }
+}
+
+impl Drop for TraceBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::span::{NO_GROUP, NO_QUERY, NO_SHARD};
+
+    #[test]
+    fn disabled_buffer_is_a_noop() {
+        let mut b = TraceBuf::disabled();
+        assert!(!b.enabled());
+        for i in 0..100 {
+            b.instant(Stage::Admission, i, NO_GROUP, NO_SHARD, 0);
+        }
+        b.flush();
+        assert!(b.buf.is_empty());
+    }
+
+    #[test]
+    fn buffer_flushes_in_batches_of_cap() {
+        let (sink, rx) = TraceSink::unconsumed(16);
+        let mut b = sink.buffer_with(4);
+        for i in 0..10 {
+            b.instant(Stage::Routing, i, NO_GROUP, NO_SHARD, 0);
+        }
+        // 10 events at cap 4: two full batches flushed, 2 retained
+        let batches: Vec<Vec<Event>> = rx.try_iter().collect();
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.len() == 4));
+        b.flush();
+        assert_eq!(rx.try_iter().map(|b| b.len()).sum::<usize>(), 2);
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn writer_emits_header_events_and_trailer() {
+        use std::sync::{Arc, Mutex};
+        #[derive(Clone)]
+        struct Shared(Arc<Mutex<Vec<u8>>>);
+        impl Write for Shared {
+            fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let out = Shared(Arc::new(Mutex::new(Vec::new())));
+        let (sink, writer) = TraceSink::with_writer(Box::new(out.clone()), 8);
+        let mut b = sink.buffer();
+        b.instant(Stage::SnapshotSwap, NO_QUERY, NO_GROUP, NO_SHARD, 2);
+        {
+            let _s = b.span(Stage::Forward, NO_QUERY, 1, 0);
+        }
+        drop(b);
+        drop(sink);
+        let summary = writer.finish().unwrap();
+        assert_eq!(summary.events_written, 3);
+        assert_eq!(summary.events_dropped, 0);
+        let text = String::from_utf8(out.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5, "{text}");
+        assert_eq!(lines[0], TRACE_HEADER);
+        assert!(lines[1].contains("snapshot_swap"));
+        assert!(lines[2].contains("\"k\":\"B\""));
+        assert!(lines[3].contains("\"k\":\"E\""));
+        assert!(lines[4].contains("\"summary\":true"));
+    }
+}

@@ -1,0 +1,310 @@
+//! Trace events: monotonically-stamped enter/exit/instant records with
+//! query/group/shard correlation ids.
+//!
+//! An [`Event`] is 48 bytes of plain data — no strings, no allocation
+//! on the hot path. Serialization to the JSONL flight-recorder format
+//! happens on the background writer thread ([`super::sink`]), and the
+//! offline assembler ([`super::tree`]) re-pairs enter/exit events into
+//! spans by (stage, query, group) in file order. Timestamps are
+//! microseconds since a process-wide anchor ([`now_us`]), so events
+//! from different threads order correctly without clock negotiation.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Sentinel: event not associated with a query.
+pub const NO_QUERY: u64 = u64::MAX;
+/// Sentinel: event not associated with a coalesced group.
+pub const NO_GROUP: u64 = u64::MAX;
+/// Sentinel: event not associated with a shard.
+pub const NO_SHARD: u32 = u32::MAX;
+
+/// Admission outcome codes (the `detail` of an `Admission` instant).
+pub const ADMIT_EXEC: u64 = 0;
+pub const ADMIT_MEMO: u64 = 1;
+pub const ADMIT_DEGRADED: u64 = 2;
+pub const SHED_DEADLINE: u64 = 3;
+pub const SHED_RATE: u64 = 4;
+
+/// Human name of an admission outcome code.
+pub fn outcome_name(code: u64) -> &'static str {
+    match code {
+        ADMIT_EXEC => "admitted",
+        ADMIT_MEMO => "memo-hit",
+        ADMIT_DEGRADED => "degraded",
+        SHED_DEADLINE => "shed(deadline)",
+        SHED_RATE => "shed(rate-limit)",
+        _ => "unknown",
+    }
+}
+
+/// Process-wide trace clock anchor. Pinned on first use (the sink
+/// constructor touches it eagerly) so every thread stamps against the
+/// same origin.
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace anchor (monotonic).
+pub fn now_us() -> u64 {
+    anchor().elapsed().as_micros() as u64
+}
+
+/// Pin the trace clock origin (called once at sink creation).
+pub fn pin_clock() {
+    let _ = anchor();
+}
+
+/// Serve stages a query (or its group) passes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Gate decision (instant; `detail` = outcome code).
+    Admission,
+    /// Router lookup (instant; `detail` = 1 for a cold route).
+    Routing,
+    /// Time in the coalescing queue (span per query).
+    QueueWait,
+    /// Group flush (instant per group; `detail` = group size).
+    Coalesce,
+    /// Cold-plan synthesis on the home shard (span per group).
+    ColdSynth,
+    /// Feature materialization into the ring buffer (span per group).
+    Fill,
+    /// Model forward pass (span per group).
+    Forward,
+    /// Results-memo insert (instant per group; `detail` = bytes).
+    Memo,
+    /// Control loop observed a snapshot swap (`detail` = new epoch).
+    SnapshotSwap,
+    /// Old-epoch bytes still pinned by in-flight groups at a swap
+    /// (instant; `detail` = bytes).
+    GcRetained,
+    /// Query resolved (instant; `detail` = latency in µs).
+    Complete,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Routing => "routing",
+            Stage::QueueWait => "queue_wait",
+            Stage::Coalesce => "coalesce",
+            Stage::ColdSynth => "cold_synth",
+            Stage::Fill => "fill",
+            Stage::Forward => "forward",
+            Stage::Memo => "memo",
+            Stage::SnapshotSwap => "snapshot_swap",
+            Stage::GcRetained => "gc_retained",
+            Stage::Complete => "complete",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Stage> {
+        Some(match name {
+            "admission" => Stage::Admission,
+            "routing" => Stage::Routing,
+            "queue_wait" => Stage::QueueWait,
+            "coalesce" => Stage::Coalesce,
+            "cold_synth" => Stage::ColdSynth,
+            "fill" => Stage::Fill,
+            "forward" => Stage::Forward,
+            "memo" => Stage::Memo,
+            "snapshot_swap" => Stage::SnapshotSwap,
+            "gc_retained" => Stage::GcRetained,
+            "complete" => Stage::Complete,
+            _ => return None,
+        })
+    }
+}
+
+/// Event flavor: span boundary or point event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Enter,
+    Exit,
+    Instant,
+}
+
+impl EventKind {
+    pub fn code(&self) -> &'static str {
+        match self {
+            EventKind::Enter => "B",
+            EventKind::Exit => "E",
+            EventKind::Instant => "I",
+        }
+    }
+
+    pub fn from_code(code: &str) -> Option<EventKind> {
+        Some(match code {
+            "B" => EventKind::Enter,
+            "E" => EventKind::Exit,
+            "I" => EventKind::Instant,
+            _ => return None,
+        })
+    }
+}
+
+/// One trace record. Ids use the `NO_*` sentinels when absent, which
+/// the JSONL writer omits entirely (`q`/`g`/`sh` keys are optional).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Microseconds since the process trace anchor.
+    pub t_us: u64,
+    pub kind: EventKind,
+    pub stage: Stage,
+    pub query: u64,
+    pub group: u64,
+    pub shard: u32,
+    /// Stage-specific payload (outcome code, group size, bytes, µs).
+    pub detail: u64,
+}
+
+impl Event {
+    pub fn new(
+        kind: EventKind,
+        stage: Stage,
+        query: u64,
+        group: u64,
+        shard: u32,
+        detail: u64,
+    ) -> Event {
+        Event {
+            t_us: now_us(),
+            kind,
+            stage,
+            query,
+            group,
+            shard,
+            detail,
+        }
+    }
+
+    /// One JSONL line (no trailing newline). Keys: `t` stamp, `k`
+    /// kind, `st` stage, then optional `q`/`g`/`sh`/`d`.
+    pub fn to_jsonl(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(64);
+        let _ = write!(
+            s,
+            "{{\"t\":{},\"k\":\"{}\",\"st\":\"{}\"",
+            self.t_us,
+            self.kind.code(),
+            self.stage.name()
+        );
+        if self.query != NO_QUERY {
+            let _ = write!(s, ",\"q\":{}", self.query);
+        }
+        if self.group != NO_GROUP {
+            let _ = write!(s, ",\"g\":{}", self.group);
+        }
+        if self.shard != NO_SHARD {
+            let _ = write!(s, ",\"sh\":{}", self.shard);
+        }
+        if self.detail != 0 {
+            let _ = write!(s, ",\"d\":{}", self.detail);
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Scoped span: emits an `Enter` on creation and the matching `Exit`
+/// on drop. Convenience for straight-line instrumented sections; the
+/// serve loop uses explicit enter/exit where a span crosses loop
+/// iterations (queue wait) or threads (fill).
+pub struct Span<'a> {
+    buf: &'a mut super::sink::TraceBuf,
+    stage: Stage,
+    query: u64,
+    group: u64,
+    shard: u32,
+}
+
+impl<'a> Span<'a> {
+    pub fn new(
+        buf: &'a mut super::sink::TraceBuf,
+        stage: Stage,
+        query: u64,
+        group: u64,
+        shard: u32,
+    ) -> Span<'a> {
+        buf.enter(stage, query, group, shard);
+        Span {
+            buf,
+            stage,
+            query,
+            group,
+            shard,
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.buf.exit(self.stage, self.query, self.group, self.shard);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_roundtrip() {
+        for st in [
+            Stage::Admission,
+            Stage::Routing,
+            Stage::QueueWait,
+            Stage::Coalesce,
+            Stage::ColdSynth,
+            Stage::Fill,
+            Stage::Forward,
+            Stage::Memo,
+            Stage::SnapshotSwap,
+            Stage::GcRetained,
+            Stage::Complete,
+        ] {
+            assert_eq!(Stage::from_name(st.name()), Some(st));
+        }
+        assert_eq!(Stage::from_name("nope"), None);
+        for k in [EventKind::Enter, EventKind::Exit, EventKind::Instant] {
+            assert_eq!(EventKind::from_code(k.code()), Some(k));
+        }
+    }
+
+    #[test]
+    fn jsonl_omits_absent_ids() {
+        let ev = Event {
+            t_us: 12,
+            kind: EventKind::Instant,
+            stage: Stage::SnapshotSwap,
+            query: NO_QUERY,
+            group: NO_GROUP,
+            shard: NO_SHARD,
+            detail: 3,
+        };
+        assert_eq!(
+            ev.to_jsonl(),
+            r#"{"t":12,"k":"I","st":"snapshot_swap","d":3}"#
+        );
+        let ev = Event {
+            t_us: 7,
+            kind: EventKind::Enter,
+            stage: Stage::Fill,
+            query: NO_QUERY,
+            group: 4,
+            shard: 1,
+            detail: 0,
+        };
+        assert_eq!(ev.to_jsonl(), r#"{"t":7,"k":"B","st":"fill","g":4,"sh":1}"#);
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,501 @@
+//! Offline assembly of flushed trace events into per-query call trees.
+//!
+//! `ibmb trace-report` feeds a JSONL flight-recorder file through
+//! [`assemble`]: events are parsed line by line (the crate's own JSON
+//! parser — no serde), enter/exit pairs are re-matched into spans by
+//! (stage, query, group) in file order, group-scoped spans (fill,
+//! forward, cold synthesis, memo inserts, coalesce flushes) are
+//! attached to every query that rode the group, and each query gets a
+//! time-ordered tree from admission to completion with per-stage
+//! total times plus a self-time remainder. Because the sink is lossy
+//! (`super::sink`), the assembler tolerates missing events: unmatched
+//! enters become open spans, queries without a `complete` instant are
+//! reported as incomplete, and the trailer's dropped count is surfaced
+//! so a truncated trace is never mistaken for a complete one.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::util::json::{self, Json};
+
+use super::span::{outcome_name, EventKind, Stage, NO_GROUP, NO_QUERY, NO_SHARD};
+
+/// A node in a query's call tree.
+#[derive(Debug, Clone)]
+pub struct SpanNode {
+    pub stage: Stage,
+    pub kind: NodeKind,
+    /// Microseconds since the trace anchor.
+    pub start_us: u64,
+    pub shard: Option<u32>,
+    pub detail: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Point event.
+    Instant,
+    /// Matched enter/exit pair.
+    Span { dur_us: u64 },
+    /// Enter without a flushed exit (lossy sink or in-flight at
+    /// shutdown).
+    Open,
+}
+
+/// One query's assembled call tree.
+#[derive(Debug, Clone)]
+pub struct QueryTree {
+    pub query: u64,
+    /// Coalesced group the query rode, when it reached the queue.
+    pub group: Option<u64>,
+    /// Admission outcome code (`super::span::ADMIT_*` / `SHED_*`).
+    pub outcome: Option<u64>,
+    pub start_us: u64,
+    /// Admission → complete (0 when incomplete).
+    pub total_us: u64,
+    /// `total_us` minus time covered by child spans, clamped at 0
+    /// (fill/forward overlap can legitimately exceed the wall total).
+    pub self_us: u64,
+    pub complete: bool,
+    /// Time-ordered stages (query-scoped plus the group's).
+    pub nodes: Vec<SpanNode>,
+}
+
+/// Per-stage aggregate over the whole trace.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageAgg {
+    /// Events (instants) or completed spans observed.
+    pub count: u64,
+    /// Completed spans among `count`.
+    pub spans: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+/// Everything `trace-report` prints.
+#[derive(Debug)]
+pub struct TraceReport {
+    /// Event lines parsed (header/trailer excluded).
+    pub events: usize,
+    /// Dropped-event count from the trailer (0 if no trailer).
+    pub dropped: u64,
+    /// Whether the header line was present and well-formed.
+    pub header_seen: bool,
+    /// Per-query trees, ordered by query id.
+    pub queries: Vec<QueryTree>,
+    /// Queries whose `complete` instant was flushed.
+    pub complete_queries: usize,
+    pub stages: BTreeMap<&'static str, StageAgg>,
+}
+
+struct RawEvent {
+    t_us: u64,
+    kind: EventKind,
+    stage: Stage,
+    query: u64,
+    group: u64,
+    shard: u32,
+    detail: u64,
+}
+
+fn parse_event(line: &str, lineno: usize) -> Result<Option<RawEvent>, String> {
+    let v = json::parse(line)
+        .map_err(|e| format!("line {lineno}: bad JSON: {e}"))?;
+    if v.get("trace").is_some() || v.get("summary").is_some() {
+        return Ok(None); // header/trailer handled by the caller
+    }
+    let t_us = v
+        .at(&["t"])
+        .as_f64()
+        .ok_or(format!("line {lineno}: missing \"t\""))? as u64;
+    let kind = v
+        .at(&["k"])
+        .as_str()
+        .and_then(EventKind::from_code)
+        .ok_or(format!("line {lineno}: bad \"k\""))?;
+    let stage = v
+        .at(&["st"])
+        .as_str()
+        .and_then(Stage::from_name)
+        .ok_or(format!("line {lineno}: bad \"st\""))?;
+    let opt = |key: &str, absent: u64| {
+        v.get(key).and_then(Json::as_f64).map(|n| n as u64).unwrap_or(absent)
+    };
+    Ok(Some(RawEvent {
+        t_us,
+        kind,
+        stage,
+        query: opt("q", NO_QUERY),
+        group: opt("g", NO_GROUP),
+        shard: opt("sh", NO_SHARD as u64) as u32,
+        detail: opt("d", 0),
+    }))
+}
+
+/// Assemble a JSONL trace into per-query call trees.
+pub fn assemble(text: &str) -> Result<TraceReport, String> {
+    let mut header_seen = false;
+    let mut dropped = 0u64;
+    let mut events: Vec<RawEvent> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| format!("line {}: bad JSON: {e}", i + 1))?;
+        if i == 0 && v.get("trace").is_some() {
+            header_seen = v.at(&["trace"]).as_str() == Some("ibmb");
+            continue;
+        }
+        if v.get("summary").is_some() {
+            dropped = v.at(&["dropped"]).as_f64().unwrap_or(0.0) as u64;
+            continue;
+        }
+        if let Some(ev) = parse_event(line, i + 1)? {
+            events.push(ev);
+        }
+    }
+    // stable order by stamp (cross-thread batches arrive interleaved)
+    events.sort_by_key(|e| e.t_us);
+
+    // pair enter/exit into spans by (stage, query, group), file order
+    let mut open: HashMap<(Stage, u64, u64), Vec<(u64, u32)>> = HashMap::new();
+    let mut nodes_by_query: HashMap<u64, Vec<SpanNode>> = HashMap::new();
+    let mut nodes_by_group: HashMap<u64, Vec<SpanNode>> = HashMap::new();
+    let mut query_group: HashMap<u64, u64> = HashMap::new();
+    let mut stages: BTreeMap<&'static str, StageAgg> = BTreeMap::new();
+    let mut misc: Vec<SpanNode> = Vec::new();
+
+    let place = |node: SpanNode,
+                     query: u64,
+                     group: u64,
+                     nq: &mut HashMap<u64, Vec<SpanNode>>,
+                     ng: &mut HashMap<u64, Vec<SpanNode>>,
+                     misc: &mut Vec<SpanNode>| {
+        if query != NO_QUERY {
+            nq.entry(query).or_default().push(node);
+        } else if group != NO_GROUP {
+            ng.entry(group).or_default().push(node);
+        } else {
+            misc.push(node);
+        }
+    };
+
+    for ev in &events {
+        if ev.query != NO_QUERY && ev.group != NO_GROUP {
+            query_group.insert(ev.query, ev.group);
+        }
+        let key = (ev.stage, ev.query, ev.group);
+        match ev.kind {
+            EventKind::Enter => {
+                open.entry(key).or_default().push((ev.t_us, ev.shard));
+            }
+            EventKind::Exit => {
+                let start = open.get_mut(&key).and_then(Vec::pop);
+                let node = match start {
+                    Some((start_us, sh)) => {
+                        let dur = ev.t_us.saturating_sub(start_us);
+                        let agg = stages.entry(ev.stage.name()).or_default();
+                        agg.count += 1;
+                        agg.spans += 1;
+                        agg.total_us += dur;
+                        agg.max_us = agg.max_us.max(dur);
+                        SpanNode {
+                            stage: ev.stage,
+                            kind: NodeKind::Span { dur_us: dur },
+                            start_us,
+                            shard: some_shard(sh).or(some_shard(ev.shard)),
+                            detail: ev.detail,
+                        }
+                    }
+                    // exit without enter: the enter was dropped
+                    None => SpanNode {
+                        stage: ev.stage,
+                        kind: NodeKind::Open,
+                        start_us: ev.t_us,
+                        shard: some_shard(ev.shard),
+                        detail: ev.detail,
+                    },
+                };
+                place(
+                    node,
+                    ev.query,
+                    ev.group,
+                    &mut nodes_by_query,
+                    &mut nodes_by_group,
+                    &mut misc,
+                );
+            }
+            EventKind::Instant => {
+                let agg = stages.entry(ev.stage.name()).or_default();
+                agg.count += 1;
+                let node = SpanNode {
+                    stage: ev.stage,
+                    kind: NodeKind::Instant,
+                    start_us: ev.t_us,
+                    shard: some_shard(ev.shard),
+                    detail: ev.detail,
+                };
+                place(
+                    node,
+                    ev.query,
+                    ev.group,
+                    &mut nodes_by_query,
+                    &mut nodes_by_group,
+                    &mut misc,
+                );
+            }
+        }
+    }
+    // unmatched enters → open spans
+    for ((stage, query, group), starts) in open {
+        for (start_us, sh) in starts {
+            let node = SpanNode {
+                stage,
+                kind: NodeKind::Open,
+                start_us,
+                shard: some_shard(sh),
+                detail: 0,
+            };
+            place(
+                node,
+                query,
+                group,
+                &mut nodes_by_query,
+                &mut nodes_by_group,
+                &mut misc,
+            );
+        }
+    }
+
+    let mut queries: Vec<QueryTree> = nodes_by_query
+        .into_iter()
+        .map(|(query, mut nodes)| {
+            let group = query_group.get(&query).copied();
+            if let Some(g) = group {
+                if let Some(gnodes) = nodes_by_group.get(&g) {
+                    nodes.extend(gnodes.iter().cloned());
+                }
+            }
+            nodes.sort_by_key(|n| (n.start_us, n.stage.name()));
+            let outcome = nodes
+                .iter()
+                .find(|n| n.stage == Stage::Admission)
+                .map(|n| n.detail);
+            let start_us = nodes.first().map(|n| n.start_us).unwrap_or(0);
+            let complete_at = nodes
+                .iter()
+                .find(|n| n.stage == Stage::Complete)
+                .map(|n| n.start_us);
+            let total_us =
+                complete_at.map(|t| t.saturating_sub(start_us)).unwrap_or(0);
+            let span_us: u64 = nodes
+                .iter()
+                .filter_map(|n| match n.kind {
+                    NodeKind::Span { dur_us } => Some(dur_us),
+                    _ => None,
+                })
+                .sum();
+            QueryTree {
+                query,
+                group,
+                outcome,
+                start_us,
+                total_us,
+                self_us: total_us.saturating_sub(span_us),
+                complete: complete_at.is_some(),
+                nodes,
+            }
+        })
+        .collect();
+    queries.sort_by_key(|q| q.query);
+    let complete_queries = queries.iter().filter(|q| q.complete).count();
+
+    Ok(TraceReport {
+        events: events.len(),
+        dropped,
+        header_seen,
+        queries,
+        complete_queries,
+        stages,
+    })
+}
+
+fn some_shard(sh: u32) -> Option<u32> {
+    (sh != NO_SHARD).then_some(sh)
+}
+
+/// Render one query's call tree as indented text.
+pub fn render_tree(q: &QueryTree) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let outcome = q.outcome.map(outcome_name).unwrap_or("?");
+    let _ = write!(s, "query {} [{}]", q.query, outcome);
+    if let Some(g) = q.group {
+        let _ = write!(s, " group {g}");
+    }
+    if q.complete {
+        let _ = write!(
+            s,
+            " — total {:.3} ms (self {:.3} ms)",
+            q.total_us as f64 / 1e3,
+            q.self_us as f64 / 1e3
+        );
+    } else {
+        let _ = write!(s, " — incomplete");
+    }
+    s.push('\n');
+    for n in &q.nodes {
+        let rel = n.start_us.saturating_sub(q.start_us);
+        let _ = write!(s, "  {:<13}", n.stage.name());
+        match n.kind {
+            NodeKind::Instant => {
+                let _ = write!(s, " @{:>8.1}µs", rel as f64);
+            }
+            NodeKind::Span { dur_us } => {
+                let _ = write!(
+                    s,
+                    " @{:>8.1}µs for {:.1}µs",
+                    rel as f64, dur_us as f64
+                );
+            }
+            NodeKind::Open => {
+                let _ = write!(s, " @{:>8.1}µs (open)", rel as f64);
+            }
+        }
+        if let Some(sh) = n.shard {
+            let _ = write!(s, "  shard {sh}");
+        }
+        let note = match n.stage {
+            Stage::Admission => Some(outcome_name(n.detail).to_string()),
+            Stage::Routing => {
+                Some(if n.detail == 1 { "cold" } else { "warm" }.to_string())
+            }
+            Stage::Coalesce => Some(format!("{} queries", n.detail)),
+            Stage::Memo => Some(format!("{} B", n.detail)),
+            Stage::Complete => Some(format!("latency {}µs", n.detail)),
+            _ => None,
+        };
+        if let Some(note) = note {
+            let _ = write!(s, "  {note}");
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::span::{Event, ADMIT_EXEC};
+
+    fn line(
+        t: u64,
+        k: EventKind,
+        st: Stage,
+        q: u64,
+        g: u64,
+        sh: u32,
+        d: u64,
+    ) -> String {
+        Event {
+            t_us: t,
+            kind: k,
+            stage: st,
+            query: q,
+            group: g,
+            shard: sh,
+            detail: d,
+        }
+        .to_jsonl()
+    }
+
+    #[test]
+    fn assembles_a_full_query_tree() {
+        use EventKind::{Enter, Exit, Instant};
+        let mut doc = String::from("{\"trace\":\"ibmb\",\"version\":1}\n");
+        // shard events flushed "late" (out of stamp order) on purpose
+        let evs = [
+            line(10, Instant, Stage::Admission, 7, NO_GROUP, 1, ADMIT_EXEC),
+            line(11, Instant, Stage::Routing, 7, NO_GROUP, 1, 0),
+            line(12, Enter, Stage::QueueWait, 7, 3, 1, 0),
+            line(400, Exit, Stage::QueueWait, 7, 3, 1, 0),
+            line(400, Instant, Stage::Coalesce, NO_QUERY, 3, 1, 2),
+            line(950, Instant, Stage::Memo, NO_QUERY, 3, 1, 256),
+            line(980, Instant, Stage::Complete, 7, 3, 1, 970),
+            line(410, Enter, Stage::Fill, NO_QUERY, 3, 1, 0),
+            line(500, Exit, Stage::Fill, NO_QUERY, 3, 1, 0),
+            line(510, Enter, Stage::Forward, NO_QUERY, 3, 1, 0),
+            line(940, Exit, Stage::Forward, NO_QUERY, 3, 1, 0),
+        ];
+        for e in evs {
+            doc.push_str(&e);
+            doc.push('\n');
+        }
+        doc.push_str("{\"summary\":true,\"events\":11,\"dropped\":0}\n");
+        let rep = assemble(&doc).unwrap();
+        assert!(rep.header_seen);
+        assert_eq!(rep.events, 11);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.queries.len(), 1);
+        let q = &rep.queries[0];
+        assert_eq!(q.query, 7);
+        assert_eq!(q.group, Some(3));
+        assert_eq!(q.outcome, Some(ADMIT_EXEC));
+        assert!(q.complete);
+        assert_eq!(q.total_us, 970);
+        // queue 388 + fill 90 + forward 430 = 908 covered
+        assert_eq!(q.self_us, 970 - 908);
+        let stage_names: Vec<&str> =
+            q.nodes.iter().map(|n| n.stage.name()).collect();
+        assert_eq!(
+            stage_names,
+            vec![
+                "admission",
+                "routing",
+                "queue_wait",
+                "coalesce",
+                "fill",
+                "forward",
+                "memo",
+                "complete"
+            ]
+        );
+        let agg = &rep.stages["forward"];
+        assert_eq!(agg.spans, 1);
+        assert_eq!(agg.total_us, 430);
+        let rendered = render_tree(q);
+        assert!(rendered.contains("query 7 [admitted] group 3"));
+        assert!(rendered.contains("forward"));
+        assert!(rendered.contains("latency 970µs"));
+    }
+
+    #[test]
+    fn tolerates_dropped_exits_and_missing_completion() {
+        use EventKind::{Enter, Instant};
+        let mut doc = String::new();
+        doc.push_str(&line(1, Instant, Stage::Admission, 0, NO_GROUP, 0, 0));
+        doc.push('\n');
+        doc.push_str(&line(2, Enter, Stage::QueueWait, 0, 1, 0, 0));
+        doc.push('\n');
+        let rep = assemble(&doc).unwrap();
+        assert_eq!(rep.queries.len(), 1);
+        let q = &rep.queries[0];
+        assert!(!q.complete);
+        assert_eq!(q.total_us, 0);
+        assert!(q
+            .nodes
+            .iter()
+            .any(|n| matches!(n.kind, NodeKind::Open)));
+        assert!(render_tree(q).contains("incomplete"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(assemble("{\"t\":1}\n").is_err());
+        assert!(assemble("not json\n").is_err());
+        assert!(
+            assemble("{\"t\":1,\"k\":\"B\",\"st\":\"nope\"}\n").is_err()
+        );
+    }
+}

@@ -1,0 +1,162 @@
+//! Telemetry integration tests: the lossy sink under overflow and
+//! concurrency, JSONL → call-tree round trips across real thread
+//! interleaving, and an end-to-end traced serving run.
+
+use std::io::{self, Write};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::serve::{self, ServeConfig, Skew};
+use ibmb::telemetry::span::{Stage, ADMIT_EXEC, NO_GROUP, NO_QUERY};
+use ibmb::telemetry::{assemble, render_tree, TraceSink, Tracer};
+
+/// `Write` target shared with the writer thread (tests trace into
+/// memory instead of a file).
+#[derive(Clone, Default)]
+struct Shared(Arc<Mutex<Vec<u8>>>);
+
+impl Shared {
+    fn text(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+impl Write for Shared {
+    fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn bounded_queue_overflow_drops_and_counts_without_blocking() {
+    // nobody drains the channel: capacity 2 batches of 8 events each
+    // can land, everything else must be dropped — and the push loop
+    // must complete (try_send never blocks), which this test proves by
+    // finishing at all
+    let (sink, rx) = TraceSink::unconsumed(2);
+    let mut buf = sink.buffer_with(8);
+    const EVENTS: u64 = 1000;
+    for i in 0..EVENTS {
+        buf.instant(Stage::Admission, i, NO_GROUP, 0, ADMIT_EXEC);
+    }
+    buf.flush();
+    let held: u64 = rx.try_iter().map(|b| b.len() as u64).sum();
+    assert_eq!(held, 16, "2 batches × 8 events pass the bounded channel");
+    assert_eq!(
+        held + sink.dropped(),
+        EVENTS,
+        "every event is either delivered or counted dropped"
+    );
+    assert!(sink.dropped() > 0);
+}
+
+#[test]
+fn multi_thread_jsonl_roundtrips_into_a_well_formed_tree() {
+    let out = Shared::default();
+    let (sink, writer) = TraceSink::with_writer(Box::new(out.clone()), 64);
+    // control-thread view of query 7 riding group 3
+    let mut control = sink.buffer();
+    control.instant(Stage::Admission, 7, NO_GROUP, 0, ADMIT_EXEC);
+    control.instant(Stage::Routing, 7, NO_GROUP, 0, 0);
+    control.enter(Stage::QueueWait, 7, 3, 0);
+    control.instant(Stage::Coalesce, NO_QUERY, 3, 0, 1);
+    // two "shard threads" flush group-scoped spans concurrently — the
+    // assembler must tolerate their batches landing out of order
+    std::thread::scope(|scope| {
+        for (gid, sh) in [(3u64, 0u32), (4u64, 1u32)] {
+            let mut tb = sink.buffer();
+            scope.spawn(move || {
+                tb.enter(Stage::Fill, NO_QUERY, gid, sh);
+                tb.exit(Stage::Fill, NO_QUERY, gid, sh);
+                tb.enter(Stage::Forward, NO_QUERY, gid, sh);
+                std::thread::sleep(Duration::from_millis(1));
+                tb.exit(Stage::Forward, NO_QUERY, gid, sh);
+                tb.instant(Stage::Memo, NO_QUERY, gid, sh, 128);
+            });
+        }
+    });
+    control.exit(Stage::QueueWait, 7, 3, 0);
+    control.instant(Stage::Complete, 7, 3, 0, 1234);
+    drop(control);
+    drop(sink);
+    let summary = writer.finish().unwrap();
+    assert_eq!(summary.events_dropped, 0);
+    assert_eq!(summary.events_written, 16);
+
+    let rep = assemble(&out.text()).unwrap();
+    assert!(rep.header_seen);
+    assert_eq!(rep.events, 16);
+    assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.queries.len(), 1, "group 4 has no rider query");
+    let q = &rep.queries[0];
+    assert_eq!(q.query, 7);
+    assert_eq!(q.group, Some(3));
+    assert_eq!(q.outcome, Some(ADMIT_EXEC));
+    assert!(q.complete);
+    // the rider inherits its own group's spans but not group 4's
+    let fills = q.nodes.iter().filter(|n| n.stage == Stage::Fill).count();
+    assert_eq!(fills, 1);
+    assert!(q.nodes.iter().all(|n| n.shard != Some(1)));
+    // both groups' forward spans aggregate across threads
+    assert_eq!(rep.stages["forward"].spans, 2);
+    assert_eq!(rep.stages["fill"].spans, 2);
+    let rendered = render_tree(q);
+    assert!(rendered.contains("query 7"), "{rendered}");
+    assert!(rendered.contains("group 3"), "{rendered}");
+}
+
+#[test]
+fn traced_serving_run_assembles_end_to_end() {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 33);
+    let cfg = ServeConfig {
+        queries: 48,
+        clients: 8,
+        shards: 2,
+        flush_window: Duration::from_micros(300),
+        ..Default::default()
+    };
+    let eval = ds.splits.train.clone();
+    let mut setup = serve::prepare(ds, &eval, &cfg);
+    let out = Shared::default();
+    let (sink, writer) = TraceSink::with_writer(Box::new(out.clone()), 256);
+    setup.tracer = Tracer::attached(sink);
+    let r = serve::serve_closed_loop(&mut setup, &eval, Skew::Zipf(1.2), &cfg)
+        .unwrap();
+    assert_eq!(r.executed_queries + r.cache_hits, 48);
+    // detach so the writer sees the channel close
+    setup.tracer = Tracer::disabled();
+    let summary = writer.finish().unwrap();
+    assert!(summary.events_written > 0);
+
+    let rep = assemble(&out.text()).unwrap();
+    assert!(rep.header_seen);
+    assert_eq!(rep.dropped, summary.events_dropped);
+    assert!(!rep.queries.is_empty());
+    assert!(rep.complete_queries > 0, "executed queries trace to complete");
+    // the serve path must emit every core stage at least once
+    for stage in ["admission", "routing", "queue_wait", "coalesce", "fill", "forward", "memo", "complete"]
+    {
+        assert!(
+            rep.stages.contains_key(stage),
+            "stage {stage} missing from {:?}",
+            rep.stages.keys().collect::<Vec<_>>()
+        );
+    }
+    assert_eq!(rep.stages["admission"].count as usize, 48);
+    // executed queries ride groups; their trees carry shard spans
+    let executed = rep
+        .queries
+        .iter()
+        .find(|q| q.group.is_some() && q.complete)
+        .expect("at least one executed query tree");
+    assert!(executed
+        .nodes
+        .iter()
+        .any(|n| n.stage == Stage::Forward));
+    assert!(!render_tree(executed).is_empty());
+}

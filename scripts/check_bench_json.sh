@@ -6,7 +6,12 @@
 # For the "updates" bench this includes the p99-under-churn series
 # (`churn: [{mode, p99_ms, qps, updates_applied}, ...]` — baseline vs
 # quiesced vs zero_quiesce) introduced with the snapshot-swap serving
-# refactor. No-op (success) when no bench JSONs exist yet — benches
+# refactor. For the "serving" bench it includes the goodput-under-
+# overload series (`capacity_qps`, `deadline_ms`, and `overload:
+# [{offered_x, offered_qps, goodput_qps, shed_fraction,
+# p99_admitted_ms, skew}, ...]` — offered load swept 1x–10x calibrated
+# capacity, uniform + zipf) introduced with the admission-control
+# subsystem. No-op (success) when no bench JSONs exist yet — benches
 # are run out of band, not in CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
