@@ -30,6 +30,40 @@ echo "== serving smoke (tiny SBM, 1 shard, 100 queries) =="
 cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
     --scale 0.05 --shards 1 --clients 8 --queries 100 --window-us 300
 
+echo "== executor parity smoke (same pinned seed, both backends) =="
+# The blocked CSR forward must be an observationally exact swap for the
+# scalar reference: same admitted/answered counts and a bit-identical
+# prediction hash over every answered query (the counting sort is
+# stable, so all f32 sums run in the reference's order).
+ref_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 1 --clients 8 --queries 120 --window-us 300 \
+    --seed 11 --executor reference)
+blk_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 1 --clients 8 --queries 120 --window-us 300 \
+    --seed 11 --executor blocked)
+printf '%s\n' "$ref_out" | grep 'executor reference:'
+printf '%s\n' "$blk_out" | grep 'executor blocked:'
+ref_hash=$(printf '%s\n' "$ref_out" | grep -o 'logit_hash=0x[0-9a-f]*')
+blk_hash=$(printf '%s\n' "$blk_out" | grep -o 'logit_hash=0x[0-9a-f]*')
+[ -n "$ref_hash" ] && [ "$ref_hash" = "$blk_hash" ] || {
+    echo "executor smoke FAILED: logit hash mismatch ('$ref_hash' vs '$blk_hash')" >&2
+    exit 1
+}
+ref_adm=$(printf '%s\n' "$ref_out" | grep -o 'admitted=[0-9]*' | head -n1)
+blk_adm=$(printf '%s\n' "$blk_out" | grep -o 'admitted=[0-9]*' | head -n1)
+[ -n "$ref_adm" ] && [ "$ref_adm" = "$blk_adm" ] || {
+    echo "executor smoke FAILED: admitted counts differ ('$ref_adm' vs '$blk_adm')" >&2
+    exit 1
+}
+printf '%s\n' "$ref_out" | grep -q 'unanswered=0' || {
+    echo "executor smoke FAILED: reference run left queries unanswered" >&2
+    exit 1
+}
+printf '%s\n' "$blk_out" | grep -q 'unanswered=0' || {
+    echo "executor smoke FAILED: blocked run left queries unanswered" >&2
+    exit 1
+}
+
 echo "== dynamic update smoke (tiny SBM, 50-edge deltas mid-serve) =="
 # Seed is pinned so the synthetic delta stream — and therefore the
 # stale-plan counts asserted below — is deterministic across runs.

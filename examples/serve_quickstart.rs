@@ -8,8 +8,9 @@
 //! (DESIGN.md §9 and §11): node-wise IBMB plans the serveable set
 //! once, everything the query path reads is bundled into an immutable
 //! epoch snapshot behind a swap cell, concurrent queries coalesce in
-//! the microbatch queue, and two executor shards answer them with the
-//! CPU reference forward pass — no AOT artifacts needed. A graph
+//! the microbatch queue, and two executor shards answer them through a
+//! pluggable forward backend (DESIGN.md §13; here the SIMD-blocked CSR
+//! executor, the serving default) — no AOT artifacts needed. A graph
 //! delta is applied by *building the next snapshot off to the side*
 //! and publishing it with one pointer swap; serving never stops.
 //!
@@ -18,6 +19,7 @@
 use std::time::Duration;
 
 use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::exec::ExecutorKind;
 use ibmb::graph::GraphDelta;
 use ibmb::serve::{self, DynamicServeSession, ServeConfig, Skew, UpdateConfig};
 use ibmb::telemetry::{assemble, render_tree, TraceSink, Tracer};
@@ -37,8 +39,13 @@ fn main() -> anyhow::Result<()> {
         queries: 48,
         flush_window: Duration::from_micros(400),
         results_cache_bytes: 256 * 1024,
+        // the forward backend each shard runs (`--executor` on the
+        // CLI): Blocked is the default; Reference swaps in the scalar
+        // oracle, bit-identical predictions at a fraction of the speed
+        executor: ExecutorKind::Blocked,
         ..Default::default()
     };
+    println!("executor backend: {}", cfg.executor.name());
     // the train split is the serveable set; anything else cold-paths
     let eval = ds.splits.train.clone();
     let mut session =

@@ -15,6 +15,8 @@ use ibmb::batching::{BatchArena, BatchCache, BatchGenerator, DenseBatch, NodeWis
 use ibmb::bench_harness::{secs, time_it, Table};
 use ibmb::config::preset_for;
 use ibmb::datasets::{sbm, spec_by_name};
+use ibmb::exec::{ExecScratch, Executor, ExecutorKind, PlanView};
+use ibmb::serve::reference_artifact;
 use ibmb::partition::metis::{partition_graph, MetisConfig};
 use ibmb::pipeline::run_prefetched;
 use ibmb::ppr::power::{batch_ppr, PowerConfig};
@@ -159,6 +161,76 @@ fn main() -> anyhow::Result<()> {
         depth_results.push(result);
     }
 
+    // ---- forward-stage throughput per execution backend ----
+    // Features are pre-gathered outside the timed region, so the series
+    // isolates exactly what `--executor` swaps: the per-batch forward.
+    struct ForwardResult {
+        executor: &'static str,
+        batches_per_s: f64,
+        speedup_vs_reference: f64,
+    }
+    let meta = reference_artifact("gcn", ds.feat_dim, ds.num_classes, 32, 2, 2, bucket);
+    let state = ModelState::init(&meta, 7);
+    let feats: Vec<Vec<f32>> = (0..cache.len())
+        .map(|i| {
+            let nodes = cache.batch_nodes(i);
+            let mut x = vec![0.0f32; nodes.len() * ds.feat_dim];
+            for (j, &u) in nodes.iter().enumerate() {
+                ds.node_features_into(
+                    u,
+                    &mut x[j * ds.feat_dim..(j + 1) * ds.feat_dim],
+                );
+            }
+            x
+        })
+        .collect();
+    let mut fwd_results: Vec<ForwardResult> = Vec::new();
+    let fwd_epochs = 3usize;
+    for kind in [
+        ExecutorKind::Reference,
+        ExecutorKind::Blocked,
+        ExecutorKind::BlockedF16,
+    ] {
+        let exec = kind.build()?;
+        let mut scratch = ExecScratch::new();
+        let mut logits = Vec::new();
+        let epoch = |scratch: &mut ExecScratch, logits: &mut Vec<f32>| {
+            for i in 0..cache.len() {
+                let view = PlanView {
+                    n: cache.batch_nodes(i).len(),
+                    edge_src: cache.edge_src_of(i),
+                    edge_dst: cache.edge_dst_of(i),
+                    weights: cache.edge_weights_of(i),
+                };
+                exec.forward(&meta, &state, &view, &feats[i], scratch, logits);
+                std::hint::black_box(logits.last().copied());
+            }
+        };
+        epoch(&mut scratch, &mut logits); // warmup: scratch high-water
+        let t = Timer::start();
+        for _ in 0..fwd_epochs {
+            epoch(&mut scratch, &mut logits);
+        }
+        let elapsed = t.elapsed_s();
+        let batches_per_s = (fwd_epochs * cache.len()) as f64 / elapsed;
+        let speedup_vs_reference = fwd_results
+            .first()
+            .map_or(1.0, |r| batches_per_s / r.batches_per_s);
+        table.row(&[
+            format!("forward ({})", kind.name()),
+            secs(elapsed / (fwd_epochs * cache.len()) as f64),
+            "-".into(),
+            format!(
+                "{batches_per_s:.0} batches/s ({speedup_vs_reference:.2}x vs reference)"
+            ),
+        ]);
+        fwd_results.push(ForwardResult {
+            executor: kind.name(),
+            batches_per_s,
+            speedup_vs_reference,
+        });
+    }
+
     // machine-readable record for the perf trajectory
     let json = Json::Obj(BTreeMap::from([
         ("bench".into(), Json::Str("micro_pipeline".into())),
@@ -190,6 +262,30 @@ fn main() -> anyhow::Result<()> {
                             (
                                 "steady_allocations".into(),
                                 Json::Num(r.steady_allocations as f64),
+                            ),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "forward".into(),
+            Json::Arr(
+                fwd_results
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(BTreeMap::from([
+                            (
+                                "executor".into(),
+                                Json::Str(r.executor.into()),
+                            ),
+                            (
+                                "batches_per_s".into(),
+                                Json::Num(r.batches_per_s),
+                            ),
+                            (
+                                "speedup_vs_reference".into(),
+                                Json::Num(r.speedup_vs_reference),
                             ),
                         ]))
                     })

@@ -24,6 +24,7 @@ use std::time::Duration;
 use ibmb::bench_harness::Table;
 use ibmb::cli::Args;
 use ibmb::datasets::{sbm, spec_by_name};
+use ibmb::exec::ExecutorKind;
 use ibmb::serve::{self, ServeConfig, Skew};
 use ibmb::util::json::{to_string, Json};
 
@@ -248,6 +249,39 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- executor before/after pair --------------------------------
+    // One pinned configuration (2 shards, zipf, no memo) with only the
+    // forward backend swapped: the serve-level latency win of the
+    // blocked executor over the scalar reference.
+    struct ExecRecord {
+        executor: &'static str,
+        qps: f64,
+        p50_ms: f64,
+        p99_ms: f64,
+    }
+    let mut exec_records: Vec<ExecRecord> = Vec::new();
+    let mut etable = Table::new(&["executor", "qps", "p50 (ms)", "p99 (ms)"]);
+    for kind in [ExecutorKind::Reference, ExecutorKind::Blocked] {
+        let cfg = ServeConfig {
+            shards: 2,
+            executor: kind,
+            ..base.clone()
+        };
+        let r = serve::serve_closed_loop(&mut setup, &eval, skew, &cfg)?;
+        etable.row(&[
+            kind.name().into(),
+            format!("{:.0}", r.qps),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p99_ms),
+        ]);
+        exec_records.push(ExecRecord {
+            executor: kind.name(),
+            qps: r.qps,
+            p50_ms: r.p50_ms,
+            p99_ms: r.p99_ms,
+        });
+    }
+
     let json = Json::Obj(BTreeMap::from([
         ("bench".into(), Json::Str("serving".into())),
         ("dataset".into(), Json::Str(ds.name.clone())),
@@ -262,6 +296,25 @@ fn main() -> anyhow::Result<()> {
         ),
         ("capacity_qps".into(), Json::Num(capacity_qps)),
         ("deadline_ms".into(), Json::Num(deadline_ms)),
+        (
+            "executor_p99".into(),
+            Json::Arr(
+                exec_records
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(BTreeMap::from([
+                            (
+                                "executor".into(),
+                                Json::Str(r.executor.into()),
+                            ),
+                            ("qps".into(), Json::Num(r.qps)),
+                            ("p50_ms".into(), Json::Num(r.p50_ms)),
+                            ("p99_ms".into(), Json::Num(r.p99_ms)),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "overload".into(),
             Json::Arr(
@@ -340,5 +393,6 @@ fn main() -> anyhow::Result<()> {
     println!("wrote {out_path}");
     table.print("serving — qps / tail latency / coalescing vs shards");
     otable.print("serving — goodput under overload (1x–10x capacity)");
+    etable.print("serving — p99 by forward backend (pinned load)");
     Ok(())
 }

@@ -1,0 +1,555 @@
+//! SIMD-blocked CPU forward: the default serving backend.
+//!
+//! What it changes vs the scalar reference (and why it's faster):
+//!
+//! * **CSR conversion per batch.** The COO edge slices a plan carries
+//!   are counting-sorted by destination into `ExecScratch` (O(E), one
+//!   pass, stable — per-destination edge order matches the reference's
+//!   global scan, keeping f32 sums identical). Aggregation then becomes
+//!   a sequential dst-major sweep: each output row is produced once,
+//!   from a contiguous run of (src, weight) pairs — the consecutive-
+//!   access layout IBMB's precomputed batches exist to enable
+//!   (PAPER.md §1, §5).
+//! * **No zero-fill.** Because the sweep writes each destination row
+//!   exactly once from register accumulators, the old
+//!   `out.fill(0.0)`-then-scatter `spmm` disappears: rows outside the
+//!   batch's live set are never touched.
+//! * **8-lane blocks.** Inner loops run over `LANES = 8` column chunks
+//!   with `[f32; 8]` stack accumulators — fixed-width slices the
+//!   autovectorizer keeps in vector registers, the same output-block
+//!   accumulator shape as the Pallas tiled matmul in
+//!   `python/compile/kernels/spmm.py`.
+//! * **Fused normalize+aggregate.** Degree-normalized edge weights are
+//!   folded into the CSR payload at build time, so the sweep does one
+//!   fused multiply-add per (edge, lane) — the `index_add` scatter
+//!   idiom from SNIPPETS.md, turned inside out into a gather.
+//! * **Zero steady-state allocations.** `linear` writes into scratch
+//!   instead of returning a fresh `Vec` per layer; GAT's per-head
+//!   score/softmax temporaries live in scratch too.
+//! * **Optional f16 features.** `blocked-f16` round-trips the feature
+//!   block through IEEE half precision before layer 0 — halves feature
+//!   staging bandwidth when a real f16 feature store lands, at a
+//!   documented looser parity bound (DESIGN.md §13).
+
+use crate::exec::{ExecScratch, Executor, PlanView};
+use crate::runtime::{ArtifactMeta, ModelState};
+
+/// Fixed SIMD block width: 8 f32 lanes (one AVX2 register).
+pub const LANES: usize = 8;
+
+pub struct BlockedCpuExecutor {
+    quantize_f16: bool,
+}
+
+impl BlockedCpuExecutor {
+    pub fn new(quantize_f16: bool) -> BlockedCpuExecutor {
+        BlockedCpuExecutor { quantize_f16 }
+    }
+
+    pub fn quantizes(&self) -> bool {
+        self.quantize_f16
+    }
+}
+
+fn tensor<'a>(state: &'a ModelState, meta: &ArtifactMeta, name: &str) -> &'a [f32] {
+    state
+        .tensor(meta, name)
+        .unwrap_or_else(|| panic!("missing param {name}"))
+}
+
+/// Counting-sort the batch's COO edges into dst-major CSR form.
+/// `off` must be `n + 1` long; `csr_src`/`csr_w` at least `E` long.
+/// Stable: edges sharing a destination keep their COO order, so
+/// accumulation order (and thus f32 results) match the reference scan.
+pub(crate) fn build_csr(
+    view: &PlanView,
+    off: &mut [u32],
+    csr_src: &mut [u32],
+    csr_w: &mut [f32],
+) {
+    let n = view.n;
+    debug_assert_eq!(off.len(), n + 1);
+    off.fill(0);
+    for &d in view.edge_dst {
+        off[d as usize + 1] += 1;
+    }
+    for i in 0..n {
+        off[i + 1] += off[i];
+    }
+    for ((&s, &d), &w) in view.edge_src.iter().zip(view.edge_dst).zip(view.weights) {
+        let pos = off[d as usize] as usize;
+        csr_src[pos] = s;
+        csr_w[pos] = w;
+        off[d as usize] += 1;
+    }
+    // the fill pass advanced each row's start to its end; shift back
+    for d in (1..=n).rev() {
+        off[d] = off[d - 1];
+    }
+    off[0] = 0;
+}
+
+/// Dst-major blocked SpMM: `out[d] = Σ_e w_e * h[src_e]` over row `d`'s
+/// CSR range. Each row is written exactly once (no prior zero-fill);
+/// the per-edge weight multiply is fused into the accumulate.
+pub(crate) fn spmm_blocked(
+    off: &[u32],
+    csr_src: &[u32],
+    csr_w: &[f32],
+    h: &[f32],
+    n: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    let blocks = dim / LANES;
+    let rem = dim % LANES;
+    for d in 0..n {
+        let (lo, hi) = (off[d] as usize, off[d + 1] as usize);
+        let row = &mut out[d * dim..(d + 1) * dim];
+        for b in 0..blocks {
+            let j0 = b * LANES;
+            let mut acc = [0.0f32; LANES];
+            for e in lo..hi {
+                let src = &h[csr_src[e] as usize * dim + j0..][..LANES];
+                let w = csr_w[e];
+                for j in 0..LANES {
+                    acc[j] += w * src[j];
+                }
+            }
+            row[j0..j0 + LANES].copy_from_slice(&acc);
+        }
+        if rem != 0 {
+            let j0 = blocks * LANES;
+            let mut acc = [0.0f32; LANES];
+            for e in lo..hi {
+                let sbase = csr_src[e] as usize * dim + j0;
+                let w = csr_w[e];
+                for (j, a) in acc[..rem].iter_mut().enumerate() {
+                    *a += w * h[sbase + j];
+                }
+            }
+            row[j0..].copy_from_slice(&acc[..rem]);
+        }
+    }
+}
+
+/// Tiled row-major `x [n, d_in] @ w [d_in, d_out] (+ b)` into `out`.
+/// Output-block accumulators ([f32; 8] per j-block, k innermost) keep
+/// the hot values in registers and drop both the per-row `Vec`
+/// allocation and the `xv != 0` branch of the reference kernel.
+pub(crate) fn linear_blocked(
+    x: &[f32],
+    n: usize,
+    d_in: usize,
+    w: &[f32],
+    b: Option<&[f32]>,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    let blocks = d_out / LANES;
+    let rem = d_out % LANES;
+    for i in 0..n {
+        let xi = &x[i * d_in..(i + 1) * d_in];
+        let oi = &mut out[i * d_out..(i + 1) * d_out];
+        for bl in 0..blocks {
+            let j0 = bl * LANES;
+            let mut acc = [0.0f32; LANES];
+            if let Some(b) = b {
+                acc.copy_from_slice(&b[j0..j0 + LANES]);
+            }
+            for (k, &xv) in xi.iter().enumerate() {
+                let wr = &w[k * d_out + j0..][..LANES];
+                for j in 0..LANES {
+                    acc[j] += xv * wr[j];
+                }
+            }
+            oi[j0..j0 + LANES].copy_from_slice(&acc);
+        }
+        if rem != 0 {
+            let j0 = blocks * LANES;
+            let mut acc = [0.0f32; LANES];
+            if let Some(b) = b {
+                acc[..rem].copy_from_slice(&b[j0..]);
+            }
+            for (k, &xv) in xi.iter().enumerate() {
+                let wbase = k * d_out + j0;
+                for (j, a) in acc[..rem].iter_mut().enumerate() {
+                    *a += xv * w[wbase + j];
+                }
+            }
+            oi[j0..].copy_from_slice(&acc[..rem]);
+        }
+    }
+}
+
+/// In-place LayerNorm + ReLU over the first `n` rows. Same summation
+/// order as the reference (bit-identical output).
+fn layernorm_relu(x: &mut [f32], n: usize, dim: usize, g: &[f32], b: &[f32]) {
+    const EPS: f32 = 1e-5;
+    for i in 0..n {
+        let row = &mut x[i * dim..(i + 1) * dim];
+        let mean: f32 = row.iter().sum::<f32>() / dim as f32;
+        let var: f32 =
+            row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / dim as f32;
+        let rstd = (var + EPS).sqrt().recip();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = ((*v - mean) * rstd * g[j] + b[j]).max(0.0);
+        }
+    }
+}
+
+/// One GAT layer over the CSR view. The three reference edge scans
+/// (max, exp-sum, accumulate) fuse into a single per-destination pass:
+/// each row's incoming edges are contiguous, so scores stay in `edge_e`
+/// segments and the softmax never leaves cache. Per-destination edge
+/// order matches the reference scan, so sums are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn gat_layer_blocked(
+    meta: &ArtifactMeta,
+    state: &ModelState,
+    l: usize,
+    n: usize,
+    off: &[u32],
+    csr_src: &[u32],
+    h: &[f32],
+    d_in: usize,
+    hw: &mut [f32],
+    s_row: &mut [f32],
+    s_col: &mut [f32],
+    edge_e: &mut [f32],
+    out: &mut [f32],
+) -> usize {
+    let last = l == meta.layers - 1;
+    let heads = if last { 1 } else { meta.heads };
+    let w = tensor(state, meta, &format!("l{l}.w"));
+    let b = tensor(state, meta, &format!("l{l}.b"));
+    let a_src = tensor(state, meta, &format!("l{l}.a_src"));
+    let a_dst = tensor(state, meta, &format!("l{l}.a_dst"));
+    let d_total = b.len();
+    let dh = d_total / heads;
+    linear_blocked(h, n, d_in, w, None, d_total, hw);
+
+    for hd in 0..heads {
+        let ah_src = &a_src[hd * dh..(hd + 1) * dh];
+        let ah_dst = &a_dst[hd * dh..(hd + 1) * dh];
+        for i in 0..n {
+            let v = &hw[i * d_total + hd * dh..i * d_total + (hd + 1) * dh];
+            s_row[i] = v.iter().zip(ah_src).map(|(a, b)| a * b).sum();
+            s_col[i] = v.iter().zip(ah_dst).map(|(a, b)| a * b).sum();
+        }
+        for d in 0..n {
+            let (lo, hi) = (off[d] as usize, off[d + 1] as usize);
+            // LeakyReLU scores + running max for the stable softmax
+            let mut mx = f32::NEG_INFINITY;
+            for e in lo..hi {
+                let raw = s_row[d] + s_col[csr_src[e] as usize];
+                let sc = if raw >= 0.0 { raw } else { 0.2 * raw };
+                edge_e[e] = sc;
+                mx = mx.max(sc);
+            }
+            let mut sum = 0.0f32;
+            for e in lo..hi {
+                let v = (edge_e[e] - mx).exp();
+                edge_e[e] = v;
+                sum += v;
+            }
+            let ob = &mut out[d * d_total + hd * dh..d * d_total + (hd + 1) * dh];
+            ob.fill(0.0); // this row+head block only — written once per batch
+            for e in lo..hi {
+                let attn = edge_e[e] / sum;
+                let src =
+                    &hw[csr_src[e] as usize * d_total + hd * dh..][..dh];
+                for (o, &x) in ob.iter_mut().zip(src) {
+                    *o += attn * x;
+                }
+            }
+        }
+    }
+    for i in 0..n {
+        let row = &mut out[i * d_total..(i + 1) * d_total];
+        for (o, &bv) in row.iter_mut().zip(b) {
+            *o += bv;
+        }
+    }
+    d_total
+}
+
+// ---- f16 feature quantization ---------------------------------------
+//
+// Manual IEEE 754 binary16 conversion (no `half` crate in the offline
+// build). Round-to-nearest on the mantissa; values below the half
+// min-normal collapse to scaled subnormals; |v| >= 65520 saturates to
+// infinity. Relative round-trip error is <= 2^-11 for normal values —
+// the documented f16 parity bound in rust/tests/exec.rs derives from
+// this.
+
+pub(crate) fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let av = f32::from_bits(bits & 0x7fff_ffff);
+    if av.is_nan() {
+        return sign | 0x7e00;
+    }
+    if av >= 65520.0 {
+        return sign | 0x7c00; // rounds to +/- inf
+    }
+    if av < f32::from_bits(0x3880_0000) {
+        // below the f16 min normal (2^-14): magnitude in units of the
+        // subnormal ulp 2^-24. q == 1024 correctly carries into the
+        // min-normal encoding (0x400).
+        let q = (av * 16_777_216.0).round() as u32;
+        return sign | q as u16;
+    }
+    let e = (bits >> 23) & 0xff;
+    let m = bits & 0x7f_ffff;
+    let mut out = (((e - 112) << 10) | (m >> 13)) as u32;
+    if m & 0x1000 != 0 {
+        out += 1; // round up; mantissa carry correctly bumps the exponent
+    }
+    sign | out as u16
+}
+
+pub(crate) fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let mant = (bits & 0x3ff) as u32;
+    let out = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: renormalize into the f32 exponent range
+            let mut e = 113u32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(out)
+}
+
+impl Executor for BlockedCpuExecutor {
+    fn name(&self) -> &'static str {
+        if self.quantize_f16 {
+            "blocked-f16"
+        } else {
+            "blocked"
+        }
+    }
+
+    fn forward(
+        &self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        view: &PlanView,
+        x: &[f32],
+        scratch: &mut ExecScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let n = view.n;
+        let e = view.num_edges();
+        assert_eq!(x.len(), n * meta.feat);
+        scratch.ensure(meta, state, n, e);
+        build_csr(
+            view,
+            &mut scratch.csr_off[..n + 1],
+            &mut scratch.csr_src[..e],
+            &mut scratch.csr_w[..e],
+        );
+
+        // layer 0 input: features, optionally round-tripped through f16
+        if self.quantize_f16 {
+            let q = &mut scratch.q16[..n * meta.feat];
+            for (qi, &v) in q.iter_mut().zip(x) {
+                *qi = f32_to_f16_bits(v);
+            }
+            for (hi, &qi) in scratch.h[..n * meta.feat].iter_mut().zip(q.iter()) {
+                *hi = f16_bits_to_f32(qi);
+            }
+        } else {
+            scratch.h[..n * meta.feat].copy_from_slice(x);
+        }
+
+        let off = &scratch.csr_off[..n + 1];
+        let csr_src = &scratch.csr_src[..e];
+        let csr_w = &scratch.csr_w[..e];
+        let mut dim = meta.feat;
+        for l in 0..meta.layers {
+            let d_out = match meta.model.as_str() {
+                "gcn" => {
+                    spmm_blocked(off, csr_src, csr_w, &scratch.h, n, dim, &mut scratch.agg);
+                    let w = tensor(state, meta, &format!("l{l}.w"));
+                    let b = tensor(state, meta, &format!("l{l}.b"));
+                    let d_out = b.len();
+                    linear_blocked(&scratch.agg, n, dim, w, Some(b), d_out, &mut scratch.h2);
+                    d_out
+                }
+                "sage" => {
+                    spmm_blocked(off, csr_src, csr_w, &scratch.h, n, dim, &mut scratch.agg);
+                    // concat [h ‖ Âh], interleaved per row
+                    for i in 0..n {
+                        scratch.cat[i * 2 * dim..i * 2 * dim + dim]
+                            .copy_from_slice(&scratch.h[i * dim..(i + 1) * dim]);
+                        scratch.cat[i * 2 * dim + dim..(i + 1) * 2 * dim]
+                            .copy_from_slice(&scratch.agg[i * dim..(i + 1) * dim]);
+                    }
+                    let w = tensor(state, meta, &format!("l{l}.w"));
+                    let b = tensor(state, meta, &format!("l{l}.b"));
+                    let d_out = b.len();
+                    linear_blocked(
+                        &scratch.cat,
+                        n,
+                        2 * dim,
+                        w,
+                        Some(b),
+                        d_out,
+                        &mut scratch.h2,
+                    );
+                    d_out
+                }
+                "gat" => gat_layer_blocked(
+                    meta,
+                    state,
+                    l,
+                    n,
+                    off,
+                    csr_src,
+                    &scratch.h,
+                    dim,
+                    &mut scratch.hw,
+                    &mut scratch.s_row,
+                    &mut scratch.s_col,
+                    &mut scratch.edge_e,
+                    &mut scratch.h2,
+                ),
+                other => panic!("unknown model {other}"),
+            };
+            if l != meta.layers - 1 {
+                let gm = tensor(state, meta, &format!("l{l}.ln_g"));
+                let bt = tensor(state, meta, &format!("l{l}.ln_b"));
+                layernorm_relu(&mut scratch.h2, n, d_out, gm, bt);
+            }
+            std::mem::swap(&mut scratch.h, &mut scratch.h2);
+            dim = d_out;
+        }
+        debug_assert_eq!(dim, meta.classes);
+        out.clear();
+        out.extend_from_slice(&scratch.h[..n * meta.classes]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::testutil::{ring_graph, toy_meta};
+    use crate::exec::ReferenceExecutor;
+
+    fn run(
+        exec: &dyn Executor,
+        model: &str,
+        seed: u64,
+        n: usize,
+        scratch: &mut ExecScratch,
+    ) -> Vec<f32> {
+        let meta = toy_meta(model);
+        let state = ModelState::init(&meta, seed);
+        let (src, dst, w) = ring_graph(n);
+        let view = PlanView {
+            n,
+            edge_src: &src,
+            edge_dst: &dst,
+            weights: &w,
+        };
+        let x: Vec<f32> = (0..n * 4).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut out = Vec::new();
+        exec.forward(&meta, &state, &view, &x, scratch, &mut out);
+        out
+    }
+
+    #[test]
+    fn blocked_matches_reference_on_ring() {
+        for model in ["gcn", "sage", "gat"] {
+            let mut s1 = ExecScratch::new();
+            let mut s2 = ExecScratch::new();
+            let want = run(&ReferenceExecutor, model, 3, 12, &mut s1);
+            let got = run(&BlockedCpuExecutor::new(false), model, 3, 12, &mut s2);
+            assert_eq!(want.len(), got.len(), "{model}");
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!((a - b).abs() <= 1e-5, "{model} [{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shrinking_batches_is_clean() {
+        // run a big batch, then a smaller one in the SAME scratch; the
+        // small batch must match a fresh-scratch run exactly (no stale
+        // rows leak through the no-zero-fill kernels)
+        for model in ["gcn", "sage", "gat"] {
+            let exec = BlockedCpuExecutor::new(false);
+            let mut reused = ExecScratch::new();
+            let _big = run(&exec, model, 9, 24, &mut reused);
+            let got = run(&exec, model, 5, 8, &mut reused);
+            let mut fresh = ExecScratch::new();
+            let want = run(&exec, model, 5, 8, &mut fresh);
+            assert_eq!(want, got, "{model}: stale scratch state leaked");
+        }
+    }
+
+    #[test]
+    fn f16_round_trip_error_is_bounded() {
+        for i in 0..4096 {
+            let v = ((i as f32) * 0.731 - 1500.0) * 1.7;
+            let r = f16_bits_to_f32(f32_to_f16_bits(v));
+            let tol = v.abs().max(6.2e-5) * 1.0e-3;
+            assert!((v - r).abs() <= tol, "{v} -> {r}");
+        }
+        // specials
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(0.0)), 0.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0)), 1.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-2.5)), -2.5);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e9)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0e-9)), 0.0);
+    }
+
+    #[test]
+    fn f16_executor_stays_near_reference() {
+        for model in ["gcn", "sage", "gat"] {
+            let mut s1 = ExecScratch::new();
+            let mut s2 = ExecScratch::new();
+            let want = run(&ReferenceExecutor, model, 7, 16, &mut s1);
+            let got = run(&BlockedCpuExecutor::new(true), model, 7, 16, &mut s2);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!((a - b).abs() <= 0.05, "{model} [{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_build_is_stable_and_complete() {
+        // duplicate destinations keep COO order; offsets tile the edges
+        let src = [3u32, 1, 0, 2, 1];
+        let dst = [1u32, 0, 1, 3, 1];
+        let w = [0.1f32, 0.2, 0.3, 0.4, 0.5];
+        let view = PlanView {
+            n: 4,
+            edge_src: &src,
+            edge_dst: &dst,
+            weights: &w,
+        };
+        let mut off = vec![0u32; 5];
+        let mut cs = vec![0u32; 5];
+        let mut cw = vec![0f32; 5];
+        build_csr(&view, &mut off, &mut cs, &mut cw);
+        assert_eq!(off, vec![0, 1, 4, 4, 5]);
+        assert_eq!(cs, vec![1, 3, 0, 1, 2]);
+        assert_eq!(cw, vec![0.2, 0.1, 0.3, 0.5, 0.4]);
+    }
+}

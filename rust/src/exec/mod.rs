@@ -1,0 +1,365 @@
+//! Pluggable execution backends for the per-batch forward pass.
+//!
+//! Everything upstream of the math — plan construction, arena
+//! materialization, snapshot swaps, coalescing — got fast across PRs
+//! 2–6 while the forward itself stayed the scalar reference in
+//! `inference::fullgraph`. The [`Executor`] trait makes the forward a
+//! swappable component (DESIGN.md §13):
+//!
+//! * [`ReferenceExecutor`] — wraps `fullgraph::forward` unchanged; the
+//!   numerical oracle every other backend is tested against.
+//! * [`BlockedCpuExecutor`] — CSR-converted, dst-major, 8-lane-blocked
+//!   CPU kernels with zero steady-state allocations via [`ExecScratch`]
+//!   and optional f16 feature quantization.
+//! * [`PjrtExecutor`] — stages batches through the vendored `xla` PJRT
+//!   bindings; with the offline stub it fails cleanly at construction,
+//!   so swapping in real bindings stays a local change.
+//!
+//! The contract is deliberately narrow: a forward consumes a borrowed
+//! [`PlanView`] (the COO slices a materialized plan already holds), a
+//! dense feature block, and the model state, and writes logits. All
+//! intermediate storage lives in the caller-owned [`ExecScratch`],
+//! sized once per shard from the largest bucket and reused for every
+//! batch thereafter.
+
+pub mod blocked;
+pub mod pjrt;
+pub mod reference;
+
+pub use blocked::BlockedCpuExecutor;
+pub use pjrt::PjrtExecutor;
+pub use reference::ReferenceExecutor;
+
+use anyhow::Result;
+
+use crate::runtime::{ArtifactMeta, ModelState};
+
+/// Borrowed per-batch graph view: COO edge slices over batch-local
+/// node ids `0..n`, exactly as a materialized plan stores them (edge
+/// `e` aggregates `src[e]` into `dst[e]` with weight `weights[e]`).
+#[derive(Debug, Clone, Copy)]
+pub struct PlanView<'a> {
+    pub n: usize,
+    pub edge_src: &'a [u32],
+    pub edge_dst: &'a [u32],
+    pub weights: &'a [f32],
+}
+
+impl<'a> PlanView<'a> {
+    pub fn num_edges(&self) -> usize {
+        self.edge_src.len()
+    }
+}
+
+/// A forward-pass backend. Implementations must be deterministic for a
+/// fixed (meta, state, view, x): serving compares executors by replaying
+/// pinned seeds (ci.sh executor smoke).
+pub trait Executor: Send {
+    /// Human-readable backend name (CLI + bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Compute logits for one batch: `out` is resized to
+    /// `view.n * meta.classes`, row-major. `x` holds `view.n * meta.feat`
+    /// dense features. Must not retain references into `scratch`.
+    fn forward(
+        &self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        view: &PlanView,
+        x: &[f32],
+        scratch: &mut ExecScratch,
+        out: &mut Vec<f32>,
+    );
+}
+
+/// Executor selector: parsed from `--executor`, carried by value into
+/// shard workers (the boxed executor itself is built thread-local).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Scalar oracle (`fullgraph::forward`).
+    Reference,
+    /// SIMD-blocked CSR CPU backend (default).
+    Blocked,
+    /// Blocked backend + f16 feature quantization (looser parity bound).
+    BlockedF16,
+    /// Vendored PJRT bindings; errors at build on the offline stub.
+    Pjrt,
+}
+
+impl Default for ExecutorKind {
+    fn default() -> Self {
+        ExecutorKind::Blocked
+    }
+}
+
+impl ExecutorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecutorKind::Reference => "reference",
+            ExecutorKind::Blocked => "blocked",
+            ExecutorKind::BlockedF16 => "blocked-f16",
+            ExecutorKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a `--executor` value. `None` for unknown names — the CLI
+    /// reports the accepted set.
+    pub fn from_name(s: &str) -> Option<ExecutorKind> {
+        match s {
+            "reference" => Some(ExecutorKind::Reference),
+            "blocked" => Some(ExecutorKind::Blocked),
+            "blocked-f16" => Some(ExecutorKind::BlockedF16),
+            "pjrt" => Some(ExecutorKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub const ALL_NAMES: &'static str = "reference|blocked|blocked-f16|pjrt";
+
+    /// Construct the backend. Fallibility lives here (not in
+    /// `Executor::forward`) so a backend whose runtime is unavailable —
+    /// the PJRT stub — fails once, loudly, before any query is accepted.
+    pub fn build(self) -> Result<Box<dyn Executor>> {
+        match self {
+            ExecutorKind::Reference => Ok(Box::new(ReferenceExecutor)),
+            ExecutorKind::Blocked => Ok(Box::new(BlockedCpuExecutor::new(false))),
+            ExecutorKind::BlockedF16 => Ok(Box::new(BlockedCpuExecutor::new(true))),
+            ExecutorKind::Pjrt => Ok(Box::new(PjrtExecutor::new()?)),
+        }
+    }
+}
+
+/// Reusable per-worker forward scratch. One instance per shard worker,
+/// grown to the high-water batch shape on first use (the shard sizes it
+/// from its bucket up front) and never shrunk — the steady-state
+/// forward performs zero heap allocations.
+///
+/// Buffers are grown, not re-zeroed: every kernel writes each row it
+/// owns exactly once, so rows beyond the current batch's `n` are simply
+/// never read. That retires the old `spmm` full-buffer `fill(0.0)` —
+/// only live rows are ever touched.
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    /// Ping-pong activation buffers (`n * d_max`).
+    pub(crate) h: Vec<f32>,
+    pub(crate) h2: Vec<f32>,
+    /// Aggregation target (`n * d_max`).
+    pub(crate) agg: Vec<f32>,
+    /// SAGE concat input (`n * 2 * d_max`).
+    pub(crate) cat: Vec<f32>,
+    /// GAT projected features (`n * d_max`).
+    pub(crate) hw: Vec<f32>,
+    /// CSR row offsets (`n + 1`), counting-sorted per batch.
+    pub(crate) csr_off: Vec<u32>,
+    /// CSR column (source) ids, dst-major (`e`).
+    pub(crate) csr_src: Vec<u32>,
+    /// CSR edge weights, aligned with `csr_src` (`e`).
+    pub(crate) csr_w: Vec<f32>,
+    /// GAT per-node attention scores (`n` each).
+    pub(crate) s_row: Vec<f32>,
+    pub(crate) s_col: Vec<f32>,
+    /// GAT per-edge exponentials (`e`), segmented by CSR row.
+    pub(crate) edge_e: Vec<f32>,
+    /// Quantized feature staging for the f16 path (`n * feat`).
+    pub(crate) q16: Vec<u16>,
+    /// Cached max layer width for the meta this scratch serves.
+    d_max: usize,
+}
+
+impl ExecScratch {
+    pub fn new() -> ExecScratch {
+        ExecScratch::default()
+    }
+
+    /// Pre-size for up to `max_nodes` batch nodes and `max_edges` batch
+    /// edges under `meta`'s layer widths. Shards call this once with
+    /// their bucket capacity so the serve path never grows mid-stream.
+    pub fn for_meta(meta: &ArtifactMeta, state: &ModelState, max_nodes: usize, max_edges: usize) -> ExecScratch {
+        let mut s = ExecScratch::new();
+        s.ensure(meta, state, max_nodes, max_edges);
+        s
+    }
+
+    /// Widest activation any layer produces (bias length), floored by
+    /// the input feature width. Computed once per scratch lifetime.
+    fn compute_d_max(meta: &ArtifactMeta, state: &ModelState) -> usize {
+        let mut d = meta.feat.max(meta.classes);
+        for l in 0..meta.layers {
+            if let Some(b) = state.tensor(meta, &format!("l{l}.b")) {
+                d = d.max(b.len());
+            }
+        }
+        d
+    }
+
+    /// Grow (never shrink) every buffer to fit an `n`-node, `e`-edge
+    /// batch. No-op (and allocation-free) once high-water sized.
+    pub(crate) fn ensure(
+        &mut self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        n: usize,
+        e: usize,
+    ) {
+        if self.d_max == 0 {
+            self.d_max = ExecScratch::compute_d_max(meta, state);
+        }
+        let d = self.d_max;
+        grow(&mut self.h, n * d);
+        grow(&mut self.h2, n * d);
+        grow(&mut self.agg, n * d);
+        grow(&mut self.cat, n * 2 * d);
+        grow(&mut self.hw, n * d);
+        grow_u32(&mut self.csr_off, n + 1);
+        grow_u32(&mut self.csr_src, e);
+        grow(&mut self.csr_w, e);
+        grow(&mut self.s_row, n);
+        grow(&mut self.s_col, n);
+        grow(&mut self.edge_e, e);
+        if self.q16.len() < n * meta.feat {
+            self.q16.resize(n * meta.feat, 0);
+        }
+    }
+
+    /// Resident bytes across all buffers (shard memory accounting).
+    pub fn bytes(&self) -> usize {
+        (self.h.capacity()
+            + self.h2.capacity()
+            + self.agg.capacity()
+            + self.cat.capacity()
+            + self.hw.capacity()
+            + self.csr_w.capacity()
+            + self.s_row.capacity()
+            + self.s_col.capacity()
+            + self.edge_e.capacity())
+            * 4
+            + (self.csr_off.capacity() + self.csr_src.capacity()) * 4
+            + self.q16.capacity() * 2
+    }
+}
+
+fn grow(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+fn grow_u32(v: &mut Vec<u32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0);
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::ArtifactMeta;
+
+    /// Tiny manifest-backed meta (feat=4, hidden=4, classes=2,
+    /// layers=2, heads=2) mirroring `fullgraph`'s test fixture.
+    pub fn toy_meta(model: &str) -> ArtifactMeta {
+        let params: Vec<(&str, Vec<usize>)> = match model {
+            "gcn" => vec![
+                ("l0.w", vec![4, 4]),
+                ("l0.b", vec![4]),
+                ("l0.ln_g", vec![4]),
+                ("l0.ln_b", vec![4]),
+                ("l1.w", vec![4, 2]),
+                ("l1.b", vec![2]),
+            ],
+            "sage" => vec![
+                ("l0.w", vec![8, 4]),
+                ("l0.b", vec![4]),
+                ("l0.ln_g", vec![4]),
+                ("l0.ln_b", vec![4]),
+                ("l1.w", vec![8, 2]),
+                ("l1.b", vec![2]),
+            ],
+            "gat" => vec![
+                ("l0.w", vec![4, 4]),
+                ("l0.b", vec![4]),
+                ("l0.a_src", vec![2, 2]),
+                ("l0.a_dst", vec![2, 2]),
+                ("l0.ln_g", vec![4]),
+                ("l0.ln_b", vec![4]),
+                ("l1.w", vec![4, 2]),
+                ("l1.b", vec![2]),
+                ("l1.a_src", vec![1, 2]),
+                ("l1.a_dst", vec![1, 2]),
+            ],
+            _ => unreachable!(),
+        };
+        let mut entries = String::new();
+        let mut off = 0usize;
+        for (i, (name, shape)) in params.iter().enumerate() {
+            let size: usize = shape.iter().product();
+            if i > 0 {
+                entries.push(',');
+            }
+            entries.push_str(&format!(
+                r#"{{"name": "{name}", "shape": {shape:?}, "offset": {off}, "size": {size}}}"#
+            ));
+            off += size;
+        }
+        let doc = format!(
+            r#"{{"version": 1, "artifacts": [{{"id": "t", "model": "{model}",
+             "kind": "infer", "n_pad": 16, "feat": 4, "classes": 2,
+             "hidden": 4, "layers": 2, "heads": 2, "dropout": 0.0,
+             "weight_decay": 0.0, "param_count": {off},
+             "params": [{entries}], "path": "t.hlo.txt"}}]}}"#
+        );
+        Manifest::parse(&doc).unwrap().artifacts[0].clone()
+    }
+
+    /// Ring with self loops, uniform 1/3 weights, edges (v -> u).
+    pub fn ring_graph(n: usize) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        let mut w = Vec::new();
+        for u in 0..n as u32 {
+            for v in [u, (u + 1) % n as u32, (u + n as u32 - 1) % n as u32] {
+                src.push(v);
+                dst.push(u);
+                w.push(1.0 / 3.0);
+            }
+        }
+        (src, dst, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_names() {
+        for kind in [
+            ExecutorKind::Reference,
+            ExecutorKind::Blocked,
+            ExecutorKind::BlockedF16,
+            ExecutorKind::Pjrt,
+        ] {
+            assert_eq!(ExecutorKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(ExecutorKind::from_name("cuda"), None);
+        assert_eq!(ExecutorKind::default(), ExecutorKind::Blocked);
+    }
+
+    #[test]
+    fn pjrt_build_fails_cleanly_on_stub() {
+        let err = ExecutorKind::Pjrt.build().expect_err("stub must not build");
+        assert!(err.to_string().contains("PJRT"), "{err}");
+    }
+
+    #[test]
+    fn scratch_grows_once_then_stays() {
+        let meta = testutil::toy_meta("sage");
+        let state = ModelState::init(&meta, 1);
+        let mut s = ExecScratch::for_meta(&meta, &state, 64, 512);
+        let bytes = s.bytes();
+        assert!(bytes > 0);
+        // smaller batches never reallocate
+        s.ensure(&meta, &state, 16, 100);
+        assert_eq!(s.bytes(), bytes);
+    }
+}

@@ -1,0 +1,62 @@
+//! PJRT-backed executor over the vendored `xla` bindings.
+//!
+//! With the offline stub (`vendor/xla`) the client constructor returns
+//! a clean error, so `ExecutorKind::Pjrt.build()` fails before any
+//! query is accepted — the CLI surfaces the stub message instead of a
+//! mid-stream panic. Swapping real bindings back in (rust/DESIGN.md §6)
+//! turns this file into the only integration point: compile the
+//! artifact once, then stage each batch through host buffers exactly
+//! like `Runtime::infer_step` does.
+
+use anyhow::{anyhow, Result};
+
+use crate::exec::{ExecScratch, Executor, PlanView};
+use crate::runtime::{ArtifactMeta, ModelState};
+
+pub struct PjrtExecutor {
+    client: xla::PjRtClient,
+}
+
+impl PjrtExecutor {
+    /// Create the PJRT CPU client. Errors on the vendored stub.
+    pub fn new() -> Result<PjrtExecutor> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT executor unavailable: {e}"))?;
+        Ok(PjrtExecutor { client })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn forward(
+        &self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        view: &PlanView,
+        x: &[f32],
+        _scratch: &mut ExecScratch,
+        out: &mut Vec<f32>,
+    ) {
+        // Host->device staging mirrors Runtime::batch_buffers; real
+        // bindings would then execute the compiled `meta.id` artifact
+        // and read logits back into `out`. With the stub, new() fails,
+        // so this body is unreachable; any staging error still panics
+        // with the descriptive stub message rather than silently
+        // returning garbage logits.
+        let staged = self
+            .client
+            .buffer_from_host_buffer(x, &[view.n, meta.feat], None)
+            .and_then(|_| {
+                self.client
+                    .buffer_from_host_buffer(&state.params, &[meta.param_count], None)
+            });
+        if let Err(e) = staged {
+            panic!("pjrt forward ({} nodes): {e}", view.n);
+        }
+        out.resize(view.n * meta.classes, 0.0);
+        unimplemented!("pjrt forward: execute path lands with real bindings");
+    }
+}

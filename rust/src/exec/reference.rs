@@ -1,0 +1,35 @@
+//! Scalar oracle backend: delegates to `inference::fullgraph::forward`
+//! unchanged. Every other executor is property-tested against this one
+//! (`rust/tests/exec.rs`), so its output defines correctness.
+
+use crate::exec::{ExecScratch, Executor, PlanView};
+use crate::inference::fullgraph::{self, SparseGraphRef};
+use crate::runtime::{ArtifactMeta, ModelState};
+
+pub struct ReferenceExecutor;
+
+impl Executor for ReferenceExecutor {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn forward(
+        &self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        view: &PlanView,
+        x: &[f32],
+        _scratch: &mut ExecScratch,
+        out: &mut Vec<f32>,
+    ) {
+        let g = SparseGraphRef {
+            n: view.n,
+            edge_src: view.edge_src,
+            edge_dst: view.edge_dst,
+            weights: view.weights,
+        };
+        let logits = fullgraph::forward(meta, state, &g, x);
+        out.clear();
+        out.extend_from_slice(&logits);
+    }
+}

@@ -10,6 +10,7 @@ use super::runner::{self, Env};
 use crate::bench_harness::{secs, Table};
 use crate::cli::Args;
 use crate::config::ExpScale;
+use crate::exec::{Executor, ExecutorKind};
 use crate::inference::fullgraph;
 use crate::util::Rng;
 
@@ -62,23 +63,28 @@ pub fn run(scale: &ExpScale, args: &Args) -> Result<()> {
             ]);
         }
     }
-    // full-batch (exact sparse host inference) reference row
-    let t = crate::util::Timer::start();
+    // full-batch (exact sparse host inference) reference row, through
+    // the selected execution backend (whole graph = one PlanView)
+    let kind = ExecutorKind::from_name(args.get_or("executor", "blocked"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown --executor (expected {})", ExecutorKind::ALL_NAMES)
+        })?;
+    let exec = kind.build()?;
     let meta = env
         .rt
         .manifest
         .bucket_meta(model, "infer", 1)
         .unwrap()
         .clone();
-    let fb = fullgraph::full_graph_inference(
+    let fb = fullgraph::full_graph_inference_with(
+        exec.as_ref(),
         &meta,
         &trained.state,
         &ds,
         &ds.splits.test,
     );
-    let _ = t;
     table.row(&[
-        "full-batch (exact)".into(),
+        format!("full-batch ({})", exec.name()),
         "-".into(),
         format!("{:.1}", fb.accuracy * 100.0),
         secs(fb.seconds),

@@ -6,8 +6,9 @@ use anyhow::{anyhow, Result};
 
 use crate::batching::{BatchArena, BatchCache, BatchGenerator};
 use crate::datasets::Dataset;
+use crate::exec::{ExecScratch, Executor, PlanView};
 use crate::pipeline::run_prefetched;
-use crate::runtime::{ModelState, Runtime, StepMetrics};
+use crate::runtime::{ArtifactMeta, ModelState, Runtime, StepMetrics};
 use crate::util::{Rng, Timer};
 
 /// Outcome of a batched inference pass.
@@ -111,5 +112,78 @@ pub fn infer_with_batches(
         pad_utilization: real_nodes as f64 / (cache.len() * meta.n_pad) as f64,
         cache_bytes: cache.memory_bytes(),
         overlap_ratio: stats.overlap_ratio(),
+    })
+}
+
+/// Run inference over a prebuilt plan cache entirely on the host
+/// through a pluggable [`Executor`] backend — no AOT artifact lookup,
+/// no PJRT round-trip, no bucket padding (each batch executes at its
+/// real node count, so `pad_utilization` is 1.0 and `overlap_ratio`
+/// is 0.0: the forward is synchronous with feature gathering).
+///
+/// Loss and accuracy are computed on the host from the plan's output
+/// rows — the executor contract puts a plan's output nodes in the
+/// first `num_outputs` rows, exactly as the serve shards consume them.
+pub fn infer_with_executor(
+    exec: &dyn Executor,
+    meta: &ArtifactMeta,
+    ds: &Dataset,
+    state: &ModelState,
+    cache: &BatchCache,
+    scratch: &mut ExecScratch,
+) -> Result<InferReport> {
+    anyhow::ensure!(!cache.is_empty(), "no batches for inference");
+    anyhow::ensure!(
+        meta.feat == ds.feat_dim && meta.classes == ds.num_classes,
+        "artifact shape ({}, {}) != dataset shape ({}, {})",
+        meta.feat,
+        meta.classes,
+        ds.feat_dim,
+        ds.num_classes
+    );
+    let t = Timer::start();
+    let mut x: Vec<f32> = Vec::new();
+    let mut logits: Vec<f32> = Vec::new();
+    let mut correct = 0usize;
+    let mut loss_sum = 0f64;
+    let mut outputs = 0usize;
+    for i in 0..cache.len() {
+        let nodes = cache.batch_nodes(i);
+        let n = nodes.len();
+        x.resize(n * meta.feat, 0.0);
+        for (j, &u) in nodes.iter().enumerate() {
+            ds.node_features_into(u, &mut x[j * meta.feat..(j + 1) * meta.feat]);
+        }
+        let view = PlanView {
+            n,
+            edge_src: cache.edge_src_of(i),
+            edge_dst: cache.edge_dst_of(i),
+            weights: cache.edge_weights_of(i),
+        };
+        exec.forward(meta, state, &view, &x[..n * meta.feat], scratch, &mut logits);
+        for (j, &u) in cache.output_nodes(i).iter().enumerate() {
+            let row = &logits[j * meta.classes..(j + 1) * meta.classes];
+            let label = ds.labels[u as usize] as usize;
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+            loss_sum += (lse - row[label]) as f64;
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap();
+            correct += usize::from(pred == label);
+        }
+        outputs += cache.num_outputs(i);
+    }
+    Ok(InferReport {
+        accuracy: correct as f64 / outputs.max(1) as f64,
+        mean_loss: loss_sum / outputs.max(1) as f64,
+        seconds: t.elapsed_s(),
+        batches: cache.len(),
+        pad_utilization: 1.0,
+        cache_bytes: cache.memory_bytes(),
+        overlap_ratio: 0.0,
     })
 }

@@ -12,6 +12,7 @@
 //!    Python→HLO→PJRT path end to end.
 
 use crate::datasets::Dataset;
+use crate::exec::{ExecScratch, Executor, PlanView};
 use crate::runtime::{ArtifactMeta, ModelState};
 
 /// Borrowed sparse graph view (full graph or batch subgraph).
@@ -225,6 +226,25 @@ pub fn full_graph_inference(
     ds: &Dataset,
     eval_nodes: &[u32],
 ) -> FullGraphReport {
+    full_graph_inference_with(
+        &crate::exec::ReferenceExecutor,
+        meta,
+        state,
+        ds,
+        eval_nodes,
+    )
+}
+
+/// Full-graph inference through a pluggable [`Executor`] backend: the
+/// whole graph is one `PlanView`, so Fig. 2's "full-batch" row exercises
+/// the same kernels the serve shards run (`ibmb fig2 --executor`).
+pub fn full_graph_inference_with(
+    exec: &dyn Executor,
+    meta: &ArtifactMeta,
+    state: &ModelState,
+    ds: &Dataset,
+    eval_nodes: &[u32],
+) -> FullGraphReport {
     let t = crate::util::Timer::start();
     let n = ds.graph.num_nodes();
     // materialize features and edges (this is the memory cost the paper
@@ -248,13 +268,15 @@ pub fn full_graph_inference(
             weights.push(ds.graph.norm_weight(u, v));
         }
     }
-    let g = SparseGraphRef {
+    let view = PlanView {
         n,
         edge_src: &edge_src,
         edge_dst: &edge_dst,
         weights: &weights,
     };
-    let logits = forward(meta, state, &g, &x);
+    let mut scratch = ExecScratch::new();
+    let mut logits = Vec::new();
+    exec.forward(meta, state, &view, &x, &mut scratch, &mut logits);
     let c = meta.classes;
     let mut correct = 0usize;
     for &u in eval_nodes {

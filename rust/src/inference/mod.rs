@@ -4,6 +4,9 @@
 //!   any [`crate::batching::BatchGenerator`]'s batches, prefetched and
 //!   padded, produce per-output-node predictions (the paper's Fig. 2 /
 //!   Table 7 "Inference" and "Same method" columns).
+//!   [`driver::infer_with_executor`] runs the same plan caches through
+//!   a pluggable [`crate::exec::Executor`] backend on the host instead
+//!   (no padding, no runtime round-trip).
 //! * [`fullgraph`] — an exact sparse forward pass over the *whole*
 //!   graph on the host, standing in for the paper's chunked full-batch
 //!   GPU inference (Table 7 "Full-batch" column). Also serves as a
@@ -13,4 +16,4 @@
 pub mod driver;
 pub mod fullgraph;
 
-pub use driver::{infer_with_batches, InferReport};
+pub use driver::{infer_with_batches, infer_with_executor, InferReport};

@@ -82,6 +82,20 @@
 //! `benches/updates.rs` → `BENCH_updates.json`, including the
 //! quiesced-vs-zero-quiesce p99-under-churn series).
 //!
+//! ## Execution backends
+//!
+//! The per-batch forward is a pluggable component behind the
+//! [`exec::Executor`] trait (DESIGN.md §13, `--executor`):
+//! [`exec::ReferenceExecutor`] keeps the scalar full-graph oracle,
+//! [`exec::BlockedCpuExecutor`] (the default) counting-sorts each
+//! batch's COO edges into dst-major CSR and sweeps them with 8-lane
+//! blocked, fused normalize+aggregate kernels over a reusable
+//! [`exec::ExecScratch`] (zero steady-state allocations, optional f16
+//! feature quantization), and [`exec::PjrtExecutor`] stages batches
+//! through the vendored `xla` bindings so swapping in the real PJRT
+//! backend stays a local change. `rust/tests/exec.rs` property-tests
+//! blocked-vs-reference logit parity across models and batch shapes.
+//!
 //! ## Telemetry & admission control
 //!
 //! The [`telemetry`] subsystem (DESIGN.md §12) gives every serving run
@@ -110,6 +124,7 @@ pub mod batching;
 pub mod cli;
 pub mod config;
 pub mod datasets;
+pub mod exec;
 pub mod experiments;
 pub mod graph;
 pub mod inference;

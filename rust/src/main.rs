@@ -28,6 +28,7 @@ use ibmb::batching::{cache_io, CowCache};
 use ibmb::cli::Args;
 use ibmb::config::ExpScale;
 use ibmb::datasets::ALL_DATASETS;
+use ibmb::exec::ExecutorKind;
 use ibmb::experiments::{self, runner};
 use ibmb::graph::{parse_delta_log, synth_delta_stream, GraphDelta};
 use ibmb::serve::{self, Churn, RouterIndex, ServeConfig, Skew};
@@ -44,6 +45,7 @@ fn usage() -> ! {
          [--skew uniform|zipf] [--zipf-s F] [--window-us N] [--coalesce N] \
          [--results-cache-bytes N] [--results-ttl-ms N] [--cold-aux N] \
          [--hidden N] [--layers N] [--heads N] \
+         [--executor reference|blocked|blocked-f16|pjrt] \
          [--cache FILE] [--save-cache FILE]\n\
          admission/telemetry: [--offered-qps F] (0 = closed loop) \
          [--deadline-ms F] [--tenants N] [--tenant-rate F] \
@@ -265,6 +267,26 @@ fn validate_bench_json(text: &str) -> Result<String, String> {
                     }
                 }
             }
+            // the executor before/after pair: one pinned-shape serve
+            // run per forward backend (reference vs blocked)
+            let execs = doc
+                .get("executor_p99")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| {
+                    format!("bench {bench:?}: missing array \"executor_p99\"")
+                })?;
+            if execs.is_empty() {
+                return Err(format!("bench {bench:?}: empty \"executor_p99\""));
+            }
+            for (i, run) in execs.iter().enumerate() {
+                for k in ["executor", "p99_ms", "qps"] {
+                    if run.get(k).is_none() {
+                        return Err(format!(
+                            "bench {bench:?}: executor_p99[{i}] missing key {k:?}"
+                        ));
+                    }
+                }
+            }
             (
                 "runs",
                 &["qps", "p50_ms", "p99_ms", "coalescing_factor", "hit_rate", "shards"],
@@ -272,6 +294,26 @@ fn validate_bench_json(text: &str) -> Result<String, String> {
         }
         "micro_pipeline" => {
             need(&["dataset", "batches"])?;
+            // the per-executor forward-throughput series (the ≥3x
+            // blocked-vs-reference acceptance gate reads this)
+            let fwd = doc
+                .get("forward")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| {
+                    format!("bench {bench:?}: missing array \"forward\"")
+                })?;
+            if fwd.is_empty() {
+                return Err(format!("bench {bench:?}: empty \"forward\""));
+            }
+            for (i, run) in fwd.iter().enumerate() {
+                for k in ["executor", "batches_per_s", "speedup_vs_reference"] {
+                    if run.get(k).is_none() {
+                        return Err(format!(
+                            "bench {bench:?}: forward[{i}] missing key {k:?}"
+                        ));
+                    }
+                }
+            }
             ("depths", &["depth", "batches_per_s", "overlap_ratio"])
         }
         "updates" => {
@@ -472,11 +514,27 @@ fn main() -> Result<()> {
             );
         }
         Some("serve") => {
-            // Needs no AOT artifacts: the service executes plans with
-            // the exact CPU reference forward pass (serve::shard).
+            // Needs no AOT artifacts: shards execute plans through the
+            // selected host Executor backend (exec::ExecutorKind; the
+            // blocked CSR forward by default, `--executor reference`
+            // for the scalar oracle).
             let ds_name = args.get_or("dataset", "synth-arxiv");
             let ds = runner::dataset(ds_name, &scale, args.get_u64("seed", 0));
+            let executor = match ExecutorKind::from_name(
+                args.get_or("executor", "blocked"),
+            ) {
+                Some(k) => k,
+                None => {
+                    eprintln!(
+                        "unknown --executor {:?} (expected {})",
+                        args.get_or("executor", "blocked"),
+                        ExecutorKind::ALL_NAMES
+                    );
+                    std::process::exit(2);
+                }
+            };
             let cfg = ServeConfig {
+                executor,
                 model: args.get_or("model", "gcn").to_string(),
                 shards: args.get_usize("shards", 1),
                 clients: args.get_usize("clients", 16),
@@ -699,6 +757,11 @@ fn main() -> Result<()> {
                     r.memo_swept
                 );
                 println!(
+                    "  executor {}: logit_hash={:#018x}",
+                    cfg.executor.name(),
+                    r.logit_hash
+                );
+                println!(
                     "  gc: {} old-epoch straggler groups observed at swaps, \
                      peak {} KiB snapshot bytes retained",
                     r.gc_retained_groups,
@@ -795,6 +858,13 @@ fn main() -> Result<()> {
                 report.cache_hit_rate * 100.0,
                 report.cold_routes,
                 report.cold_plans
+            );
+            // ci.sh replays a pinned seed under each executor and
+            // asserts this line matches bit-for-bit
+            println!(
+                "  executor {}: logit_hash={:#018x}",
+                cfg.executor.name(),
+                report.logit_hash
             );
             println!(
                 "  shards: {:?} queries (balance {:.2}), arenas {} KiB \

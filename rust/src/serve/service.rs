@@ -44,6 +44,7 @@ use anyhow::Result;
 use crate::batching::{BatchGenerator, CowCache, NodeWiseIbmb};
 use crate::config::preset_for;
 use crate::datasets::Dataset;
+use crate::exec::ExecutorKind;
 use crate::graph::GraphDelta;
 use crate::runtime::{ArtifactMeta, ModelState};
 use crate::util::Rng;
@@ -109,6 +110,10 @@ pub struct ServeConfig {
     pub tenant_rate: f64,
     /// Per-tenant token-bucket burst capacity.
     pub tenant_burst: f64,
+    /// Forward backend every shard builds (`--executor`). Probe-built
+    /// once before shards spawn so an unavailable backend (the PJRT
+    /// stub) fails the run cleanly instead of panicking a worker.
+    pub executor: ExecutorKind,
 }
 
 impl Default for ServeConfig {
@@ -133,6 +138,7 @@ impl Default for ServeConfig {
             tenants: 1,
             tenant_rate: 0.0,
             tenant_burst: 32.0,
+            executor: ExecutorKind::default(),
         }
     }
 }
@@ -331,6 +337,22 @@ pub struct ServeReport {
     /// Cumulative count of old-epoch groups observed still holding a
     /// superseded snapshot at swap time.
     pub gc_retained_groups: u64,
+    /// Order-independent hash over every answered query's
+    /// (id, node, pred) triple — executions and memo hits alike. For a
+    /// pinned seed this is invariant across shard interleavings and
+    /// coalescing timing, so `ci.sh` compares it across executors:
+    /// backends within logit tolerance produce identical predictions
+    /// and therefore identical hashes.
+    pub logit_hash: u64,
+}
+
+/// Fold one answered query into the run's prediction hash. Wrapping
+/// sum of per-query mixes: commutative, so completion order (which
+/// varies with thread scheduling) cannot change the digest.
+fn mix_outcome(hash: &mut u64, id: u64, node: u32, pred: u16) {
+    let h = (id ^ ((node as u64) << 32) ^ ((pred as u64) << 17))
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    *hash = hash.wrapping_add(h.rotate_left(23) ^ h);
 }
 
 /// A delta source attached to a serving run — the quiesced-vs-zero-
@@ -473,6 +495,9 @@ pub fn serve_with_churn(
         state0.meta.feat,
         state0.ds.feat_dim
     );
+    // fail an unavailable backend (e.g. the PJRT stub) here, before
+    // any thread spawns or query is accepted
+    drop(cfg.executor.build()?);
     let shards = cfg.shards.max(1);
     let total = cfg.queries as u64;
     let clients = cfg.clients.max(1).min(cfg.queries) as u64;
@@ -569,6 +594,7 @@ pub fn serve_with_churn(
                 bucket: state0.meta.n_pad,
                 ring_depth: cfg.ring_depth,
                 cold_aux: cfg.cold_aux,
+                executor: cfg.executor,
             };
             let out = res_tx.clone();
             let strace = tracer.clone();
@@ -589,6 +615,7 @@ pub fn serve_with_churn(
         let mut inflight: HashMap<u64, (u64, usize)> = HashMap::new();
         let mut gc_retained_groups = 0u64;
         let mut gc_retained_bytes_peak = 0usize;
+        let mut logit_hash = 0u64;
         drop(state0);
         let t0 = Instant::now();
         let mut next_arrival = t0;
@@ -732,6 +759,7 @@ pub fn serve_with_churn(
                 if let Some(logits) = results.get(key, epoch, now) {
                     let start = pos as usize * classes;
                     let pred = argmax(&logits[start..start + classes]);
+                    mix_outcome(&mut logit_hash, id, node, pred as u16);
                     metrics.cache_hit_queries += 1;
                     // an over-deadline query the memo can still answer
                     // is served degraded instead of shed
@@ -856,6 +884,7 @@ pub fn serve_with_churn(
                     inflight.remove(&r.gid);
                     gate.group_done(r.shard_id, r.exec_s);
                     for o in &r.outcomes {
+                        mix_outcome(&mut logit_hash, o.id, o.node, o.pred);
                         let lat = arrivals
                             .remove(&o.id)
                             .map(|a| {
@@ -991,6 +1020,7 @@ pub fn serve_with_churn(
             tenant_stats: gate.tenants.clone(),
             gc_retained_bytes_peak,
             gc_retained_groups,
+            logit_hash,
         };
         Ok((report, update_reports))
     })
@@ -1130,6 +1160,53 @@ mod tests {
         assert_eq!(report.executions, 1, "one execution, then memo hits");
         assert_eq!(report.cache_hits, 39);
         assert!(report.cache_hit_rate > 0.9);
+    }
+
+    #[test]
+    fn executors_agree_on_predictions_and_hash() {
+        let ds = tiny();
+        let eval = ds.splits.train.clone();
+        let base = ServeConfig {
+            queries: 48,
+            clients: 6,
+            shards: 2,
+            flush_window: Duration::from_micros(200),
+            seed: 11,
+            ..Default::default()
+        };
+        let mut runs = Vec::new();
+        for kind in [ExecutorKind::Reference, ExecutorKind::Blocked] {
+            let cfg = ServeConfig {
+                executor: kind,
+                ..base.clone()
+            };
+            let mut setup = prepare(ds.clone(), &eval, &cfg);
+            let r = serve_closed_loop(&mut setup, &eval, Skew::Uniform, &cfg)
+                .unwrap();
+            assert_eq!(r.executed_queries + r.cache_hits, 48, "{kind:?}");
+            runs.push(r);
+        }
+        assert!(runs[0].logit_hash != 0);
+        assert_eq!(
+            runs[0].logit_hash, runs[1].logit_hash,
+            "reference and blocked disagree on predictions"
+        );
+        assert!((runs[0].accuracy - runs[1].accuracy).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pjrt_executor_fails_before_serving_starts() {
+        let ds = tiny();
+        let cfg = ServeConfig {
+            queries: 8,
+            executor: ExecutorKind::Pjrt,
+            ..Default::default()
+        };
+        let eval = ds.splits.train.clone();
+        let mut setup = prepare(ds, &eval, &cfg);
+        let err = serve_closed_loop(&mut setup, &eval, Skew::Uniform, &cfg)
+            .expect_err("stub backend must fail the run cleanly");
+        assert!(err.to_string().contains("PJRT"), "{err}");
     }
 
     #[test]

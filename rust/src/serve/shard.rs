@@ -18,14 +18,16 @@
 //! adjacent regions of the graph and its arena + feature working set
 //! stays memory-local; cold plans follow their root node's cell.
 //!
-//! Execution runs the exact CPU reference forward pass
-//! ([`forward`]) over the plan's induced subgraph, reading
-//! edge topology zero-copy from the snapshot's [`CowCache`] payloads
-//! and dense features from the arena-pooled [`DenseBatch`]. The
-//! artifact metadata is synthesized by [`reference_artifact`] in the
-//! exact AOT manifest layout, so swapping in `Runtime::infer_step`
-//! when PJRT artifacts exist is a local change to [`shard_worker`]'s
-//! consume closure.
+//! Execution goes through the pluggable [`Executor`] trait
+//! (DESIGN.md §13): each worker builds its configured backend once at
+//! startup ([`ShardCtx::executor`], default the SIMD-blocked CPU
+//! kernels) together with one reusable [`ExecScratch`], and runs the
+//! forward over the plan's induced subgraph — edge topology read
+//! zero-copy from the snapshot's [`CowCache`] payloads as a
+//! [`PlanView`], dense features from the arena-pooled [`DenseBatch`].
+//! The artifact metadata is synthesized by [`reference_artifact`] in
+//! the exact AOT manifest layout, so the PJRT executor can execute the
+//! same groups once real bindings land.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
@@ -34,8 +36,8 @@ use std::time::Instant;
 
 use crate::batching::{BatchArena, CowCache, DenseBatch};
 use crate::datasets::Dataset;
+use crate::exec::{ExecScratch, Executor, ExecutorKind, PlanView};
 use crate::graph::{induced_subgraph, CsrGraph};
-use crate::inference::fullgraph::{forward, SparseGraphRef};
 use crate::partition::metis::{partition_graph, MetisConfig};
 use crate::pipeline::run_prefetched;
 use crate::ppr::push::{push_ppr, PushConfig, PushWorkspace};
@@ -412,12 +414,16 @@ pub struct ShardCtx {
     pub ring_depth: usize,
     /// Top-k PPR budget for cold-plan synthesis.
     pub cold_aux: usize,
+    /// Forward backend this shard builds at startup. The service
+    /// probe-builds the kind before spawning workers, so construction
+    /// here cannot fail for a validated config.
+    pub executor: ExecutorKind,
 }
 
-/// Features-only fill for the CPU reference executor. The sparse
-/// forward reads edge topology zero-copy from the plan and consumes
-/// exactly `x[..n * feat]`, so the dense adjacency/labels/mask of a
-/// full `materialize` would be dead work on the serving hot path
+/// Features-only fill for the CPU executors. The sparse forward reads
+/// edge topology zero-copy from the plan and consumes exactly
+/// `x[..n * feat]`, so the dense adjacency/labels/mask of a full
+/// `materialize` would be dead work on the serving hot path
 /// (O(n_pad²) zeroing per group). A PJRT executor swap would restore
 /// full materialization here — that is the only change needed.
 fn fill_features(
@@ -444,6 +450,8 @@ fn execute_one(
     item: &WorkItem,
     cold_plans: &HashMap<(u32, u64), ColdPlan>,
     buf: &DenseBatch,
+    exec: &dyn Executor,
+    scratch: &mut ExecScratch,
 ) -> ShardResult {
     let t = Instant::now();
     let state = &item.state;
@@ -467,17 +475,20 @@ fn execute_one(
             )
         }
     };
-    let g = SparseGraphRef {
+    let view = PlanView {
         n,
         edge_src,
         edge_dst,
         weights,
     };
-    let mut out_logits = forward(
+    let mut out_logits = Vec::new();
+    exec.forward(
         &state.meta,
         &state.model,
-        &g,
+        &view,
         &buf.x[..n * state.meta.feat],
+        scratch,
+        &mut out_logits,
     );
     out_logits.truncate(buf.num_outputs * classes);
     let outcomes = item
@@ -530,6 +541,14 @@ pub fn shard_worker(
     let traced = trace.enabled();
     let mut tb = trace.buffer();
     let fill_tb = std::sync::Mutex::new(trace.buffer());
+    // one backend + one forward scratch per shard, alive for the whole
+    // worker: the steady-state forward allocates nothing
+    let exec: Box<dyn Executor> = ctx
+        .executor
+        .build()
+        .expect("executor kind validated before shard spawn");
+    let mut scratch = ExecScratch::new();
+    let mut scratch_sized = false;
     let mut arena = BatchArena::new(ctx.feat_dim);
     let mut cold_plans: HashMap<(u32, u64), ColdPlan> = HashMap::new();
     let mut cold_order: VecDeque<(u32, u64)> = VecDeque::new();
@@ -573,6 +592,15 @@ pub fn shard_worker(
                 }
             }
         }
+        if !scratch_sized {
+            // size once from the bucket (the largest batch this shard
+            // can see); edge-proportional buffers grow on demand and
+            // stabilize within the first drains
+            let st = &items[0].state;
+            scratch =
+                ExecScratch::for_meta(&st.meta, &st.model, ctx.bucket, 4 * ctx.bucket);
+            scratch_sized = true;
+        }
         let order: Vec<usize> = (0..items.len()).collect();
         let depth = ctx.ring_depth.max(1).min(items.len());
         let ring = arena.acquire_many(ctx.bucket, depth);
@@ -613,7 +641,14 @@ pub fn shard_worker(
             |i, buf| {
                 let item = &items_ref[i];
                 tb.enter(Stage::Forward, NO_QUERY, item.gid, sh);
-                let result = execute_one(&ctx, item, cold_ref, buf);
+                let result = execute_one(
+                    &ctx,
+                    item,
+                    cold_ref,
+                    buf,
+                    exec.as_ref(),
+                    &mut scratch,
+                );
                 tb.exit(Stage::Forward, NO_QUERY, item.gid, sh);
                 let _ = tx.send(ShardMsg::Result(result));
             },
@@ -775,6 +810,7 @@ mod tests {
                 bucket: meta.n_pad,
                 ring_depth: 2,
                 cold_aux: 8,
+                executor: ExecutorKind::Blocked,
             };
             scope.spawn(move || {
                 shard_worker(ctx, work_rx, res_tx, Tracer::disabled())

@@ -8,6 +8,7 @@ use anyhow::{anyhow, Result};
 
 use crate::batching::{BatchArena, BatchCache, BatchGenerator};
 use crate::datasets::Dataset;
+use crate::exec::{ExecScratch, Executor, ExecutorKind};
 use crate::pipeline::run_prefetched;
 use crate::runtime::{ArtifactMeta, ModelState, Runtime, StepMetrics};
 use crate::scheduler::{
@@ -44,6 +45,11 @@ pub struct TrainConfig {
     /// the materialize worker and the execute thread (2 = double
     /// buffering; see `--prefetch-depth`).
     pub prefetch_depth: usize,
+    /// When set (and the generator is fixed, so a reusable validation
+    /// cache exists), the per-epoch validation pass runs through this
+    /// host [`Executor`] backend instead of the AOT infer artifact —
+    /// no bucket padding, no runtime round-trip (`--val-executor`).
+    pub val_executor: Option<ExecutorKind>,
 }
 
 impl Default for TrainConfig {
@@ -58,6 +64,7 @@ impl Default for TrainConfig {
             grad_accum: 1,
             eval_every: 1,
             prefetch_depth: crate::config::DEFAULT_PREFETCH_DEPTH,
+            val_executor: None,
         }
     }
 }
@@ -188,6 +195,29 @@ pub fn train(
     );
 
     let mut state = ModelState::init(&meta_train, cfg.seed);
+
+    // Executor-backed validation: built once, reused every eval epoch.
+    // Scratch grows to the val high-water shape on the first pass and
+    // stays allocation-free thereafter.
+    let mut val_exec: Option<(Box<dyn Executor>, ArtifactMeta, ExecScratch)> =
+        match (cfg.val_executor, val_cache.as_ref()) {
+            (Some(kind), Some(vc)) => {
+                let max_val = vc.max_batch_nodes();
+                let meta_val = rt
+                    .manifest
+                    .bucket_meta(&cfg.model, "infer", max_val)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "no infer bucket for {} fitting {max_val} nodes",
+                            cfg.model
+                        )
+                    })?
+                    .clone();
+                Some((kind.build()?, meta_val, ExecScratch::new()))
+            }
+            _ => None,
+        };
+
     let mut sched = make_scheduler(cfg.scheduler, ds, &cache, rng);
     let mut plateau =
         super::lr_schedule::ReduceLROnPlateau::paper_defaults(cfg.lr);
@@ -298,6 +328,16 @@ pub fn train(
         }
         let (val_loss, val_acc) = if val_nodes.is_empty() {
             (train_metrics.mean_loss(), train_metrics.accuracy())
+        } else if let Some((exec, meta_val, scratch)) = val_exec.as_mut() {
+            let report = crate::inference::infer_with_executor(
+                exec.as_ref(),
+                meta_val,
+                ds,
+                &state,
+                val_cache.as_ref().expect("val_exec implies val_cache"),
+                scratch,
+            )?;
+            (report.mean_loss, report.accuracy)
         } else {
             let report = crate::inference::infer_with_batches(
                 rt,

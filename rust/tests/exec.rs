@@ -1,0 +1,180 @@
+//! Executor parity property tests (DESIGN.md §13): on random SBM
+//! graphs, for every model family and every batch a real generator
+//! plans, the blocked CPU backend must reproduce the scalar reference
+//! logits.
+//!
+//! Bounds: the f32 blocked path must stay within 1e-4 max-abs of the
+//! reference (in practice it is bit-identical — the counting sort is
+//! stable, so every per-destination f32 sum runs in the reference's
+//! order); the f16 path quantizes layer-0 features to IEEE half
+//! (relative error ~2^-11 per value) and gets the documented looser
+//! 0.05 bound on raw logits.
+
+use ibmb::baselines;
+use ibmb::batching::BatchCache;
+use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::exec::{ExecScratch, Executor, ExecutorKind, PlanView};
+use ibmb::runtime::ModelState;
+use ibmb::serve::reference_artifact;
+use ibmb::util::Rng;
+
+const F32_TOL: f32 = 1e-4;
+const F16_TOL: f32 = 0.05;
+const MODELS: [&str; 3] = ["gcn", "sage", "gat"];
+
+fn random_dataset(rng: &mut Rng) -> ibmb::datasets::Dataset {
+    let spec = DatasetSpec {
+        nodes: 300 + rng.next_below(500),
+        communities: 4 + rng.next_below(12),
+        classes: 3 + rng.next_below(5),
+        feat_dim: 8,
+        avg_degree: 4.0 + rng.next_f64() * 8.0,
+        p_intra: 0.5 + rng.next_f64() * 0.3,
+        p_adjacent: 0.1,
+        degree_tail: 2.0 + rng.next_f64(),
+        noise: 1.0,
+        train_frac: 0.2 + rng.next_f64() * 0.4,
+        val_frac: 0.1,
+        name: "prop",
+    };
+    sbm::generate(&spec, rng.next_u64())
+}
+
+/// Gather `nodes`' features into `x` (resized to fit exactly).
+fn gather(ds: &ibmb::datasets::Dataset, nodes: &[u32], x: &mut Vec<f32>) {
+    let d = ds.feat_dim;
+    x.resize(nodes.len() * d, 0.0);
+    for (j, &u) in nodes.iter().enumerate() {
+        ds.node_features_into(u, &mut x[j * d..(j + 1) * d]);
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn prop_blocked_executor_matches_reference() {
+    let mut master = Rng::new(0xE8EC);
+    for case in 0..4 {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let ds = random_dataset(&mut rng);
+        // a real generator supplies the batch shapes: variable node
+        // counts, variable edge counts, outputs-first ordering
+        let mut gen = baselines::by_name(
+            "node-wise IBMB",
+            4 + rng.next_below(8),
+            8 + rng.next_below(24),
+            128 + rng.next_below(256),
+        )
+        .unwrap();
+        let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
+        assert!(!cache.is_empty(), "case {case} seed {seed}: no batches");
+        for model in MODELS {
+            let meta = reference_artifact(
+                model,
+                ds.feat_dim,
+                ds.num_classes,
+                8,
+                2,
+                2,
+                cache.max_batch_nodes(),
+            );
+            let state = ModelState::init(&meta, seed ^ 0x5EED);
+            let reference = ExecutorKind::Reference.build().unwrap();
+            let blocked = ExecutorKind::Blocked.build().unwrap();
+            let f16 = ExecutorKind::BlockedF16.build().unwrap();
+            let mut s_ref = ExecScratch::new();
+            let mut s_blk = ExecScratch::new();
+            let mut s_f16 = ExecScratch::new();
+            let (mut o_ref, mut o_blk, mut o_f16) =
+                (Vec::new(), Vec::new(), Vec::new());
+            let mut x = Vec::new();
+            for i in 0..cache.len() {
+                let nodes = cache.batch_nodes(i);
+                let n = nodes.len();
+                gather(&ds, nodes, &mut x);
+                let view = PlanView {
+                    n,
+                    edge_src: cache.edge_src_of(i),
+                    edge_dst: cache.edge_dst_of(i),
+                    weights: cache.edge_weights_of(i),
+                };
+                reference.forward(&meta, &state, &view, &x, &mut s_ref, &mut o_ref);
+                blocked.forward(&meta, &state, &view, &x, &mut s_blk, &mut o_blk);
+                f16.forward(&meta, &state, &view, &x, &mut s_f16, &mut o_f16);
+                assert_eq!(
+                    o_ref.len(),
+                    n * meta.classes,
+                    "case {case} seed {seed} {model} batch {i}"
+                );
+                let d32 = max_abs_diff(&o_ref, &o_blk);
+                assert!(
+                    d32 <= F32_TOL,
+                    "case {case} seed {seed} {model} batch {i} (n={n}): \
+                     blocked diverges from reference by {d32}"
+                );
+                let d16 = max_abs_diff(&o_ref, &o_f16);
+                assert!(
+                    d16 <= F16_TOL,
+                    "case {case} seed {seed} {model} batch {i} (n={n}): \
+                     blocked-f16 diverges from reference by {d16}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_matches_reference_on_full_graph_views() {
+    // Degenerate "batch" = the whole graph (the fig2 full-batch row):
+    // exercises the largest n and the densest CSR the executors see.
+    let mut master = Rng::new(0xF0E8);
+    for case in 0..2 {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let ds = random_dataset(&mut rng);
+        let n = ds.graph.num_nodes();
+        let mut edge_src = Vec::new();
+        let mut edge_dst = Vec::new();
+        let mut weights = Vec::new();
+        for u in 0..n as u32 {
+            for &v in ds.graph.neighbors(u) {
+                edge_src.push(v);
+                edge_dst.push(u);
+                weights.push(ds.graph.norm_weight(u, v));
+            }
+        }
+        let view = PlanView {
+            n,
+            edge_src: &edge_src,
+            edge_dst: &edge_dst,
+            weights: &weights,
+        };
+        let nodes: Vec<u32> = (0..n as u32).collect();
+        let mut x = Vec::new();
+        gather(&ds, &nodes, &mut x);
+        for model in MODELS {
+            let meta =
+                reference_artifact(model, ds.feat_dim, ds.num_classes, 8, 2, 2, n);
+            let state = ModelState::init(&meta, seed ^ 0xF17);
+            let reference = ExecutorKind::Reference.build().unwrap();
+            let blocked = ExecutorKind::Blocked.build().unwrap();
+            let (mut o_ref, mut o_blk) = (Vec::new(), Vec::new());
+            let (mut s_ref, mut s_blk) = (ExecScratch::new(), ExecScratch::new());
+            reference.forward(&meta, &state, &view, &x, &mut s_ref, &mut o_ref);
+            blocked.forward(&meta, &state, &view, &x, &mut s_blk, &mut o_blk);
+            let d = max_abs_diff(&o_ref, &o_blk);
+            assert!(
+                d <= F32_TOL,
+                "case {case} seed {seed} {model} full graph (n={n}): \
+                 blocked diverges by {d}"
+            );
+        }
+    }
+}

@@ -11,7 +11,13 @@
 # [{offered_x, offered_qps, goodput_qps, shed_fraction,
 # p99_admitted_ms, skew}, ...]` — offered load swept 1x–10x calibrated
 # capacity, uniform + zipf) introduced with the admission-control
-# subsystem. No-op (success) when no bench JSONs exist yet — benches
+# subsystem, plus the per-executor serve pair (`executor_p99:
+# [{executor, p99_ms, qps}, ...]` — reference vs blocked forward on a
+# pinned load). For the "micro_pipeline" bench it includes the
+# forward-throughput series (`forward: [{executor, batches_per_s,
+# speedup_vs_reference}, ...]` — the blocked backend's ≥3x gate over
+# the scalar reference), both introduced with the pluggable Executor
+# backends. No-op (success) when no bench JSONs exist yet — benches
 # are run out of band, not in CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
