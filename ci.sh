@@ -140,6 +140,56 @@ cargo run --release --bin ibmb -- trace-report "$trace_file" \
 }
 rm -f "$trace_file"
 
+echo "== cold-start smoke (populate plan store, restart lazily) =="
+# Same command twice (DESIGN.md §14): the first run plans warm and
+# populates the content-addressed store; the second finds a manifest
+# and must cold-start *lazily* — plans faulted on demand (store_faults
+# > 0) within a bounded residency footprint, never a full-corpus load
+# — while answering every query.
+store_dir=$(mktemp -d /tmp/ibmb_store.XXXXXX)
+rmdir "$store_dir" # the CLI creates it; start from a clean slate
+populate_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 1 --clients 8 --queries 100 --window-us 300 \
+    --seed 11 --store "$store_dir")
+printf '%s\n' "$populate_out" | grep 'plans to store' || {
+    echo "cold-start smoke FAILED: first run did not populate the store" >&2
+    exit 1
+}
+printf '%s\n' "$populate_out" | grep -q 'store_faults=0 ' || {
+    echo "cold-start smoke FAILED: warm populate run should not fault" >&2
+    exit 1
+}
+lazy_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 1 --clients 8 --queries 100 --window-us 300 \
+    --seed 11 --store "$store_dir")
+printf '%s\n' "$lazy_out"
+printf '%s\n' "$lazy_out" | grep -q 'lazy cold start' || {
+    echo "cold-start smoke FAILED: second run did not lazy cold-start" >&2
+    exit 1
+}
+printf '%s\n' "$lazy_out" | grep -q 'plans store-backed' || {
+    echo "cold-start smoke FAILED: snapshot is not store-backed" >&2
+    exit 1
+}
+printf '%s\n' "$lazy_out" | grep -Eq 'store_faults=[1-9][0-9]*' || {
+    echo "cold-start smoke FAILED: lazy restart faulted no plans" >&2
+    exit 1
+}
+printf '%s\n' "$lazy_out" | grep -Eq 'resident_bytes=[1-9][0-9]*' || {
+    echo "cold-start smoke FAILED: no resident plan bytes reported" >&2
+    exit 1
+}
+printf '%s\n' "$lazy_out" | grep -q 'unanswered=0' || {
+    echo "cold-start smoke FAILED: lazy run left queries unanswered" >&2
+    exit 1
+}
+cargo run --release --bin ibmb -- store-stat "$store_dir" \
+    | grep -q 'generation' || {
+    echo "cold-start smoke FAILED: store-stat could not read $store_dir" >&2
+    exit 1
+}
+rm -rf "$store_dir"
+
 echo "== bench JSON validation (BENCH_*.json, when present) =="
 ./scripts/check_bench_json.sh
 

@@ -12,7 +12,11 @@
 //! pluggable forward backend (DESIGN.md §13; here the SIMD-blocked CSR
 //! executor, the serving default) — no AOT artifacts needed. A graph
 //! delta is applied by *building the next snapshot off to the side*
-//! and publishing it with one pointer swap; serving never stops.
+//! and publishing it with one pointer swap; serving never stops. The
+//! tour ends with persistence: the corpus is saved into a
+//! content-addressed plan store and a second deployment cold-starts
+//! *lazily* from the manifest, faulting plan payloads on demand
+//! (DESIGN.md §14).
 //!
 //! Run with: `cargo run --release --example serve_quickstart`
 
@@ -147,5 +151,42 @@ fn main() -> anyhow::Result<()> {
         print!("{}", render_tree(q));
     }
     std::fs::remove_file(&trace_path).ok();
+
+    // persistence + lazy cold start (DESIGN.md §14): save the plan
+    // corpus into a content-addressed store, then stand a *second*
+    // deployment up from the manifest alone — no plan payloads are
+    // loaded up front; shard workers fault them on demand through a
+    // byte-budget residency LRU (`ibmb serve --store DIR`)
+    let store_dir = std::env::temp_dir().join("ibmb_quickstart_store");
+    std::fs::remove_dir_all(&store_dir).ok();
+    let store = ibmb::store::PlanStore::open(&store_dir)?;
+    let state = setup.state();
+    let saved = store.save_full(
+        &state.cache,
+        &state.epochs,
+        state.epoch,
+        &state.index.to_packed(),
+    )?;
+    println!(
+        "store: wrote {} blobs ({} KiB) to {}",
+        saved.blobs_written,
+        saved.bytes_written / 1024,
+        store_dir.display()
+    );
+    let ds3 = sbm::generate(&DatasetSpec::tiny_for_tests(), 11);
+    let mut lazy =
+        serve::prepare_from_store(ds3, std::sync::Arc::new(store), &cfg)?;
+    let cold = serve::serve_closed_loop(&mut lazy, &eval, Skew::Uniform, &cfg)?;
+    println!(
+        "lazy cold start: {} queries answered with {} plan faults, \
+         {} KiB resident (budget {} KiB/shard) — same predictions: {}",
+        cold.queries,
+        cold.store_faults,
+        cold.resident_bytes / 1024,
+        cfg.store_budget / 1024,
+        cold.logit_hash == r.logit_hash
+    );
+    assert_eq!(cold.logit_hash, r.logit_hash, "lazy serving must match");
+    std::fs::remove_dir_all(&store_dir).ok();
     Ok(())
 }

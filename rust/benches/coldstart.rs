@@ -1,0 +1,259 @@
+//! Cold-start benchmark: time-to-first-answer from the
+//! content-addressed plan store vs a monolithic container load
+//! (DESIGN.md §14). The monolithic baseline deserializes every plan
+//! before the first query can run; the store path opens the manifest
+//! (O(plans) metadata) and faults exactly one blob. Also measures the
+//! structural-sharing save: after a small CoW patch, an incremental
+//! save appends only the changed buckets, and the byte ratio vs a full
+//! save is reported per corpus size. Emits `BENCH_coldstart.json`.
+//!
+//! Run: `cargo bench --bench coldstart`
+//! (`--sizes 1000,10000,100000 --budget BYTES --seed N` to override).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use ibmb::batching::{cache_io, BatchCache, BatchPlan, CowCache};
+use ibmb::bench_harness::Table;
+use ibmb::cli::Args;
+use ibmb::store::{PlanResidency, PlanStore};
+use ibmb::util::json::{to_string, Json};
+use ibmb::util::Rng;
+
+/// Synthetic plan corpus: shapes drawn from the same range the IBMB
+/// planners produce for the synth datasets, node ids disjoint per plan
+/// so every bucket has a distinct content hash.
+fn synth_plans(n: usize, rng: &mut Rng) -> Vec<BatchPlan> {
+    (0..n)
+        .map(|i| {
+            let n_nodes = 24 + rng.next_below(17);
+            let nodes: Vec<u32> =
+                (0..n_nodes).map(|k| (i * 64 + k) as u32).collect();
+            let num_outputs = 1 + rng.next_below(4.min(n_nodes));
+            let n_edges = n_nodes * 2;
+            let edges: Vec<(u32, u32)> = (0..n_edges)
+                .map(|_| {
+                    (
+                        rng.next_below(n_nodes) as u32,
+                        rng.next_below(n_nodes) as u32,
+                    )
+                })
+                .collect();
+            let weights: Vec<f32> =
+                (0..n_edges).map(|_| rng.uniform(0.01, 1.0)).collect();
+            BatchPlan {
+                nodes,
+                num_outputs,
+                edges,
+                weights,
+            }
+        })
+        .collect()
+}
+
+struct RunRecord {
+    plans: usize,
+    v3_load_s: f64,
+    cas_ttfa_s: f64,
+    speedup: f64,
+    full_save_bytes: u64,
+    incr_save_bytes: u64,
+    incr_ratio: f64,
+    resident_bytes: usize,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let seed = args.get_u64("seed", 0);
+    let budget = args.get_usize("budget", 32 << 10);
+    let mut sizes: Vec<usize> = args
+        .get("sizes")
+        .map(|s| s.split(',').filter_map(|t| t.parse().ok()).collect())
+        .unwrap_or_default();
+    if sizes.is_empty() {
+        sizes = vec![1_000, 10_000, 100_000];
+    }
+    let reps = args.get_usize("reps", 3);
+    println!("coldstart bench: corpora {sizes:?}, residency budget {budget} B");
+
+    let scratch = |name: String| -> PathBuf {
+        std::env::temp_dir().join(format!("{}-{}", name, std::process::id()))
+    };
+
+    let mut records: Vec<RunRecord> = Vec::new();
+    let mut table = Table::new(&[
+        "plans",
+        "mono load (ms)",
+        "cas ttfa (ms)",
+        "speedup",
+        "full save (KiB)",
+        "incr save (KiB)",
+        "incr ratio",
+        "resident (KiB)",
+    ]);
+    for &n in &sizes {
+        let mut rng = Rng::new(seed ^ n as u64);
+        let plans = synth_plans(n, &mut rng);
+        let cow = CowCache::from_plans(&plans);
+
+        // -- monolithic baseline: full-container load is the TTFA floor
+        let mono_path = scratch(format!("ibmb-coldstart-mono-{n}.ibmb"));
+        cache_io::save(&BatchCache::build(&plans), &mono_path)?;
+        let mut v3_load_s = f64::INFINITY;
+        for _ in 0..reps {
+            let t = Instant::now();
+            let loaded = cache_io::load(&mono_path)?;
+            v3_load_s = v3_load_s.min(t.elapsed().as_secs_f64());
+            assert_eq!(loaded.len(), n, "monolithic container dropped plans");
+        }
+        std::fs::remove_file(&mono_path).ok();
+
+        // -- populate the store: full save, then a small CoW patch
+        //    saved incrementally (the structural-sharing byte claim)
+        let dir = scratch(format!("ibmb-coldstart-store-{n}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let epochs = vec![0u64; n];
+        let router: Vec<u64> = (0..n as u64).map(|p| p << 32).collect();
+        let (full_stats, incr_stats) = {
+            let store = PlanStore::open(&dir)?;
+            let full = store.save_full(&cow, &epochs, 0, &router)?;
+            let patched = max_patch(n).min(n);
+            let mut fresh = Rng::new(seed ^ 0xD1FF ^ n as u64);
+            let stride = (n / patched).max(1);
+            let repl: Vec<(u32, ibmb::batching::PlanPayload)> = (0..patched)
+                .map(|k| {
+                    let plan = synth_plans(1, &mut fresh).pop().unwrap();
+                    (
+                        ((k * stride) % n) as u32,
+                        ibmb::batching::PlanPayload::from_plan(&plan),
+                    )
+                })
+                .collect();
+            let next = cow.with_patched(repl);
+            // patched buckets advance to epoch 1
+            let mut epochs2 = epochs.clone();
+            for i in 0..n {
+                if !std::sync::Arc::ptr_eq(&cow.payload(i), &next.payload(i)) {
+                    epochs2[i] = 1;
+                }
+            }
+            let incr =
+                store.save_incremental(&cow, &next, &epochs2, 1, &[])?;
+            (full, incr)
+        };
+
+        // -- store cold start: open (manifest + delta fold only) and
+        //    fault a single plan — that is the first answer's data path
+        let mut cas_ttfa_s = f64::INFINITY;
+        for rep in 0..reps {
+            let t = Instant::now();
+            let store = PlanStore::open(&dir)?;
+            let (payload, bytes) = store.fault(rep % n)?;
+            cas_ttfa_s = cas_ttfa_s.min(t.elapsed().as_secs_f64());
+            assert!(bytes > 0, "fault read no bytes");
+            assert!(!payload.nodes.is_empty(), "fault decoded empty plan");
+        }
+
+        // -- residency: a byte-budget LRU touring the corpus stays
+        //    within budget no matter how many plans it faults
+        let store = PlanStore::open(&dir)?;
+        let mut res = PlanResidency::new(budget);
+        for k in 0..256usize.min(n) {
+            let pid = (k * 97) % n;
+            res.get_or_fault(pid as u32, &store)?;
+        }
+        let resident_bytes = res.resident_bytes();
+        assert!(
+            resident_bytes <= budget,
+            "residency {resident_bytes} B exceeds budget {budget} B"
+        );
+        drop(store);
+        std::fs::remove_dir_all(&dir).ok();
+
+        let rec = RunRecord {
+            plans: n,
+            v3_load_s,
+            cas_ttfa_s,
+            speedup: v3_load_s / cas_ttfa_s.max(1e-9),
+            full_save_bytes: full_stats.bytes_written,
+            incr_save_bytes: incr_stats.bytes_written,
+            incr_ratio: incr_stats.bytes_written as f64
+                / (full_stats.bytes_written as f64).max(1.0),
+            resident_bytes,
+        };
+        table.row(&[
+            format!("{n}"),
+            format!("{:.2}", rec.v3_load_s * 1e3),
+            format!("{:.3}", rec.cas_ttfa_s * 1e3),
+            format!("{:.0}x", rec.speedup),
+            format!("{}", rec.full_save_bytes / 1024),
+            format!("{}", rec.incr_save_bytes / 1024),
+            format!("{:.4}", rec.incr_ratio),
+            format!("{}", rec.resident_bytes / 1024),
+        ]);
+        records.push(rec);
+    }
+
+    let largest = records.last().unwrap();
+    if largest.speedup < 10.0 {
+        eprintln!(
+            "WARNING: cold-start speedup {:.1}x at {} plans is below the \
+             10x target — faulted TTFA is not beating the monolithic load",
+            largest.speedup, largest.plans
+        );
+    }
+    if largest.incr_ratio >= 0.1 {
+        eprintln!(
+            "WARNING: incremental save wrote {:.1}% of the full-save bytes \
+             — structural sharing is not paying off",
+            largest.incr_ratio * 100.0
+        );
+    }
+
+    let json = Json::Obj(BTreeMap::from([
+        ("bench".into(), Json::Str("coldstart".into())),
+        ("dataset".into(), Json::Str("synthetic".into())),
+        ("lru_budget_bytes".into(), Json::Num(budget as f64)),
+        (
+            "runs".into(),
+            Json::Arr(
+                records
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(BTreeMap::from([
+                            ("plans".into(), Json::Num(r.plans as f64)),
+                            ("v3_load_s".into(), Json::Num(r.v3_load_s)),
+                            ("cas_ttfa_s".into(), Json::Num(r.cas_ttfa_s)),
+                            ("speedup".into(), Json::Num(r.speedup)),
+                            (
+                                "full_save_bytes".into(),
+                                Json::Num(r.full_save_bytes as f64),
+                            ),
+                            (
+                                "incr_save_bytes".into(),
+                                Json::Num(r.incr_save_bytes as f64),
+                            ),
+                            ("incr_ratio".into(), Json::Num(r.incr_ratio)),
+                            (
+                                "resident_bytes".into(),
+                                Json::Num(r.resident_bytes as f64),
+                            ),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+    let out_path = args.get_or("out", "BENCH_coldstart.json").to_string();
+    std::fs::write(&out_path, to_string(&json))?;
+    println!("wrote {out_path}");
+    table.print("coldstart — monolithic full load vs content-addressed fault");
+    Ok(())
+}
+
+/// Patch size for the incremental-save measurement: 0.5% of the
+/// corpus, at least one plan.
+fn max_patch(n: usize) -> usize {
+    (n / 200).max(1)
+}

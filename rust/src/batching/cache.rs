@@ -313,6 +313,12 @@ impl CowCache {
         self.plans[i].to_plan()
     }
 
+    /// Plan `i`'s shared payload bucket — the unit the content-addressed
+    /// store hashes and persists. Cloning is a pointer bump.
+    pub fn payload(&self, i: usize) -> Arc<PlanPayload> {
+        self.plans[i].clone()
+    }
+
     /// Largest plan node count — picks the artifact bucket.
     pub fn max_batch_nodes(&self) -> usize {
         self.plans.iter().map(|p| p.nodes.len()).max().unwrap_or(0)
@@ -324,16 +330,32 @@ impl CowCache {
             + self.plans.len() * std::mem::size_of::<Arc<PlanPayload>>()
     }
 
-    /// How many buckets this store shares (same allocation) with
-    /// `other` — the structural-sharing meter the snapshot tests
-    /// assert on.
-    pub fn shared_with(&self, other: &CowCache) -> usize {
-        self.plans
-            .iter()
-            .zip(&other.plans)
-            .filter(|(a, b)| Arc::ptr_eq(a, b))
-            .count()
+    /// What this store shares (same allocation) with `other` — the
+    /// structural-sharing meter the snapshot tests assert on. Reports
+    /// both bucket counts and payload bytes so the dedup ratio lines
+    /// up unit-for-unit with `gc_retained_bytes_peak` and the plan
+    /// store's byte accounting (`ibmb store-stat`).
+    pub fn shared_with(&self, other: &CowCache) -> Sharing {
+        let mut s = Sharing::default();
+        for (a, b) in self.plans.iter().zip(&other.plans) {
+            if Arc::ptr_eq(a, b) {
+                s.buckets += 1;
+                s.bytes += a.memory_bytes();
+            }
+        }
+        s
     }
+}
+
+/// Structural-sharing accounting between two [`CowCache`]s: how many
+/// buckets alias the same allocation, and how many payload bytes those
+/// buckets carry (same unit as [`PlanPayload::memory_bytes`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Sharing {
+    /// Pointer-identical buckets.
+    pub buckets: usize,
+    /// Payload bytes in those buckets.
+    pub bytes: usize,
 }
 
 #[cfg(test)]
@@ -445,15 +467,23 @@ mod tests {
         assert!(plans.len() >= 2, "need two plans to patch one");
         let cow = CowCache::from_plans(&plans);
         let clone = cow.clone();
+        let full = clone.shared_with(&cow);
+        assert_eq!(full.buckets, cow.len(), "a clone shares every bucket");
         assert_eq!(
-            clone.shared_with(&cow),
-            cow.len(),
-            "a clone shares every bucket"
+            full.bytes,
+            (0..cow.len()).map(|i| cow.payload(i).memory_bytes()).sum::<usize>(),
+            "shared bytes of a clone == total payload bytes"
         );
         let mut replacement = PlanPayload::from_plan(&plans[1]);
         replacement.weights.iter_mut().for_each(|w| *w *= 2.0);
         let patched = cow.with_patched([(1u32, replacement)]);
-        assert_eq!(patched.shared_with(&cow), cow.len() - 1);
+        let part = patched.shared_with(&cow);
+        assert_eq!(part.buckets, cow.len() - 1);
+        assert_eq!(
+            part.bytes,
+            full.bytes - cow.payload(1).memory_bytes(),
+            "patched bucket's bytes drop out of the shared total"
+        );
         assert_eq!(patched.batch_nodes(0), cow.batch_nodes(0));
         assert_ne!(patched.edge_weights_of(1), cow.edge_weights_of(1));
         // out-of-range patches are ignored, not panics
@@ -461,6 +491,6 @@ mod tests {
             u32::MAX,
             PlanPayload::from_plan(&plans[0]),
         )]);
-        assert_eq!(same.shared_with(&cow), cow.len());
+        assert_eq!(same.shared_with(&cow), full);
     }
 }

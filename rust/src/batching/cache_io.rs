@@ -11,8 +11,9 @@
 //! from the same versioned format. Layout (little endian):
 //!
 //! ```text
-//! magic "IBMBCACH" | u64 version (=3) | u64 section_count
-//! then per section: u64 tag | u64 byte_len | payload
+//! magic "IBMBCACH" | u64 version (=4) | u64 section_count
+//! then per section: u64 tag | u64 byte_len | u64 crc32 | payload
+//!                   (version 3 files omit the crc32 word)
 //!
 //! tag 1 = PLANS:   u64 batches | u64 nodes | u64 edges
 //!                  | u64 node_off[batches+1] | u64 edge_off[batches+1]
@@ -23,12 +24,19 @@
 //! tag 3 = DELTALOG: utf-8 text in the graph::delta line grammar
 //! ```
 //!
+//! The `crc32` word (IEEE CRC-32 of the payload bytes, zero-extended
+//! to u64) lets the loader distinguish *corruption* from *format
+//! drift*: a bit-flipped section fails its checksum with an error
+//! naming the section, before any parsing touches the damaged bytes.
+//!
 //! The version field lets readers reject files whose layout they do
 //! not understand instead of misparsing them, and **unknown section
 //! tags are rejected the same way** — a future section is a version
 //! bump, never a silent skip. Version history: 1 = headerless seed
 //! format (no version field; rejected), 2 = single unsectioned plan
-//! payload (rejected — regenerate), 3 = current sectioned container.
+//! payload (rejected — regenerate), 3 = sectioned container without
+//! checksums (still readable), 4 = current, adds the per-section
+//! crc32 word.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -39,17 +47,32 @@ use anyhow::{bail, Context, Result};
 use super::batch::BatchPlan;
 use super::cache::BatchCache;
 use crate::graph::delta::{format_delta_log, parse_delta_log, GraphDelta};
+use crate::util::crc::crc32;
 
 const MAGIC: &[u8; 8] = b"IBMBCACH";
 
 /// Current on-disk format version. Bump on any layout change and
 /// keep the history note in the module docs in sync.
-pub const FORMAT_VERSION: u64 = 3;
+pub const FORMAT_VERSION: u64 = 4;
+
+/// Oldest version this reader still parses (v3 = v4 minus the
+/// per-section checksum word).
+const OLDEST_READABLE_VERSION: u64 = 3;
 
 /// Section tags. Readers reject tags they do not know.
 const SECTION_PLANS: u64 = 1;
 const SECTION_ROUTER: u64 = 2;
 const SECTION_DELTA_LOG: u64 = 3;
+
+/// Human name of a section tag for error messages.
+fn section_name(tag: u64) -> &'static str {
+    match tag {
+        SECTION_PLANS => "plan",
+        SECTION_ROUTER => "router",
+        SECTION_DELTA_LOG => "delta-log",
+        _ => "unknown",
+    }
+}
 
 fn push_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -115,6 +138,7 @@ fn write_container(path: &Path, sections: &[(u64, Vec<u8>)]) -> Result<()> {
     for (tag, body) in sections {
         w.write_all(&tag.to_le_bytes())?;
         w.write_all(&(body.len() as u64).to_le_bytes())?;
+        w.write_all(&(crc32(body) as u64).to_le_bytes())?;
         w.write_all(body)?;
     }
     // Drop would swallow a flush failure (ENOSPC etc.) and report a
@@ -289,13 +313,16 @@ fn read_container(path: &Path) -> Result<Container> {
     r.read_exact(&mut head)
         .with_context(|| format!("{path:?}: truncated header"))?;
     let version = u64::from_le_bytes(head[..8].try_into().unwrap());
-    if version != FORMAT_VERSION {
+    if !(OLDEST_READABLE_VERSION..=FORMAT_VERSION).contains(&version) {
         bail!(
             "{path:?}: unsupported IBMBCACH version {version} \
-             (this build reads version {FORMAT_VERSION}; older versions \
-             predate the sectioned container — regenerate the file)"
+             (this build reads versions {OLDEST_READABLE_VERSION}..=\
+             {FORMAT_VERSION}; older versions predate the sectioned \
+             container — regenerate the file)"
         );
     }
+    // v3 section headers are tag+len; v4 adds the crc32 word
+    let checksummed = version >= 4;
     let nsections = u64::from_le_bytes(head[8..].try_into().unwrap());
     let mut out = Container {
         plans: None,
@@ -310,6 +337,15 @@ fn read_container(path: &Path) -> Result<Container> {
         let tag = u64::from_le_bytes(shead[..8].try_into().unwrap());
         let len = u64::from_le_bytes(shead[8..].try_into().unwrap());
         consumed += 16;
+        let want_crc = if checksummed {
+            let mut c = [0u8; 8];
+            r.read_exact(&mut c)
+                .with_context(|| format!("{path:?}: truncated section {s}"))?;
+            consumed += 8;
+            Some(u64::from_le_bytes(c))
+        } else {
+            None
+        };
         // bound the declared length by the actual file size before
         // allocating for it (saturating: a crafted len near u64::MAX
         // must not wrap the comparison past the guard)
@@ -323,6 +359,17 @@ fn read_container(path: &Path) -> Result<Container> {
         r.read_exact(&mut body)
             .with_context(|| format!("{path:?}: truncated section {s}"))?;
         consumed += len;
+        if let Some(want) = want_crc {
+            let got = crc32(&body) as u64;
+            if got != want {
+                bail!(
+                    "{path:?}: {} section (tag {tag}) checksum mismatch \
+                     (stored {want:#010x}, computed {got:#010x}) — the \
+                     file is corrupt",
+                    section_name(tag),
+                );
+            }
+        }
         match tag {
             SECTION_PLANS => {
                 out.plans = Some(
@@ -506,6 +553,7 @@ mod tests {
         future.extend_from_slice(&1u64.to_le_bytes()); // one section
         future.extend_from_slice(&99u64.to_le_bytes()); // unknown tag
         future.extend_from_slice(&0u64.to_le_bytes()); // empty body
+        future.extend_from_slice(&0u64.to_le_bytes()); // crc32(empty) = 0
         std::fs::write(&path, &future).unwrap();
         let err = format!("{:#}", load(&path).unwrap_err());
         assert!(err.contains("unknown section tag 99"), "{err}");
@@ -518,6 +566,73 @@ mod tests {
         truncated.extend_from_slice(&(1u64 << 40).to_le_bytes());
         std::fs::write(&path, &truncated).unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checksum_catches_payload_corruption_per_section() {
+        let (ds, cache) = build_cache();
+        let cow = CowCache::from_cache(&cache);
+        let index = RouterIndex::build(ds.graph.num_nodes(), &cow);
+        let path = tmp("corrupt_v4.bin");
+        save_with_index(&cache, &index.to_packed(), &path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+
+        // flip one byte deep inside the plan payload: the error must
+        // name the plan section, not surface as a parse failure
+        let mut bytes = clean.clone();
+        let plans_len =
+            u64::from_le_bytes(clean[32..40].try_into().unwrap()) as usize;
+        let mid = 48 + plans_len / 2; // file header 24 + section header 24
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("plan section"), "{err}");
+
+        // flip the last payload byte (inside the trailing router
+        // section): the router section is named instead
+        let mut bytes = clean.clone();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load_with_index(&path).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("router section"), "{err}");
+
+        // untouched file still loads
+        std::fs::write(&path, &clean).unwrap();
+        load_with_index(&path).unwrap();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn reads_v3_files_without_checksums() {
+        // hand-write a v3 container (pre-checksum section headers)
+        // around the same section payloads
+        let (ds, cache) = build_cache();
+        let cow = CowCache::from_cache(&cache);
+        let index = RouterIndex::build(ds.graph.num_nodes(), &cow);
+        let mut router = Vec::new();
+        push_u64(&mut router, index.to_packed().len() as u64);
+        for &p in &index.to_packed() {
+            push_u64(&mut router, p);
+        }
+        let sections = [(SECTION_PLANS, plans_section(&cache)), (SECTION_ROUTER, router)];
+        let mut v3 = Vec::new();
+        v3.extend_from_slice(MAGIC);
+        v3.extend_from_slice(&3u64.to_le_bytes());
+        v3.extend_from_slice(&(sections.len() as u64).to_le_bytes());
+        for (tag, body) in &sections {
+            push_u64(&mut v3, *tag);
+            push_u64(&mut v3, body.len() as u64);
+            v3.extend_from_slice(body);
+        }
+        let path = tmp("compat_v3.bin");
+        std::fs::write(&path, &v3).unwrap();
+        let (loaded, packed) = load_with_index(&path).unwrap();
+        assert_eq!(loaded.len(), cache.len());
+        assert_eq!(packed.as_deref(), Some(&index.to_packed()[..]));
         std::fs::remove_file(path).ok();
     }
 }

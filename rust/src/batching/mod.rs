@@ -32,7 +32,7 @@ pub mod refresh;
 
 pub use arena::BatchArena;
 pub use batch::{materialize, BatchPlan, DenseBatch};
-pub use cache::{BatchCache, CowCache, PlanPayload};
+pub use cache::{BatchCache, CowCache, PlanPayload, Sharing};
 pub use fixed_random::FixedRandomBatches;
 pub use ibmb_batch::BatchWiseIbmb;
 pub use ibmb_node::NodeWiseIbmb;

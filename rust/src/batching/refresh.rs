@@ -569,7 +569,7 @@ mod tests {
             );
         }
         assert_eq!(
-            patched.shared_with(&before),
+            patched.shared_with(&before).buckets,
             full.len() - report.changed_plans.len(),
             "every untouched bucket must be pointer-shared"
         );

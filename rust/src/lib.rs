@@ -63,6 +63,24 @@
 //! cache together with the router index for cold starts
 //! (`ibmb serve --cache/--save-cache`).
 //!
+//! ## Content-addressed plan store: O(working set) cold starts
+//!
+//! For corpora too large to deserialize up front, the [`store`]
+//! subsystem (DESIGN.md §14, `ibmb serve --store`) tiers the plan
+//! cache onto disk: each payload is a hash-keyed blob (stable FNV-1a
+//! 64 content hash over the canonical encoding) in append-only
+//! segments, a small CRC-protected manifest maps plan id → blob
+//! location, and incremental saves append only the buckets whose
+//! content changed — the on-disk mirror of [`batching::CowCache`]'s
+//! structural sharing — to a delta log that
+//! [`store::PlanStore::compact`] folds into a fresh manifest
+//! generation without blocking the serve path. A restart reads the
+//! manifest (O(plans) metadata) and serves immediately; each shard
+//! faults payloads on demand through a byte-budget
+//! [`store::PlanResidency`] LRU, so resident bytes track the query
+//! working set instead of the corpus (`benches/coldstart.rs` →
+//! `BENCH_coldstart.json`; `ibmb store-stat` / `ibmb store-compact`).
+//!
 //! ## Dynamic graph updates, zero-quiesce
 //!
 //! The precomputed state stays fresh under streaming graph changes
@@ -134,6 +152,7 @@ pub mod ppr;
 pub mod runtime;
 pub mod scheduler;
 pub mod serve;
+pub mod store;
 pub mod telemetry;
 pub mod training;
 pub mod util;

@@ -8,6 +8,9 @@
 //! ibmb serve   --dataset synth-arxiv --live-updates synth --update-batches 2
 //! ibmb serve   --dataset synth-arxiv --save-cache plans.ibmb
 //! ibmb serve   --dataset synth-arxiv --cache plans.ibmb
+//! ibmb serve   --dataset synth-arxiv --store plans.cas   # 1st run saves, next runs lazy cold-start
+//! ibmb store-stat plans.cas
+//! ibmb store-compact plans.cas
 //! ibmb serve   --dataset synth-arxiv --offered-qps 50000 --deadline-ms 5 --trace trace.jsonl
 //! ibmb trace-report trace.jsonl
 //! ibmb update  --dataset synth-arxiv --deltas updates.log --save-log updates.ibmb
@@ -32,12 +35,14 @@ use ibmb::exec::ExecutorKind;
 use ibmb::experiments::{self, runner};
 use ibmb::graph::{parse_delta_log, synth_delta_stream, GraphDelta};
 use ibmb::serve::{self, Churn, RouterIndex, ServeConfig, Skew};
+use ibmb::store::PlanStore;
 use ibmb::telemetry::{self, TraceSink, TraceWriter, Tracer};
 use ibmb::util::json::Json;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ibmb <train|infer|serve|update|trace-report|check-bench|\
+        "usage: ibmb <train|infer|serve|update|store-stat|store-compact|\
+         trace-report|check-bench|\
          gen-data|list|fig2..fig9|table5..table7> \
          [--dataset NAME] [--model gcn|gat|sage] [--method NAME] \
          [--epochs N] [--seed N] [--scale F] [--prefetch-depth N] [--full]\n\
@@ -46,7 +51,9 @@ fn usage() -> ! {
          [--results-cache-bytes N] [--results-ttl-ms N] [--cold-aux N] \
          [--hidden N] [--layers N] [--heads N] \
          [--executor reference|blocked|blocked-f16|pjrt] \
-         [--cache FILE] [--save-cache FILE]\n\
+         [--cache FILE] [--save-cache FILE] \
+         [--store DIR] [--store-budget BYTES]\n\
+         store tools: ibmb store-stat DIR | ibmb store-compact DIR\n\
          admission/telemetry: [--offered-qps F] (0 = closed loop) \
          [--deadline-ms F] [--tenants N] [--tenant-rate F] \
          [--tenant-burst F] [--trace FILE.jsonl]\n\
@@ -349,6 +356,25 @@ fn validate_bench_json(text: &str) -> Result<String, String> {
                 ],
             )
         }
+        "coldstart" => {
+            need(&["dataset", "lru_budget_bytes"])?;
+            // one run per corpus size: monolithic v3 full-load TTFA vs
+            // content-addressed faulted TTFA (the ≥10x acceptance gate
+            // reads "speedup"), plus the incremental-save byte ratio
+            (
+                "runs",
+                &[
+                    "plans",
+                    "v3_load_s",
+                    "cas_ttfa_s",
+                    "speedup",
+                    "full_save_bytes",
+                    "incr_save_bytes",
+                    "incr_ratio",
+                    "resident_bytes",
+                ],
+            )
+        }
         _ => ("runs", &[]),
     };
     let mut runs = 0usize;
@@ -564,6 +590,7 @@ fn main() -> Result<()> {
                 tenants: args.get_usize("tenants", 1).max(1),
                 tenant_rate: args.get_f64("tenant-rate", 0.0).max(0.0),
                 tenant_burst: args.get_f64("tenant-burst", 32.0).max(1.0),
+                store_budget: args.get_usize("store-budget", 8 << 20),
             };
             if !["gcn", "sage", "gat"].contains(&cfg.model.as_str()) {
                 eprintln!(
@@ -777,36 +804,88 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             let save_cache = args.get("save-cache").map(str::to_string);
-            let mut setup = match args.get("cache") {
-                Some(file) => {
-                    // cold start: adopt the persisted plan cache (and
-                    // router index, when the file carries one) instead
-                    // of planning
-                    let path = std::path::Path::new(file);
-                    let (flat, packed) = cache_io::load_with_index(path)?;
-                    let cache = CowCache::from_cache(&flat);
-                    let index = match packed {
-                        Some(p) => Some(
-                            RouterIndex::from_packed(p, &cache).map_err(
-                                |e| anyhow::anyhow!("{file}: router index: {e}"),
-                            )?,
-                        ),
-                        None => None,
-                    };
-                    println!(
-                        "loaded {} plans from {file} ({}, router index {})",
-                        cache.len(),
-                        "IBMBCACH v3",
-                        if index.is_some() {
-                            "reloaded — cold start skips the index build"
-                        } else {
-                            "absent — rebuilding"
-                        }
-                    );
-                    serve::prepare_from_cache(ds, cache, index, &cfg)?
+            let store_dir = args.get("store").map(std::path::PathBuf::from);
+            // a store that already holds a manifest lazy cold-starts;
+            // a fresh --store DIR plans warm and populates it below, so
+            // the *next* run faults instead of loading
+            let lazy_start = store_dir
+                .as_ref()
+                .map(|d| PlanStore::is_initialized(d))
+                .unwrap_or(false);
+            let mut setup = if lazy_start {
+                let dir = store_dir.clone().unwrap();
+                let store = Arc::new(PlanStore::open(&dir)?);
+                let stat = store.stat();
+                println!(
+                    "store {}: generation {} epoch {}, {} plans / {} unique \
+                     blobs ({} KiB logical, {} KiB unique), {} pending delta \
+                     records — lazy cold start, residency budget {} KiB/shard",
+                    dir.display(),
+                    stat.generation,
+                    stat.epoch,
+                    stat.plans,
+                    stat.unique_blobs,
+                    stat.logical_bytes / 1024,
+                    stat.unique_bytes / 1024,
+                    stat.delta_records,
+                    cfg.store_budget / 1024
+                );
+                serve::prepare_from_store(ds, store, &cfg)?
+            } else {
+                match args.get("cache") {
+                    Some(file) => {
+                        // cold start: adopt the persisted plan cache
+                        // (and router index, when the file carries one)
+                        // instead of planning
+                        let path = std::path::Path::new(file);
+                        let (flat, packed) = cache_io::load_with_index(path)?;
+                        let cache = CowCache::from_cache(&flat);
+                        let index = match packed {
+                            Some(p) => Some(
+                                RouterIndex::from_packed(p, &cache).map_err(
+                                    |e| {
+                                        anyhow::anyhow!(
+                                            "{file}: router index: {e}"
+                                        )
+                                    },
+                                )?,
+                            ),
+                            None => None,
+                        };
+                        println!(
+                            "loaded {} plans from {file} (IBMBCACH, router \
+                             index {})",
+                            cache.len(),
+                            if index.is_some() {
+                                "reloaded — cold start skips the index build"
+                            } else {
+                                "absent — rebuilding"
+                            }
+                        );
+                        serve::prepare_from_cache(ds, cache, index, &cfg)?
+                    }
+                    None => serve::prepare(ds, &eval, &cfg),
                 }
-                None => serve::prepare(ds, &eval, &cfg),
             };
+            if let (Some(dir), false) = (&store_dir, lazy_start) {
+                let store = PlanStore::open(dir)?;
+                let state = setup.state();
+                let stats = store.save_full(
+                    &state.cache,
+                    &state.epochs,
+                    state.epoch,
+                    &state.index.to_packed(),
+                )?;
+                println!(
+                    "saved {} plans to store {} (generation {}, {} blobs, \
+                     {} KiB) — rerun with --store to lazy cold-start",
+                    state.cache.len(),
+                    dir.display(),
+                    stats.generation,
+                    stats.blobs_written,
+                    stats.bytes_written / 1024
+                );
+            }
             let trace = attach_trace(&args, &mut setup)?;
             if let Some(file) = save_cache {
                 let state = setup.state();
@@ -824,9 +903,10 @@ fn main() -> Result<()> {
             }
             let state = setup.state();
             println!(
-                "{} plans cached ({} KiB), bucket n{}, {} shard(s), \
+                "{} plans {} ({} KiB resident), bucket n{}, {} shard(s), \
                  {} skew, {} clients",
-                state.cache.len(),
+                state.num_plans(),
+                if state.lazy() { "store-backed" } else { "cached" },
                 state.cache.memory_bytes() / 1024,
                 state.meta.n_pad,
                 cfg.shards,
@@ -876,6 +956,12 @@ fn main() -> Result<()> {
                 report.exec_s,
                 report.mat_wait_s,
                 report.accuracy * 100.0
+            );
+            // ci.sh's cold-start smoke greps this line: a lazy restart
+            // must fault (store_faults > 0) with bounded residency
+            println!(
+                "  store: store_faults={} resident_bytes={}",
+                report.store_faults, report.resident_bytes
             );
             print_admission(&report);
             finish_trace(&mut setup, trace)?;
@@ -979,6 +1065,72 @@ fn main() -> Result<()> {
                 refresh_s * 1e3,
                 dg.epoch()
             );
+        }
+        Some("store-stat") => {
+            anyhow::ensure!(
+                !args.positional.is_empty(),
+                "usage: ibmb store-stat DIR"
+            );
+            for dir in &args.positional {
+                let path = std::path::Path::new(dir);
+                anyhow::ensure!(
+                    PlanStore::is_initialized(path),
+                    "{dir}: not an initialized plan store"
+                );
+                let store = PlanStore::open(path)?;
+                let s = store.stat();
+                // dedup ratio is the on-disk mirror of
+                // CowCache::shared_with().bytes: logical bytes every
+                // plan references vs unique blob bytes actually stored
+                let dedup = s.logical_bytes as f64
+                    / (s.unique_bytes as f64).max(1.0);
+                println!(
+                    "{dir}: generation {} epoch {}\n  {} plans, {} unique \
+                     blobs in {} segment(s) ({} KiB on disk)\n  logical \
+                     {} KiB / unique {} KiB (dedup {:.2}x, {} KiB shared \
+                     structurally)\n  {} delta records pending compaction, \
+                     {} router slots",
+                    s.generation,
+                    s.epoch,
+                    s.plans,
+                    s.unique_blobs,
+                    s.segments,
+                    s.segment_bytes / 1024,
+                    s.logical_bytes / 1024,
+                    s.unique_bytes / 1024,
+                    dedup,
+                    s.logical_bytes.saturating_sub(s.unique_bytes) / 1024,
+                    s.delta_records,
+                    s.router_nodes
+                );
+            }
+        }
+        Some("store-compact") => {
+            anyhow::ensure!(
+                !args.positional.is_empty(),
+                "usage: ibmb store-compact DIR"
+            );
+            for dir in &args.positional {
+                let path = std::path::Path::new(dir);
+                anyhow::ensure!(
+                    PlanStore::is_initialized(path),
+                    "{dir}: not an initialized plan store"
+                );
+                let store = PlanStore::open(path)?;
+                let t0 = std::time::Instant::now();
+                let c = store.compact()?;
+                println!(
+                    "{dir}: compacted to generation {} in {:.2}ms — folded \
+                     {} delta records, removed {} segment(s), rewrote \
+                     {} KiB, reclaimed {} KiB",
+                    c.generation,
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    c.delta_records_folded,
+                    c.segments_removed,
+                    c.bytes_rewritten / 1024,
+                    c.bytes_reclaimed / 1024
+                );
+            }
         }
         Some("trace-report") => {
             // offline assembly of `--trace` JSONL into per-query call

@@ -54,6 +54,14 @@
 //!   ([`update::DynamicServeSession`], `ibmb serve --update-stream`,
 //!   `ibmb update`, `benches/updates.rs`).
 //!
+//! Store-backed deployments (`ibmb serve --store DIR`) cold-start from
+//! the content-addressed plan store ([`crate::store`]): the epoch-0
+//! snapshot is assembled from the manifest alone
+//! ([`service::prepare_from_store`]) and shard workers fault payloads
+//! on demand through per-shard byte-budget residency LRUs
+//! ([`crate::store::PlanResidency`]), so time-to-first-answer scales
+//! with the working set, not the corpus (DESIGN.md §14).
+//!
 //! Execution uses the exact CPU reference forward pass
 //! ([`crate::inference::fullgraph::forward`]) over each plan's induced
 //! subgraph, so the service runs end-to-end even in the offline build
@@ -79,8 +87,9 @@ pub use queue::{MicrobatchQueue, PendingGroup, QueryTicket};
 pub use results::ResultsCache;
 pub use router::{PlanKey, QueryRouter, Route, RouterIndex};
 pub use service::{
-    prepare, prepare_from_cache, serve_closed_loop, serve_closed_loop_with,
-    serve_with_churn, Churn, ServeConfig, ServeReport, ServeSetup,
+    prepare, prepare_from_cache, prepare_from_store, serve_closed_loop,
+    serve_closed_loop_with, serve_with_churn, Churn, ServeConfig, ServeReport,
+    ServeSetup,
 };
 pub use shard::{
     reference_artifact, synthesize_cold, ColdPlan, Placement, PLACEMENT_CELLS,

@@ -179,6 +179,41 @@ impl RouterIndex {
             duplicates: 0,
         })
     }
+
+    /// Rebuild from the packed form against plan *metadata* only —
+    /// the lazy (store-backed) cold-start path, where payloads live on
+    /// disk and resolving each one to verify node ownership would
+    /// defeat the point of faulting lazily. Every warm entry is
+    /// checked to stay inside the manifest's declared shapes
+    /// (`outputs_of(pid)` = the plan's output count); ownership itself
+    /// is re-verified blob-by-blob at fault time via the content hash.
+    pub fn from_packed_meta(
+        packed: Vec<u64>,
+        num_plans: usize,
+        outputs_of: impl Fn(usize) -> usize,
+    ) -> Result<RouterIndex, String> {
+        for (u, &p) in packed.iter().enumerate() {
+            if p == ABSENT {
+                continue;
+            }
+            let (pid, pos) = ((p >> 32) as usize, (p & u32::MAX as u64) as usize);
+            if pid >= num_plans {
+                return Err(format!(
+                    "node {u}: plan {pid} out of range ({num_plans} plans)"
+                ));
+            }
+            if pos >= outputs_of(pid) {
+                return Err(format!(
+                    "node {u}: pos {pos} past plan {pid}'s {} outputs",
+                    outputs_of(pid)
+                ));
+            }
+        }
+        Ok(RouterIndex {
+            index: packed,
+            duplicates: 0,
+        })
+    }
 }
 
 /// Mutable cold-routing state: node → stable cold-plan id. Owned by

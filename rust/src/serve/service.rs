@@ -114,6 +114,10 @@ pub struct ServeConfig {
     /// once before shards spawn so an unavailable backend (the PJRT
     /// stub) fails the run cleanly instead of panicking a worker.
     pub executor: ExecutorKind,
+    /// Per-shard plan-residency byte budget for store-backed (lazy)
+    /// deployments (`--store-budget`). Ignored when the snapshot
+    /// carries its full cache in memory.
+    pub store_budget: usize,
 }
 
 impl Default for ServeConfig {
@@ -139,6 +143,7 @@ impl Default for ServeConfig {
             tenant_rate: 0.0,
             tenant_burst: 32.0,
             executor: ExecutorKind::default(),
+            store_budget: 8 << 20,
         }
     }
 }
@@ -206,6 +211,7 @@ pub(crate) fn build_initial_state(
         placement,
         meta: meta.clone(),
         model: model.clone(),
+        store: None,
     });
     debug_assert!(state.validate().is_ok(), "{:?}", state.validate());
     (Arc::new(ServeStateCell::new(state)), meta, model)
@@ -256,6 +262,81 @@ pub fn prepare_from_cache(
     let (cell, _, _) = build_initial_state(Arc::new(ds), cache, cfg, index);
     Ok(ServeSetup {
         cell,
+        router: QueryRouter::new(),
+        tracer: Tracer::disabled(),
+    })
+}
+
+/// Lazy cold start from a content-addressed [`PlanStore`]: the epoch-0
+/// snapshot is assembled from the store *manifest alone* — plan
+/// counts, shapes, epochs, and the packed router index — without
+/// reading a single blob. Plan payloads stay on disk until a shard's
+/// residency LRU faults them in ([`super::shard::shard_worker`]), so
+/// time-to-first-answer is O(manifest + one blob) instead of O(corpus)
+/// and resident bytes stay bounded by `cfg.store_budget` per shard.
+///
+/// The bucket is sized from the manifest's `max_plan_nodes` (the same
+/// formula [`build_initial_state`] derives from a resident cache), the
+/// router index is validated against manifest shape metadata
+/// ([`RouterIndex::from_packed_meta`]), and placement is round-robin —
+/// there are no payloads to majority-vote cells over.
+pub fn prepare_from_store(
+    ds: Dataset,
+    store: Arc<crate::store::PlanStore>,
+    cfg: &ServeConfig,
+) -> Result<ServeSetup> {
+    let view = store.view();
+    anyhow::ensure!(view.num_plans() > 0, "store has no plans");
+    let n = ds.graph.num_nodes();
+    anyhow::ensure!(
+        view.router.len() == n,
+        "store router covers {} nodes, dataset has {n}",
+        view.router.len()
+    );
+    let bucket = view
+        .max_plan_nodes()
+        .max(cfg.cold_aux + 1)
+        .next_power_of_two()
+        .max(16);
+    let ds = Arc::new(ds);
+    let meta = Arc::new(reference_artifact(
+        &cfg.model,
+        ds.feat_dim,
+        ds.num_classes,
+        cfg.hidden,
+        cfg.layers,
+        cfg.heads,
+        bucket,
+    ));
+    let model = Arc::new(ModelState::init(&meta, cfg.seed ^ 0x51A7E));
+    let entries = view.entries.clone();
+    let index = RouterIndex::from_packed_meta(
+        view.router.clone(),
+        view.num_plans(),
+        |pid| entries[pid].num_outputs as usize,
+    )
+    .map_err(|e| anyhow::anyhow!("store router index invalid: {e}"))?;
+    let placement = Arc::new(Placement::round_robin(
+        n,
+        view.num_plans(),
+        PLACEMENT_CELLS,
+    ));
+    let state = Arc::new(ServeState {
+        epoch: view.epoch,
+        ds,
+        cache: Arc::new(CowCache::from_plans(&[])),
+        index: Arc::new(index),
+        epochs: Arc::new(view.epochs()),
+        placement,
+        meta,
+        model,
+        store: Some(store),
+    });
+    state
+        .validate()
+        .map_err(|e| anyhow::anyhow!("store snapshot invalid: {e}"))?;
+    Ok(ServeSetup {
+        cell: Arc::new(ServeStateCell::new(state)),
         router: QueryRouter::new(),
         tracer: Tracer::disabled(),
     })
@@ -344,6 +425,13 @@ pub struct ServeReport {
     /// backends within logit tolerance produce identical predictions
     /// and therefore identical hashes.
     pub logit_hash: u64,
+    /// Plan-store faults (blob reads) summed over shards — 0 unless
+    /// the deployment is store-backed (lazy).
+    pub store_faults: u64,
+    /// Payload bytes resident in shard plan LRUs at shutdown, summed
+    /// over shards — bounded by `shards × store_budget` (plus the
+    /// one-plan floor).
+    pub resident_bytes: u64,
 }
 
 /// Fold one answered query into the run's prediction hash. Wrapping
@@ -595,6 +683,7 @@ pub fn serve_with_churn(
                 ring_depth: cfg.ring_depth,
                 cold_aux: cfg.cold_aux,
                 executor: cfg.executor,
+                store_budget: cfg.store_budget,
             };
             let out = res_tx.clone();
             let strace = tracer.clone();
@@ -966,11 +1055,15 @@ pub fn serve_with_churn(
         let mut mat_wait_s = 0.0;
         let mut arena_bytes = 0usize;
         let mut arena_allocations = 0usize;
+        let mut store_faults = 0u64;
+        let mut resident_bytes = 0u64;
         for msg in res_rx.iter() {
             if let ShardMsg::Done(d) = msg {
                 mat_wait_s += d.wait_s;
                 arena_bytes += d.arena_bytes;
                 arena_allocations += d.arena_allocations;
+                store_faults += d.store_faults;
+                resident_bytes += d.resident_bytes;
             }
         }
 
@@ -997,7 +1090,7 @@ pub fn serve_with_churn(
             accuracy: metrics.accuracy(),
             shard_queries: metrics.shard_queries.clone(),
             shard_balance: metrics.shard_balance(),
-            plans: final_state.cache.len(),
+            plans: final_state.num_plans(),
             exec_s: metrics.exec_s,
             mat_wait_s,
             arena_bytes,
@@ -1021,6 +1114,8 @@ pub fn serve_with_churn(
             gc_retained_bytes_peak,
             gc_retained_groups,
             logit_hash,
+            store_faults,
+            resident_bytes,
         };
         Ok((report, update_reports))
     })
@@ -1207,6 +1302,64 @@ mod tests {
         let err = serve_closed_loop(&mut setup, &eval, Skew::Uniform, &cfg)
             .expect_err("stub backend must fail the run cleanly");
         assert!(err.to_string().contains("PJRT"), "{err}");
+    }
+
+    #[test]
+    fn lazy_store_serving_matches_warm_predictions() {
+        use crate::store::PlanStore;
+        let dir = std::env::temp_dir().join(format!(
+            "ibmb_lazy_serve_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = tiny();
+        let cfg = ServeConfig {
+            queries: 48,
+            clients: 6,
+            shards: 2,
+            flush_window: Duration::from_micros(200),
+            seed: 17,
+            ..Default::default()
+        };
+        let eval = ds.splits.train.clone();
+        // warm run, then persist its deployment
+        let mut warm = prepare(ds.clone(), &eval, &cfg);
+        let warm_state = warm.state();
+        let store = PlanStore::open(&dir).unwrap();
+        store
+            .save_full(
+                &warm_state.cache,
+                &warm_state.epochs,
+                0,
+                &warm_state.index.to_packed(),
+            )
+            .unwrap();
+        let warm_report =
+            serve_closed_loop(&mut warm, &eval, Skew::Uniform, &cfg).unwrap();
+        assert_eq!(warm_report.store_faults, 0, "warm run must not fault");
+        // lazy cold start: manifest only, payloads fault on demand
+        let mut lazy =
+            prepare_from_store(ds, Arc::new(store), &cfg).unwrap();
+        let lazy_state = lazy.state();
+        assert!(lazy_state.lazy());
+        assert!(lazy_state.cache.is_empty(), "no payloads resident");
+        assert_eq!(lazy_state.num_plans(), warm_state.cache.len());
+        assert_eq!(lazy_state.meta.n_pad, warm_state.meta.n_pad);
+        let lazy_report =
+            serve_closed_loop(&mut lazy, &eval, Skew::Uniform, &cfg).unwrap();
+        assert_eq!(
+            lazy_report.executed_queries + lazy_report.cache_hits,
+            48
+        );
+        assert!(lazy_report.store_faults > 0, "lazy run must fault");
+        assert!(lazy_report.resident_bytes > 0);
+        assert_eq!(
+            lazy_report.logit_hash, warm_report.logit_hash,
+            "store-backed serving changed predictions"
+        );
+        assert!((lazy_report.accuracy - warm_report.accuracy).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

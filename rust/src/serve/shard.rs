@@ -34,7 +34,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::batching::{BatchArena, CowCache, DenseBatch};
+use crate::batching::{BatchArena, CowCache, DenseBatch, PlanPayload};
 use crate::datasets::Dataset;
 use crate::exec::{ExecScratch, Executor, ExecutorKind, PlanView};
 use crate::graph::{induced_subgraph, CsrGraph};
@@ -43,6 +43,7 @@ use crate::pipeline::run_prefetched;
 use crate::ppr::push::{push_ppr, PushConfig, PushWorkspace};
 use crate::ppr::topk::top_k_indices;
 use crate::runtime::{ArtifactMeta, ModelState, ParamSpec};
+use crate::store::PlanResidency;
 use crate::util::Rng;
 
 use super::queue::QueryTicket;
@@ -204,6 +205,21 @@ impl Placement {
             cells,
             node_cell,
             plan_cell,
+        }
+    }
+
+    /// Metadata-only placement for store-backed cold starts: plan
+    /// payloads are still on disk, so there are no output lists to
+    /// majority-vote over and no reason to run METIS before the first
+    /// query. Nodes and plans get round-robin cells — locality is
+    /// deliberately traded for a zero-read start; a later re-`build`
+    /// (once the working set is resident) restores METIS placement.
+    pub fn round_robin(num_nodes: usize, num_plans: usize, cells: usize) -> Placement {
+        let cells = cells.clamp(1, num_nodes.max(1));
+        Placement {
+            cells,
+            node_cell: (0..num_nodes).map(|u| (u % cells) as u32).collect(),
+            plan_cell: (0..num_plans).map(|p| (p % cells) as u32).collect(),
         }
     }
 
@@ -389,6 +405,11 @@ pub struct ShardDone {
     pub drains: u64,
     pub arena_bytes: usize,
     pub arena_allocations: usize,
+    /// Plan-store faults (blob reads) this shard performed; 0 unless
+    /// the deployment is store-backed.
+    pub store_faults: u64,
+    /// Payload bytes resident in this shard's plan LRU at shutdown.
+    pub resident_bytes: u64,
 }
 
 /// Everything flowing back from shards to the event loop.
@@ -418,6 +439,10 @@ pub struct ShardCtx {
     /// probe-builds the kind before spawning workers, so construction
     /// here cannot fail for a validated config.
     pub executor: ExecutorKind,
+    /// Byte budget of the shard's plan-residency LRU, used only when a
+    /// snapshot is store-backed (lazy). 0 means "minimum": the LRU
+    /// still keeps one plan so anything can execute.
+    pub store_budget: usize,
 }
 
 /// Features-only fill for the CPU executors. The sparse forward reads
@@ -449,6 +474,7 @@ fn execute_one(
     ctx: &ShardCtx,
     item: &WorkItem,
     cold_plans: &HashMap<(u32, u64), ColdPlan>,
+    resolved: Option<&PlanPayload>,
     buf: &DenseBatch,
     exec: &dyn Executor,
     scratch: &mut ExecScratch,
@@ -458,6 +484,16 @@ fn execute_one(
     let n = buf.num_real;
     let classes = state.meta.classes;
     let (edge_src, edge_dst, weights) = match &item.work {
+        // a store-backed (lazy) snapshot has the payload faulted into
+        // `resolved`; a warm snapshot reads the CoW cache zero-copy
+        Work::Cached(_) if resolved.is_some() => {
+            let p = resolved.unwrap();
+            (
+                p.edge_src.as_slice(),
+                p.edge_dst.as_slice(),
+                p.weights.as_slice(),
+            )
+        }
         Work::Cached(pid) => {
             let p = *pid as usize;
             (
@@ -554,6 +590,9 @@ pub fn shard_worker(
     let mut cold_order: VecDeque<(u32, u64)> = VecDeque::new();
     let mut ws = PushWorkspace::new(0);
     let push_cfg = PushConfig::default();
+    // plan-residency LRU, built on the first store-backed item so warm
+    // deployments pay nothing for it
+    let mut residency: Option<PlanResidency> = None;
     let mut wait_s = 0.0;
     let mut consume_s = 0.0;
     let mut drains = 0u64;
@@ -592,6 +631,29 @@ pub fn shard_worker(
                 }
             }
         }
+        // fault store-backed payloads through the residency LRU before
+        // the ring runs: the fill closure executes on the materialize
+        // thread, which cannot borrow the LRU mutably. Resolved Arcs
+        // pin evicted payloads for the rest of the drain.
+        let mut resolved: Vec<Option<Arc<PlanPayload>>> = vec![None; items.len()];
+        for (i, item) in items.iter().enumerate() {
+            let Work::Cached(pid) = item.work else {
+                continue;
+            };
+            if !item.state.lazy() {
+                continue;
+            }
+            let store = item.state.store.as_ref().expect("lazy implies a store");
+            let res = residency
+                .get_or_insert_with(|| PlanResidency::new(ctx.store_budget.max(1)));
+            let (payload, blob_bytes) = res
+                .get_or_fault(pid, store)
+                .expect("plan store fault failed (blob missing or corrupt)");
+            if blob_bytes > 0 {
+                tb.instant(Stage::StoreFault, NO_QUERY, item.gid, sh, blob_bytes);
+            }
+            resolved[i] = Some(payload);
+        }
         if !scratch_sized {
             // size once from the bucket (the largest batch this shard
             // can see); edge-proportional buffers grow on demand and
@@ -606,6 +668,7 @@ pub fn shard_worker(
         let ring = arena.acquire_many(ctx.bucket, depth);
         let items_ref = &items;
         let cold_ref = &cold_plans;
+        let resolved_ref = &resolved;
         let fill_tb_ref = &fill_tb;
         let (stats, ring) = run_prefetched(
             &order,
@@ -618,6 +681,10 @@ pub fn shard_worker(
                     }
                 }
                 match &item.work {
+                    Work::Cached(_) if resolved_ref[i].is_some() => {
+                        let p = resolved_ref[i].as_ref().unwrap();
+                        fill_features(&item.state.ds, &p.nodes, p.num_outputs, buf)
+                    }
                     Work::Cached(pid) => {
                         let p = *pid as usize;
                         fill_features(
@@ -645,6 +712,7 @@ pub fn shard_worker(
                     &ctx,
                     item,
                     cold_ref,
+                    resolved_ref[i].as_deref(),
                     buf,
                     exec.as_ref(),
                     &mut scratch,
@@ -678,6 +746,11 @@ pub fn shard_worker(
         drains,
         arena_bytes: arena.memory_bytes(),
         arena_allocations: arena.allocations(),
+        store_faults: residency.as_ref().map(|r| r.faults).unwrap_or(0),
+        resident_bytes: residency
+            .as_ref()
+            .map(|r| r.resident_bytes() as u64)
+            .unwrap_or(0),
     }));
 }
 
@@ -811,6 +884,7 @@ mod tests {
                 ring_depth: 2,
                 cold_aux: 8,
                 executor: ExecutorKind::Blocked,
+                store_budget: 0,
             };
             scope.spawn(move || {
                 shard_worker(ctx, work_rx, res_tx, Tracer::disabled())

@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use crate::batching::cache::CowCache;
 use crate::datasets::Dataset;
 use crate::runtime::{ArtifactMeta, ModelState};
+use crate::store::PlanStore;
 
 use super::router::{PlanKey, RouterIndex};
 use super::shard::Placement;
@@ -94,9 +95,32 @@ pub struct ServeState {
     pub meta: Arc<ArtifactMeta>,
     /// Executor model parameters (stable across epochs).
     pub model: Arc<ModelState>,
+    /// Content-addressed plan store backing this deployment, if any.
+    /// With an **empty** `cache` this is a *lazy* (store-backed)
+    /// snapshot: shards fault payloads on demand through their
+    /// residency LRU instead of reading `cache`. With a non-empty
+    /// cache the store is a persistence mirror only (incremental
+    /// saves), never a read path.
+    pub store: Option<Arc<PlanStore>>,
 }
 
 impl ServeState {
+    /// Store-backed lazy mode: plan payloads live on disk, not in
+    /// `cache`, and shards resolve them by faulting.
+    pub fn lazy(&self) -> bool {
+        self.store.is_some() && self.cache.is_empty()
+    }
+
+    /// Number of plans this snapshot serves — cache entries, or in
+    /// lazy mode the store manifest's plan count.
+    pub fn num_plans(&self) -> usize {
+        if self.lazy() {
+            self.store.as_ref().map(|s| s.num_plans()).unwrap_or(0)
+        } else {
+            self.cache.len()
+        }
+    }
+
     /// The freshness epoch the results memo keys `key` on: a cached
     /// plan's own epoch (bumps only when *that plan* changed, so memo
     /// value survives unrelated deltas), the snapshot epoch for cold
@@ -132,12 +156,12 @@ impl ServeState {
                 n
             ));
         }
-        if self.epochs.len() != self.cache.len() {
+        if self.epochs.len() != self.num_plans() {
             return Err(format!(
                 "epoch {}: {} plan epochs for {} plans",
                 self.epoch,
                 self.epochs.len(),
-                self.cache.len()
+                self.num_plans()
             ));
         }
         if let Some(&e) = self.epochs.iter().find(|&&e| e > self.epoch) {
@@ -154,14 +178,14 @@ impl ServeState {
             ));
         }
         if self.placement.num_nodes() != n
-            || self.placement.num_plans() != self.cache.len()
+            || self.placement.num_plans() != self.num_plans()
         {
             return Err(format!(
                 "epoch {}: placement covers {}/{} (nodes/plans), want {n}/{}",
                 self.epoch,
                 self.placement.num_nodes(),
                 self.placement.num_plans(),
-                self.cache.len()
+                self.num_plans()
             ));
         }
         if self.meta.feat != self.ds.feat_dim {
@@ -170,7 +194,29 @@ impl ServeState {
                 self.meta.feat, self.ds.feat_dim
             ));
         }
-        // every warm index entry resolves to a plan that owns the node
+        // every warm index entry resolves to a plan that owns the node.
+        // In lazy mode payloads are on disk: validate against the
+        // store manifest's shape metadata instead of resolving them.
+        if self.lazy() {
+            let store = self.store.as_ref().unwrap();
+            let view = store.view();
+            for u in 0..n as u32 {
+                if let Some((pid, pos)) = self.index.lookup(u) {
+                    let outputs = view
+                        .entries
+                        .get(pid as usize)
+                        .map(|e| e.num_outputs as usize);
+                    if outputs.is_none() || pos as usize >= outputs.unwrap() {
+                        return Err(format!(
+                            "epoch {}: node {u} routed to ({pid}, {pos}) \
+                             outside the store manifest",
+                            self.epoch
+                        ));
+                    }
+                }
+            }
+            return Ok(());
+        }
         for u in 0..n as u32 {
             if let Some((pid, pos)) = self.index.lookup(u) {
                 let p = pid as usize;

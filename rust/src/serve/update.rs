@@ -53,6 +53,7 @@ use crate::datasets::Dataset;
 use crate::graph::delta::{DynamicGraph, GraphDelta};
 use crate::graph::GraphView;
 use crate::runtime::{ArtifactMeta, ModelState};
+use crate::store::PlanStore;
 use crate::util::Rng;
 
 use super::load::Skew;
@@ -63,6 +64,13 @@ use super::service::{
     ServeSetup,
 };
 use super::state::{ServeState, ServeStateCell};
+
+/// Fold the store's delta log into a fresh manifest generation once
+/// this many delta records are pending. Compaction rewrites the
+/// manifest off the serve path (readers keep their published view), so
+/// the threshold only trades recovery-replay length against rewrite
+/// frequency.
+const COMPACT_AFTER_DELTAS: usize = 32;
 
 /// Dynamic-update knobs layered on a [`ServeConfig`].
 #[derive(Debug, Clone, Copy)]
@@ -103,6 +111,12 @@ pub struct UpdateReport {
     pub replan_s: f64,
     /// Seconds committing (CSR splice + snapshot assembly + publish).
     pub commit_s: f64,
+    /// Seconds persisting the delta to the attached plan store
+    /// (0 when no store is attached).
+    pub store_s: f64,
+    /// Blobs actually appended to the store (content-new buckets);
+    /// structurally shared buckets cost nothing.
+    pub store_blobs_written: usize,
 }
 
 impl UpdateReport {
@@ -134,12 +148,29 @@ pub struct UpdateApplier {
     /// Executor identity (stable across epochs, shared by pointer).
     meta: Arc<ArtifactMeta>,
     model: Arc<ModelState>,
+    /// Content-addressed store every published snapshot is mirrored
+    /// into incrementally (only content-new buckets are written).
+    store: Option<Arc<PlanStore>>,
 }
 
 impl UpdateApplier {
     /// The shared cell this applier publishes to.
     pub fn cell(&self) -> Arc<ServeStateCell> {
         self.cell.clone()
+    }
+
+    /// Attach a plan store: every subsequent [`UpdateApplier::apply`]
+    /// mirrors the published snapshot into it via
+    /// [`PlanStore::save_incremental`] — structural sharing means only
+    /// buckets with new content hashes hit the disk — and folds the
+    /// delta log once it exceeds [`COMPACT_AFTER_DELTAS`] records.
+    pub fn attach_store(&mut self, store: Arc<PlanStore>) {
+        self.store = Some(store);
+    }
+
+    /// The attached plan store, if any.
+    pub fn store(&self) -> Option<Arc<PlanStore>> {
+        self.store.clone()
     }
 
     /// Current graph epoch (== the last published snapshot's).
@@ -254,10 +285,35 @@ impl UpdateApplier {
             placement,
             meta: self.meta.clone(),
             model: self.model.clone(),
+            store: prev.store.clone(),
         });
         debug_assert!(next.validate().is_ok(), "{:?}", next.validate());
-        self.cell.store(next);
+        self.cell.store(next.clone());
         let commit_s = commit_graph_s + t_sync.elapsed().as_secs_f64();
+
+        // persistence mirror: append only content-new buckets + one
+        // manifest delta record, off the publish path (readers already
+        // have the new snapshot). A full delta log folds into a fresh
+        // manifest generation without blocking serve.
+        let mut store_s = 0.0;
+        let mut store_blobs_written = 0usize;
+        if let Some(store) = &self.store {
+            let t_store = Instant::now();
+            let packed = next.index.to_packed();
+            let router_ext = &packed[prev.index.len().min(packed.len())..];
+            let stats = store.save_incremental(
+                &prev.cache,
+                &next.cache,
+                &next.epochs,
+                applied.epoch,
+                router_ext,
+            )?;
+            store_blobs_written = stats.blobs_written;
+            if store.pending_delta_records() > COMPACT_AFTER_DELTAS {
+                store.compact()?;
+            }
+            store_s = t_store.elapsed().as_secs_f64();
+        }
 
         Ok(UpdateReport {
             epoch: applied.epoch,
@@ -274,6 +330,8 @@ impl UpdateApplier {
             refresh_s: refresh.refresh_s,
             replan_s: refresh.replan_s,
             commit_s,
+            store_s,
+            store_blobs_written,
         })
     }
 }
@@ -367,6 +425,7 @@ impl DynamicServeSession {
             cell: cell.clone(),
             meta,
             model,
+            store: None,
         };
         let memo = ResultsCache::new(cfg.results_cache_bytes, cfg.results_ttl);
         DynamicServeSession {
@@ -502,10 +561,10 @@ mod tests {
             after.ds.graph.num_nodes()
         );
         // untouched buckets are pointer-shared between the snapshots
-        assert_eq!(
-            after.cache.shared_with(&before.cache),
-            after.cache.len() - report.stale_plans()
-        );
+        let shared = after.cache.shared_with(&before.cache);
+        assert_eq!(shared.buckets, after.cache.len() - report.stale_plans());
+        assert!(shared.bytes > 0, "shared buckets must carry bytes");
+        assert!(shared.bytes < after.cache.memory_bytes());
         // changed plans carry the new epoch, unchanged keep the old
         for (pid, (&a, &b)) in
             after.epochs.iter().zip(before.epochs.iter()).enumerate()
@@ -532,7 +591,7 @@ mod tests {
         assert_eq!(report.buckets_patched, 0, "payloads must be shared");
         let after = s.state();
         assert_eq!(
-            after.cache.shared_with(&before.cache),
+            after.cache.shared_with(&before.cache).buckets,
             after.cache.len(),
             "feature-only delta must share the whole plan store"
         );

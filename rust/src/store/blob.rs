@@ -1,0 +1,242 @@
+//! Blob segment I/O: append-only files of hash-keyed payload records,
+//! read back lazily through the [`BlobReader`] trait.
+//!
+//! A segment (`seg-N.blob`) is a flat sequence of records,
+//! `[hash u64 LE][len u64 LE][payload len bytes]`, where the payload
+//! is a plan's canonical encoding ([`super::hash::encode_payload`]).
+//! Records are immutable once written — compaction writes a *new*
+//! segment and unlinks the old one; readers holding an open fd keep
+//! reading their generation safely (POSIX unlink semantics).
+//!
+//! Reads go through [`BlobReader`] so the positioned-read strategy is
+//! one swappable implementation: on unix [`FileBlobReader`] uses
+//! `pread` (`FileExt::read_at` — no shared cursor, no locking, safe
+//! from N shards at once); elsewhere it degrades to a mutexed
+//! seek+read. An mmap-backed reader would slot in behind the same
+//! trait without touching any caller.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Positioned reads into an immutable blob segment. `Send + Sync`: one
+/// reader is shared by every shard faulting from the segment.
+pub trait BlobReader: Send + Sync {
+    /// Fill `buf` exactly from byte offset `off`.
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()>;
+    /// Segment length in bytes.
+    fn len(&self) -> u64;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// File-backed [`BlobReader`]: `pread` on unix, mutexed seek+read as
+/// the portable fallback.
+pub struct FileBlobReader {
+    #[cfg(unix)]
+    file: File,
+    #[cfg(not(unix))]
+    file: std::sync::Mutex<File>,
+    len: u64,
+}
+
+impl FileBlobReader {
+    pub fn open(path: &Path) -> Result<FileBlobReader> {
+        let file = File::open(path)
+            .with_context(|| format!("open blob segment {}", path.display()))?;
+        let len = file.metadata()?.len();
+        Ok(FileBlobReader {
+            #[cfg(unix)]
+            file,
+            #[cfg(not(unix))]
+            file: std::sync::Mutex::new(file),
+            len,
+        })
+    }
+}
+
+impl BlobReader for FileBlobReader {
+    #[cfg(unix)]
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file
+            .read_exact_at(buf, off)
+            .with_context(|| format!("pread {} bytes at {off}", buf.len()))
+    }
+
+    #[cfg(not(unix))]
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        let mut f = self.file.lock().unwrap_or_else(|p| p.into_inner());
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(buf)
+            .with_context(|| format!("read {} bytes at {off}", buf.len()))
+    }
+
+    fn len(&self) -> u64 {
+        self.len
+    }
+}
+
+/// Path of blob segment `seg` under the store directory.
+pub fn segment_path(dir: &Path, seg: u64) -> PathBuf {
+    dir.join(format!("seg-{seg}.blob"))
+}
+
+/// Append-side handle for one blob segment.
+pub struct SegmentWriter {
+    file: File,
+    /// Segment id (the `N` in `seg-N.blob`).
+    pub seg: u64,
+    /// Current end-of-file offset (next record lands here).
+    pub end: u64,
+}
+
+impl SegmentWriter {
+    /// Open segment `seg` for appending, creating it if absent.
+    pub fn open(dir: &Path, seg: u64) -> Result<SegmentWriter> {
+        let path = segment_path(dir, seg);
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .read(true)
+            .open(&path)
+            .with_context(|| format!("open blob segment {}", path.display()))?;
+        let end = file.metadata()?.len();
+        Ok(SegmentWriter { file, seg, end })
+    }
+
+    /// Append one `[hash][len][payload]` record; returns the byte
+    /// offset of the *payload* (what the manifest records) and the
+    /// total bytes written.
+    pub fn append(&mut self, hash: u64, payload: &[u8]) -> Result<(u64, u64)> {
+        let mut rec = Vec::with_capacity(16 + payload.len());
+        rec.extend_from_slice(&hash.to_le_bytes());
+        rec.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        rec.extend_from_slice(payload);
+        self.file.write_all(&rec)?;
+        let payload_off = self.end + 16;
+        self.end += rec.len() as u64;
+        Ok((payload_off, rec.len() as u64))
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// One record's address discovered by [`scan_segment`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlobLocation {
+    pub seg: u64,
+    /// Payload byte offset within the segment.
+    pub off: u64,
+    /// Payload byte length.
+    pub len: u64,
+}
+
+/// Walk a segment's record headers (seeking over payloads, so the scan
+/// reads 16 bytes per record regardless of blob size) and report every
+/// `(hash, location)` pair. This rebuilds the writer-side dedup index
+/// on the store's first write — read-only opens skip it entirely —
+/// without trusting anything but the segment itself; a truncated
+/// trailing record is a hard error — the segment is append-only, so a
+/// short tail means a torn write.
+pub fn scan_segment(
+    dir: &Path,
+    seg: u64,
+) -> Result<Vec<(u64, BlobLocation)>> {
+    let path = segment_path(dir, seg);
+    let mut file = File::open(&path)
+        .with_context(|| format!("open blob segment {}", path.display()))?;
+    let total = file.metadata()?.len();
+    let mut found = Vec::new();
+    let mut off = 0u64;
+    let mut header = [0u8; 16];
+    while off < total {
+        anyhow::ensure!(
+            off + 16 <= total,
+            "{}: truncated record header at byte {off}",
+            path.display()
+        );
+        file.seek(SeekFrom::Start(off))?;
+        file.read_exact(&mut header)?;
+        let hash = u64::from_le_bytes(header[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        anyhow::ensure!(
+            off + 16 + len <= total,
+            "{}: record at byte {off} runs past end of segment",
+            path.display()
+        );
+        found.push((
+            hash,
+            BlobLocation {
+                seg,
+                off: off + 16,
+                len,
+            },
+        ));
+        off += 16 + len;
+    }
+    Ok(found)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ibmb_blob_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok(); // stale state from failed runs
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_scan_read_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let mut w = SegmentWriter::open(&dir, 0).unwrap();
+        let (off_a, _) = w.append(0xA, b"payload-aaa").unwrap();
+        let (off_b, _) = w.append(0xB, b"bb").unwrap();
+        w.flush().unwrap();
+        assert_eq!(off_a, 16);
+        assert_eq!(off_b, 16 + 11 + 16);
+
+        let scan = scan_segment(&dir, 0).unwrap();
+        assert_eq!(scan.len(), 2);
+        assert_eq!(scan[0].0, 0xA);
+        assert_eq!(scan[0].1, BlobLocation { seg: 0, off: 16, len: 11 });
+        assert_eq!(scan[1].0, 0xB);
+
+        let r = FileBlobReader::open(&segment_path(&dir, 0)).unwrap();
+        let mut buf = vec![0u8; 11];
+        r.read_at(scan[0].1.off, &mut buf).unwrap();
+        assert_eq!(&buf, b"payload-aaa");
+        let mut buf = vec![0u8; 2];
+        r.read_at(scan[1].1.off, &mut buf).unwrap();
+        assert_eq!(&buf, b"bb");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scan_rejects_torn_tail() {
+        let dir = tmpdir("torn");
+        let mut w = SegmentWriter::open(&dir, 1).unwrap();
+        w.append(0xC, b"complete record").unwrap();
+        w.append(0xD, b"this one gets torn").unwrap();
+        w.flush().unwrap();
+        let path = segment_path(&dir, 1);
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 5).unwrap();
+        let err = scan_segment(&dir, 1).unwrap_err().to_string();
+        assert!(err.contains("past end of segment"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

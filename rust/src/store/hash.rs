@@ -1,0 +1,186 @@
+//! Canonical plan-payload encoding and the 64-bit content hash over
+//! it — the identity function of the content-addressed store.
+//!
+//! A [`PlanPayload`] has exactly one canonical byte form (all fields
+//! little-endian, fixed field order, f32 weights as raw bit patterns),
+//! so two payloads hash equal iff they are byte-identical. The hash is
+//! FNV-1a 64: one multiply + xor per byte, no tables, and stable
+//! across platforms — a blob written on one machine resolves to the
+//! same address everywhere.
+
+use crate::batching::PlanPayload;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over `bytes`.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Canonical little-endian encoding:
+/// `[n u64][num_outputs u64][e u64][nodes u32×n][edge_src u32×e]
+/// [edge_dst u32×e][weights f32-bits u32×e]`.
+pub fn encode_payload(p: &PlanPayload) -> Vec<u8> {
+    let n = p.nodes.len();
+    let e = p.edge_src.len();
+    let mut out = Vec::with_capacity(24 + 4 * n + 12 * e);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&(p.num_outputs as u64).to_le_bytes());
+    out.extend_from_slice(&(e as u64).to_le_bytes());
+    for &v in &p.nodes {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &v in &p.edge_src {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &v in &p.edge_dst {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &w in &p.weights {
+        out.extend_from_slice(&w.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Content address of a payload: FNV-1a 64 over its canonical bytes.
+pub fn content_hash(encoded: &[u8]) -> u64 {
+    fnv1a(encoded)
+}
+
+/// Encode + hash in one call (the save-path convenience).
+pub fn payload_hash(p: &PlanPayload) -> u64 {
+    content_hash(&encode_payload(p))
+}
+
+fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+/// Decode a canonical blob back into an owned payload. Exact-size and
+/// shape checks run *before* any large allocation, so a corrupt length
+/// header cannot OOM the loader; invariants (`num_outputs <= n`, edge
+/// endpoints in range) are re-validated because faulted payloads feed
+/// the executor directly.
+pub fn decode_payload(bytes: &[u8]) -> Result<PlanPayload, String> {
+    if bytes.len() < 24 {
+        return Err(format!("blob truncated: {} < 24 header bytes", bytes.len()));
+    }
+    let n = read_u64(bytes, 0) as usize;
+    let num_outputs = read_u64(bytes, 8) as usize;
+    let e = read_u64(bytes, 16) as usize;
+    let want = 24usize
+        .checked_add(n.checked_mul(4).ok_or("blob node count overflows")?)
+        .and_then(|s| s.checked_add(e.checked_mul(12)?))
+        .ok_or("blob edge count overflows")?;
+    if want != bytes.len() {
+        return Err(format!(
+            "blob corrupt header: {n} nodes / {e} edges needs {want} bytes, \
+             blob has {}",
+            bytes.len()
+        ));
+    }
+    if num_outputs == 0 || num_outputs > n {
+        return Err(format!("blob corrupt header: {num_outputs} outputs of {n} nodes"));
+    }
+    let u32s = |start: usize, count: usize| -> Vec<u32> {
+        (0..count)
+            .map(|i| {
+                u32::from_le_bytes(
+                    bytes[start + 4 * i..start + 4 * i + 4].try_into().unwrap(),
+                )
+            })
+            .collect()
+    };
+    let nodes = u32s(24, n);
+    let edge_src = u32s(24 + 4 * n, e);
+    let edge_dst = u32s(24 + 4 * n + 4 * e, e);
+    let weights: Vec<f32> = u32s(24 + 4 * n + 8 * e, e)
+        .into_iter()
+        .map(f32::from_bits)
+        .collect();
+    if let Some(&bad) = edge_src.iter().chain(&edge_dst).find(|&&v| v as usize >= n)
+    {
+        return Err(format!("blob edge endpoint {bad} out of range ({n} nodes)"));
+    }
+    Ok(PlanPayload {
+        nodes,
+        num_outputs,
+        edge_src,
+        edge_dst,
+        weights,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload() -> PlanPayload {
+        PlanPayload {
+            nodes: vec![7, 3, 11, 2],
+            num_outputs: 2,
+            edge_src: vec![0, 1, 3],
+            edge_dst: vec![1, 2, 0],
+            weights: vec![0.5, 0.25, 1.5],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = payload();
+        let enc = encode_payload(&p);
+        assert_eq!(enc.len(), 24 + 4 * 4 + 12 * 3);
+        let back = decode_payload(&enc).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn hash_is_content_not_identity() {
+        let a = payload();
+        let b = payload();
+        assert_eq!(payload_hash(&a), payload_hash(&b));
+        let mut c = payload();
+        c.weights[1] *= 2.0;
+        assert_ne!(payload_hash(&a), payload_hash(&c));
+        let mut d = payload();
+        d.nodes[3] = 99;
+        assert_ne!(payload_hash(&a), payload_hash(&d));
+    }
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // standard FNV-1a 64 test values
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn decode_rejects_corruption_before_allocating() {
+        let enc = encode_payload(&payload());
+        // truncated
+        assert!(decode_payload(&enc[..10]).unwrap_err().contains("truncated"));
+        // absurd node count must not allocate
+        let mut huge = enc.clone();
+        huge[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_payload(&huge).is_err());
+        // trailing garbage
+        let mut long = enc.clone();
+        long.push(0);
+        assert!(decode_payload(&long).unwrap_err().contains("corrupt header"));
+        // outputs out of range
+        let mut bad_out = enc.clone();
+        bad_out[8..16].copy_from_slice(&9u64.to_le_bytes());
+        assert!(decode_payload(&bad_out).unwrap_err().contains("outputs"));
+        // edge endpoint out of range
+        let mut bad_edge = enc;
+        bad_edge[24 + 16..24 + 20].copy_from_slice(&77u32.to_le_bytes());
+        assert!(decode_payload(&bad_edge).unwrap_err().contains("out of range"));
+    }
+}

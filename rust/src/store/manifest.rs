@@ -1,0 +1,498 @@
+//! Manifest generations and the delta log — the store's metadata tier.
+//!
+//! A manifest (`manifest-N.ibmf`) is one complete resolution of the
+//! plan corpus: for every plan id, the content hash of its payload,
+//! the plan's freshness epoch, the blob byte range it resolves to, and
+//! enough shape metadata (`n_nodes`, `num_outputs`) that serving can
+//! size buckets and route queries *without reading a single blob*. The
+//! packed router index rides in the same file for the same reason. The
+//! whole file is CRC32-protected; generations are never modified in
+//! place — compaction writes `manifest-(N+1)` and unlinks older ones.
+//!
+//! Incremental saves do not rewrite the manifest: they append one
+//! CRC32-protected [`DeltaRecord`] to `delta.ibmd`, carrying only the
+//! plan ids whose hash or epoch moved (plus the router tail for
+//! appended nodes). Opening the store = read the newest manifest,
+//! replay the delta log over it.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::blob::BlobLocation;
+use crate::util::crc::crc32;
+
+const MANIFEST_MAGIC: &[u8; 8] = b"IBMBMANI";
+const MANIFEST_VERSION: u64 = 1;
+
+/// One plan's resolution: content address, freshness, blob byte range,
+/// and the shape metadata serving needs blob-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub hash: u64,
+    pub plan_epoch: u64,
+    pub loc: BlobLocation,
+    pub n_nodes: u64,
+    pub num_outputs: u64,
+}
+
+/// A full manifest generation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub generation: u64,
+    /// Graph epoch the corpus was saved at.
+    pub epoch: u64,
+    pub entries: Vec<ManifestEntry>,
+    /// Packed router index (one u64 per node, `RouterIndex::to_packed`).
+    pub router: Vec<u64>,
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_u64(bytes: &[u8], off: &mut usize) -> Result<u64> {
+    anyhow::ensure!(*off + 8 <= bytes.len(), "truncated at byte {off}");
+    let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
+
+pub fn manifest_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("manifest-{generation}.ibmf"))
+}
+
+pub fn delta_log_path(dir: &Path) -> PathBuf {
+    dir.join("delta.ibmd")
+}
+
+impl Manifest {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            48 + 56 * self.entries.len() + 8 * self.router.len(),
+        );
+        out.extend_from_slice(MANIFEST_MAGIC);
+        push_u64(&mut out, MANIFEST_VERSION);
+        push_u64(&mut out, self.generation);
+        push_u64(&mut out, self.epoch);
+        push_u64(&mut out, self.entries.len() as u64);
+        push_u64(&mut out, self.router.len() as u64);
+        for e in &self.entries {
+            push_u64(&mut out, e.hash);
+            push_u64(&mut out, e.plan_epoch);
+            push_u64(&mut out, e.loc.seg);
+            push_u64(&mut out, e.loc.off);
+            push_u64(&mut out, e.loc.len);
+            push_u64(&mut out, e.n_nodes);
+            push_u64(&mut out, e.num_outputs);
+        }
+        for &p in &self.router {
+            push_u64(&mut out, p);
+        }
+        let crc = crc32(&out) as u64;
+        push_u64(&mut out, crc);
+        out
+    }
+
+    /// Write this generation's file; returns bytes written.
+    pub fn write(&self, dir: &Path) -> Result<u64> {
+        let path = manifest_path(dir, self.generation);
+        let bytes = self.encode();
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&bytes)?;
+        f.flush()?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read and CRC-verify generation `generation`.
+    pub fn read(dir: &Path, generation: u64) -> Result<Manifest> {
+        let path = manifest_path(dir, generation);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let m = Self::parse(&bytes)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        anyhow::ensure!(
+            m.generation == generation,
+            "{}: file claims generation {}",
+            path.display(),
+            m.generation
+        );
+        Ok(m)
+    }
+
+    fn parse(bytes: &[u8]) -> Result<Manifest> {
+        anyhow::ensure!(bytes.len() >= 56, "manifest truncated");
+        anyhow::ensure!(&bytes[..8] == MANIFEST_MAGIC, "bad manifest magic");
+        let body = &bytes[..bytes.len() - 8];
+        let mut off = bytes.len() - 8;
+        let crc = read_u64(bytes, &mut off)?;
+        anyhow::ensure!(
+            crc == crc32(body) as u64,
+            "manifest CRC mismatch (stored {crc:#010x}, computed {:#010x})",
+            crc32(body)
+        );
+        let mut off = 8usize;
+        let version = read_u64(bytes, &mut off)?;
+        anyhow::ensure!(
+            version == MANIFEST_VERSION,
+            "unsupported manifest version {version}"
+        );
+        let generation = read_u64(bytes, &mut off)?;
+        let epoch = read_u64(bytes, &mut off)?;
+        let num_plans = read_u64(bytes, &mut off)? as usize;
+        let router_len = read_u64(bytes, &mut off)? as usize;
+        let want = 48 + 56 * num_plans + 8 * router_len + 8;
+        anyhow::ensure!(
+            bytes.len() == want,
+            "manifest corrupt header: {num_plans} plans / {router_len} router \
+             slots needs {want} bytes, file has {}",
+            bytes.len()
+        );
+        let mut entries = Vec::with_capacity(num_plans);
+        for _ in 0..num_plans {
+            let hash = read_u64(bytes, &mut off)?;
+            let plan_epoch = read_u64(bytes, &mut off)?;
+            let seg = read_u64(bytes, &mut off)?;
+            let loc_off = read_u64(bytes, &mut off)?;
+            let len = read_u64(bytes, &mut off)?;
+            let n_nodes = read_u64(bytes, &mut off)?;
+            let num_outputs = read_u64(bytes, &mut off)?;
+            entries.push(ManifestEntry {
+                hash,
+                plan_epoch,
+                loc: BlobLocation {
+                    seg,
+                    off: loc_off,
+                    len,
+                },
+                n_nodes,
+                num_outputs,
+            });
+        }
+        let mut router = Vec::with_capacity(router_len);
+        for _ in 0..router_len {
+            router.push(read_u64(bytes, &mut off)?);
+        }
+        Ok(Manifest {
+            generation,
+            epoch,
+            entries,
+            router,
+        })
+    }
+
+    /// Highest generation with a manifest file present in `dir`
+    /// (`None` for an empty store).
+    pub fn latest_generation(dir: &Path) -> Result<Option<u64>> {
+        let mut best: Option<u64> = None;
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("read store dir {}", dir.display()))?
+        {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(n) = name
+                .strip_prefix("manifest-")
+                .and_then(|s| s.strip_suffix(".ibmf"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                best = Some(best.map_or(n, |b: u64| b.max(n)));
+            }
+        }
+        Ok(best)
+    }
+
+    /// Fold one delta record into this manifest in place.
+    pub fn apply(&mut self, rec: &DeltaRecord) {
+        self.epoch = self.epoch.max(rec.epoch);
+        for &(pid, e) in &rec.changes {
+            let pid = pid as usize;
+            if pid >= self.entries.len() {
+                // plan sets are size-stable today; tolerate growth so
+                // the format does not bake the assumption in
+                self.entries.resize(
+                    pid + 1,
+                    ManifestEntry {
+                        hash: 0,
+                        plan_epoch: 0,
+                        loc: BlobLocation { seg: 0, off: 0, len: 0 },
+                        n_nodes: 0,
+                        num_outputs: 0,
+                    },
+                );
+            }
+            self.entries[pid] = e;
+        }
+        self.router.extend_from_slice(&rec.router_ext);
+    }
+}
+
+/// One incremental save: only the moved plan ids, plus the router tail
+/// for any appended nodes.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct DeltaRecord {
+    pub epoch: u64,
+    pub changes: Vec<(u64, ManifestEntry)>,
+    pub router_ext: Vec<u64>,
+}
+
+impl DeltaRecord {
+    fn encode_body(&self) -> Vec<u8> {
+        let mut body =
+            Vec::with_capacity(24 + 64 * self.changes.len() + 8 * self.router_ext.len());
+        push_u64(&mut body, self.epoch);
+        push_u64(&mut body, self.changes.len() as u64);
+        for &(pid, e) in &self.changes {
+            push_u64(&mut body, pid);
+            push_u64(&mut body, e.hash);
+            push_u64(&mut body, e.plan_epoch);
+            push_u64(&mut body, e.loc.seg);
+            push_u64(&mut body, e.loc.off);
+            push_u64(&mut body, e.loc.len);
+            push_u64(&mut body, e.n_nodes);
+            push_u64(&mut body, e.num_outputs);
+        }
+        push_u64(&mut body, self.router_ext.len() as u64);
+        for &p in &self.router_ext {
+            push_u64(&mut body, p);
+        }
+        body
+    }
+}
+
+/// Append one delta record (`[body_len u64][body][crc u64]`) to the
+/// store's delta log; returns bytes written.
+pub fn append_delta(dir: &Path, rec: &DeltaRecord) -> Result<u64> {
+    let body = rec.encode_body();
+    let mut out = Vec::with_capacity(16 + body.len());
+    push_u64(&mut out, body.len() as u64);
+    out.extend_from_slice(&body);
+    push_u64(&mut out, crc32(&body) as u64);
+    let path = delta_log_path(dir);
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .with_context(|| format!("open {}", path.display()))?;
+    f.write_all(&out)?;
+    f.flush()?;
+    Ok(out.len() as u64)
+}
+
+/// Read the whole delta log (empty vec when the file is absent). A
+/// torn or corrupt record is a hard error, not a silent truncation —
+/// the replay must be exact or the store is inconsistent.
+pub fn read_delta_log(dir: &Path) -> Result<Vec<DeltaRecord>> {
+    let path = delta_log_path(dir);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new())
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("read {}", path.display()))
+        }
+    };
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    while off < bytes.len() {
+        let body_len = read_u64(&bytes, &mut off)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?
+            as usize;
+        anyhow::ensure!(
+            off + body_len + 8 <= bytes.len(),
+            "{}: delta record at byte {} runs past end of log",
+            path.display(),
+            off - 8
+        );
+        let body = &bytes[off..off + body_len];
+        off += body_len;
+        let mut crc_off = off;
+        let crc = read_u64(&bytes, &mut crc_off)?;
+        off = crc_off;
+        anyhow::ensure!(
+            crc == crc32(body) as u64,
+            "{}: delta record CRC mismatch (stored {crc:#010x}, computed \
+             {:#010x})",
+            path.display(),
+            crc32(body)
+        );
+        records.push(parse_delta_body(body).map_err(|e| {
+            anyhow::anyhow!("{}: delta record: {e}", path.display())
+        })?);
+    }
+    Ok(records)
+}
+
+fn parse_delta_body(body: &[u8]) -> Result<DeltaRecord> {
+    let mut off = 0usize;
+    let epoch = read_u64(body, &mut off)?;
+    let changed = read_u64(body, &mut off)? as usize;
+    anyhow::ensure!(
+        body.len() >= 24 + 64 * changed,
+        "corrupt header: {changed} changes do not fit {} body bytes",
+        body.len()
+    );
+    let mut changes = Vec::with_capacity(changed);
+    for _ in 0..changed {
+        let pid = read_u64(body, &mut off)?;
+        let hash = read_u64(body, &mut off)?;
+        let plan_epoch = read_u64(body, &mut off)?;
+        let seg = read_u64(body, &mut off)?;
+        let loc_off = read_u64(body, &mut off)?;
+        let len = read_u64(body, &mut off)?;
+        let n_nodes = read_u64(body, &mut off)?;
+        let num_outputs = read_u64(body, &mut off)?;
+        changes.push((
+            pid,
+            ManifestEntry {
+                hash,
+                plan_epoch,
+                loc: BlobLocation {
+                    seg,
+                    off: loc_off,
+                    len,
+                },
+                n_nodes,
+                num_outputs,
+            },
+        ));
+    }
+    let ext = read_u64(body, &mut off)? as usize;
+    anyhow::ensure!(
+        body.len() == off + 8 * ext,
+        "corrupt header: {ext} router extensions vs {} trailing bytes",
+        body.len() - off
+    );
+    let mut router_ext = Vec::with_capacity(ext);
+    for _ in 0..ext {
+        router_ext.push(read_u64(body, &mut off)?);
+    }
+    Ok(DeltaRecord {
+        epoch,
+        changes,
+        router_ext,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(hash: u64) -> ManifestEntry {
+        ManifestEntry {
+            hash,
+            plan_epoch: 2,
+            loc: BlobLocation {
+                seg: 0,
+                off: 16 * hash,
+                len: 40,
+            },
+            n_nodes: 8,
+            num_outputs: 3,
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ibmb_manifest_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok(); // stale state from failed runs
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn manifest_write_read_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let m = Manifest {
+            generation: 3,
+            epoch: 7,
+            entries: vec![entry(1), entry(2), entry(3)],
+            router: vec![u64::MAX, 5, u64::MAX, 9],
+        };
+        m.write(&dir).unwrap();
+        assert_eq!(Manifest::latest_generation(&dir).unwrap(), Some(3));
+        let back = Manifest::read(&dir, 3).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_corruption() {
+        let dir = tmpdir("corrupt");
+        let m = Manifest {
+            generation: 0,
+            epoch: 1,
+            entries: vec![entry(9)],
+            router: vec![1, 2],
+        };
+        m.write(&dir).unwrap();
+        let path = manifest_path(&dir, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[60] ^= 0xFF; // flip a byte inside an entry
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Manifest::read(&dir, 0).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_log_roundtrip_and_fold() {
+        let dir = tmpdir("delta");
+        assert!(read_delta_log(&dir).unwrap().is_empty());
+        let r1 = DeltaRecord {
+            epoch: 1,
+            changes: vec![(0, entry(11)), (2, entry(12))],
+            router_ext: vec![42],
+        };
+        let r2 = DeltaRecord {
+            epoch: 2,
+            changes: vec![(2, entry(13))],
+            router_ext: vec![],
+        };
+        append_delta(&dir, &r1).unwrap();
+        append_delta(&dir, &r2).unwrap();
+        let log = read_delta_log(&dir).unwrap();
+        assert_eq!(log, vec![r1.clone(), r2.clone()]);
+
+        let mut m = Manifest {
+            generation: 0,
+            epoch: 0,
+            entries: vec![entry(1), entry(2), entry(3)],
+            router: vec![7],
+        };
+        m.apply(&r1);
+        m.apply(&r2);
+        assert_eq!(m.epoch, 2);
+        assert_eq!(m.entries[0], entry(11));
+        assert_eq!(m.entries[1], entry(2));
+        assert_eq!(m.entries[2], entry(13));
+        assert_eq!(m.router, vec![7, 42]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_log_rejects_torn_tail() {
+        let dir = tmpdir("torn");
+        append_delta(
+            &dir,
+            &DeltaRecord {
+                epoch: 1,
+                changes: vec![(0, entry(5))],
+                router_ext: vec![],
+            },
+        )
+        .unwrap();
+        let path = delta_log_path(&dir);
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 3).unwrap();
+        let err = read_delta_log(&dir).unwrap_err().to_string();
+        assert!(err.contains("past end of log"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

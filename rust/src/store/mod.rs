@@ -1,0 +1,45 @@
+//! Content-addressed tiered plan store (DESIGN.md §14).
+//!
+//! Serving restarts used to pay for the whole corpus up front: the
+//! monolithic IBMBCACH container deserializes every plan before the
+//! first query is admitted. This module replaces that with a tiered
+//! layout under one directory:
+//!
+//! * **blob segments** (`seg-N.blob`, [`blob`]) — append-only files of
+//!   hash-keyed payload records. The key is a stable FNV-1a 64 content
+//!   hash over the canonical plan encoding ([`hash`]), so byte-equal
+//!   plans share one blob no matter how many manifest entries point at
+//!   them — the on-disk mirror of [`CowCache`]'s structural sharing.
+//! * **manifest generations** (`manifest-N.ibmf`, [`manifest`]) — a
+//!   small CRC-protected index mapping `plan id → (hash, epoch, blob
+//!   location, shape)` plus the packed router. Loading a manifest is
+//!   O(plans) metadata, not O(corpus bytes).
+//! * **delta log** (`delta.ibmd`) — incremental saves append only the
+//!   buckets whose content hash changed; open-time replay folds the
+//!   log into the newest manifest. A background-safe [`PlanStore::
+//!   compact`] rewrites live blobs into a fresh segment and publishes
+//!   a new generation through the same [`SwapCell`] epoch-swap used by
+//!   the serve path — readers never block.
+//!
+//! At serve time payloads are *faulted*: one manifest lookup plus one
+//! positioned blob read, verified against the content hash, admitted
+//! into a per-shard byte-budget LRU ([`PlanResidency`]). Cold start
+//! cost becomes O(working set), not O(corpus).
+//!
+//! [`CowCache`]: crate::batching::CowCache
+//! [`SwapCell`]: crate::serve::SwapCell
+
+pub mod blob;
+pub mod hash;
+pub mod manifest;
+pub mod residency;
+#[allow(clippy::module_inception)]
+pub mod store;
+
+pub use blob::{segment_path, BlobLocation, BlobReader, FileBlobReader};
+pub use hash::{content_hash, decode_payload, encode_payload, payload_hash};
+pub use manifest::{DeltaRecord, Manifest, ManifestEntry};
+pub use residency::PlanResidency;
+pub use store::{
+    CompactStats, PlanStore, SaveStats, StoreStat, StoreView,
+};

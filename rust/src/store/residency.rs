@@ -1,0 +1,215 @@
+//! Per-shard plan residency: a byte-budget LRU over faulted payloads.
+//!
+//! In store-backed serving the shard worker does not hold the whole
+//! plan corpus — it holds whatever this cache admits. A miss is one
+//! manifest lookup plus one positioned blob read ([`PlanStore::fault`]);
+//! a hit is a `HashMap` probe returning a shared `Arc`. Eviction is
+//! approximate-LRU with the same stamp/queue idiom as the serve-side
+//! `ResultsCache`: every touch pushes a fresh `(pid, stamp)` ticket,
+//! stale tickets are skipped at eviction time, and the ticket queue is
+//! compacted when it outgrows the live set. Evicting a plan only drops
+//! this cache's `Arc` — in-flight batches holding a clone finish
+//! normally, and a later query refaults from the blob segment.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::batching::PlanPayload;
+
+use super::store::PlanStore;
+
+/// Byte-budget LRU of resident plan payloads (one per shard worker).
+#[derive(Debug)]
+pub struct PlanResidency {
+    /// Max resident payload bytes; at least one plan is always kept so
+    /// a plan larger than the budget can still execute.
+    budget_bytes: usize,
+    resident: HashMap<u32, (Arc<PlanPayload>, u64)>,
+    /// Recency tickets `(pid, stamp)`; entries whose stamp no longer
+    /// matches `resident` are stale and skipped.
+    lru: VecDeque<(u32, u64)>,
+    stamp: u64,
+    resident_bytes: usize,
+    /// Total store faults (misses) over the cache's lifetime.
+    pub faults: u64,
+    /// Total plans evicted over the cache's lifetime.
+    pub evictions: u64,
+    /// High-water mark of `resident_bytes`.
+    pub peak_bytes: usize,
+}
+
+impl PlanResidency {
+    pub fn new(budget_bytes: usize) -> PlanResidency {
+        PlanResidency {
+            budget_bytes,
+            resident: HashMap::new(),
+            lru: VecDeque::new(),
+            stamp: 0,
+            resident_bytes: 0,
+            faults: 0,
+            evictions: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Currently resident payload bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Number of resident plans.
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    fn touch(&mut self, pid: u32) -> u64 {
+        self.stamp += 1;
+        self.lru.push_back((pid, self.stamp));
+        if self.lru.len() > 2 * self.resident.len() + 16 {
+            let resident = &self.resident;
+            self.lru
+                .retain(|&(p, s)| resident.get(&p).is_some_and(|&(_, cur)| cur == s));
+        }
+        self.stamp
+    }
+
+    fn evict_to_budget(&mut self) {
+        while self.resident_bytes > self.budget_bytes && self.resident.len() > 1 {
+            let Some((pid, stamp)) = self.lru.pop_front() else {
+                break;
+            };
+            let live = self
+                .resident
+                .get(&pid)
+                .is_some_and(|&(_, cur)| cur == stamp);
+            if !live {
+                continue; // stale ticket: pid was re-touched or evicted
+            }
+            let (payload, _) = self.resident.remove(&pid).unwrap();
+            self.resident_bytes -= payload.memory_bytes();
+            self.evictions += 1;
+        }
+    }
+
+    /// Resolve `pid`, faulting from `store` on a miss. Returns the
+    /// payload and the bytes read from the blob segment (0 on a hit).
+    pub fn get_or_fault(
+        &mut self,
+        pid: u32,
+        store: &PlanStore,
+    ) -> Result<(Arc<PlanPayload>, u64)> {
+        if let Some(&(ref payload, _)) = self.resident.get(&pid) {
+            let payload = payload.clone();
+            let stamp = self.touch(pid);
+            self.resident.get_mut(&pid).unwrap().1 = stamp;
+            return Ok((payload, 0));
+        }
+        let (payload, blob_bytes) = store.fault(pid as usize)?;
+        self.faults += 1;
+        self.resident_bytes += payload.memory_bytes();
+        self.peak_bytes = self.peak_bytes.max(self.resident_bytes);
+        let stamp = self.touch(pid);
+        self.resident.insert(pid, (payload.clone(), stamp));
+        self.evict_to_budget();
+        Ok((payload, blob_bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{BatchGenerator, CowCache, NodeWiseIbmb};
+    use crate::datasets::Dataset;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ibmb_residency_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn store_with_corpus(dir: &PathBuf) -> (PlanStore, usize) {
+        let ds = Dataset::tiny_for_tests(42);
+        let mut gen = NodeWiseIbmb::new(200, 6, 30);
+        let mut rng = Rng::new(7);
+        let plans = gen.plan(&ds, &ds.splits.train, &mut rng);
+        let cow = CowCache::from_plans(&plans);
+        let epochs = vec![0u64; cow.len()];
+        let store = PlanStore::open(dir).unwrap();
+        store.save_full(&cow, &epochs, 0, &[]).unwrap();
+        let n = cow.len();
+        (store, n)
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let dir = tmpdir("hits");
+        let (store, n) = store_with_corpus(&dir);
+        assert!(n >= 2, "corpus too small for the test");
+        let mut res = PlanResidency::new(usize::MAX);
+        let (a, read_a) = res.get_or_fault(0, &store).unwrap();
+        assert!(read_a > 0, "miss must read blob bytes");
+        assert_eq!(res.faults, 1);
+        let (b, read_b) = res.get_or_fault(0, &store).unwrap();
+        assert_eq!(read_b, 0, "hit must not read");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(res.faults, 1);
+        assert_eq!(res.resident_bytes(), a.memory_bytes());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tiny_budget_evicts_and_refaults_correctly() {
+        let dir = tmpdir("evict");
+        let (store, n) = store_with_corpus(&dir);
+        // budget of 1 byte: only the always-kept newest plan stays
+        let mut res = PlanResidency::new(1);
+        let mut first = Vec::new();
+        for pid in 0..n as u32 {
+            let (p, _) = res.get_or_fault(pid, &store).unwrap();
+            first.push(p);
+        }
+        assert_eq!(res.faults, n as u64);
+        assert!(res.evictions >= n as u64 - 1, "evictions {}", res.evictions);
+        assert_eq!(res.len(), 1, "only the newest plan survives");
+        // refault a paged-out plan: content identical to first read
+        let (again, read) = res.get_or_fault(0, &store).unwrap();
+        assert!(read > 0, "plan 0 was evicted, must refault");
+        assert_eq!(*again, *first[0]);
+        assert_eq!(res.faults, n as u64 + 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_bounds_resident_bytes() {
+        let dir = tmpdir("budget");
+        let (store, n) = store_with_corpus(&dir);
+        let one = store.fault(0).unwrap().0.memory_bytes();
+        let budget = one * 2;
+        let mut res = PlanResidency::new(budget);
+        for round in 0..3 {
+            for pid in 0..n as u32 {
+                res.get_or_fault(pid, &store).unwrap();
+                // bound can only be exceeded by the single-plan floor
+                assert!(
+                    res.resident_bytes() <= budget || res.len() == 1,
+                    "round {round}: {} bytes resident over budget {budget}",
+                    res.resident_bytes()
+                );
+            }
+        }
+        assert!(res.peak_bytes >= res.resident_bytes());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

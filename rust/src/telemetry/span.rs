@@ -80,6 +80,12 @@ pub enum Stage {
     /// Old-epoch bytes still pinned by in-flight groups at a swap
     /// (instant; `detail` = bytes).
     GcRetained,
+    /// Plan faulted from the content-addressed store (instant;
+    /// `detail` = blob bytes read).
+    StoreFault,
+    /// Store delta log folded into a new manifest generation
+    /// (instant; `detail` = bytes reclaimed).
+    Compaction,
     /// Query resolved (instant; `detail` = latency in µs).
     Complete,
 }
@@ -97,6 +103,8 @@ impl Stage {
             Stage::Memo => "memo",
             Stage::SnapshotSwap => "snapshot_swap",
             Stage::GcRetained => "gc_retained",
+            Stage::StoreFault => "store_fault",
+            Stage::Compaction => "compaction",
             Stage::Complete => "complete",
         }
     }
@@ -113,6 +121,8 @@ impl Stage {
             "memo" => Stage::Memo,
             "snapshot_swap" => Stage::SnapshotSwap,
             "gc_retained" => Stage::GcRetained,
+            "store_fault" => Stage::StoreFault,
+            "compaction" => Stage::Compaction,
             "complete" => Stage::Complete,
             _ => return None,
         })
@@ -264,6 +274,8 @@ mod tests {
             Stage::Memo,
             Stage::SnapshotSwap,
             Stage::GcRetained,
+            Stage::StoreFault,
+            Stage::Compaction,
             Stage::Complete,
         ] {
             assert_eq!(Stage::from_name(st.name()), Some(st));

@@ -1,0 +1,97 @@
+//! CRC32 (IEEE 802.3, polynomial 0xEDB88320) — the integrity check
+//! shared by the IBMBCACH v4 container sections and the plan store's
+//! manifest/delta records. Table-driven, one pass, no dependencies;
+//! the standard reflected algorithm so the check value for
+//! `"123456789"` is the canonical `0xCBF43926`.
+
+/// 256-entry lookup table for the reflected polynomial, built once at
+/// first use (const fn so it lives in rodata, no lazy init needed).
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC32 of `data` in one call.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut h = Crc32::new();
+    h.update(data);
+    h.finish()
+}
+
+/// Incremental CRC32 for callers hashing scattered slices (section
+/// headers + payloads) without concatenating.
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = self.state;
+        for &b in data {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the canonical CRC-32/ISO-HDLC check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data = b"split across several update calls";
+        let mut h = Crc32::new();
+        h.update(&data[..7]);
+        h.update(&data[7..19]);
+        h.update(&data[19..]);
+        assert_eq!(h.finish(), crc32(data));
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let mut data = vec![0u8; 1024];
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = (i * 31 % 251) as u8;
+        }
+        let base = crc32(&data);
+        data[512] ^= 0x10;
+        assert_ne!(crc32(&data), base);
+    }
+}

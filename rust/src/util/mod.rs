@@ -4,6 +4,7 @@
 //! CIs), a minimal JSON reader/writer for the artifact manifest, and a
 //! monotonic timer.
 
+pub mod crc;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -8,6 +8,7 @@ use std::path::PathBuf;
 use ibmb::batching::cache_io::{load, save, FORMAT_VERSION};
 use ibmb::batching::{BatchCache, BatchGenerator, BatchPlan, NodeWiseIbmb};
 use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::util::crc::crc32;
 use ibmb::util::Rng;
 
 fn tmp(name: &str) -> PathBuf {
@@ -153,19 +154,65 @@ fn rejects_corrupt_batch_count_without_allocating() {
     }]);
     let p = tmp("hugecount.bin");
     save(&cache, &p).unwrap();
-    let mut bytes = std::fs::read(&p).unwrap();
-    // v3 layout: magic(8) version(8) nsections(8) tag(8) len(8), then
-    // the plan section's batches count at offset 40
-    bytes[40..48].copy_from_slice(&(1u64 << 48).to_le_bytes());
+    let clean = std::fs::read(&p).unwrap();
+    // v4 layout: magic(8) version(8) nsections(8) tag(8) len(8)
+    // crc(8), then the plan section's batches count at offset 48.
+    // Re-stamp the section checksum over the corrupted body so the
+    // corruption reaches the parser's own count-vs-length guard.
+    let mut bytes = clean.clone();
+    bytes[48..56].copy_from_slice(&(1u64 << 48).to_le_bytes());
+    let body_crc = crc32(&bytes[48..]) as u64;
+    bytes[40..48].copy_from_slice(&body_crc.to_le_bytes());
     std::fs::write(&p, &bytes).unwrap();
     let err = format!("{:#}", load(&p).unwrap_err());
     assert!(err.contains("corrupt header"), "{err}");
+    // without the re-stamp, the same corruption is caught one layer
+    // earlier by the section checksum — and names the section
+    let mut bytes = clean.clone();
+    bytes[48..56].copy_from_slice(&(1u64 << 48).to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    let err = format!("{:#}", load(&p).unwrap_err());
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(err.contains("plan section"), "{err}");
     // a section length pointing past end-of-file is caught before any
     // allocation as well
-    let mut bytes = std::fs::read(&p).unwrap();
+    let mut bytes = clean.clone();
     bytes[32..40].copy_from_slice(&(1u64 << 48).to_le_bytes());
     std::fs::write(&p, &bytes).unwrap();
     let err = format!("{:#}", load(&p).unwrap_err());
     assert!(err.contains("past end of file"), "{err}");
+    std::fs::remove_file(p).ok();
+}
+
+#[test]
+fn checksum_rejects_single_bit_flips_anywhere_in_payload() {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 33);
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: 5,
+        max_outputs_per_batch: 30,
+        node_budget: 160,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(11);
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
+    let p = tmp("bitflip.bin");
+    save(&cache, &p).unwrap();
+    let clean = std::fs::read(&p).unwrap();
+    let payload_start = 48; // file header 24 + section header 24
+    // sample a spread of payload offsets; every flip must be caught,
+    // and caught as *corruption*, not as some shape error
+    let span = clean.len() - payload_start;
+    for frac in [0, span / 3, span / 2, 2 * span / 3, span - 1] {
+        let mut bytes = clean.clone();
+        bytes[payload_start + frac] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", load(&p).unwrap_err());
+        assert!(
+            err.contains("checksum mismatch") && err.contains("plan section"),
+            "flip at payload byte {frac}: {err}"
+        );
+    }
+    std::fs::write(&p, &clean).unwrap();
+    load(&p).unwrap();
     std::fs::remove_file(p).ok();
 }

@@ -1,0 +1,228 @@
+//! Plan-store subsystem tests (DESIGN.md §14): the persistence
+//! property that any random sequence of incremental saves, once
+//! compacted, resolves to exactly the store a single fresh full save
+//! of the final cache would produce — per-plan content hash, epoch
+//! stamp, and bit-identical payload bytes — and the serving property
+//! that a residency budget far too small for the corpus still answers
+//! every query correctly (paged-out plans refault, they don't
+//! mispredict).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ibmb::batching::{BatchPlan, CowCache, PlanPayload};
+use ibmb::datasets::{sbm, DatasetSpec};
+use ibmb::serve::{self, ServeConfig, Skew};
+use ibmb::store::PlanStore;
+use ibmb::util::Rng;
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ibmb-store-test-{name}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Deterministic synthetic corpus; node ids are disjoint per plan so
+/// every bucket starts with a distinct content hash.
+fn synth_plans(n: usize, rng: &mut Rng) -> Vec<BatchPlan> {
+    (0..n)
+        .map(|i| {
+            let n_nodes = 8 + rng.next_below(9);
+            let nodes: Vec<u32> =
+                (0..n_nodes).map(|k| (i * 32 + k) as u32).collect();
+            let n_edges = n_nodes * 2;
+            let edges: Vec<(u32, u32)> = (0..n_edges)
+                .map(|_| {
+                    (
+                        rng.next_below(n_nodes) as u32,
+                        rng.next_below(n_nodes) as u32,
+                    )
+                })
+                .collect();
+            let weights: Vec<f32> =
+                (0..n_edges).map(|_| rng.uniform(0.01, 1.0)).collect();
+            BatchPlan {
+                nodes,
+                num_outputs: 1 + rng.next_below(3.min(n_nodes)),
+                edges,
+                weights,
+            }
+        })
+        .collect()
+}
+
+/// Property: save_full → random CoW patches, each saved incrementally
+/// → compact → reopen ≡ one fresh save_full of the final cache. The
+/// delta-log path and the monolithic path must resolve every plan id
+/// to the same (hash, epoch) and the same payload bits.
+#[test]
+fn random_delta_sequences_compact_to_the_fresh_full_save() {
+    for trial in 0..4u64 {
+        let mut rng = Rng::new(0xBEEF ^ trial);
+        let n = 32usize;
+        let plans = synth_plans(n, &mut rng);
+        let mut cur = CowCache::from_plans(&plans);
+        let mut epochs = vec![0u64; n];
+        let router: Vec<u64> = (0..n as u64).map(|p| p << 32).collect();
+
+        let dir_a = scratch(&format!("delta-{trial}"));
+        let dir_b = scratch(&format!("fresh-{trial}"));
+        let store_a = PlanStore::open(&dir_a).unwrap();
+        store_a.save_full(&cur, &epochs, 0, &router).unwrap();
+
+        let steps = 3 + rng.next_below(5);
+        let mut epoch = 0u64;
+        for _ in 0..steps {
+            epoch += 1;
+            let k = 1 + rng.next_below(6);
+            let mut repl: Vec<(u32, PlanPayload)> = Vec::new();
+            for _ in 0..k {
+                let pid = rng.next_below(n) as u32;
+                // half the patches duplicate another bucket's exact
+                // bytes: the blob must dedup, the manifest must not
+                let payload = if rng.next_below(2) == 0 {
+                    PlanPayload::from_plan(&cur.to_plan(rng.next_below(n)))
+                } else {
+                    let plan = synth_plans(1, &mut rng).pop().unwrap();
+                    PlanPayload::from_plan(&plan)
+                };
+                repl.push((pid, payload));
+            }
+            let next = cur.with_patched(repl);
+            for i in 0..n {
+                if !Arc::ptr_eq(&cur.payload(i), &next.payload(i)) {
+                    epochs[i] = epoch;
+                }
+            }
+            store_a
+                .save_incremental(&cur, &next, &epochs, epoch, &[])
+                .unwrap();
+            cur = next;
+        }
+        assert!(store_a.pending_delta_records() > 0);
+        store_a.compact().unwrap();
+        drop(store_a);
+
+        // reopen A cold; build B with one full save of the final state
+        let store_a = PlanStore::open(&dir_a).unwrap();
+        let store_b = PlanStore::open(&dir_b).unwrap();
+        store_b.save_full(&cur, &epochs, epoch, &router).unwrap();
+
+        let (va, vb) = (store_a.view(), store_b.view());
+        assert_eq!(va.delta_records, 0, "compaction must fold the log");
+        assert_eq!(va.num_plans(), vb.num_plans(), "trial {trial}");
+        assert_eq!(va.epoch, vb.epoch, "trial {trial}");
+        assert_eq!(va.router, vb.router, "trial {trial}");
+        for pid in 0..n {
+            let (ea, eb) = (&va.entries[pid], &vb.entries[pid]);
+            assert_eq!(ea.hash, eb.hash, "trial {trial} plan {pid} hash");
+            assert_eq!(
+                ea.plan_epoch, eb.plan_epoch,
+                "trial {trial} plan {pid} epoch"
+            );
+            let (pa, _) = store_a.fault(pid).unwrap();
+            let (pb, _) = store_b.fault(pid).unwrap();
+            assert_eq!(pa.nodes, pb.nodes, "trial {trial} plan {pid}");
+            assert_eq!(pa.num_outputs, pb.num_outputs);
+            assert_eq!(pa.edge_src, pb.edge_src);
+            assert_eq!(pa.edge_dst, pb.edge_dst);
+            let bits =
+                |p: &PlanPayload| -> Vec<u32> {
+                    p.weights.iter().map(|w| w.to_bits()).collect()
+                };
+            assert_eq!(bits(&pa), bits(&pb), "trial {trial} plan {pid} bits");
+        }
+        drop(store_a);
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+}
+
+/// A residency budget of one byte (every plan pages out immediately)
+/// must still answer every query with the same predictions as a
+/// generous budget — only the fault counters may differ.
+#[test]
+fn paged_out_plans_refault_correctly_under_a_tiny_budget() {
+    let ds = sbm::generate(&DatasetSpec::tiny_for_tests(), 101);
+    let eval = ds.splits.train.clone();
+    let base = ServeConfig {
+        queries: 64,
+        clients: 8,
+        shards: 2,
+        flush_window: Duration::from_micros(200),
+        results_cache_bytes: 0,
+        seed: 23,
+        ..Default::default()
+    };
+
+    // populate the store from a warm preparation
+    let dir = scratch("tiny-budget");
+    let warm = serve::prepare(ds.clone(), &eval, &base);
+    let warm_state = warm.state();
+    let store = PlanStore::open(&dir).unwrap();
+    store
+        .save_full(
+            &warm_state.cache,
+            &warm_state.epochs,
+            0,
+            &warm_state.index.to_packed(),
+        )
+        .unwrap();
+    let store = Arc::new(store);
+    let plans = store.num_plans();
+    assert!(plans > 1, "need a multi-plan corpus");
+
+    let run = |budget: usize| {
+        let cfg = ServeConfig {
+            store_budget: budget,
+            ..base.clone()
+        };
+        let mut setup =
+            serve::prepare_from_store(ds.clone(), store.clone(), &cfg)
+                .unwrap();
+        let report =
+            serve::serve_closed_loop(&mut setup, &eval, Skew::Uniform, &cfg)
+                .unwrap();
+        assert_eq!(
+            report.executed_queries + report.cache_hits,
+            base.queries as u64,
+            "budget {budget}: dropped queries"
+        );
+        report
+    };
+
+    let generous = run(64 << 20);
+    let tiny = run(1);
+    assert_eq!(
+        tiny.logit_hash, generous.logit_hash,
+        "a paged-out plan refaulted to different predictions"
+    );
+    assert!((tiny.accuracy - generous.accuracy).abs() < 1e-12);
+    assert!(
+        tiny.store_faults > generous.store_faults,
+        "a one-byte budget must refault ({} vs {})",
+        tiny.store_faults,
+        generous.store_faults
+    );
+    assert!(
+        tiny.store_faults as usize > plans,
+        "refaults should exceed the corpus size ({} faults, {plans} plans)",
+        tiny.store_faults
+    );
+    // one plan is always kept resident per shard, so the footprint is
+    // bounded by shards × the largest single payload, not the corpus
+    let max_payload = (0..plans)
+        .map(|i| store.fault(i).unwrap().0.memory_bytes() as u64)
+        .max()
+        .unwrap();
+    assert!(
+        tiny.resident_bytes <= base.shards as u64 * max_payload,
+        "tiny-budget residency {} exceeds {} shards x {} B",
+        tiny.resident_bytes,
+        base.shards,
+        max_payload
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

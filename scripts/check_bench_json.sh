@@ -17,8 +17,13 @@
 # forward-throughput series (`forward: [{executor, batches_per_s,
 # speedup_vs_reference}, ...]` — the blocked backend's ≥3x gate over
 # the scalar reference), both introduced with the pluggable Executor
-# backends. No-op (success) when no bench JSONs exist yet — benches
-# are run out of band, not in CI.
+# backends. For the "coldstart" bench (content-addressed plan store)
+# the required keys are `dataset`, `lru_budget_bytes`, and `runs:
+# [{plans, v3_load_s, cas_ttfa_s, speedup, full_save_bytes,
+# incr_save_bytes, incr_ratio, resident_bytes}, ...]` — the ≥10x
+# faulted-TTFA and <10% incremental-save gates read `speedup` and
+# `incr_ratio`. No-op (success) when no bench JSONs exist yet —
+# benches are run out of band, not in CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
