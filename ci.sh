@@ -190,6 +190,43 @@ cargo run --release --bin ibmb -- store-stat "$store_dir" \
 }
 rm -rf "$store_dir"
 
+echo "== cooperative serving smoke (zipf 1.2, 2 shards, steal/replicate) =="
+# Same pinned seed with cooperative serving off and on (DESIGN.md §15).
+# Skewed load over two shards with a one-group steal window must move
+# work (steals or replica dispatches > 0), answer every query, and —
+# because cooperation only moves *where* groups execute — leave the
+# order-independent prediction hash bit-identical to the baseline run.
+base_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 2 --clients 8 --queries 200 --window-us 300 \
+    --seed 11 --skew zipf --zipf-s 1.2)
+coop_out=$(cargo run --release --bin ibmb -- serve --dataset synth-arxiv \
+    --scale 0.05 --shards 2 --clients 8 --queries 200 --window-us 300 \
+    --seed 11 --skew zipf --zipf-s 1.2 --steal-window 1 --cooperative)
+printf '%s\n' "$coop_out"
+printf '%s\n' "$base_out" | grep -q 'coop: steals=0 replica_dispatches=0' || {
+    echo "coop smoke FAILED: baseline run reported cooperative activity" >&2
+    exit 1
+}
+printf '%s\n' "$coop_out" | grep -Eq \
+    'steals=[1-9][0-9]*|replica_dispatches=[1-9][0-9]*' || {
+    echo "coop smoke FAILED: no steals or replica dispatches under skew" >&2
+    exit 1
+}
+printf '%s\n' "$base_out" | grep -q 'unanswered=0' || {
+    echo "coop smoke FAILED: baseline run left queries unanswered" >&2
+    exit 1
+}
+printf '%s\n' "$coop_out" | grep -q 'unanswered=0' || {
+    echo "coop smoke FAILED: cooperative run left queries unanswered" >&2
+    exit 1
+}
+base_hash=$(printf '%s\n' "$base_out" | grep -o 'logit_hash=0x[0-9a-f]*')
+coop_hash=$(printf '%s\n' "$coop_out" | grep -o 'logit_hash=0x[0-9a-f]*')
+[ -n "$base_hash" ] && [ "$base_hash" = "$coop_hash" ] || {
+    echo "coop smoke FAILED: logit hash drifted ('$base_hash' vs '$coop_hash')" >&2
+    exit 1
+}
+
 echo "== bench JSON validation (BENCH_*.json, when present) =="
 ./scripts/check_bench_json.sh
 

@@ -14,6 +14,12 @@
 //! shedding absorbs the excess — without it the queue would grow
 //! without bound and p99 with it.
 //!
+//! The third act is shard balance under skew (DESIGN.md §15): zipf-1.2
+//! load over 1/2/4 shards with cooperative serving off vs on. Hot-plan
+//! skew concentrates work on one shard's queue; stealing + replication
+//! should pull the skewed p99 back toward the same configuration's
+//! uniform-load p99 (the `p99_vs_uniform` column).
+//!
 //! Run: `cargo bench --bench serving` (`--full` for the bigger graph;
 //! `--shards 1,2,4 --queries N --clients N --deadline-ms F` to
 //! override).
@@ -282,6 +288,96 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // ---- shard balance under skew: cooperative off vs on -----------
+    // per (shards, mode): one uniform run for the baseline p99, one
+    // zipf run for the skewed p99 — cooperation should shrink the gap
+    struct BalanceRecord {
+        skew: String,
+        shards: usize,
+        cooperative: bool,
+        qps: f64,
+        p99_ms: f64,
+        uniform_p99_ms: f64,
+        p99_vs_uniform: f64,
+        shard_balance: f64,
+        steals: u64,
+        replica_dispatches: u64,
+        shared_row_bytes: u64,
+    }
+    let zipf_s = args.get_f64("zipf-s", 1.2);
+    let steal_window = args.get_usize("steal-window", 2);
+    let mut balance_records: Vec<BalanceRecord> = Vec::new();
+    let mut btable = Table::new(&[
+        "config",
+        "qps",
+        "p99 (ms)",
+        "p99/unif",
+        "balance",
+        "steals",
+        "replicas",
+        "shared KiB",
+    ]);
+    for &shards in &shard_counts {
+        for cooperative in [false, true] {
+            let cfg = ServeConfig {
+                shards,
+                cooperative,
+                steal_window,
+                ..base.clone()
+            };
+            let u = serve::serve_closed_loop(
+                &mut setup,
+                &eval,
+                Skew::Uniform,
+                &cfg,
+            )?;
+            let r = serve::serve_closed_loop(
+                &mut setup,
+                &eval,
+                Skew::Zipf(zipf_s),
+                &cfg,
+            )?;
+            let ratio = r.p99_ms / u.p99_ms.max(1e-9);
+            btable.row(&[
+                format!(
+                    "zipf({zipf_s:.1}) s{shards}{}",
+                    if cooperative { " +coop" } else { "" }
+                ),
+                format!("{:.0}", r.qps),
+                format!("{:.2}", r.p99_ms),
+                format!("{ratio:.2}x"),
+                format!("{:.2}", r.shard_balance),
+                format!("{}", r.steals),
+                format!("{}", r.replica_dispatches),
+                format!("{}", r.shared_row_bytes / 1024),
+            ]);
+            balance_records.push(BalanceRecord {
+                skew: format!("zipf({zipf_s:.2})"),
+                shards,
+                cooperative,
+                qps: r.qps,
+                p99_ms: r.p99_ms,
+                uniform_p99_ms: u.p99_ms,
+                p99_vs_uniform: ratio,
+                shard_balance: r.shard_balance,
+                steals: r.steals,
+                replica_dispatches: r.replica_dispatches,
+                shared_row_bytes: r.shared_row_bytes,
+            });
+        }
+    }
+    let best = balance_records
+        .iter()
+        .filter(|b| b.cooperative && b.shards > 1)
+        .map(|b| b.p99_vs_uniform)
+        .fold(f64::INFINITY, f64::min);
+    if best.is_finite() && best > 1.5 {
+        eprintln!(
+            "WARNING: best cooperative zipf p99 is {best:.2}x the \
+             uniform p99 (target ~1.5x) — skew still unbalanced"
+        );
+    }
+
     let json = Json::Obj(BTreeMap::from([
         ("bench".into(), Json::Str("serving".into())),
         ("dataset".into(), Json::Str(ds.name.clone())),
@@ -353,6 +449,47 @@ fn main() -> anyhow::Result<()> {
             ),
         ),
         (
+            "balance".into(),
+            Json::Arr(
+                balance_records
+                    .iter()
+                    .map(|b| {
+                        Json::Obj(BTreeMap::from([
+                            ("skew".into(), Json::Str(b.skew.clone())),
+                            ("shards".into(), Json::Num(b.shards as f64)),
+                            (
+                                "cooperative".into(),
+                                Json::Bool(b.cooperative),
+                            ),
+                            ("qps".into(), Json::Num(b.qps)),
+                            ("p99_ms".into(), Json::Num(b.p99_ms)),
+                            (
+                                "uniform_p99_ms".into(),
+                                Json::Num(b.uniform_p99_ms),
+                            ),
+                            (
+                                "p99_vs_uniform".into(),
+                                Json::Num(b.p99_vs_uniform),
+                            ),
+                            (
+                                "shard_balance".into(),
+                                Json::Num(b.shard_balance),
+                            ),
+                            ("steals".into(), Json::Num(b.steals as f64)),
+                            (
+                                "replica_dispatches".into(),
+                                Json::Num(b.replica_dispatches as f64),
+                            ),
+                            (
+                                "shared_row_bytes".into(),
+                                Json::Num(b.shared_row_bytes as f64),
+                            ),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+        (
             "runs".into(),
             Json::Arr(
                 records
@@ -394,5 +531,6 @@ fn main() -> anyhow::Result<()> {
     table.print("serving — qps / tail latency / coalescing vs shards");
     otable.print("serving — goodput under overload (1x–10x capacity)");
     etable.print("serving — p99 by forward backend (pinned load)");
+    btable.print("serving — shard balance under zipf, cooperative off/on");
     Ok(())
 }

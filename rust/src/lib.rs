@@ -133,8 +133,16 @@
 //! and records the goodput / shed-fraction / p99-of-admitted curves in
 //! `BENCH_serving.json`.
 //!
+//! Under zipf-skewed traffic, cooperative cross-shard serving
+//! (DESIGN.md §15, `ibmb serve --cooperative`) rebalances the hot
+//! shard with work-stealing, hot-plan replication, and cross-query
+//! fetch sharing — moving *where* groups execute without changing any
+//! prediction ([`serve::coop`]).
+//!
 //! See `rust/DESIGN.md` for the full system inventory and the
-//! experiment index mapping each paper table/figure to a bench target.
+//! experiment index mapping each paper table/figure to a bench
+//! target, and `docs/OPERATIONS.md` for the operator-facing guide to
+//! every `ibmb` subcommand, serve flag, and report field.
 
 pub mod baselines;
 pub mod batching;

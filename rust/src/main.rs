@@ -57,6 +57,8 @@ fn usage() -> ! {
          admission/telemetry: [--offered-qps F] (0 = closed loop) \
          [--deadline-ms F] [--tenants N] [--tenant-rate F] \
          [--tenant-burst F] [--trace FILE.jsonl]\n\
+         cooperative serving (DESIGN.md §15): [--cooperative] \
+         [--steal-window N] [--hot-replicas N]\n\
          update options (serve --update-stream segments serving, \
          serve --live-updates applies mid-traffic, ibmb update replays \
          offline): [--update-stream FILE|synth] [--live-updates FILE|synth] \
@@ -290,6 +292,33 @@ fn validate_bench_json(text: &str) -> Result<String, String> {
                     if run.get(k).is_none() {
                         return Err(format!(
                             "bench {bench:?}: executor_p99[{i}] missing key {k:?}"
+                        ));
+                    }
+                }
+            }
+            // the shard-balance-under-skew series: zipf 1.2 over
+            // 1/2/4 shards, cooperative off vs on (DESIGN.md §15)
+            let balance = doc
+                .get("balance")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| {
+                    format!("bench {bench:?}: missing array \"balance\"")
+                })?;
+            if balance.is_empty() {
+                return Err(format!("bench {bench:?}: empty \"balance\""));
+            }
+            for (i, run) in balance.iter().enumerate() {
+                for k in [
+                    "shards",
+                    "cooperative",
+                    "p99_ms",
+                    "shard_balance",
+                    "steals",
+                    "replica_dispatches",
+                ] {
+                    if run.get(k).is_none() {
+                        return Err(format!(
+                            "bench {bench:?}: balance[{i}] missing key {k:?}"
                         ));
                     }
                 }
@@ -591,6 +620,16 @@ fn main() -> Result<()> {
                 tenant_rate: args.get_f64("tenant-rate", 0.0).max(0.0),
                 tenant_burst: args.get_f64("tenant-burst", 32.0).max(1.0),
                 store_budget: args.get_usize("store-budget", 8 << 20),
+                // bare `--cooperative` only parses as a flag when no
+                // bare token follows it; `--cooperative 1` / `=1` also
+                // work, so it composes at any position
+                cooperative: args.flag("cooperative")
+                    || args
+                        .get("cooperative")
+                        .map(|v| v != "0")
+                        .unwrap_or(false),
+                steal_window: args.get_usize("steal-window", 4).max(1),
+                hot_replicas: args.get_usize("hot-replicas", 4),
             };
             if !["gcn", "sage", "gat"].contains(&cfg.model.as_str()) {
                 eprintln!(
@@ -956,6 +995,15 @@ fn main() -> Result<()> {
                 report.exec_s,
                 report.mat_wait_s,
                 report.accuracy * 100.0
+            );
+            // always printed (zeros when --cooperative is off) so the
+            // ci.sh cooperative smoke can grep it unconditionally
+            println!(
+                "  coop: steals={} replica_dispatches={} \
+                 shared_row_bytes={}",
+                report.steals,
+                report.replica_dispatches,
+                report.shared_row_bytes
             );
             // ci.sh's cold-start smoke greps this line: a lazy restart
             // must fault (store_faults > 0) with bounded residency

@@ -77,6 +77,8 @@ pub struct TenantCounters {
 }
 
 impl TenantCounters {
+    /// All outcomes for this tenant (every offered query lands in
+    /// exactly one counter).
     pub fn total(&self) -> u64 {
         self.admitted + self.degraded + self.shed_deadline + self.shed_rate_limited
     }
@@ -97,6 +99,8 @@ pub struct AdmissionGate {
 }
 
 impl AdmissionGate {
+    /// Gate for `shards` shards and `tenants` token buckets (at least
+    /// one of each).
     pub fn new(shards: usize, tenants: usize, cfg: AdmissionConfig) -> Self {
         let tenants = tenants.max(1);
         AdmissionGate {
@@ -175,6 +179,17 @@ impl AdmissionGate {
         self.depth[shard] += 1;
     }
 
+    /// Cooperative dispatch moved a group from `from` to `to` (replica
+    /// routing or a steal, DESIGN.md §15): shift its depth so the
+    /// deadline predicate sees where the work actually queues.
+    pub fn group_moved(&mut self, from: usize, to: usize) {
+        if from == to {
+            return;
+        }
+        self.depth[from] = self.depth[from].saturating_sub(1);
+        self.depth[to] += 1;
+    }
+
     /// A group finished on `shard` after `service_s` seconds of
     /// execution: release its depth and fold the observation into the
     /// EWMA.
@@ -196,18 +211,22 @@ impl AdmissionGate {
         &mut self.tenants[t]
     }
 
+    /// Count a full-fidelity answer (execution or fresh memo hit).
     pub fn note_admitted(&mut self, tenant: u16) {
         self.tenant_mut(tenant).admitted += 1;
     }
 
+    /// Count an over-deadline query answered from the memo.
     pub fn note_degraded(&mut self, tenant: u16) {
         self.tenant_mut(tenant).degraded += 1;
     }
 
+    /// Count a query shed by the deadline predicate.
     pub fn note_shed_deadline(&mut self, tenant: u16) {
         self.tenant_mut(tenant).shed_deadline += 1;
     }
 
+    /// Count a query shed by the tenant's token bucket.
     pub fn note_shed_rate(&mut self, tenant: u16) {
         self.tenant_mut(tenant).shed_rate_limited += 1;
     }
@@ -288,6 +307,23 @@ mod tests {
         // depth never underflows
         g.group_done(0, 1e-3);
         assert_eq!(g.depth(0), 0);
+    }
+
+    #[test]
+    fn group_moved_shifts_depth_between_shards() {
+        let mut g = gate(AdmissionConfig::default());
+        g.group_enqueued(0);
+        g.group_enqueued(0);
+        g.group_moved(0, 1);
+        assert_eq!(g.depth(0), 1);
+        assert_eq!(g.depth(1), 1);
+        // self-moves and underflow are no-ops
+        g.group_moved(1, 1);
+        assert_eq!(g.depth(1), 1);
+        g.group_done(1, 1e-4);
+        g.group_moved(1, 0);
+        assert_eq!(g.depth(1), 0);
+        assert_eq!(g.depth(0), 2);
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! Cooperative cross-shard dispatch: bounded in-flight windows,
+//! depth-ranked work-stealing, and hot-plan tracking (DESIGN.md §15).
+//!
+//! Under zipf skew the METIS placement concentrates hot plans on one
+//! shard: its queue grows while the rest idle. This module is the
+//! control-loop side of the fix (cf. "Cooperative Minibatching in
+//! GNNs", arXiv 2310.12403). The [`CoopDispatcher`] caps how many
+//! groups are in flight per shard (the *window*); everything past the
+//! window waits in a per-shard FIFO backlog owned by the control
+//! thread. Whenever a shard has spare window, [`CoopDispatcher::top_up`]
+//! refills it — from its own backlog first (locality preserved), and
+//! when that is empty by **stealing from the tail of the deepest
+//! backlog** (depth-ranked victim selection: the newest work of the
+//! most overloaded shard has the least locality value and the most
+//! queueing ahead of it, so it is the cheapest to move).
+//!
+//! Keeping the backlogs on the single-threaded control loop — instead
+//! of a lock-striped deque per shard — means no item is ever owned by
+//! two queues: a group is either in exactly one backlog or in exactly
+//! one shard's channel, so the "stolen group executes exactly once"
+//! invariant is structural, and the unit tests below pin it.
+//!
+//! [`HotTracker`] is the replication half: a per-plan hit EWMA
+//! (decayed counters) whose top-k feeds
+//! [`super::shard::Placement::set_replica`] — the serve loop re-ranks
+//! it periodically and points each hot plan at the least-loaded
+//! non-home shard, so dispatch can route a hot group to whichever copy
+//! has the shallower queue. Prediction bit-identity is preserved by
+//! construction: a plan's logits depend only on its (epoch-pinned)
+//! content, the model, and deterministic features — never on which
+//! shard runs it — and the run hash folds per-query outcomes
+//! commutatively, so stealing and replication cannot change
+//! `ServeReport::logit_hash`.
+
+use std::collections::{HashMap, VecDeque};
+
+/// One sendable unit produced by [`CoopDispatcher::top_up`]: dispatch
+/// `item` to `shard`, noting the victim when the item was stolen.
+#[derive(Debug)]
+pub struct Dispatch<T> {
+    /// Shard the item must now be sent to.
+    pub shard: usize,
+    /// The work item (moved out of the backlog exactly once).
+    pub item: T,
+    /// `Some(victim)` when the item was stolen from `victim`'s
+    /// backlog tail; `None` for a shard draining its own backlog.
+    pub stolen_from: Option<usize>,
+}
+
+/// Windowed per-shard dispatcher with depth-ranked tail stealing.
+///
+/// Generic over the item type so the steal/once invariants are
+/// unit-testable with plain tokens; the serve loop instantiates it
+/// with [`super::shard::WorkItem`].
+#[derive(Debug)]
+pub struct CoopDispatcher<T> {
+    window: usize,
+    /// Groups sent to each shard's channel and not yet completed.
+    inflight: Vec<usize>,
+    /// Control-loop-owned overflow queues, one per shard.
+    backlog: Vec<VecDeque<T>>,
+    /// Groups moved off their dispatch shard by stealing.
+    pub steals: u64,
+    /// Groups that could not be sent immediately and were backlogged.
+    pub backlogged: u64,
+}
+
+impl<T> CoopDispatcher<T> {
+    /// `window` = max groups in flight per shard before backlogging
+    /// (≥ 1). A small window keeps queues shallow enough to steal
+    /// from while still letting shards drain several groups per ring
+    /// run (fetch sharing needs co-resident groups).
+    pub fn new(shards: usize, window: usize) -> CoopDispatcher<T> {
+        let shards = shards.max(1);
+        CoopDispatcher {
+            window: window.max(1),
+            inflight: vec![0; shards],
+            backlog: (0..shards).map(|_| VecDeque::new()).collect(),
+            steals: 0,
+            backlogged: 0,
+        }
+    }
+
+    /// Offer an item for `shard`: returns it back for an immediate
+    /// send when the shard has window, otherwise backlogs it (FIFO).
+    pub fn offer(&mut self, shard: usize, item: T) -> Option<(usize, T)> {
+        if self.inflight[shard] < self.window {
+            self.inflight[shard] += 1;
+            Some((shard, item))
+        } else {
+            self.backlog[shard].push_back(item);
+            self.backlogged += 1;
+            None
+        }
+    }
+
+    /// A group completed on `shard`, freeing one window slot.
+    pub fn complete(&mut self, shard: usize) {
+        self.inflight[shard] = self.inflight[shard].saturating_sub(1);
+    }
+
+    /// Groups currently in `shard`'s channel (sent, not completed).
+    pub fn inflight(&self, shard: usize) -> usize {
+        self.inflight[shard]
+    }
+
+    /// Groups waiting in `shard`'s backlog.
+    pub fn pending(&self, shard: usize) -> usize {
+        self.backlog[shard].len()
+    }
+
+    /// Total backlogged groups across all shards.
+    pub fn pending_total(&self) -> usize {
+        self.backlog.iter().map(VecDeque::len).sum()
+    }
+
+    /// Deepest backlog eligible as a steal victim for `thief` (max
+    /// depth, lowest index on ties), or `None` when every other
+    /// backlog is empty.
+    fn victim_for(&self, thief: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for v in 0..self.backlog.len() {
+            if v == thief || self.backlog[v].is_empty() {
+                continue;
+            }
+            match best {
+                Some(b) if self.backlog[v].len() <= self.backlog[b].len() => {}
+                _ => best = Some(v),
+            }
+        }
+        best
+    }
+
+    /// Refill every shard with spare window: own backlog first
+    /// (FIFO front — oldest group, preserving its queue order), then
+    /// steal from the **tail** of the deepest other backlog. Returns
+    /// the dispatches to send; each backlogged item appears in at most
+    /// one `top_up` result, exactly once.
+    pub fn top_up(&mut self) -> Vec<Dispatch<T>> {
+        let mut out = Vec::new();
+        for s in 0..self.backlog.len() {
+            while self.inflight[s] < self.window {
+                if let Some(item) = self.backlog[s].pop_front() {
+                    self.inflight[s] += 1;
+                    out.push(Dispatch {
+                        shard: s,
+                        item,
+                        stolen_from: None,
+                    });
+                } else if let Some(v) = self.victim_for(s) {
+                    let item = self.backlog[v].pop_back().unwrap();
+                    self.inflight[s] += 1;
+                    self.steals += 1;
+                    out.push(Dispatch {
+                        shard: s,
+                        item,
+                        stolen_from: Some(v),
+                    });
+                } else {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Drain every backlog to its own shard, ignoring windows —
+    /// shutdown safety valve (a completed run has empty backlogs, but
+    /// error paths must not strand work silently).
+    pub fn drain_all(&mut self) -> Vec<(usize, T)> {
+        let mut out = Vec::new();
+        for (s, q) in self.backlog.iter_mut().enumerate() {
+            while let Some(item) = q.pop_front() {
+                out.push((s, item));
+            }
+        }
+        out
+    }
+}
+
+/// Per-plan hit-rate EWMA for hot-plan replication: decayed counters,
+/// re-ranked periodically by the serve loop (DESIGN.md §15).
+#[derive(Debug)]
+pub struct HotTracker {
+    alpha: f64,
+    score: HashMap<u32, f64>,
+}
+
+impl HotTracker {
+    /// `alpha` ∈ (0, 1]: the fraction of each plan's score retained
+    /// per [`HotTracker::decay`] — lower forgets faster.
+    pub fn new(alpha: f64) -> HotTracker {
+        HotTracker {
+            alpha: alpha.clamp(1e-3, 1.0),
+            score: HashMap::new(),
+        }
+    }
+
+    /// One query hit plan `pid`.
+    pub fn hit(&mut self, pid: u32) {
+        *self.score.entry(pid).or_insert(0.0) += 1.0;
+    }
+
+    /// Age every score by `alpha`, dropping plans that have cooled
+    /// below noise so the map tracks the hot set, not history.
+    pub fn decay(&mut self) {
+        let a = self.alpha;
+        self.score.retain(|_, s| {
+            *s *= a;
+            *s > 1e-3
+        });
+    }
+
+    /// Plans currently tracked.
+    pub fn len(&self) -> usize {
+        self.score.len()
+    }
+
+    /// True when no plan has a live score.
+    pub fn is_empty(&self) -> bool {
+        self.score.is_empty()
+    }
+
+    /// The `k` hottest plans, descending by score (ties broken toward
+    /// the lower plan id, so the ranking is deterministic).
+    pub fn top_k(&self, k: usize) -> Vec<u32> {
+        let mut ranked: Vec<(u32, f64)> =
+            self.score.iter().map(|(&p, &s)| (p, s)).collect();
+        ranked.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        ranked.truncate(k);
+        ranked.into_iter().map(|(p, _)| p).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run offers + completion cycles until everything drained,
+    /// recording each item's dispatch count.
+    fn drain_cycle(
+        d: &mut CoopDispatcher<u64>,
+        sent: &mut HashMap<u64, (usize, u32)>,
+        first: Vec<(usize, u64)>,
+    ) {
+        let mut live: Vec<(usize, u64)> = first;
+        while !live.is_empty() {
+            // complete everything currently in flight…
+            for &(s, id) in &live {
+                let e = sent.entry(id).or_insert((s, 0));
+                e.0 = s;
+                e.1 += 1;
+                d.complete(s);
+            }
+            live.clear();
+            // …then refill the freed windows
+            for dis in d.top_up() {
+                live.push((dis.shard, dis.item));
+            }
+        }
+    }
+
+    #[test]
+    fn window_bounds_inflight_and_overflow_backlogs() {
+        let mut d: CoopDispatcher<u64> = CoopDispatcher::new(2, 2);
+        let mut direct = 0;
+        for i in 0..5u64 {
+            if d.offer(0, i).is_some() {
+                direct += 1;
+            }
+        }
+        assert_eq!(direct, 2, "window admits exactly `window` items");
+        assert_eq!(d.inflight(0), 2);
+        assert_eq!(d.pending(0), 3);
+        assert_eq!(d.backlogged, 3);
+        assert_eq!(d.pending_total(), 3);
+    }
+
+    #[test]
+    fn idle_shard_steals_from_deepest_tail() {
+        let mut d: CoopDispatcher<u64> = CoopDispatcher::new(3, 1);
+        // fill shard 0's window, then backlog 10..13 behind it;
+        // shard 2 gets a shallower backlog (20, 21)
+        assert!(d.offer(0, 9).is_some());
+        for i in [10u64, 11, 12, 13] {
+            assert!(d.offer(0, i).is_none());
+        }
+        assert!(d.offer(2, 19).is_some());
+        for i in [20u64, 21] {
+            assert!(d.offer(2, i).is_none());
+        }
+        // shard 1 is idle: top_up must hand it the TAIL of the
+        // deepest backlog (shard 0's newest item, 13)
+        let out = d.top_up();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shard, 1);
+        assert_eq!(out[0].item, 13);
+        assert_eq!(out[0].stolen_from, Some(0));
+        assert_eq!(d.steals, 1);
+        assert_eq!(d.pending(0), 3, "only the tail left shard 0");
+    }
+
+    #[test]
+    fn own_backlog_preferred_over_stealing() {
+        let mut d: CoopDispatcher<u64> = CoopDispatcher::new(2, 1);
+        assert!(d.offer(0, 1).is_some());
+        assert!(d.offer(0, 2).is_none());
+        assert!(d.offer(1, 3).is_some());
+        assert!(d.offer(1, 4).is_none());
+        d.complete(0);
+        let out = d.top_up();
+        // shard 0 refills from its OWN backlog (FIFO front), not by
+        // stealing shard 1's
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shard, 0);
+        assert_eq!(out[0].item, 2);
+        assert_eq!(out[0].stolen_from, None);
+        assert_eq!(d.steals, 0);
+    }
+
+    #[test]
+    fn every_item_dispatches_exactly_once_under_stealing() {
+        // the tentpole invariant: a stolen group is executed exactly
+        // once — never double-sent, never dropped
+        let mut d: CoopDispatcher<u64> = CoopDispatcher::new(4, 1);
+        let mut first: Vec<(usize, u64)> = Vec::new();
+        // 64 items, all offered to shard 0: three shards can only eat
+        // via steals
+        for i in 0..64u64 {
+            if let Some((s, item)) = d.offer(0, i) {
+                first.push((s, item));
+            }
+        }
+        first.extend(d.top_up().into_iter().map(|x| (x.shard, x.item)));
+        let mut sent: HashMap<u64, (usize, u32)> = HashMap::new();
+        drain_cycle(&mut d, &mut sent, first);
+        assert_eq!(sent.len(), 64, "no item dropped");
+        assert!(sent.values().all(|&(_, n)| n == 1), "no item double-sent");
+        assert!(d.steals > 0, "idle shards must have stolen");
+        assert_eq!(d.pending_total(), 0);
+        // work actually spread: thieves executed a real share
+        let stolen_share = sent.values().filter(|&&(s, _)| s != 0).count();
+        assert!(stolen_share > 16, "steals moved {stolen_share}/64");
+    }
+
+    #[test]
+    fn drain_all_flushes_backlogs_to_home_shards() {
+        let mut d: CoopDispatcher<u64> = CoopDispatcher::new(2, 1);
+        assert!(d.offer(1, 7).is_some());
+        assert!(d.offer(1, 8).is_none());
+        assert!(d.offer(1, 9).is_none());
+        let rest = d.drain_all();
+        assert_eq!(rest, vec![(1, 8), (1, 9)]);
+        assert_eq!(d.pending_total(), 0);
+    }
+
+    #[test]
+    fn hot_tracker_ranks_and_decays() {
+        let mut h = HotTracker::new(0.5);
+        assert!(h.is_empty());
+        for _ in 0..8 {
+            h.hit(3);
+        }
+        for _ in 0..4 {
+            h.hit(7);
+        }
+        h.hit(1);
+        assert_eq!(h.top_k(2), vec![3, 7]);
+        assert_eq!(h.top_k(10), vec![3, 7, 1]);
+        assert_eq!(h.len(), 3);
+        // ties break toward the lower plan id
+        let mut t = HotTracker::new(0.5);
+        t.hit(9);
+        t.hit(2);
+        assert_eq!(t.top_k(2), vec![2, 9]);
+        // decay cools history; repeated decay evicts cold plans
+        for _ in 0..16 {
+            h.decay();
+        }
+        assert!(h.is_empty(), "fully decayed scores are dropped");
+    }
+}

@@ -12,6 +12,7 @@ use crate::util::Rng;
 /// Arrival skew over the query population.
 #[derive(Debug, Clone, Copy)]
 pub enum Skew {
+    /// Every population node equally likely.
     Uniform,
     /// Zipf with the given exponent (> 0; ~1.0–1.5 is web-like).
     Zipf(f64),
@@ -35,6 +36,7 @@ impl Skew {
         }
     }
 
+    /// Human label for reports and bench JSON (e.g. `zipf(1.20)`).
     pub fn label(&self) -> String {
         match self {
             Skew::Uniform => "uniform".to_string(),
@@ -47,7 +49,9 @@ impl Skew {
 /// it (tenant ids feed the admission gate's per-tenant token buckets).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Arrival {
+    /// Queried output node.
     pub node: u32,
+    /// Issuing tenant (0-based, `< LoadGen::tenants`).
     pub tenant: u16,
 }
 
@@ -62,6 +66,7 @@ pub struct LoadGen {
 }
 
 impl LoadGen {
+    /// Single-tenant sampler over `nodes` with the given skew.
     pub fn new(nodes: &[u32], skew: Skew, seed: u64) -> LoadGen {
         LoadGen::with_tenants(nodes, skew, 1, seed)
     }
@@ -121,10 +126,12 @@ impl LoadGen {
         Arrival { node, tenant }
     }
 
+    /// Number of distinct sampleable nodes.
     pub fn population(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Number of logical tenants arrivals are spread over.
     pub fn tenants(&self) -> usize {
         self.tenants as usize
     }

@@ -24,6 +24,7 @@ pub struct LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram (all buckets zero).
     pub fn new() -> LatencyHistogram {
         LatencyHistogram {
             counts: vec![0; LAT_BUCKETS],
@@ -82,10 +83,12 @@ impl LatencyHistogram {
         self.max_s
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean latency in seconds (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -94,10 +97,12 @@ impl LatencyHistogram {
         }
     }
 
+    /// Largest observed latency in seconds (0 when empty).
     pub fn max(&self) -> f64 {
         self.max_s
     }
 
+    /// Smallest observed latency in seconds (0 when empty).
     pub fn min(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -116,6 +121,7 @@ impl Default for LatencyHistogram {
 /// Counters accumulated by the service event loop.
 #[derive(Debug)]
 pub struct ServeMetrics {
+    /// Completion-latency histogram over admitted queries.
     pub latency: LatencyHistogram,
     /// Materialize+execute runs dispatched to shards.
     pub executions: u64,
@@ -126,11 +132,16 @@ pub struct ServeMetrics {
     pub cache_hit_queries: u64,
     /// Queries that needed a cold-path (synthesized) plan.
     pub cold_routes: u64,
+    /// Queries answered (execution or memo hit).
     pub completed: u64,
+    /// Completions whose prediction matched the dataset label.
     pub correct: u64,
-    /// Executions dispatched per shard (locality / balance signal).
+    /// Groups *executed* per shard, tallied at result receipt — not at
+    /// dispatch — so cooperative steals and replica dispatches show up
+    /// on the shard that actually ran the work (DESIGN.md §15).
     pub shard_executions: Vec<u64>,
-    /// Queries answered per shard.
+    /// Queries answered per shard by execution, tallied at result
+    /// receipt like [`ServeMetrics::shard_executions`].
     pub shard_queries: Vec<u64>,
     /// Shard-side seconds spent in the model forward pass.
     pub exec_s: f64,
@@ -150,6 +161,7 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Zeroed counters for a run over `shards` workers.
     pub fn new(shards: usize) -> ServeMetrics {
         ServeMetrics {
             latency: LatencyHistogram::new(),
@@ -170,10 +182,19 @@ impl ServeMetrics {
         }
     }
 
-    /// One group dispatched to `shard` carrying `queries` queries.
-    pub fn record_dispatch(&mut self, shard: usize, queries: u64) {
+    /// One group dispatched carrying `queries` queries. Per-shard
+    /// attribution waits for [`ServeMetrics::record_group_executed`]:
+    /// under cooperative serving the dispatch target is not always the
+    /// executing shard.
+    pub fn record_dispatch(&mut self, queries: u64) {
         self.executions += 1;
         self.executed_queries += queries;
+    }
+
+    /// One group's result arrived from `shard`: attribute the
+    /// execution (and its `queries` riders) to the shard that actually
+    /// ran it, so `shard_balance` sees steals and replica dispatches.
+    pub fn record_group_executed(&mut self, shard: usize, queries: u64) {
         self.shard_executions[shard] += 1;
         self.shard_queries[shard] += queries;
     }
@@ -216,6 +237,7 @@ impl ServeMetrics {
         }
     }
 
+    /// Fraction of completions with a label-correct prediction.
     pub fn accuracy(&self) -> f64 {
         if self.completed == 0 {
             0.0
@@ -225,7 +247,9 @@ impl ServeMetrics {
     }
 
     /// Max shard query share / ideal share (1.0 = perfectly balanced),
-    /// mirroring [`crate::partition::balance`].
+    /// mirroring [`crate::partition::balance`]. Computed over
+    /// *executed* per-shard queries, so cooperative mode's steals and
+    /// replica dispatches improve the reported balance.
     pub fn shard_balance(&self) -> f64 {
         let total: u64 = self.shard_queries.iter().sum();
         if total == 0 || self.shard_queries.is_empty() {
@@ -330,14 +354,22 @@ mod tests {
     #[test]
     fn coalescing_and_balance_accounting() {
         let mut m = ServeMetrics::new(2);
-        m.record_dispatch(0, 4);
-        m.record_dispatch(1, 2);
-        m.record_dispatch(0, 6);
+        m.record_dispatch(4);
+        m.record_dispatch(2);
+        m.record_dispatch(6);
         assert_eq!(m.executions, 3);
         assert_eq!(m.executed_queries, 12);
         assert!((m.coalescing_factor() - 4.0).abs() < 1e-12);
-        assert_eq!(m.shard_queries, vec![10, 2]);
-        assert!((m.shard_balance() - 10.0 / 6.0).abs() < 1e-12);
+        // balance is attributed at result receipt: a group dispatched
+        // to shard 0 but stolen by shard 1 counts against shard 1
+        assert_eq!(m.shard_queries, vec![0, 0], "nothing executed yet");
+        assert!((m.shard_balance() - 1.0).abs() < 1e-12);
+        m.record_group_executed(0, 4);
+        m.record_group_executed(1, 2);
+        m.record_group_executed(1, 6);
+        assert_eq!(m.shard_executions, vec![1, 2]);
+        assert_eq!(m.shard_queries, vec![4, 8]);
+        assert!((m.shard_balance() - 8.0 / 6.0).abs() < 1e-12);
         m.record_completion(1e-3, true);
         m.record_completion(2e-3, false);
         m.cache_hit_queries = 1;

@@ -41,6 +41,14 @@
 //!   service-time EWMA predicts completion, over-deadline queries are
 //!   shed (or degraded to a memo-only answer), and per-tenant token
 //!   buckets cap each tenant's admission rate (DESIGN.md §12).
+//! * [`coop`] — cooperative cross-shard serving (`ibmb serve
+//!   --cooperative`, DESIGN.md §15): a control-loop-owned dispatcher
+//!   that bounds per-shard in-flight work and lets idle shards steal
+//!   backlogged groups from the deepest victim's tail, plus the
+//!   decayed-hit tracker behind hot-plan replication; shard workers
+//!   additionally share materialized feature rows across co-drained
+//!   groups. All of it moves *where* a group executes, never *what*
+//!   it computes, so the order-independent logit hash is unchanged.
 //! * [`service`] — the event loop tying all of the above together
 //!   behind `ibmb serve` / `benches/serving.rs`, including the churn
 //!   harness ([`service::Churn`]) that attaches a delta source to a
@@ -62,14 +70,20 @@
 //! ([`crate::store::PlanResidency`]), so time-to-first-answer scales
 //! with the working set, not the corpus (DESIGN.md §14).
 //!
-//! Execution uses the exact CPU reference forward pass
-//! ([`crate::inference::fullgraph::forward`]) over each plan's induced
-//! subgraph, so the service runs end-to-end even in the offline build
-//! where the PJRT backend is stubbed; the artifact metadata it is
-//! driven by ([`shard::reference_artifact`]) matches the AOT layout, so
-//! swapping the executor for `Runtime::infer_step` is a local change.
+//! Execution goes through the pluggable [`crate::exec::Executor`]
+//! backends (`--executor reference|blocked|pjrt`): the exact CPU
+//! reference and the SIMD-blocked CPU backend run end-to-end even in
+//! the offline build where the PJRT backend is stubbed, and the
+//! artifact metadata they are driven by
+//! ([`shard::reference_artifact`]) matches the AOT layout, so a real
+//! accelerator backend slots in without touching the serve loop.
+//! Operational guidance — flags, report fields, tuning — lives in
+//! `docs/OPERATIONS.md`.
+
+#![warn(missing_docs)]
 
 pub mod admission;
+pub mod coop;
 pub mod load;
 pub mod metrics;
 pub mod queue;

@@ -50,6 +50,7 @@ pub struct PendingGroup<S> {
     /// id tying trace spans, dispatch accounting, and shard results
     /// back to one coalesced execution.
     pub gid: u64,
+    /// The (cached or cold) plan every rider of this group shares.
     pub key: PlanKey,
     /// Freshness epoch of the group's plan at admission time.
     pub epoch: u64,
@@ -58,6 +59,7 @@ pub struct PendingGroup<S> {
     pub snap: S,
     /// Admission time of the group's first query (deadline anchor).
     pub created: Instant,
+    /// The coalesced riders, in admission order.
     pub queries: Vec<QueryTicket>,
 }
 
@@ -158,10 +160,12 @@ impl<S: Clone> MicrobatchQueue<S> {
         self.groups.drain().map(|(_, g)| g).collect()
     }
 
+    /// Open (not yet flushed) groups.
     pub fn pending_groups(&self) -> usize {
         self.groups.len()
     }
 
+    /// Queries waiting across all open groups.
     pub fn pending_queries(&self) -> usize {
         self.groups.values().map(|g| g.queries.len()).sum()
     }

@@ -54,9 +54,13 @@ pub struct ResultsCache {
     lru: VecDeque<(PlanKey, u64)>,
     bytes: usize,
     tick: u64,
+    /// Reads answered from the memo.
     pub hits: u64,
+    /// Reads that missed (absent, stale, or expired entry).
     pub misses: u64,
+    /// Entries dropped by the byte-budget LRU.
     pub evictions: u64,
+    /// Entries dropped by TTL expiry.
     pub expirations: u64,
     /// Entries dropped because their plan epoch went stale (graph
     /// delta invalidation), on read or in an eager sweep.
@@ -290,18 +294,22 @@ impl ResultsCache {
         dropped
     }
 
+    /// Resident logit bytes (the LRU budget applies to this).
     pub fn bytes(&self) -> usize {
         self.bytes
     }
 
+    /// Resident entries.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when no entries are resident.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Hits over all reads so far (0.0 before the first read).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {

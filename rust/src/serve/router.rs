@@ -51,6 +51,7 @@ pub enum Route {
 }
 
 impl Route {
+    /// The plan key queries coalesce under.
     pub fn key(&self) -> PlanKey {
         match self {
             Route::Cached { plan, .. } => PlanKey::Cached(*plan),
@@ -120,6 +121,7 @@ impl RouterIndex {
         self.index.len()
     }
 
+    /// True for an index over an empty node-id space.
     pub fn is_empty(&self) -> bool {
         self.index.is_empty()
     }
@@ -228,6 +230,7 @@ pub struct QueryRouter {
 }
 
 impl QueryRouter {
+    /// Fresh router with an empty cold-id memo.
     pub fn new() -> QueryRouter {
         QueryRouter::default()
     }

@@ -50,6 +50,7 @@ use crate::runtime::{ArtifactMeta, ModelState};
 use crate::util::Rng;
 
 use super::admission::{AdmissionConfig, AdmissionGate, TenantCounters, Verdict};
+use super::coop::{CoopDispatcher, HotTracker};
 use super::load::{LoadGen, Skew};
 use super::metrics::ServeMetrics;
 use super::queue::{MicrobatchQueue, PendingGroup, QueryTicket};
@@ -92,8 +93,11 @@ pub struct ServeConfig {
     pub ring_depth: usize,
     /// Reference-model hidden width.
     pub hidden: usize,
+    /// Reference-model layer count.
     pub layers: usize,
+    /// Attention heads (GAT only).
     pub heads: usize,
+    /// Seed for model init, placement, and the load generator.
     pub seed: u64,
     /// Open-loop offered load (queries/s). 0 keeps the classic
     /// closed-loop behavior; > 0 paces arrivals on a deterministic
@@ -118,6 +122,19 @@ pub struct ServeConfig {
     /// deployments (`--store-budget`). Ignored when the snapshot
     /// carries its full cache in memory.
     pub store_budget: usize,
+    /// Cooperative cross-shard serving (`--cooperative`, DESIGN.md
+    /// §15): work-stealing between shard backlogs, hot-plan replica
+    /// routing, and cross-query fetch sharing inside shard drains.
+    /// Stealing/replication need ≥ 2 shards; fetch sharing applies at
+    /// any shard count.
+    pub cooperative: bool,
+    /// Cooperative in-flight window: groups sent to a shard's channel
+    /// before further dispatches backlog (and become stealable)
+    /// (`--steal-window`).
+    pub steal_window: usize,
+    /// Hot plans the cooperative router replicates onto the
+    /// least-loaded non-home shard at each re-rank (`--hot-replicas`).
+    pub hot_replicas: usize,
 }
 
 impl Default for ServeConfig {
@@ -144,6 +161,9 @@ impl Default for ServeConfig {
             tenant_burst: 32.0,
             executor: ExecutorKind::default(),
             store_budget: 8 << 20,
+            cooperative: false,
+            steal_window: 4,
+            hot_replicas: 4,
         }
     }
 }
@@ -153,7 +173,9 @@ impl Default for ServeConfig {
 /// routing state — the cold-id memo, which stays warm across repeated
 /// runs (the bench's shard sweep reuses one setup).
 pub struct ServeSetup {
+    /// The published-snapshot cell shared with appliers and shards.
     pub cell: Arc<ServeStateCell>,
+    /// Output-node router with its persistent cold-id memo.
     pub router: QueryRouter,
     /// Trace event sink attached to serving runs (disabled by
     /// default; `ibmb serve --trace` attaches a JSONL writer).
@@ -345,13 +367,21 @@ pub fn prepare_from_store(
 /// Aggregate outcome of one closed-loop serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Queries offered to the run.
     pub queries: usize,
+    /// Wall-clock seconds the run took.
     pub wall_s: f64,
+    /// Offered queries per wall second.
     pub qps: f64,
+    /// Median completion latency (admitted queries), ms.
     pub p50_ms: f64,
+    /// 95th-percentile completion latency, ms.
     pub p95_ms: f64,
+    /// 99th-percentile completion latency, ms.
     pub p99_ms: f64,
+    /// Mean completion latency, ms.
     pub mean_ms: f64,
+    /// Worst observed completion latency, ms.
     pub max_ms: f64,
     /// Materialize+execute runs performed.
     pub executions: u64,
@@ -361,6 +391,7 @@ pub struct ServeReport {
     pub coalescing_factor: f64,
     /// Queries answered from the results memo.
     pub cache_hits: u64,
+    /// Fraction of completions served from the memo.
     pub cache_hit_rate: f64,
     /// Queries answered via the cold (synthesized-plan) path — memo
     /// hits for previously executed cold plans are not counted.
@@ -368,8 +399,13 @@ pub struct ServeReport {
     /// Cold-plan ids assigned during this run (≈ distinct new cold
     /// nodes; shard-side FIFO eviction may resynthesize an id's plan).
     pub cold_plans: usize,
+    /// Fraction of completions with a label-correct prediction.
     pub accuracy: f64,
+    /// Queries *executed* per shard, attributed at result receipt —
+    /// steals and replica dispatches count against the shard that ran
+    /// the group, not the dispatch target.
     pub shard_queries: Vec<u64>,
+    /// Max executed share / ideal share over `shard_queries`.
     pub shard_balance: f64,
     /// Precomputed plans available to the router (final snapshot).
     pub plans: usize,
@@ -432,6 +468,15 @@ pub struct ServeReport {
     /// over shards — bounded by `shards × store_budget` (plus the
     /// one-plan floor).
     pub resident_bytes: u64,
+    /// Cooperative mode (DESIGN.md §15): groups moved off their
+    /// dispatch shard's backlog by an idle thief.
+    pub steals: u64,
+    /// Cooperative mode: groups dispatched to a hot plan's replica
+    /// shard instead of its home.
+    pub replica_dispatches: u64,
+    /// Cooperative mode: feature bytes saved by cross-query fetch
+    /// sharing, summed over shards.
+    pub shared_row_bytes: u64,
 }
 
 /// Fold one answered query into the run's prediction hash. Wrapping
@@ -486,6 +531,7 @@ fn home_shard(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatch_group(
     g: PendingGroup<Arc<ServeState>>,
     shards: usize,
@@ -493,14 +539,36 @@ fn dispatch_group(
     metrics: &mut ServeMetrics,
     inflight: &mut HashMap<u64, (u64, usize)>,
     tbuf: &mut TraceBuf,
+    gate: &mut AdmissionGate,
+    coop: &mut Option<CoopDispatcher<WorkItem>>,
+    coop_placement: &Placement,
+    replica_dispatches: &mut u64,
 ) -> Result<()> {
     let work = match g.key {
         PlanKey::Cached(pid) => Work::Cached(pid),
         // all riders of a cold group query the same node
         PlanKey::Cold(_) => Work::Cold(g.queries[0].node),
     };
-    let shard = home_shard(&g.snap, &g.key, g.queries[0].node, shards);
-    metrics.record_dispatch(shard, g.queries.len() as u64);
+    let home = home_shard(&g.snap, &g.key, g.queries[0].node, shards);
+    let mut shard = home;
+    // hot-plan replica routing (DESIGN.md §15): a replicated plan has
+    // a second home; send the group to whichever copy has the
+    // shallower instantaneous queue. Replicas fault the plan through
+    // the ordinary residency path when store-backed.
+    if coop.is_some() {
+        if let PlanKey::Cached(pid) = g.key {
+            if let Some(rs) =
+                coop_placement.replica_shard_of_plan(pid, shards)
+            {
+                if rs != home && gate.depth(rs) < gate.depth(home) {
+                    shard = rs;
+                    *replica_dispatches += 1;
+                    gate.group_moved(home, rs);
+                }
+            }
+        }
+    }
+    metrics.record_dispatch(g.queries.len() as u64);
     tbuf.instant(
         Stage::Coalesce,
         NO_QUERY,
@@ -514,16 +582,56 @@ fn dispatch_group(
     // accounted until the group's ShardResult arrives: the bytes of
     // snapshot state the group pins (GC-pressure metric at swap time)
     inflight.insert(g.gid, (g.snap.epoch, g.snap.cache.memory_bytes()));
-    txs[shard]
-        .send(WorkItem {
-            gid: g.gid,
-            key: g.key,
-            epoch: g.epoch,
-            state: g.snap,
-            work,
-            queries: g.queries,
-        })
-        .map_err(|_| anyhow::anyhow!("shard {shard} hung up"))?;
+    let item = WorkItem {
+        gid: g.gid,
+        key: g.key,
+        epoch: g.epoch,
+        state: g.snap,
+        work,
+        queries: g.queries,
+    };
+    match coop {
+        // cooperative: respect the in-flight window; overflow lands in
+        // the control-loop backlog, where idle shards can steal it
+        Some(c) => {
+            if let Some((s, item)) = c.offer(shard, item) {
+                txs[s]
+                    .send(item)
+                    .map_err(|_| anyhow::anyhow!("shard {s} hung up"))?;
+            }
+        }
+        None => txs[shard]
+            .send(item)
+            .map_err(|_| anyhow::anyhow!("shard {shard} hung up"))?,
+    }
+    Ok(())
+}
+
+/// Refill every shard with spare cooperative window — own backlog
+/// first, then steals from the deepest victim's tail — shifting gate
+/// depth and emitting a [`Stage::Steal`] instant per stolen group.
+fn coop_top_up(
+    coop: &mut CoopDispatcher<WorkItem>,
+    txs: &[mpsc::Sender<WorkItem>],
+    gate: &mut AdmissionGate,
+    tbuf: &mut TraceBuf,
+) -> Result<()> {
+    for d in coop.top_up() {
+        if let Some(victim) = d.stolen_from {
+            gate.group_moved(victim, d.shard);
+            tbuf.instant(
+                Stage::Steal,
+                NO_QUERY,
+                d.item.gid,
+                d.shard as u32,
+                victim as u64,
+            );
+        }
+        let s = d.shard;
+        txs[s]
+            .send(d.item)
+            .map_err(|_| anyhow::anyhow!("shard {s} hung up"))?;
+    }
     Ok(())
 }
 
@@ -684,6 +792,7 @@ pub fn serve_with_churn(
                 cold_aux: cfg.cold_aux,
                 executor: cfg.executor,
                 store_budget: cfg.store_budget,
+                cooperative: cfg.cooperative,
             };
             let out = res_tx.clone();
             let strace = tracer.clone();
@@ -705,6 +814,22 @@ pub fn serve_with_churn(
         let mut gc_retained_groups = 0u64;
         let mut gc_retained_bytes_peak = 0usize;
         let mut logit_hash = 0u64;
+        // cooperative serving state (DESIGN.md §15): the dispatcher
+        // owns per-shard in-flight windows + backlogs; the hot tracker
+        // ranks plan demand; `coop_placement` is the control loop's
+        // replica-augmented copy of the snapshot placement. Stealing
+        // and replication need a second shard; with one shard only the
+        // in-worker fetch sharing applies, so the dispatcher stays off.
+        let mut coop: Option<CoopDispatcher<WorkItem>> =
+            (cfg.cooperative && shards >= 2)
+                .then(|| CoopDispatcher::new(shards, cfg.steal_window));
+        let mut hot = HotTracker::new(0.5);
+        let mut coop_placement: Placement = (*state0.placement).clone();
+        let mut replica_dispatches = 0u64;
+        let mut last_rebalance = 0u64;
+        // how many executions between hot-plan re-ranks: long enough
+        // to smooth noise, short enough to track a shifting working set
+        const REBALANCE_EVERY: u64 = 32;
         drop(state0);
         let t0 = Instant::now();
         let mut next_arrival = t0;
@@ -793,6 +918,17 @@ pub fn serve_with_churn(
                 memo_swept += results
                     .purge_stale(move |k| sweep_state.plan_epoch(k))
                     as u64;
+                // adopt the new epoch's placement; replica choices for
+                // surviving plan ids carry over until the next re-rank
+                if coop.is_some() {
+                    let mut fresh = (*state.placement).clone();
+                    for (pid, cell) in coop_placement.replicas() {
+                        if (pid as usize) < fresh.num_plans() {
+                            fresh.set_replica(pid, cell);
+                        }
+                    }
+                    coop_placement = fresh;
+                }
             }
 
             // admission: closed loop tops up to `clients` in flight;
@@ -917,6 +1053,14 @@ pub fn serve_with_churn(
                     shard as u32,
                     cold as u64,
                 );
+                // demand signal for hot-plan replication: only queries
+                // that will actually execute count (memo hits and shed
+                // queries never load a shard)
+                if coop.is_some() {
+                    if let PlanKey::Cached(pid) = key {
+                        hot.hit(pid);
+                    }
+                }
                 arrivals.insert(id, arrived_at);
                 let new_group = !queue.contains(key, epoch);
                 let (gid, flushed) = queue.push(
@@ -938,11 +1082,44 @@ pub fn serve_with_churn(
                         &mut metrics,
                         &mut inflight,
                         &mut tbuf,
+                        &mut gate,
+                        &mut coop,
+                        &coop_placement,
+                        &mut replica_dispatches,
                     )?;
                 }
             }
             if completed >= total {
                 break t0.elapsed().as_secs_f64();
+            }
+            // periodic hot-plan re-rank (DESIGN.md §15): decay the
+            // demand scores, then pin each surviving top-k plan's
+            // replica to the least-loaded shard other than its home
+            if coop.is_some()
+                && metrics.executions >= last_rebalance + REBALANCE_EVERY
+            {
+                last_rebalance = metrics.executions;
+                hot.decay();
+                coop_placement.clear_replicas();
+                for pid in hot.top_k(cfg.hot_replicas) {
+                    if (pid as usize) >= coop_placement.num_plans() {
+                        continue;
+                    }
+                    let home = coop_placement.shard_of_plan(pid, shards);
+                    let mut best: Option<(usize, u64)> = None;
+                    for s in 0..shards {
+                        if s == home {
+                            continue;
+                        }
+                        let d = gate.depth(s);
+                        if best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                            best = Some((s, d));
+                        }
+                    }
+                    if let Some((s, _)) = best {
+                        coop_placement.set_replica(pid, s as u32);
+                    }
+                }
             }
             // deadline flushes
             let now = Instant::now();
@@ -954,6 +1131,10 @@ pub fn serve_with_churn(
                     &mut metrics,
                     &mut inflight,
                     &mut tbuf,
+                    &mut gate,
+                    &mut coop,
+                    &coop_placement,
+                    &mut replica_dispatches,
                 )?;
             }
             // sleep until the next deadline, the next scheduled
@@ -967,11 +1148,24 @@ pub fn serve_with_churn(
                 timeout = timeout
                     .min(next_arrival.saturating_duration_since(Instant::now()));
             }
+            // keep idle shards fed before sleeping: a dispatch round
+            // may have backlogged work while other windows sat open
+            if let Some(c) = coop.as_mut() {
+                coop_top_up(c, &txs, &mut gate, &mut tbuf)?;
+            }
             match res_rx.recv_timeout(timeout) {
                 Ok(ShardMsg::Result(r)) => {
                     let now = Instant::now();
                     inflight.remove(&r.gid);
                     gate.group_done(r.shard_id, r.exec_s);
+                    // per-shard balance is attributed here, to the
+                    // shard that actually executed (post-steal)
+                    metrics
+                        .record_group_executed(r.shard_id, r.outcomes.len() as u64);
+                    if let Some(c) = coop.as_mut() {
+                        c.complete(r.shard_id);
+                        coop_top_up(c, &txs, &mut gate, &mut tbuf)?;
+                    }
                     for o in &r.outcomes {
                         mix_outcome(&mut logit_hash, o.id, o.node, o.pred);
                         let lat = arrivals
@@ -1050,6 +1244,19 @@ pub fn serve_with_churn(
         }
         stop.store(true, Ordering::Release);
 
+        // retire the cooperative dispatcher. The loop above exits only
+        // once every query completed, so backlogs are empty — but
+        // flush defensively so no group could ever be dropped.
+        let steals = match coop.take() {
+            Some(mut c) => {
+                for (s, item) in c.drain_all() {
+                    let _ = txs[s].send(item);
+                }
+                c.steals
+            }
+            None => 0,
+        };
+
         // shut shards down and collect their final accounting
         drop(txs);
         let mut mat_wait_s = 0.0;
@@ -1057,6 +1264,7 @@ pub fn serve_with_churn(
         let mut arena_allocations = 0usize;
         let mut store_faults = 0u64;
         let mut resident_bytes = 0u64;
+        let mut shared_row_bytes = 0u64;
         for msg in res_rx.iter() {
             if let ShardMsg::Done(d) = msg {
                 mat_wait_s += d.wait_s;
@@ -1064,6 +1272,7 @@ pub fn serve_with_churn(
                 arena_allocations += d.arena_allocations;
                 store_faults += d.store_faults;
                 resident_bytes += d.resident_bytes;
+                shared_row_bytes += d.shared_row_bytes;
             }
         }
 
@@ -1116,6 +1325,9 @@ pub fn serve_with_churn(
             logit_hash,
             store_faults,
             resident_bytes,
+            steals,
+            replica_dispatches,
+            shared_row_bytes,
         };
         Ok((report, update_reports))
     })
@@ -1394,5 +1606,93 @@ mod tests {
             );
         }
         assert_eq!(cold_state.meta.n_pad, planned_state.meta.n_pad);
+    }
+
+    #[test]
+    fn cooperative_matches_noncooperative_hash_across_seeds() {
+        // stealing, replica routing, and shared fills move *where* a
+        // group executes, never *what* it computes: the commutative
+        // logit hash must be bit-identical with cooperation on or off
+        let ds = tiny();
+        let eval = ds.splits.train.clone();
+        for seed in [11u64, 23, 47] {
+            let base = ServeConfig {
+                queries: 96,
+                clients: 8,
+                shards: 2,
+                flush_window: Duration::from_micros(200),
+                seed,
+                ..Default::default()
+            };
+            let mut runs = Vec::new();
+            for cooperative in [false, true] {
+                let cfg = ServeConfig {
+                    cooperative,
+                    steal_window: 1, // tight window: force backlogging
+                    ..base.clone()
+                };
+                let mut setup = prepare(ds.clone(), &eval, &cfg);
+                let r =
+                    serve_closed_loop(&mut setup, &eval, Skew::Zipf(1.2), &cfg)
+                        .unwrap();
+                assert_eq!(
+                    r.executed_queries + r.cache_hits,
+                    96,
+                    "seed {seed} coop {cooperative}: every query answered"
+                );
+                runs.push(r);
+            }
+            assert!(runs[0].logit_hash != 0);
+            assert_eq!(
+                runs[0].logit_hash, runs[1].logit_hash,
+                "seed {seed}: cooperative mode changed predictions"
+            );
+            assert!((runs[0].accuracy - runs[1].accuracy).abs() < 1e-12);
+            // the baseline run must not report cooperative activity
+            assert_eq!(runs[0].steals, 0);
+            assert_eq!(runs[0].replica_dispatches, 0);
+            assert_eq!(runs[0].shared_row_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn cooperative_run_steals_and_accounts_every_group_once() {
+        let ds = tiny();
+        let cfg = ServeConfig {
+            queries: 200,
+            clients: 16,
+            shards: 2,
+            cooperative: true,
+            steal_window: 1, // one group in flight per shard: skewed
+            // load must backlog on the hot shard, and the idle shard
+            // must either steal from it or absorb replica dispatches
+            flush_window: Duration::from_micros(100),
+            seed: 7,
+            ..Default::default()
+        };
+        let eval = ds.splits.train.clone();
+        let mut setup = prepare(ds.clone(), &eval, &cfg);
+        let r = serve_closed_loop(&mut setup, &eval, Skew::Zipf(1.2), &cfg)
+            .unwrap();
+        assert_eq!(
+            r.executed_queries + r.cache_hits,
+            200,
+            "every query answered exactly once"
+        );
+        // per-shard attribution at result receipt still covers every
+        // executed query — no group double-executes or vanishes
+        assert_eq!(
+            r.shard_queries.iter().sum::<u64>(),
+            r.executed_queries,
+            "executed-query attribution drifted: {:?}",
+            r.shard_queries
+        );
+        assert!(
+            r.steals > 0 || r.replica_dispatches > 0,
+            "zipf 1.2 over 2 shards with window 1 moved no work \
+             (steals {} replicas {})",
+            r.steals,
+            r.replica_dispatches
+        );
     }
 }

@@ -186,9 +186,15 @@ pub struct Placement {
     cells: usize,
     node_cell: Vec<u32>,
     plan_cell: Vec<u32>,
+    /// Cooperative hot-plan replica routes (DESIGN.md §15): plan id →
+    /// replica cell. Empty outside cooperative mode; maintained by the
+    /// serve loop's control-side copy, never by snapshot builders.
+    replicas: HashMap<u32, u32>,
 }
 
 impl Placement {
+    /// METIS-place every node and majority-vote every cached plan into
+    /// one of `cells` partition cells (DESIGN.md §11).
     pub fn build(
         ds: &Dataset,
         cache: &CowCache,
@@ -205,6 +211,7 @@ impl Placement {
             cells,
             node_cell,
             plan_cell,
+            replicas: HashMap::new(),
         }
     }
 
@@ -220,6 +227,7 @@ impl Placement {
             cells,
             node_cell: (0..num_nodes).map(|u| (u % cells) as u32).collect(),
             plan_cell: (0..num_plans).map(|p| (p % cells) as u32).collect(),
+            replicas: HashMap::new(),
         }
     }
 
@@ -260,19 +268,58 @@ impl Placement {
             cells: self.cells,
             node_cell,
             plan_cell: self.plan_cell.clone(),
+            replicas: self.replicas.clone(),
         }
     }
 
+    /// Partition-cell granularity of the table.
     pub fn cells(&self) -> usize {
         self.cells
     }
 
+    /// Nodes covered by the node→cell table.
     pub fn num_nodes(&self) -> usize {
         self.node_cell.len()
     }
 
+    /// Cached plans covered by the plan→cell table.
     pub fn num_plans(&self) -> usize {
         self.plan_cell.len()
+    }
+
+    /// Point hot plan `pid` at a replica `cell` (cooperative serving,
+    /// DESIGN.md §15). Dispatch then picks home vs replica by
+    /// instantaneous queue depth; the replica shard faults the plan
+    /// through the ordinary `PlanResidency` path if store-backed.
+    pub fn set_replica(&mut self, pid: u32, cell: u32) {
+        self.replicas.insert(pid, cell);
+    }
+
+    /// Drop every replica route (called before each re-rank of the
+    /// hot set).
+    pub fn clear_replicas(&mut self) {
+        self.replicas.clear();
+    }
+
+    /// Replica routes currently installed.
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Iterate the installed replica routes as (plan, cell).
+    pub fn replicas(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.replicas.iter().map(|(&p, &c)| (p, c))
+    }
+
+    /// Fold plan `pid`'s replica cell (if any) onto `shards` workers.
+    pub fn replica_shard_of_plan(
+        &self,
+        pid: u32,
+        shards: usize,
+    ) -> Option<usize> {
+        self.replicas
+            .get(&pid)
+            .map(|&c| c as usize % shards.max(1))
     }
 
     /// Fold plan `pid`'s home cell onto `shards` workers.
@@ -298,8 +345,11 @@ pub struct ColdPlan {
     pub node: u32,
     /// Plan node list (global ids, query node first).
     pub nodes: Vec<u32>,
+    /// Induced-subgraph edge sources (local ids).
     pub edge_src: Vec<u32>,
+    /// Induced-subgraph edge destinations (local ids).
     pub edge_dst: Vec<u32>,
+    /// Per-edge normalized weights, parallel to the endpoint arrays.
     pub weights: Vec<f32>,
 }
 
@@ -345,7 +395,9 @@ pub fn synthesize_cold(
 /// plan the shard synthesizes (once per epoch) and memoizes locally.
 #[derive(Debug, Clone, Copy)]
 pub enum Work {
+    /// Execute precomputed plan `pid` from the snapshot (or store).
     Cached(u32),
+    /// Synthesize-and-execute a cold plan rooted at this query node.
     Cold(u32),
 }
 
@@ -356,38 +408,50 @@ pub struct WorkItem {
     /// Queue-assigned group id (trace correlation + in-flight
     /// accounting on the control side).
     pub gid: u64,
+    /// Router key the group coalesced under (memo key on completion).
     pub key: PlanKey,
     /// Freshness epoch of the group's plan (stamps the memo insert).
     pub epoch: u64,
     /// The snapshot this group executes against.
     pub state: Arc<ServeState>,
+    /// What to execute: a cached plan id or a cold root node.
     pub work: Work,
+    /// The coalesced rider queries answered by this execution.
     pub queries: Vec<QueryTicket>,
 }
 
 /// Per-query outcome of one execution.
 #[derive(Debug, Clone, Copy)]
 pub struct QueryOutcome {
+    /// Caller-assigned query id.
     pub id: u64,
+    /// The queried output node.
     pub node: u32,
+    /// Predicted class (argmax of the node's logits).
     pub pred: u16,
+    /// Whether the prediction matches the dataset label.
     pub correct: bool,
 }
 
 /// One executed group's results.
 #[derive(Debug)]
 pub struct ShardResult {
+    /// Shard that executed the group (after any steal/replica move).
     pub shard_id: usize,
     /// Group id of the [`WorkItem`] this answers.
     pub gid: u64,
+    /// Router key of the answered group (results-memo key).
     pub key: PlanKey,
     /// Plan epoch the logits were computed at (memo freshness stamp).
     pub epoch: u64,
+    /// One outcome per rider query of the group.
     pub outcomes: Vec<QueryOutcome>,
     /// Logits of the plan's output nodes, row-major
     /// `[num_outputs * classes]` — feeds the results memo.
     pub out_logits: Vec<f32>,
+    /// Output rows in `out_logits`.
     pub num_outputs: usize,
+    /// Total nodes (outputs + auxiliaries) in the executed batch.
     pub batch_nodes: usize,
     /// Seconds spent in the forward pass for this group.
     pub exec_s: f64,
@@ -396,6 +460,7 @@ pub struct ShardResult {
 /// Final per-shard accounting, sent once when the shard shuts down.
 #[derive(Debug, Clone, Copy)]
 pub struct ShardDone {
+    /// The reporting shard.
     pub shard_id: usize,
     /// Seconds the execute side stalled waiting on materialization.
     pub wait_s: f64,
@@ -403,19 +468,27 @@ pub struct ShardDone {
     pub consume_s: f64,
     /// Prefetch-ring drains performed.
     pub drains: u64,
+    /// Bytes held by the shard's batch arena at shutdown.
     pub arena_bytes: usize,
+    /// Dense-buffer allocations the arena performed over its lifetime.
     pub arena_allocations: usize,
     /// Plan-store faults (blob reads) this shard performed; 0 unless
     /// the deployment is store-backed.
     pub store_faults: u64,
     /// Payload bytes resident in this shard's plan LRU at shutdown.
     pub resident_bytes: u64,
+    /// Feature bytes this shard did NOT re-materialize because a
+    /// co-drained group already filled the same node's row (cooperative
+    /// fetch sharing, DESIGN.md §15). 0 outside cooperative mode.
+    pub shared_row_bytes: u64,
 }
 
 /// Everything flowing back from shards to the event loop.
 #[derive(Debug)]
 pub enum ShardMsg {
+    /// One executed group's answers.
     Result(ShardResult),
+    /// Final accounting, sent once as the worker exits.
     Done(ShardDone),
 }
 
@@ -426,12 +499,14 @@ pub enum ShardMsg {
 /// it).
 #[derive(Debug, Clone, Copy)]
 pub struct ShardCtx {
+    /// This worker's shard index.
     pub shard_id: usize,
     /// Dataset feature width (arena pool key; stable across epochs).
     pub feat_dim: usize,
     /// Dense-buffer bucket (n_pad) every plan must fit — also the
     /// node cap for synthesized cold plans.
     pub bucket: usize,
+    /// Prefetch-ring depth (dense buffers in flight per drain).
     pub ring_depth: usize,
     /// Top-k PPR budget for cold-plan synthesis.
     pub cold_aux: usize,
@@ -443,6 +518,10 @@ pub struct ShardCtx {
     /// snapshot is store-backed (lazy). 0 means "minimum": the LRU
     /// still keeps one plan so anything can execute.
     pub store_budget: usize,
+    /// Cooperative serving (DESIGN.md §15): enables cross-query fetch
+    /// sharing — feature rows of nodes appearing in several co-drained
+    /// groups are materialized once and copied into the other fills.
+    pub cooperative: bool,
 }
 
 /// Features-only fill for the CPU executors. The sparse forward reads
@@ -468,6 +547,52 @@ fn fill_features(
     }
     buf.num_real = n;
     buf.num_outputs = num_outputs;
+}
+
+/// Fetch-sharing fill (cooperative mode, DESIGN.md §15): rows already
+/// materialized by the drain's shared-row pass are copied instead of
+/// re-read. Bit-identical to [`fill_features`] — a feature row is a
+/// pure function of (snapshot, node), and `shared` is keyed by the
+/// snapshot epoch, so groups pinned to different epochs never share.
+fn fill_features_shared(
+    ds: &Dataset,
+    nodes: &[u32],
+    num_outputs: usize,
+    buf: &mut DenseBatch,
+    shared: &HashMap<(u64, u32), Vec<f32>>,
+    epoch: u64,
+) {
+    let n = nodes.len();
+    assert!(
+        n <= buf.n_pad,
+        "batch of {n} nodes exceeds bucket {}",
+        buf.n_pad
+    );
+    for (i, &u) in nodes.iter().enumerate() {
+        let dst = &mut buf.x[i * buf.feat..(i + 1) * buf.feat];
+        if let Some(row) = shared.get(&(epoch, u)) {
+            dst.copy_from_slice(row);
+        } else {
+            ds.node_features_into(u, dst);
+        }
+    }
+    buf.num_real = n;
+    buf.num_outputs = num_outputs;
+}
+
+/// The node list a drained item will materialize — mirrors the fill
+/// closure's source selection (faulted payload / CoW cache / cold
+/// memo) so the shared-row pass counts exactly what the fills read.
+fn item_nodes<'a>(
+    item: &'a WorkItem,
+    resolved: Option<&'a Arc<PlanPayload>>,
+    cold_plans: &'a HashMap<(u32, u64), ColdPlan>,
+) -> &'a [u32] {
+    match &item.work {
+        Work::Cached(_) if resolved.is_some() => &resolved.unwrap().nodes,
+        Work::Cached(pid) => item.state.cache.batch_nodes(*pid as usize),
+        Work::Cold(node) => &cold_plans[&(*node, item.epoch)].nodes,
+    }
 }
 
 fn execute_one(
@@ -596,6 +721,7 @@ pub fn shard_worker(
     let mut wait_s = 0.0;
     let mut consume_s = 0.0;
     let mut drains = 0u64;
+    let mut shared_row_bytes = 0u64;
     loop {
         let first = match rx.recv() {
             Ok(w) => w,
@@ -663,6 +789,34 @@ pub fn shard_worker(
                 ExecScratch::for_meta(&st.meta, &st.model, ctx.bucket, 4 * ctx.bucket);
             scratch_sized = true;
         }
+        // cooperative fetch sharing (DESIGN.md §15): count node
+        // occurrences across the co-drained groups; any row needed by
+        // ≥2 groups of the same snapshot epoch is materialized once
+        // here and copied by their fills (features are a pure function
+        // of (snapshot, node), so sharing is bit-identical)
+        let mut shared: HashMap<(u64, u32), Vec<f32>> = HashMap::new();
+        if ctx.cooperative && items.len() >= 2 {
+            let feat = ctx.feat_dim;
+            let mut seen: HashMap<(u64, u32), u32> = HashMap::new();
+            let mut ds_of: HashMap<u64, &Dataset> = HashMap::new();
+            for (i, item) in items.iter().enumerate() {
+                ds_of
+                    .entry(item.state.epoch)
+                    .or_insert_with(|| item.state.ds.as_ref());
+                for &u in item_nodes(item, resolved[i].as_ref(), &cold_plans) {
+                    *seen.entry((item.state.epoch, u)).or_insert(0) += 1;
+                }
+            }
+            for (&(ep, u), &c) in &seen {
+                if c >= 2 {
+                    let mut row = vec![0.0f32; feat];
+                    ds_of[&ep].node_features_into(u, &mut row);
+                    shared.insert((ep, u), row);
+                    shared_row_bytes += (c as u64 - 1) * (feat as u64) * 4;
+                }
+            }
+        }
+        let shared_ref = &shared;
         let order: Vec<usize> = (0..items.len()).collect();
         let depth = ctx.ring_depth.max(1).min(items.len());
         let ring = arena.acquire_many(ctx.bucket, depth);
@@ -680,24 +834,33 @@ pub fn shard_worker(
                         t.enter(Stage::Fill, NO_QUERY, item.gid, sh);
                     }
                 }
-                match &item.work {
+                let (nodes, num_outputs): (&[u32], usize) = match &item.work {
                     Work::Cached(_) if resolved_ref[i].is_some() => {
                         let p = resolved_ref[i].as_ref().unwrap();
-                        fill_features(&item.state.ds, &p.nodes, p.num_outputs, buf)
+                        (&p.nodes, p.num_outputs)
                     }
                     Work::Cached(pid) => {
                         let p = *pid as usize;
-                        fill_features(
-                            &item.state.ds,
+                        (
                             item.state.cache.batch_nodes(p),
                             item.state.cache.num_outputs(p),
-                            buf,
                         )
                     }
                     Work::Cold(node) => {
-                        let cp = &cold_ref[&(*node, item.epoch)];
-                        fill_features(&item.state.ds, &cp.nodes, 1, buf)
+                        (&cold_ref[&(*node, item.epoch)].nodes, 1)
                     }
+                };
+                if shared_ref.is_empty() {
+                    fill_features(&item.state.ds, nodes, num_outputs, buf);
+                } else {
+                    fill_features_shared(
+                        &item.state.ds,
+                        nodes,
+                        num_outputs,
+                        buf,
+                        shared_ref,
+                        item.state.epoch,
+                    );
                 }
                 if traced {
                     if let Ok(mut t) = fill_tb_ref.lock() {
@@ -751,6 +914,7 @@ pub fn shard_worker(
             .as_ref()
             .map(|r| r.resident_bytes() as u64)
             .unwrap_or(0),
+        shared_row_bytes,
     }));
 }
 
@@ -866,6 +1030,88 @@ mod tests {
     }
 
     #[test]
+    fn replica_routes_fold_like_cells_and_clear() {
+        let (ds, cache) = setup();
+        let mut rng = Rng::new(4);
+        let mut p = Placement::build(&ds, &cache, PLACEMENT_CELLS, &mut rng);
+        assert_eq!(p.num_replicas(), 0);
+        assert_eq!(p.replica_shard_of_plan(0, 2), None);
+        p.set_replica(0, 5);
+        assert_eq!(p.replica_shard_of_plan(0, 2), Some(1));
+        assert_eq!(p.replica_shard_of_plan(0, 4), Some(1));
+        assert_eq!(p.num_replicas(), 1);
+        assert_eq!(p.replicas().collect::<Vec<_>>(), vec![(0, 5)]);
+        // cloning (the epoch-swap path) carries routes; clearing drops
+        // them without touching the original
+        let mut q = p.clone();
+        assert_eq!(q.num_replicas(), 1);
+        q.clear_replicas();
+        assert_eq!(q.replica_shard_of_plan(0, 2), None);
+        assert_eq!(p.num_replicas(), 1);
+    }
+
+    #[test]
+    fn cooperative_fill_shares_rows_and_preserves_logits() {
+        use std::sync::mpsc;
+        let (ds, cache) = setup();
+        let cfg = ServeConfig::default();
+        let (cell, meta, _model) =
+            build_initial_state(Arc::new(ds), cache, &cfg, None);
+        let state = cell.load();
+        // two groups over the same plan in one drain: every row of the
+        // second fill can be shared
+        let run = |cooperative: bool| -> (Vec<Vec<f32>>, u64) {
+            let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+            let (res_tx, res_rx) = mpsc::channel::<ShardMsg>();
+            for gid in 0..2u64 {
+                let node = state.cache.output_nodes(0)[0];
+                work_tx
+                    .send(WorkItem {
+                        gid,
+                        key: PlanKey::Cached(0),
+                        epoch: 0,
+                        state: state.clone(),
+                        work: Work::Cached(0),
+                        queries: vec![QueryTicket {
+                            id: gid,
+                            node,
+                            pos: 0,
+                        }],
+                    })
+                    .unwrap();
+            }
+            // close the channel first so the worker drains both items
+            // in a single ring run and then exits
+            drop(work_tx);
+            let ctx = ShardCtx {
+                shard_id: 0,
+                feat_dim: state.ds.feat_dim,
+                bucket: meta.n_pad,
+                ring_depth: 2,
+                cold_aux: 8,
+                executor: ExecutorKind::Blocked,
+                store_budget: 0,
+                cooperative,
+            };
+            shard_worker(ctx, work_rx, res_tx, Tracer::disabled());
+            let mut logits = Vec::new();
+            let mut shared = 0u64;
+            for msg in res_rx.iter() {
+                match msg {
+                    ShardMsg::Result(r) => logits.push(r.out_logits),
+                    ShardMsg::Done(d) => shared = d.shared_row_bytes,
+                }
+            }
+            (logits, shared)
+        };
+        let (base, s0) = run(false);
+        let (coop, s1) = run(true);
+        assert_eq!(s0, 0, "non-cooperative drains never share");
+        assert!(s1 > 0, "identical co-drained groups must share rows");
+        assert_eq!(base, coop, "fetch sharing is bit-identical");
+    }
+
+    #[test]
     fn worker_executes_groups_and_reports_done() {
         use std::sync::mpsc;
         let (ds, cache) = setup();
@@ -885,6 +1131,7 @@ mod tests {
                 cold_aux: 8,
                 executor: ExecutorKind::Blocked,
                 store_budget: 0,
+                cooperative: false,
             };
             scope.spawn(move || {
                 shard_worker(ctx, work_rx, res_tx, Tracer::disabled())

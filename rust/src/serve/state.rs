@@ -47,6 +47,7 @@ pub struct SwapCell<T> {
 }
 
 impl<T> SwapCell<T> {
+    /// Cell initially publishing `value`.
     pub fn new(value: Arc<T>) -> SwapCell<T> {
         SwapCell {
             slot: Mutex::new(value),

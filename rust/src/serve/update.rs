@@ -89,14 +89,23 @@ impl Default for UpdateConfig {
 /// What one applied delta did across the whole serve path.
 #[derive(Debug, Clone, Default)]
 pub struct UpdateReport {
+    /// Epoch the delta published as.
     pub epoch: u64,
+    /// Existing nodes the delta touched (edges or features).
     pub touched_nodes: usize,
+    /// Brand-new nodes the delta introduced.
     pub added_nodes: usize,
+    /// Feature rows overwritten in place.
     pub feature_updates: usize,
+    /// PPR roots re-solved by the incremental refresh.
     pub roots_refreshed: usize,
+    /// Plans in the snapshot after the delta.
     pub plans_total: usize,
+    /// Plans rebuilt from scratch (influence set drifted too far).
     pub plans_rebuilt: usize,
+    /// Plans patched in place (drift within tolerance).
     pub plans_patched: usize,
+    /// Worst per-root L1 drift the refresh observed.
     pub max_root_l1: f32,
     /// Plan buckets whose payload was re-packed into the new snapshot
     /// (0 when the delta was feature-only: epochs move, payloads are
@@ -120,10 +129,12 @@ pub struct UpdateReport {
 }
 
 impl UpdateReport {
+    /// Plans whose epoch moved (rebuilt or patched).
     pub fn stale_plans(&self) -> usize {
         self.plans_rebuilt + self.plans_patched
     }
 
+    /// Fraction of the plan set rebuilt from scratch.
     pub fn rebuilt_fraction(&self) -> f64 {
         if self.plans_total == 0 {
             0.0
@@ -377,7 +388,9 @@ pub fn run_applier(
 /// (mid-traffic) differ only in *when* `apply` runs relative to
 /// queries.
 pub struct DynamicServeSession {
+    /// The snapshot builder segments feed deltas through.
     pub applier: UpdateApplier,
+    /// The deployment handle segments serve against.
     pub setup: ServeSetup,
     /// Session-lifetime results memo (shared across segments).
     pub memo: ResultsCache,

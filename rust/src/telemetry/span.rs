@@ -67,6 +67,9 @@ pub enum Stage {
     QueueWait,
     /// Group flush (instant per group; `detail` = group size).
     Coalesce,
+    /// Cooperative dispatch moved a backlogged group to an idle shard
+    /// (instant; `shard` = thief, `detail` = victim shard).
+    Steal,
     /// Cold-plan synthesis on the home shard (span per group).
     ColdSynth,
     /// Feature materialization into the ring buffer (span per group).
@@ -97,6 +100,7 @@ impl Stage {
             Stage::Routing => "routing",
             Stage::QueueWait => "queue_wait",
             Stage::Coalesce => "coalesce",
+            Stage::Steal => "steal",
             Stage::ColdSynth => "cold_synth",
             Stage::Fill => "fill",
             Stage::Forward => "forward",
@@ -115,6 +119,7 @@ impl Stage {
             "routing" => Stage::Routing,
             "queue_wait" => Stage::QueueWait,
             "coalesce" => Stage::Coalesce,
+            "steal" => Stage::Steal,
             "cold_synth" => Stage::ColdSynth,
             "fill" => Stage::Fill,
             "forward" => Stage::Forward,
@@ -268,6 +273,7 @@ mod tests {
             Stage::Routing,
             Stage::QueueWait,
             Stage::Coalesce,
+            Stage::Steal,
             Stage::ColdSynth,
             Stage::Fill,
             Stage::Forward,

@@ -372,6 +372,7 @@ pub fn render_tree(q: &QueryTree) -> String {
                 Some(if n.detail == 1 { "cold" } else { "warm" }.to_string())
             }
             Stage::Coalesce => Some(format!("{} queries", n.detail)),
+            Stage::Steal => Some(format!("stolen from shard {}", n.detail)),
             Stage::Memo => Some(format!("{} B", n.detail)),
             Stage::Complete => Some(format!("latency {}µs", n.detail)),
             _ => None,

@@ -13,7 +13,12 @@
 # capacity, uniform + zipf) introduced with the admission-control
 # subsystem, plus the per-executor serve pair (`executor_p99:
 # [{executor, p99_ms, qps}, ...]` — reference vs blocked forward on a
-# pinned load). For the "micro_pipeline" bench it includes the
+# pinned load), and the shard-balance-under-skew series (`balance:
+# [{skew, shards, cooperative, qps, p99_ms, uniform_p99_ms,
+# p99_vs_uniform, shard_balance, steals, replica_dispatches,
+# shared_row_bytes}, ...]` — zipf 1.2 over 1/2/4 shards, cooperative
+# serving off vs on) introduced with cooperative cross-shard serving
+# (DESIGN.md §15). For the "micro_pipeline" bench it includes the
 # forward-throughput series (`forward: [{executor, batches_per_s,
 # speedup_vs_reference}, ...]` — the blocked backend's ≥3x gate over
 # the scalar reference), both introduced with the pluggable Executor
