@@ -227,6 +227,64 @@ coop_hash=$(printf '%s\n' "$coop_out" | grep -o 'logit_hash=0x[0-9a-f]*')
     exit 1
 }
 
+echo "== native training parity smoke (pinned seed, reference vs blocked) =="
+# Same tiny SBM, same seed, 3 epochs through both native sparse
+# backends (DESIGN.md §16). They run identical math over the same CSR —
+# only f32 summation order differs — so the per-epoch train-loss curves
+# must agree within 0.02 and the final val accuracy within 0.015.
+ref_train=$(cargo run --release --bin ibmb -- train --dataset synth-arxiv \
+    --scale 0.05 --epochs 3 --seed 11 --hidden 32 --layers 2 \
+    --executor reference)
+blk_train=$(cargo run --release --bin ibmb -- train --dataset synth-arxiv \
+    --scale 0.05 --epochs 3 --seed 11 --hidden 32 --layers 2 \
+    --executor blocked)
+printf '%s\n' "$blk_train"
+printf '%s\n' "$ref_train" | grep -q 'executor=reference' || {
+    echo "training smoke FAILED: reference run did not complete" >&2
+    exit 1
+}
+printf '%s\n' "$blk_train" | grep -q 'executor=blocked' || {
+    echo "training smoke FAILED: blocked run did not complete" >&2
+    exit 1
+}
+paste <(printf '%s\n' "$ref_train" | grep -o 'train_loss=[0-9.]*') \
+      <(printf '%s\n' "$blk_train" | grep -o 'train_loss=[0-9.]*') \
+    | awk -F'[=\t ]+' '
+        { d = $2 - $4; if (d < 0) d = -d;
+          if (d > 0.02) { bad = 1;
+              printf "epoch %d: train_loss %s vs %s\n", NR - 1, $2, $4 } }
+        END { exit bad }' || {
+    echo "training smoke FAILED: loss curves diverged between backends" >&2
+    exit 1
+}
+ref_acc=$(printf '%s\n' "$ref_train" | grep -o 'val_acc=[0-9.]*' | tail -n1)
+blk_acc=$(printf '%s\n' "$blk_train" | grep -o 'val_acc=[0-9.]*' | tail -n1)
+awk -v a="${ref_acc#val_acc=}" -v b="${blk_acc#val_acc=}" \
+    'BEGIN { d = a - b; if (d < 0) d = -d; exit d > 0.015 }' || {
+    echo "training smoke FAILED: final val_acc '$ref_acc' vs '$blk_acc'" >&2
+    exit 1
+}
+
+echo "== training trace smoke (--trace materialize/train_step instants) =="
+train_trace=$(mktemp /tmp/ibmb_train_trace.XXXXXX.jsonl)
+trace_out=$(cargo run --release --bin ibmb -- train --dataset synth-arxiv \
+    --scale 0.05 --epochs 2 --seed 11 --hidden 32 --layers 2 \
+    --executor blocked --trace "$train_trace")
+printf '%s\n' "$trace_out" | grep -Eq 'trace: wrote [1-9][0-9]* events' || {
+    echo "training trace smoke FAILED: no events written" >&2
+    exit 1
+}
+report_out=$(cargo run --release --bin ibmb -- trace-report "$train_trace")
+printf '%s\n' "$report_out" | grep -q 'queries traced' || {
+    echo "training trace smoke FAILED: trace-report could not parse" >&2
+    exit 1
+}
+printf '%s\n' "$report_out" | grep -q 'train_step' || {
+    echo "training trace smoke FAILED: no train_step stage in report" >&2
+    exit 1
+}
+rm -f "$train_trace"
+
 echo "== bench JSON validation (BENCH_*.json, when present) =="
 ./scripts/check_bench_json.sh
 

@@ -1,0 +1,267 @@
+//! Training-backend throughput + convergence parity (DESIGN.md §16):
+//! the same pinned-seed epoch schedule through three step
+//! implementations —
+//!
+//! - `runtime`: the dense padded path the AOT artifacts execute
+//!   (host-emulated exactly: bucket-padded `n_pad × n_pad` adjacency,
+//!   dense SpMM, per-step gradient materialization),
+//! - `reference`: the native sparse scalar backend,
+//! - `blocked`: the native sparse `[f32; 8]`-lane backend,
+//!
+//! and writes `BENCH_training.json`. Gates (ci.sh greps the GATE
+//! lines): blocked ≥ 3x steps/s over the runtime path, and final val
+//! accuracy within 0.01 of it (same math, different summation order).
+
+use std::collections::BTreeMap;
+
+use ibmb::batching::{BatchCache, BatchGenerator, DenseBatch, NodeWiseIbmb};
+use ibmb::bench_harness::Table;
+use ibmb::datasets::{sbm, spec_by_name, Dataset};
+use ibmb::exec::train::train_artifact;
+use ibmb::exec::{ExecScratch, ExecutorKind, PlanView, TrainBatch, TrainExecutorKind, TrainScratch};
+use ibmb::inference::infer_with_executor;
+use ibmb::runtime::host::host_train_step;
+use ibmb::runtime::{ArtifactMeta, ModelState};
+use ibmb::serve::reference_artifact;
+use ibmb::util::json::{to_string, Json};
+use ibmb::util::{Rng, Timer};
+
+const HIDDEN: usize = 32;
+const LAYERS: usize = 2;
+const HEADS: usize = 2;
+const DROPOUT: f64 = 0.3;
+const WD: f64 = 1e-4;
+const LR: f32 = 1e-2;
+
+struct ArmResult {
+    executor: &'static str,
+    steps_per_s: f64,
+    epoch_s: f64,
+    final_val_acc: f64,
+}
+
+/// Per-step dropout/loss seed — the formula `training::train_native`
+/// uses, so bench arms and CLI runs draw identical masks.
+fn step_seed(seed: u64, epoch: usize, step: usize) -> i32 {
+    (seed as i32)
+        .wrapping_mul(31)
+        .wrapping_add((epoch * 10_007 + step) as i32)
+}
+
+/// Validation accuracy through the shared reference forward — the same
+/// evaluator for every arm, so the parity gate sees only training
+/// differences.
+fn val_acc(
+    meta_val: &ArtifactMeta,
+    ds: &Dataset,
+    state: &ModelState,
+    val_cache: &BatchCache,
+) -> anyhow::Result<f64> {
+    let exec = ExecutorKind::Reference.build()?;
+    let mut scratch = ExecScratch::new();
+    let rep =
+        infer_with_executor(exec.as_ref(), meta_val, ds, state, val_cache, &mut scratch)?;
+    Ok(rep.accuracy)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = ibmb::cli::Args::parse(
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    );
+    let scale = args.get_f64("scale", 0.05);
+    let seed = args.get_u64("seed", 11);
+    let epochs = args.get_usize("epochs", 3);
+    let model = args.get_or("model", "gcn").to_string();
+
+    let spec = spec_by_name("synth-arxiv").unwrap().scaled(scale);
+    let ds = sbm::generate(&spec, seed);
+    println!(
+        "dataset: {} nodes, {} edges, {} train / {} val",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        ds.splits.train.len(),
+        ds.splits.val.len()
+    );
+
+    // one plan set for every arm — identical batches, identical order
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: 4,
+        max_outputs_per_batch: 64,
+        node_budget: 512,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed ^ 0xE9E1);
+    let cache = BatchCache::build(&gen.plan(&ds, &ds.splits.train, &mut rng));
+    let val_cache = BatchCache::build(&gen.plan(&ds, &ds.splits.val, &mut rng));
+    anyhow::ensure!(!cache.is_empty() && !val_cache.is_empty());
+    let max_nodes = cache.max_batch_nodes();
+    // the AOT path pads every batch to its power-of-two bucket
+    let bucket = max_nodes.next_power_of_two();
+    println!(
+        "{} train batches (max {} nodes, runtime bucket {}), {} val batches",
+        cache.len(),
+        max_nodes,
+        bucket,
+        val_cache.len()
+    );
+
+    let meta_native = train_artifact(
+        &model, ds.feat_dim, ds.num_classes, HIDDEN, LAYERS, HEADS, DROPOUT,
+        WD, max_nodes,
+    );
+    let meta_runtime = train_artifact(
+        &model, ds.feat_dim, ds.num_classes, HIDDEN, LAYERS, HEADS, DROPOUT,
+        WD, bucket,
+    );
+    let meta_val = reference_artifact(
+        &model,
+        ds.feat_dim,
+        ds.num_classes,
+        HIDDEN,
+        LAYERS,
+        HEADS,
+        val_cache.max_batch_nodes(),
+    );
+    let steps_total = epochs * cache.len();
+    let mut table =
+        Table::new(&["executor", "steps/s", "epoch (s)", "final val acc"]);
+    let mut results: Vec<ArmResult> = Vec::new();
+
+    // ---- arm 1: the dense padded runtime path (host-emulated) ----
+    {
+        let mut state = ModelState::init(&meta_runtime, seed);
+        let mut dense = DenseBatch::zeros(bucket, ds.feat_dim);
+        cache.materialize_into(&ds, 0, &mut dense); // warm the buffer
+        let t = Timer::start();
+        for epoch in 0..epochs {
+            for b in 0..cache.len() {
+                cache.materialize_into(&ds, b, &mut dense);
+                host_train_step(
+                    &meta_runtime,
+                    &mut state,
+                    &dense,
+                    LR,
+                    step_seed(seed, epoch, b),
+                )?;
+            }
+        }
+        let elapsed = t.elapsed_s();
+        let acc = val_acc(&meta_val, &ds, &state, &val_cache)?;
+        results.push(ArmResult {
+            executor: "runtime",
+            steps_per_s: steps_total as f64 / elapsed,
+            epoch_s: elapsed / epochs as f64,
+            final_val_acc: acc,
+        });
+    }
+
+    // ---- arms 2+3: native sparse backends ----
+    for kind in [TrainExecutorKind::Reference, TrainExecutorKind::Blocked] {
+        let exec = kind.build()?;
+        let mut state = ModelState::init(&meta_native, seed);
+        let mut scratch = TrainScratch::new();
+        let mut x: Vec<f32> = Vec::new();
+        let mut labels: Vec<i32> = Vec::new();
+        let t = Timer::start();
+        for epoch in 0..epochs {
+            for b in 0..cache.len() {
+                let n = cache.gather_features_into(&ds, b, &mut x);
+                cache.gather_labels_into(&ds, b, &mut labels);
+                let batch = TrainBatch {
+                    view: PlanView {
+                        n,
+                        edge_src: cache.edge_src_of(b),
+                        edge_dst: cache.edge_dst_of(b),
+                        weights: cache.edge_weights_of(b),
+                    },
+                    x: &x[..n * ds.feat_dim],
+                    labels: &labels[..n],
+                    num_outputs: cache.num_outputs(b),
+                };
+                exec.train_step(
+                    &meta_native,
+                    &mut state,
+                    &batch,
+                    LR,
+                    step_seed(seed, epoch, b),
+                    &mut scratch,
+                );
+            }
+        }
+        let elapsed = t.elapsed_s();
+        let acc = val_acc(&meta_val, &ds, &state, &val_cache)?;
+        results.push(ArmResult {
+            executor: exec.name(),
+            steps_per_s: steps_total as f64 / elapsed,
+            epoch_s: elapsed / epochs as f64,
+            final_val_acc: acc,
+        });
+    }
+
+    let runtime_sps = results[0].steps_per_s;
+    let reference_sps = results[1].steps_per_s;
+    for r in &results {
+        table.row(&[
+            r.executor.into(),
+            format!("{:.1}", r.steps_per_s),
+            format!("{:.3}", r.epoch_s),
+            format!("{:.3}", r.final_val_acc),
+        ]);
+    }
+    table.print("training — fused step backends");
+
+    let blocked = &results[2];
+    let speedup = blocked.steps_per_s / runtime_sps;
+    let acc_delta = (blocked.final_val_acc - results[0].final_val_acc).abs();
+    println!(
+        "GATE training_speedup: blocked {speedup:.2}x vs runtime \
+         (target >= 3.0) -> {}",
+        if speedup >= 3.0 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "GATE training_parity: |val_acc(blocked) - val_acc(runtime)| = \
+         {acc_delta:.4} (target <= 0.01) -> {}",
+        if acc_delta <= 0.01 { "PASS" } else { "FAIL" }
+    );
+
+    let json = Json::Obj(BTreeMap::from([
+        ("bench".into(), Json::Str("training".into())),
+        ("dataset".into(), Json::Str(ds.name.clone())),
+        ("model".into(), Json::Str(model.clone())),
+        ("epochs".into(), Json::Num(epochs as f64)),
+        ("batches".into(), Json::Num(cache.len() as f64)),
+        ("bucket".into(), Json::Num(bucket as f64)),
+        ("seed".into(), Json::Num(seed as f64)),
+        (
+            "runs".into(),
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(BTreeMap::from([
+                            ("executor".into(), Json::Str(r.executor.into())),
+                            ("steps_per_s".into(), Json::Num(r.steps_per_s)),
+                            ("epoch_s".into(), Json::Num(r.epoch_s)),
+                            (
+                                "speedup_vs_reference".into(),
+                                Json::Num(r.steps_per_s / reference_sps),
+                            ),
+                            (
+                                "speedup_vs_runtime".into(),
+                                Json::Num(r.steps_per_s / runtime_sps),
+                            ),
+                            (
+                                "final_val_acc".into(),
+                                Json::Num(r.final_val_acc),
+                            ),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+    let out_path = args.get_or("out", "BENCH_training.json").to_string();
+    std::fs::write(&out_path, to_string(&json))?;
+    println!("wrote {out_path}");
+    Ok(())
+}

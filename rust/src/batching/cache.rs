@@ -101,6 +101,41 @@ impl BatchCache {
         &self.weights[self.edge_off[i]..self.edge_off[i + 1]]
     }
 
+    /// Gather batch `i`'s dense features into `x` (resized to
+    /// `n · feat_dim`, batch-local row order), returning `n`. The
+    /// sparse-path fill: no adjacency densification, no padding —
+    /// shared by the native trainer's ring worker and
+    /// [`crate::inference::infer_with_executor`]. `x` ratchets to the
+    /// high-water batch size and is then reused allocation-free.
+    pub fn gather_features_into(
+        &self,
+        ds: &Dataset,
+        i: usize,
+        x: &mut Vec<f32>,
+    ) -> usize {
+        let nodes = self.batch_nodes(i);
+        let n = nodes.len();
+        let f = ds.feat_dim;
+        x.resize(n * f, 0.0);
+        for (j, &u) in nodes.iter().enumerate() {
+            ds.node_features_into(u, &mut x[j * f..(j + 1) * f]);
+        }
+        n
+    }
+
+    /// Gather batch `i`'s labels (batch-local order, `i32` like the
+    /// artifact interchange format) into `labels`.
+    pub fn gather_labels_into(
+        &self,
+        ds: &Dataset,
+        i: usize,
+        labels: &mut Vec<i32>,
+    ) {
+        let nodes = self.batch_nodes(i);
+        labels.clear();
+        labels.extend(nodes.iter().map(|&u| i32::from(ds.labels[u as usize])));
+    }
+
     /// Largest batch node count — picks the artifact bucket.
     pub fn max_batch_nodes(&self) -> usize {
         (0..self.len()).map(|i| self.num_nodes(i)).max().unwrap_or(0)

@@ -25,10 +25,18 @@
 pub mod blocked;
 pub mod pjrt;
 pub mod reference;
+pub mod train;
+pub mod train_blocked;
+pub mod train_reference;
 
 pub use blocked::BlockedCpuExecutor;
 pub use pjrt::PjrtExecutor;
 pub use reference::ReferenceExecutor;
+pub use train::{
+    TrainBatch, TrainExecutor, TrainExecutorKind, TrainScratch,
+};
+pub use train_blocked::BlockedTrainExecutor;
+pub use train_reference::ReferenceTrainExecutor;
 
 use anyhow::Result;
 

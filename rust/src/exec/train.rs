@@ -1,0 +1,847 @@
+//! Training-capable executors: fused forward + backward + softmax-CE +
+//! Adam over the **sparse CSR batch representation** (DESIGN.md §16).
+//!
+//! The runtime/xla path steps through a dense padded `n_pad × n_pad`
+//! adjacency and round-trips params/m/v through device literals every
+//! step. A [`TrainExecutor`] does the same math directly on the plan's
+//! edge list: no padding, no dense adjacency, no state copies — Adam
+//! updates [`ModelState`] in place and all intermediates live on a
+//! grow-never-shrink [`TrainScratch`] (zero steady-state allocations).
+//!
+//! Both native backends share one orchestration ([`forward_backward`]):
+//! a [`TrainKernels`] impl supplies the five dense/sparse primitives
+//! (forward SpMM, transpose-CSR scatter SpMM, forward linear, weight
+//! grad, input grad) while the layernorm/relu/dropout algebra, the
+//! masked softmax-CE head and the Adam sweep are common code. The
+//! scalar reference backend and the `[f32; 8]`-lane blocked backend
+//! therefore differ only in loop blocking — they traverse the same
+//! stable dst-major CSR in the same order, so their results differ only
+//! by lane-partial summation order (≤ a few ulps; the parity contract
+//! against the dense oracle in `runtime/host.rs` is 1e-4).
+//!
+//! GAT is out of scope for the native path (its attention VJP is not
+//! implemented); [`TrainExecutorKind::build`] and the trainer both
+//! direct it to the runtime path.
+
+use anyhow::{bail, Result};
+
+use super::blocked::build_csr;
+use super::PlanView;
+use crate::runtime::{ArtifactMeta, ModelState, StepMetrics};
+
+/// Adam β₁ (matches `python/compile/model.py`).
+pub const ADAM_B1: f32 = 0.9;
+/// Adam β₂.
+pub const ADAM_B2: f32 = 0.999;
+/// Adam ε.
+pub const ADAM_EPS: f32 = 1e-8;
+/// LayerNorm variance epsilon (`python/compile/kernels/layernorm.py`).
+pub const LN_EPS: f32 = 1e-5;
+
+/// One sparse training batch: the plan's edge view plus gathered
+/// features and labels. `x` is row-major `[n, feat]` over the plan's
+/// node order (outputs first); `labels[i]` is the class of node `i`
+/// (only the first `num_outputs` rows enter the loss).
+pub struct TrainBatch<'a> {
+    pub view: PlanView<'a>,
+    pub x: &'a [f32],
+    pub labels: &'a [i32],
+    pub num_outputs: usize,
+}
+
+/// A backend that runs fused optimizer steps on the host.
+pub trait TrainExecutor: Send + Sync {
+    /// Backend name (stable; used in CLI flags and bench JSON).
+    fn name(&self) -> &'static str;
+
+    /// One fused step: forward + backward + weight decay + Adam,
+    /// updating `state` (params, moments, step counter) in place.
+    fn train_step(
+        &self,
+        meta: &ArtifactMeta,
+        state: &mut ModelState,
+        batch: &TrainBatch,
+        lr: f32,
+        seed: i32,
+        scratch: &mut TrainScratch,
+    ) -> StepMetrics;
+
+    /// Forward + backward only, **accumulating** (`+=`) the
+    /// weight-decayed gradients into the caller-owned `grads` buffer
+    /// (gradient-accumulation mode; `grads.len() == meta.param_count`).
+    fn grad_step(
+        &self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        batch: &TrainBatch,
+        seed: i32,
+        grads: &mut [f32],
+        scratch: &mut TrainScratch,
+    ) -> StepMetrics;
+}
+
+/// Which training backend `ibmb train --executor` selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainExecutorKind {
+    /// Scalar native backend (parity baseline for the blocked one).
+    Reference,
+    /// `[f32; 8]`-lane blocked native backend (the fast path).
+    Blocked,
+    /// The AOT artifact path through [`crate::runtime::Runtime`] —
+    /// not buildable here; the trainer routes it to `training::train`.
+    Runtime,
+}
+
+impl TrainExecutorKind {
+    /// Accepted `--executor` values.
+    pub const ALL_NAMES: &'static str = "reference|blocked|runtime";
+
+    pub fn from_name(name: &str) -> Option<TrainExecutorKind> {
+        Some(match name {
+            "reference" => TrainExecutorKind::Reference,
+            "blocked" => TrainExecutorKind::Blocked,
+            "runtime" => TrainExecutorKind::Runtime,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainExecutorKind::Reference => "reference",
+            TrainExecutorKind::Blocked => "blocked",
+            TrainExecutorKind::Runtime => "runtime",
+        }
+    }
+
+    /// Instantiate the native backend.
+    pub fn build(&self) -> Result<Box<dyn TrainExecutor>> {
+        match self {
+            TrainExecutorKind::Reference => {
+                Ok(Box::new(super::train_reference::ReferenceTrainExecutor))
+            }
+            TrainExecutorKind::Blocked => {
+                Ok(Box::new(super::train_blocked::BlockedTrainExecutor))
+            }
+            TrainExecutorKind::Runtime => bail!(
+                "the runtime executor steps through AOT artifacts \
+                 (training::train), not the native path"
+            ),
+        }
+    }
+}
+
+impl Default for TrainExecutorKind {
+    fn default() -> Self {
+        TrainExecutorKind::Blocked
+    }
+}
+
+/// Synthesize a train-kind [`ArtifactMeta`] for the native path — the
+/// same parameter layout the serve shards use, with the training
+/// hyperparameters (dropout, weight decay) filled in. No `.hlo.txt`
+/// backs it; only the layout and hyperparameters are consumed.
+#[allow(clippy::too_many_arguments)]
+pub fn train_artifact(
+    model: &str,
+    feat: usize,
+    classes: usize,
+    hidden: usize,
+    layers: usize,
+    heads: usize,
+    dropout: f64,
+    weight_decay: f64,
+    n_pad: usize,
+) -> ArtifactMeta {
+    let mut meta = crate::serve::reference_artifact(
+        model, feat, classes, hidden, layers, heads, n_pad,
+    );
+    meta.id = format!("native_train_{model}_n{n_pad}");
+    meta.kind = "train".into();
+    meta.dropout = dropout;
+    meta.weight_decay = weight_decay;
+    meta
+}
+
+/// Deterministic counter-based dropout: a splitmix64 finalizer keyed on
+/// `(seed, layer, element)` decides keep/drop per activation, so every
+/// backend — and the dense oracle — draws the *same* mask for the same
+/// step seed without materializing it. Returns the inverted-dropout
+/// scale (`1/keep` or `0`).
+pub fn dropout_scale(seed: i32, layer: u32, elem: usize, rate: f32) -> f32 {
+    if rate <= 0.0 {
+        return 1.0;
+    }
+    let keep = 1.0 - rate;
+    let mut z = (seed as u32 as u64)
+        ^ ((layer as u64) << 32)
+        ^ (elem as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let u = ((z >> 40) as f32) / (1u64 << 24) as f32;
+    if u < keep {
+        1.0 / keep
+    } else {
+        0.0
+    }
+}
+
+fn grow_f32(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+fn grow_u32(v: &mut Vec<u32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0);
+    }
+}
+
+/// Grow-never-shrink workspace for one training stream. All buffers
+/// ratchet up to the epoch's high-water batch shape and are then reused
+/// allocation-free; the forward tape (`aggc`, `z`, `mean`, `rstd`) is
+/// kept per layer because the backward pass re-reads it.
+#[derive(Default)]
+pub struct TrainScratch {
+    // shared CSR of the current batch (dst-major, stable order)
+    csr_off: Vec<u32>,
+    csr_src: Vec<u32>,
+    csr_w: Vec<f32>,
+    // rolling activation + per-layer tape
+    h: Vec<f32>,
+    agg: Vec<f32>,
+    aggc: Vec<Vec<f32>>,
+    z: Vec<Vec<f32>>,
+    mean: Vec<Vec<f32>>,
+    rstd: Vec<Vec<f32>>,
+    // backward rolling buffers
+    dz: Vec<f32>,
+    dh: Vec<f32>,
+    dcat: Vec<f32>,
+    // fused-step gradient buffer (train_step only)
+    grads: Vec<f32>,
+    d_max: usize,
+}
+
+impl TrainScratch {
+    pub fn new() -> TrainScratch {
+        TrainScratch::default()
+    }
+
+    /// Widest layer dimension (from the manifest's bias sizes).
+    fn compute_d_max(meta: &ArtifactMeta) -> usize {
+        let mut d = meta.feat.max(meta.classes);
+        for p in &meta.params {
+            if p.name.ends_with(".b") {
+                d = d.max(p.size);
+            }
+        }
+        d
+    }
+
+    /// Ensure capacity for a batch of `n` nodes and `e` edges.
+    pub fn ensure(&mut self, meta: &ArtifactMeta, n: usize, e: usize) {
+        let d = Self::compute_d_max(meta);
+        self.d_max = self.d_max.max(d);
+        let d = self.d_max;
+        grow_u32(&mut self.csr_off, n + 1);
+        grow_u32(&mut self.csr_src, e);
+        grow_f32(&mut self.csr_w, e);
+        grow_f32(&mut self.h, n * d);
+        grow_f32(&mut self.agg, n * d);
+        grow_f32(&mut self.dz, n * d);
+        grow_f32(&mut self.dh, n * d);
+        grow_f32(&mut self.dcat, n * 2 * d);
+        if self.aggc.len() < meta.layers {
+            self.aggc.resize_with(meta.layers, Vec::new);
+            self.z.resize_with(meta.layers, Vec::new);
+            self.mean.resize_with(meta.layers, Vec::new);
+            self.rstd.resize_with(meta.layers, Vec::new);
+        }
+        for l in 0..meta.layers {
+            grow_f32(&mut self.aggc[l], n * 2 * d);
+            grow_f32(&mut self.z[l], n * d);
+            grow_f32(&mut self.mean[l], n);
+            grow_f32(&mut self.rstd[l], n);
+        }
+    }
+
+    /// Resident bytes (perf accounting).
+    pub fn memory_bytes(&self) -> usize {
+        let nested: usize = self
+            .aggc
+            .iter()
+            .chain(&self.z)
+            .chain(&self.mean)
+            .chain(&self.rstd)
+            .map(|v| v.len() * 4)
+            .sum();
+        (self.csr_off.len()
+            + self.csr_src.len()
+            + self.csr_w.len()
+            + self.h.len()
+            + self.agg.len()
+            + self.dz.len()
+            + self.dh.len()
+            + self.dcat.len()
+            + self.grads.len())
+            * 4
+            + nested
+    }
+}
+
+/// The five shape-blocked primitives a backend supplies. Everything
+/// else in the step (CSR build, layernorm/relu/dropout algebra, the
+/// loss head, weight decay, Adam) is shared scalar code in this module.
+pub(crate) trait TrainKernels {
+    /// `out[d, :] = Σ_{e: dst=d} w_e · h[src_e, :]` (dst-major CSR;
+    /// writes every row exactly once — no zero-fill required).
+    fn spmm(
+        &self,
+        off: &[u32],
+        src: &[u32],
+        w: &[f32],
+        h: &[f32],
+        n: usize,
+        dim: usize,
+        out: &mut [f32],
+    );
+    /// Transpose scatter: `dh[src_e, :] += w_e · dagg[d, :]` for every
+    /// edge, walked dst-major over the same CSR (caller zero-fills or
+    /// pre-loads `dh`).
+    fn spmm_t(
+        &self,
+        off: &[u32],
+        src: &[u32],
+        w: &[f32],
+        dagg: &[f32],
+        n: usize,
+        dim: usize,
+        dh: &mut [f32],
+    );
+    /// `out = x @ w + b` (w row-major `[d_in, d_out]`).
+    fn linear(
+        &self,
+        x: &[f32],
+        n: usize,
+        d_in: usize,
+        w: &[f32],
+        b: &[f32],
+        d_out: usize,
+        out: &mut [f32],
+    );
+    /// `dw[k, j] += Σ_i a[i, k]·dz[i, j]`; `db[j] += Σ_i dz[i, j]`.
+    fn linear_wgrad(
+        &self,
+        a: &[f32],
+        dz: &[f32],
+        n: usize,
+        d_a: usize,
+        d_out: usize,
+        dw: &mut [f32],
+        db: &mut [f32],
+    );
+    /// `da[i, k] = dz[i, :] · w[k, :]` (overwrites `da`).
+    fn linear_igrad(
+        &self,
+        dz: &[f32],
+        w: &[f32],
+        n: usize,
+        d_a: usize,
+        d_out: usize,
+        da: &mut [f32],
+    );
+}
+
+fn tensor<'a>(
+    state: &'a ModelState,
+    meta: &ArtifactMeta,
+    name: &str,
+) -> &'a [f32] {
+    state
+        .tensor(meta, name)
+        .unwrap_or_else(|| panic!("{}: missing param {name}", meta.id))
+}
+
+fn spec(meta: &ArtifactMeta, name: &str) -> (usize, usize) {
+    meta.params
+        .iter()
+        .find(|p| p.name == name)
+        .map(|p| (p.offset, p.size))
+        .unwrap_or_else(|| panic!("{}: missing param {name}", meta.id))
+}
+
+/// Two non-overlapping mutable windows of one flat gradient vector.
+fn disjoint_mut(
+    v: &mut [f32],
+    a: (usize, usize),
+    b: (usize, usize),
+) -> (&mut [f32], &mut [f32]) {
+    if a.0 + a.1 <= b.0 {
+        let (lo, hi) = v.split_at_mut(b.0);
+        (&mut lo[a.0..a.0 + a.1], &mut hi[..b.1])
+    } else {
+        assert!(b.0 + b.1 <= a.0, "overlapping param ranges");
+        let (lo, hi) = v.split_at_mut(a.0);
+        let (bs, asl) = (&mut lo[b.0..b.0 + b.1], &mut hi[..a.1]);
+        (asl, bs)
+    }
+}
+
+/// Per-layer (d_in, d_out) from the manifest layout.
+pub(crate) fn layer_dims(meta: &ArtifactMeta) -> Vec<(usize, usize)> {
+    let mut dims = Vec::with_capacity(meta.layers);
+    let mut d_in = meta.feat;
+    for l in 0..meta.layers {
+        let (_, d_out) = spec(meta, &format!("l{l}.b"));
+        dims.push((d_in, d_out));
+        d_in = d_out;
+    }
+    dims
+}
+
+/// Masked softmax cross-entropy head: loss/accuracy over the first
+/// `num_outputs` rows and `dz = (softmax − onehot) / max(outputs, 1)`
+/// (zero for aux rows). Expressions mirror `model.py` (max-shifted
+/// log-sum-exp, first-max argmax like `jnp.argmax`).
+fn softmax_ce_backward(
+    logits: &[f32],
+    labels: &[i32],
+    n: usize,
+    classes: usize,
+    num_outputs: usize,
+    dz: &mut [f32],
+) -> StepMetrics {
+    let inv = 1.0 / (num_outputs as f32).max(1.0);
+    dz[..n * classes].fill(0.0);
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0.0f32;
+    for i in 0..num_outputs {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse =
+            row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+        let label = labels[i] as usize;
+        loss_sum += lse - row[label];
+        let mut pred = 0usize;
+        let mut best = row[0];
+        for (c, &v) in row.iter().enumerate().skip(1) {
+            if v > best {
+                best = v;
+                pred = c;
+            }
+        }
+        if pred == label {
+            correct += 1.0;
+        }
+        let dr = &mut dz[i * classes..(i + 1) * classes];
+        for (c, d) in dr.iter_mut().enumerate() {
+            let p = (row[c] - lse).exp();
+            *d = (p - f32::from(c == label)) * inv;
+        }
+    }
+    StepMetrics {
+        loss: loss_sum * inv,
+        correct,
+        mask_count: num_outputs as f32,
+    }
+}
+
+/// Fused layernorm → relu → inverted dropout, saving (mean, rstd) for
+/// the backward pass. Summation order matches the blocked forward
+/// (`exec::blocked::layernorm_relu`) and the dense oracle.
+#[allow(clippy::too_many_arguments)]
+fn ln_relu_dropout_fwd(
+    z: &[f32],
+    n: usize,
+    d: usize,
+    g: &[f32],
+    b: &[f32],
+    rate: f32,
+    seed: i32,
+    layer: u32,
+    mean: &mut [f32],
+    rstd: &mut [f32],
+    h: &mut [f32],
+) {
+    for i in 0..n {
+        let zi = &z[i * d..(i + 1) * d];
+        let mu = zi.iter().sum::<f32>() / d as f32;
+        let var =
+            zi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        mean[i] = mu;
+        rstd[i] = rs;
+        let hr = &mut h[i * d..(i + 1) * d];
+        for j in 0..d {
+            let y = (zi[j] - mu) * rs * g[j] + b[j];
+            let mut v = y.max(0.0);
+            if rate > 0.0 {
+                v *= dropout_scale(seed, layer, i * d + j, rate);
+            }
+            hr[j] = v;
+        }
+    }
+}
+
+/// Backward through dropout → relu → layernorm: reads the upstream
+/// grad `dh`, writes the downstream grad `dz_out`, and accumulates
+/// `dγ = Σ g·x̂`, `dβ = Σ g` (relu-gated, strict `y > 0` — grad is 0
+/// at exactly 0, like the python VJP).
+#[allow(clippy::too_many_arguments)]
+fn ln_relu_dropout_bwd(
+    z: &[f32],
+    mean: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    b: &[f32],
+    rate: f32,
+    seed: i32,
+    layer: u32,
+    dh: &[f32],
+    dz_out: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    d: usize,
+) {
+    for i in 0..n {
+        let zi = &z[i * d..(i + 1) * d];
+        let row = &mut dz_out[i * d..(i + 1) * d];
+        let mut gx_mean = 0.0f32;
+        let mut gxxh_mean = 0.0f32;
+        for j in 0..d {
+            let xhat = (zi[j] - mean[i]) * rstd[i];
+            let y = xhat * g[j] + b[j];
+            let mut gr = dh[i * d + j];
+            if rate > 0.0 {
+                gr *= dropout_scale(seed, layer, i * d + j, rate);
+            }
+            if y <= 0.0 {
+                gr = 0.0;
+            }
+            dg[j] += gr * xhat;
+            db[j] += gr;
+            let gx = gr * g[j];
+            gx_mean += gx;
+            gxxh_mean += gx * xhat;
+            row[j] = gx; // stash gx; finished after the row means
+        }
+        gx_mean /= d as f32;
+        gxxh_mean /= d as f32;
+        for j in 0..d {
+            let xhat = (zi[j] - mean[i]) * rstd[i];
+            row[j] = rstd[i] * (row[j] - gx_mean - xhat * gxxh_mean);
+        }
+    }
+}
+
+/// The shared fused step body: CSR build → forward (with tape) →
+/// loss head → reverse sweep → weight decay, accumulating gradients
+/// into `grads`. Panics on GAT metas — callers gate on the model name.
+pub(crate) fn forward_backward<K: TrainKernels>(
+    kern: &K,
+    meta: &ArtifactMeta,
+    state: &ModelState,
+    batch: &TrainBatch,
+    seed: i32,
+    scratch: &mut TrainScratch,
+    grads: &mut [f32],
+) -> StepMetrics {
+    let n = batch.view.n;
+    let e = batch.view.num_edges();
+    let sage = match meta.model.as_str() {
+        "gcn" => false,
+        "sage" => true,
+        other => panic!("native training: unsupported model {other:?}"),
+    };
+    debug_assert_eq!(batch.x.len(), n * meta.feat);
+    debug_assert!(batch.labels.len() >= batch.num_outputs);
+    debug_assert_eq!(grads.len(), meta.param_count);
+    scratch.ensure(meta, n, e);
+    build_csr(
+        &batch.view,
+        &mut scratch.csr_off[..n + 1],
+        &mut scratch.csr_src[..e],
+        &mut scratch.csr_w[..e],
+    );
+    let dims = layer_dims(meta);
+    let rate = meta.dropout as f32;
+
+    // ---- forward, taping linear inputs, pre-LN outputs, (μ, rstd) ----
+    scratch.h[..n * meta.feat].copy_from_slice(batch.x);
+    for (l, &(d_in, d_out)) in dims.iter().enumerate() {
+        let w = tensor(state, meta, &format!("l{l}.w"));
+        let b = tensor(state, meta, &format!("l{l}.b"));
+        let a_dim = if sage { 2 * d_in } else { d_in };
+        if sage {
+            kern.spmm(
+                &scratch.csr_off[..n + 1],
+                &scratch.csr_src[..e],
+                &scratch.csr_w[..e],
+                &scratch.h,
+                n,
+                d_in,
+                &mut scratch.agg[..n * d_in],
+            );
+            let cat = &mut scratch.aggc[l];
+            for i in 0..n {
+                cat[i * a_dim..i * a_dim + d_in]
+                    .copy_from_slice(&scratch.h[i * d_in..(i + 1) * d_in]);
+                cat[i * a_dim + d_in..(i + 1) * a_dim].copy_from_slice(
+                    &scratch.agg[i * d_in..(i + 1) * d_in],
+                );
+            }
+        } else {
+            kern.spmm(
+                &scratch.csr_off[..n + 1],
+                &scratch.csr_src[..e],
+                &scratch.csr_w[..e],
+                &scratch.h,
+                n,
+                d_in,
+                &mut scratch.aggc[l][..n * d_in],
+            );
+        }
+        kern.linear(
+            &scratch.aggc[l][..n * a_dim],
+            n,
+            a_dim,
+            w,
+            b,
+            d_out,
+            &mut scratch.z[l][..n * d_out],
+        );
+        if l + 1 != meta.layers {
+            let g = tensor(state, meta, &format!("l{l}.ln_g"));
+            let bl = tensor(state, meta, &format!("l{l}.ln_b"));
+            ln_relu_dropout_fwd(
+                &scratch.z[l][..n * d_out],
+                n,
+                d_out,
+                g,
+                bl,
+                rate,
+                seed,
+                l as u32,
+                &mut scratch.mean[l][..n],
+                &mut scratch.rstd[l][..n],
+                &mut scratch.h[..n * d_out],
+            );
+        }
+    }
+
+    // ---- loss head ----
+    let classes = meta.classes;
+    let metrics = softmax_ce_backward(
+        &scratch.z[meta.layers - 1][..n * classes],
+        batch.labels,
+        n,
+        classes,
+        batch.num_outputs,
+        &mut scratch.dz,
+    );
+
+    // ---- reverse sweep ----
+    for l in (0..dims.len()).rev() {
+        let (d_in, d_out) = dims[l];
+        let a_dim = if sage { 2 * d_in } else { d_in };
+        let w = tensor(state, meta, &format!("l{l}.w"));
+        let (dw, db) = disjoint_mut(
+            grads,
+            spec(meta, &format!("l{l}.w")),
+            spec(meta, &format!("l{l}.b")),
+        );
+        kern.linear_wgrad(
+            &scratch.aggc[l][..n * a_dim],
+            &scratch.dz[..n * d_out],
+            n,
+            a_dim,
+            d_out,
+            dw,
+            db,
+        );
+        kern.linear_igrad(
+            &scratch.dz[..n * d_out],
+            w,
+            n,
+            a_dim,
+            d_out,
+            &mut scratch.dcat[..n * a_dim],
+        );
+        if sage {
+            // direct half: dh = dcat[:, :d_in]; agg half scatters below
+            for i in 0..n {
+                scratch.dh[i * d_in..(i + 1) * d_in].copy_from_slice(
+                    &scratch.dcat[i * a_dim..i * a_dim + d_in],
+                );
+                scratch.agg[i * d_in..(i + 1) * d_in].copy_from_slice(
+                    &scratch.dcat[i * a_dim + d_in..(i + 1) * a_dim],
+                );
+            }
+            kern.spmm_t(
+                &scratch.csr_off[..n + 1],
+                &scratch.csr_src[..e],
+                &scratch.csr_w[..e],
+                &scratch.agg[..n * d_in],
+                n,
+                d_in,
+                &mut scratch.dh[..n * d_in],
+            );
+        } else {
+            scratch.dh[..n * d_in].fill(0.0);
+            kern.spmm_t(
+                &scratch.csr_off[..n + 1],
+                &scratch.csr_src[..e],
+                &scratch.csr_w[..e],
+                &scratch.dcat[..n * d_in],
+                n,
+                d_in,
+                &mut scratch.dh[..n * d_in],
+            );
+        }
+        if l == 0 {
+            break;
+        }
+        let pl = l - 1;
+        let pd = d_in; // == dims[pl].1
+        let g = tensor(state, meta, &format!("l{pl}.ln_g"));
+        let bl = tensor(state, meta, &format!("l{pl}.ln_b"));
+        let (dg, dbl) = disjoint_mut(
+            grads,
+            spec(meta, &format!("l{pl}.ln_g")),
+            spec(meta, &format!("l{pl}.ln_b")),
+        );
+        ln_relu_dropout_bwd(
+            &scratch.z[pl][..n * pd],
+            &scratch.mean[pl][..n],
+            &scratch.rstd[pl][..n],
+            g,
+            bl,
+            rate,
+            seed,
+            pl as u32,
+            &scratch.dh[..n * pd],
+            &mut scratch.dz[..n * pd],
+            dg,
+            dbl,
+            n,
+            pd,
+        );
+    }
+
+    // weight decay on the whole flat vector (model.py: after autodiff)
+    let wd = meta.weight_decay as f32;
+    if wd > 0.0 {
+        for (gv, &p) in grads.iter_mut().zip(&state.params) {
+            *gv += wd * p;
+        }
+    }
+    metrics
+}
+
+/// Fused Adam sweep: one pass over (params, m, v, grads), in place —
+/// no literal round-trips, no state clones. Per-element expressions
+/// are identical to [`crate::training::host_adam`] (the accumulation
+/// path), which the parity tests pin bitwise.
+pub fn fused_adam(state: &mut ModelState, grads: &[f32], lr: f32) {
+    debug_assert_eq!(grads.len(), state.params.len());
+    state.step += 1;
+    let t = state.step as f32;
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    for i in 0..state.params.len() {
+        let g = grads[i];
+        state.m[i] = ADAM_B1 * state.m[i] + (1.0 - ADAM_B1) * g;
+        state.v[i] = ADAM_B2 * state.v[i] + (1.0 - ADAM_B2) * g * g;
+        let m_hat = state.m[i] / bc1;
+        let v_hat = state.v[i] / bc2;
+        state.params[i] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
+    }
+}
+
+/// Shared fused-step body for both backends: zero the scratch gradient
+/// buffer, run [`forward_backward`], apply [`fused_adam`].
+pub(crate) fn train_step_impl<K: TrainKernels>(
+    kern: &K,
+    meta: &ArtifactMeta,
+    state: &mut ModelState,
+    batch: &TrainBatch,
+    lr: f32,
+    seed: i32,
+    scratch: &mut TrainScratch,
+) -> StepMetrics {
+    let mut g = std::mem::take(&mut scratch.grads);
+    grow_f32(&mut g, meta.param_count);
+    g[..meta.param_count].fill(0.0);
+    let metrics = forward_backward(
+        kern,
+        meta,
+        state,
+        batch,
+        seed,
+        scratch,
+        &mut g[..meta.param_count],
+    );
+    fused_adam(state, &g[..meta.param_count], lr);
+    scratch.grads = g;
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [
+            TrainExecutorKind::Reference,
+            TrainExecutorKind::Blocked,
+            TrainExecutorKind::Runtime,
+        ] {
+            assert_eq!(TrainExecutorKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(TrainExecutorKind::from_name("nope"), None);
+        assert!(TrainExecutorKind::Reference.build().is_ok());
+        assert!(TrainExecutorKind::Blocked.build().is_ok());
+        assert!(TrainExecutorKind::Runtime.build().is_err());
+    }
+
+    #[test]
+    fn dropout_scale_is_deterministic_and_unbiased() {
+        let rate = 0.3f32;
+        let a = dropout_scale(42, 1, 123, rate);
+        let b = dropout_scale(42, 1, 123, rate);
+        assert_eq!(a, b);
+        // different coordinates decorrelate
+        let mut kept = 0usize;
+        let trials = 20_000usize;
+        for i in 0..trials {
+            if dropout_scale(7, 0, i, rate) > 0.0 {
+                kept += 1;
+            }
+        }
+        let frac = kept as f64 / trials as f64;
+        assert!(
+            (frac - 0.7).abs() < 0.02,
+            "keep fraction {frac} far from 0.7"
+        );
+        // rate 0 is the identity
+        assert_eq!(dropout_scale(7, 0, 5, 0.0), 1.0);
+    }
+
+    #[test]
+    fn disjoint_mut_splits_both_orders() {
+        let mut v: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let (a, b) = disjoint_mut(&mut v, (1, 2), (6, 3));
+        assert_eq!(a, &[1.0, 2.0]);
+        assert_eq!(b, &[6.0, 7.0, 8.0]);
+        let (a, b) = disjoint_mut(&mut v, (6, 3), (1, 2));
+        assert_eq!(a, &[6.0, 7.0, 8.0]);
+        assert_eq!(b, &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,184 @@
+//! `[f32; 8]`-lane blocked native training backend.
+//!
+//! Forward SpMM and forward linear come straight from the inference
+//! executor (`exec::blocked`, PR 7). This module adds the backward
+//! kernels:
+//!
+//! - **Transpose-CSR scatter SpMM** (`dh[src] += w · dagg[dst]`): the
+//!   backward of aggregation is a scatter along the same edges. We walk
+//!   the *same* dst-major CSR the forward built (no second index): for
+//!   each destination row, its upstream gradient row is broadcast-axpy'd
+//!   into every source row. The inner axpy has no loop-carried
+//!   dependency, so it vectorizes cleanly; `dagg[d]` stays hot across
+//!   the row's whole edge range.
+//! - **Weight grad** (`dw[k, :] += a[i, k] · dz[i, :]`): i-outer
+//!   rank-one updates — `dz[i]` is read once per row and each `dw[k]`
+//!   update is a contiguous axpy.
+//! - **Input grad** (`da[i, k] = dz[i, :] · w[k, :]`): both operands
+//!   contiguous; accumulated in 8 independent lane partials to break
+//!   the add dependency chain, then horizontally reduced. This is the
+//!   one kernel whose summation order differs from the scalar
+//!   reference (lane partials vs strict left-to-right), which is why
+//!   the backend parity contract is tolerance-based (1e-4), not
+//!   bitwise.
+
+use super::blocked::{linear_blocked, spmm_blocked, LANES};
+use super::train::{
+    forward_backward, train_step_impl, TrainBatch, TrainExecutor,
+    TrainKernels, TrainScratch,
+};
+use crate::runtime::{ArtifactMeta, ModelState, StepMetrics};
+
+pub(crate) struct BlockedKernels;
+
+impl TrainKernels for BlockedKernels {
+    fn spmm(
+        &self,
+        off: &[u32],
+        src: &[u32],
+        w: &[f32],
+        h: &[f32],
+        n: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        spmm_blocked(off, src, w, h, n, dim, out);
+    }
+
+    fn spmm_t(
+        &self,
+        off: &[u32],
+        src: &[u32],
+        w: &[f32],
+        dagg: &[f32],
+        n: usize,
+        dim: usize,
+        dh: &mut [f32],
+    ) {
+        for d in 0..n {
+            let (lo, hi) = (off[d] as usize, off[d + 1] as usize);
+            let dd = &dagg[d * dim..(d + 1) * dim];
+            for e in lo..hi {
+                let s = src[e] as usize;
+                let we = w[e];
+                let out = &mut dh[s * dim..(s + 1) * dim];
+                for (o, &v) in out.iter_mut().zip(dd) {
+                    *o += we * v;
+                }
+            }
+        }
+    }
+
+    fn linear(
+        &self,
+        x: &[f32],
+        n: usize,
+        d_in: usize,
+        w: &[f32],
+        b: &[f32],
+        d_out: usize,
+        out: &mut [f32],
+    ) {
+        linear_blocked(x, n, d_in, w, Some(b), d_out, out);
+    }
+
+    fn linear_wgrad(
+        &self,
+        a: &[f32],
+        dz: &[f32],
+        n: usize,
+        d_a: usize,
+        d_out: usize,
+        dw: &mut [f32],
+        db: &mut [f32],
+    ) {
+        for i in 0..n {
+            let dzi = &dz[i * d_out..(i + 1) * d_out];
+            for (o, &v) in db.iter_mut().zip(dzi) {
+                *o += v;
+            }
+            let ai = &a[i * d_a..(i + 1) * d_a];
+            for (k, &av) in ai.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // dropout/relu zeros skip whole axpys
+                }
+                let dwk = &mut dw[k * d_out..(k + 1) * d_out];
+                for (o, &v) in dwk.iter_mut().zip(dzi) {
+                    *o += av * v;
+                }
+            }
+        }
+    }
+
+    fn linear_igrad(
+        &self,
+        dz: &[f32],
+        w: &[f32],
+        n: usize,
+        d_a: usize,
+        d_out: usize,
+        da: &mut [f32],
+    ) {
+        let blocks = d_out / LANES;
+        for i in 0..n {
+            let dzi = &dz[i * d_out..(i + 1) * d_out];
+            let dai = &mut da[i * d_a..(i + 1) * d_a];
+            for (k, dv) in dai.iter_mut().enumerate() {
+                let wk = &w[k * d_out..(k + 1) * d_out];
+                let mut acc = [0.0f32; LANES];
+                for bk in 0..blocks {
+                    let j0 = bk * LANES;
+                    for j in 0..LANES {
+                        acc[j] += dzi[j0 + j] * wk[j0 + j];
+                    }
+                }
+                let mut s: f32 = acc.iter().sum();
+                for j in blocks * LANES..d_out {
+                    s += dzi[j] * wk[j];
+                }
+                *dv = s;
+            }
+        }
+    }
+}
+
+/// The `[f32; 8]`-lane blocked training backend (the fast path).
+pub struct BlockedTrainExecutor;
+
+impl TrainExecutor for BlockedTrainExecutor {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn train_step(
+        &self,
+        meta: &ArtifactMeta,
+        state: &mut ModelState,
+        batch: &TrainBatch,
+        lr: f32,
+        seed: i32,
+        scratch: &mut TrainScratch,
+    ) -> StepMetrics {
+        train_step_impl(&BlockedKernels, meta, state, batch, lr, seed, scratch)
+    }
+
+    fn grad_step(
+        &self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        batch: &TrainBatch,
+        seed: i32,
+        grads: &mut [f32],
+        scratch: &mut TrainScratch,
+    ) -> StepMetrics {
+        forward_backward(
+            &BlockedKernels,
+            meta,
+            state,
+            batch,
+            seed,
+            scratch,
+            grads,
+        )
+    }
+}

@@ -1,0 +1,168 @@
+//! Scalar native training backend: straightforward loops over the same
+//! dst-major CSR the blocked backend uses. This is the readable
+//! baseline the blocked kernels are measured against (and the parity
+//! anchor: both backends share every non-kernel line of the step via
+//! [`super::train::forward_backward`], so any divergence is isolated
+//! to loop blocking).
+
+use super::train::{
+    forward_backward, train_step_impl, TrainBatch, TrainExecutor,
+    TrainKernels, TrainScratch,
+};
+use crate::runtime::{ArtifactMeta, ModelState, StepMetrics};
+
+pub(crate) struct RefKernels;
+
+impl TrainKernels for RefKernels {
+    fn spmm(
+        &self,
+        off: &[u32],
+        src: &[u32],
+        w: &[f32],
+        h: &[f32],
+        n: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        for d in 0..n {
+            let (lo, hi) = (off[d] as usize, off[d + 1] as usize);
+            let row = &mut out[d * dim..(d + 1) * dim];
+            row.fill(0.0);
+            for e in lo..hi {
+                let s = src[e] as usize;
+                let we = w[e];
+                let hs = &h[s * dim..(s + 1) * dim];
+                for j in 0..dim {
+                    row[j] += we * hs[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_t(
+        &self,
+        off: &[u32],
+        src: &[u32],
+        w: &[f32],
+        dagg: &[f32],
+        n: usize,
+        dim: usize,
+        dh: &mut [f32],
+    ) {
+        for d in 0..n {
+            let (lo, hi) = (off[d] as usize, off[d + 1] as usize);
+            let dd = &dagg[d * dim..(d + 1) * dim];
+            for e in lo..hi {
+                let s = src[e] as usize;
+                let we = w[e];
+                let out = &mut dh[s * dim..(s + 1) * dim];
+                for j in 0..dim {
+                    out[j] += we * dd[j];
+                }
+            }
+        }
+    }
+
+    fn linear(
+        &self,
+        x: &[f32],
+        n: usize,
+        d_in: usize,
+        w: &[f32],
+        b: &[f32],
+        d_out: usize,
+        out: &mut [f32],
+    ) {
+        for i in 0..n {
+            let row = &mut out[i * d_out..(i + 1) * d_out];
+            row.copy_from_slice(b);
+            let xi = &x[i * d_in..(i + 1) * d_in];
+            for (k, &xv) in xi.iter().enumerate() {
+                let wk = &w[k * d_out..(k + 1) * d_out];
+                for j in 0..d_out {
+                    row[j] += xv * wk[j];
+                }
+            }
+        }
+    }
+
+    fn linear_wgrad(
+        &self,
+        a: &[f32],
+        dz: &[f32],
+        n: usize,
+        d_a: usize,
+        d_out: usize,
+        dw: &mut [f32],
+        db: &mut [f32],
+    ) {
+        for i in 0..n {
+            let dzi = &dz[i * d_out..(i + 1) * d_out];
+            for j in 0..d_out {
+                db[j] += dzi[j];
+            }
+            let ai = &a[i * d_a..(i + 1) * d_a];
+            for (k, &av) in ai.iter().enumerate() {
+                let dwk = &mut dw[k * d_out..(k + 1) * d_out];
+                for j in 0..d_out {
+                    dwk[j] += av * dzi[j];
+                }
+            }
+        }
+    }
+
+    fn linear_igrad(
+        &self,
+        dz: &[f32],
+        w: &[f32],
+        n: usize,
+        d_a: usize,
+        d_out: usize,
+        da: &mut [f32],
+    ) {
+        for i in 0..n {
+            let dzi = &dz[i * d_out..(i + 1) * d_out];
+            for k in 0..d_a {
+                let wk = &w[k * d_out..(k + 1) * d_out];
+                let mut s = 0.0f32;
+                for j in 0..d_out {
+                    s += dzi[j] * wk[j];
+                }
+                da[i * d_a + k] = s;
+            }
+        }
+    }
+}
+
+/// The scalar training backend.
+pub struct ReferenceTrainExecutor;
+
+impl TrainExecutor for ReferenceTrainExecutor {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn train_step(
+        &self,
+        meta: &ArtifactMeta,
+        state: &mut ModelState,
+        batch: &TrainBatch,
+        lr: f32,
+        seed: i32,
+        scratch: &mut TrainScratch,
+    ) -> StepMetrics {
+        train_step_impl(&RefKernels, meta, state, batch, lr, seed, scratch)
+    }
+
+    fn grad_step(
+        &self,
+        meta: &ArtifactMeta,
+        state: &ModelState,
+        batch: &TrainBatch,
+        seed: i32,
+        grads: &mut [f32],
+        scratch: &mut TrainScratch,
+    ) -> StepMetrics {
+        forward_backward(&RefKernels, meta, state, batch, seed, scratch, grads)
+    }
+}

@@ -148,12 +148,7 @@ pub fn infer_with_executor(
     let mut loss_sum = 0f64;
     let mut outputs = 0usize;
     for i in 0..cache.len() {
-        let nodes = cache.batch_nodes(i);
-        let n = nodes.len();
-        x.resize(n * meta.feat, 0.0);
-        for (j, &u) in nodes.iter().enumerate() {
-            ds.node_features_into(u, &mut x[j * meta.feat..(j + 1) * meta.feat]);
-        }
+        let n = cache.gather_features_into(ds, i, &mut x);
         let view = PlanView {
             n,
             edge_src: cache.edge_src_of(i),

@@ -31,7 +31,7 @@ use ibmb::batching::{cache_io, CowCache};
 use ibmb::cli::Args;
 use ibmb::config::ExpScale;
 use ibmb::datasets::ALL_DATASETS;
-use ibmb::exec::ExecutorKind;
+use ibmb::exec::{ExecutorKind, TrainExecutorKind};
 use ibmb::experiments::{self, runner};
 use ibmb::graph::{parse_delta_log, synth_delta_stream, GraphDelta};
 use ibmb::serve::{self, Churn, RouterIndex, ServeConfig, Skew};
@@ -46,6 +46,11 @@ fn usage() -> ! {
          gen-data|list|fig2..fig9|table5..table7> \
          [--dataset NAME] [--model gcn|gat|sage] [--method NAME] \
          [--epochs N] [--seed N] [--scale F] [--prefetch-depth N] [--full]\n\
+         train options: [--executor reference|blocked|runtime] \
+         [--hidden N] [--layers N] [--heads N] [--dropout F] \
+         [--weight-decay F] [--grad-accum N] [--trace FILE.jsonl] \
+         (reference|blocked = native sparse backends, DESIGN.md §16; \
+         runtime = AOT artifact path)\n\
          serve options: [--shards N] [--clients N] [--queries N] \
          [--skew uniform|zipf] [--zipf-s F] [--window-us N] [--coalesce N] \
          [--results-cache-bytes N] [--results-ttl-ms N] [--cold-aux N] \
@@ -385,6 +390,25 @@ fn validate_bench_json(text: &str) -> Result<String, String> {
                 ],
             )
         }
+        "training" => {
+            need(&["dataset", "model", "epochs"])?;
+            // one run per training backend (runtime-emulated dense
+            // path, reference scalar, blocked SIMD); the ≥3x
+            // blocked-vs-runtime acceptance gate reads
+            // "speedup_vs_runtime", convergence parity reads
+            // "final_val_acc"
+            (
+                "runs",
+                &[
+                    "executor",
+                    "steps_per_s",
+                    "epoch_s",
+                    "speedup_vs_reference",
+                    "speedup_vs_runtime",
+                    "final_val_acc",
+                ],
+            )
+        }
         "coldstart" => {
             need(&["dataset", "lru_budget_bytes"])?;
             // one run per corpus size: monolithic v3 full-load TTFA vs
@@ -498,25 +522,89 @@ fn main() -> Result<()> {
             );
         }
         Some("train") => {
-            let mut env = runner::Env::load()?;
-            env.prefetch_depth =
-                args.get_usize("prefetch-depth", env.prefetch_depth).max(1);
             let ds_name = args.get_or("dataset", "synth-arxiv");
             let model = args.get_or("model", "gcn");
             let method = args.get_or("method", "node-wise IBMB");
-            let ds = runner::dataset(ds_name, &scale, args.get_u64("seed", 0));
-            let res = runner::train_once(
-                &mut env,
-                &ds,
-                model,
-                method,
-                &scale,
-                args.get_u64("seed", 0),
-            )?;
+            let seed = args.get_u64("seed", 0);
+            let exec_name = args.get_or("executor", "blocked");
+            let kind = match TrainExecutorKind::from_name(exec_name) {
+                Some(k) => k,
+                None => {
+                    eprintln!(
+                        "unknown --executor {exec_name:?} (expected {})",
+                        TrainExecutorKind::ALL_NAMES
+                    );
+                    std::process::exit(2);
+                }
+            };
+            let ds = runner::dataset(ds_name, &scale, seed);
+            let res = if kind == TrainExecutorKind::Runtime {
+                // AOT artifact path: fused train executable via PJRT.
+                let mut env = runner::Env::load()?;
+                env.prefetch_depth = args
+                    .get_usize("prefetch-depth", env.prefetch_depth)
+                    .max(1);
+                runner::train_once(&mut env, &ds, model, method, &scale, seed)?
+            } else {
+                // Native sparse backend (DESIGN.md §16): no artifacts,
+                // no padding — fused forward+backward+Adam on CSR.
+                let cfg = ibmb::training::TrainConfig {
+                    model: model.to_string(),
+                    epochs: scale.epochs,
+                    seed,
+                    executor: kind,
+                    hidden: args.get_usize("hidden", 64),
+                    layers: args.get_usize("layers", 3),
+                    heads: args.get_usize("heads", 4),
+                    dropout: args.get_f64("dropout", 0.3) as f32,
+                    weight_decay: args.get_f64("weight-decay", 1e-4) as f32,
+                    grad_accum: args.get_usize("grad-accum", 1).max(1),
+                    prefetch_depth: args
+                        .get_usize(
+                            "prefetch-depth",
+                            ibmb::config::DEFAULT_PREFETCH_DEPTH,
+                        )
+                        .max(1),
+                    ..Default::default()
+                };
+                let mut gen = runner::generator(method, &ds.name, None);
+                let mut rng = ibmb::util::Rng::new(seed ^ 0xE9E1);
+                let (tracer, trace) = match args.get("trace") {
+                    None => (Tracer::disabled(), None),
+                    Some(path) => {
+                        let (sink, writer) =
+                            TraceSink::to_file(std::path::Path::new(path))?;
+                        println!("tracing to {path}");
+                        (
+                            Tracer::attached(sink),
+                            Some((path.to_string(), writer)),
+                        )
+                    }
+                };
+                let res = ibmb::training::train_native(
+                    &ds,
+                    &cfg,
+                    gen.as_mut(),
+                    &mut rng,
+                    &tracer,
+                )?;
+                // the tracer holds the last sink clone; dropping it
+                // closes the channel so the writer can finish
+                drop(tracer);
+                if let Some((path, writer)) = trace {
+                    let s = writer.finish()?;
+                    println!(
+                        "trace: wrote {} events to {path} ({} dropped)",
+                        s.events_written, s.events_dropped
+                    );
+                }
+                res
+            };
             println!(
-                "{method} on {ds_name}/{model}: preprocess {:.2}s, \
-                 {:.3}s/epoch × {} epochs, best val acc {:.1}%, \
-                 prefetch overlap {:.2}",
+                "{method} on {ds_name}/{model} [executor={}]: \
+                 preprocess {:.2}s, {:.3}s/epoch × {} epochs, \
+                 best val acc {:.1}%, prefetch overlap {:.2}",
+                kind.name(),
                 res.preprocess_s,
                 res.mean_epoch_s,
                 res.epochs_run,

@@ -1,0 +1,401 @@
+//! Host-side dense-padded training oracle.
+//!
+//! A scalar re-implementation of the AOT train/grad artifacts
+//! (`python/compile/model.py`) over [`DenseBatch`] buffers: masked
+//! softmax-CE over the padded `n_pad × n_pad` adjacency, reverse-mode
+//! gradients, weight decay on the full flat vector, and a plain Adam
+//! step. It exists for two reasons:
+//!
+//! 1. **Parity oracle.** The vendored xla stub cannot execute, so this
+//!    is the executable ground truth the sparse [`crate::exec::train`]
+//!    backends are tested against. Padded rows have all-zero adjacency
+//!    rows/columns, zero features and zero mask, so every padded
+//!    contribution to every gradient is an exact f32 zero — the dense
+//!    and sparse steps agree up to summation order (documented
+//!    bit-tolerance: 1e-4 in the parity tests).
+//! 2. **Runtime-path emulation.** `benches/training.rs` uses it as the
+//!    honest stand-in for the dense runtime/xla step when measuring the
+//!    native backends' speedup, since it performs the same O(n_pad²·d)
+//!    work the padded artifact does.
+//!
+//! Allocation discipline deliberately does NOT apply here: the oracle
+//! allocates its tape per call. Only the native backends are hot.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::manifest::ArtifactMeta;
+use super::state::ModelState;
+use super::StepMetrics;
+use crate::batching::DenseBatch;
+use crate::exec::train::{dropout_scale, ADAM_B1, ADAM_B2, ADAM_EPS, LN_EPS};
+
+fn tensor<'a>(
+    state: &'a ModelState,
+    meta: &ArtifactMeta,
+    name: &str,
+) -> Result<&'a [f32]> {
+    state
+        .tensor(meta, name)
+        .ok_or_else(|| anyhow!("{}: missing param {name}", meta.id))
+}
+
+fn spec(meta: &ArtifactMeta, name: &str) -> Result<(usize, usize)> {
+    meta.params
+        .iter()
+        .find(|p| p.name == name)
+        .map(|p| (p.offset, p.size))
+        .ok_or_else(|| anyhow!("{}: missing param {name}", meta.id))
+}
+
+/// Per-layer (d_in, d_out) pairs derived from the manifest layout.
+fn layer_dims(meta: &ArtifactMeta) -> Result<Vec<(usize, usize)>> {
+    let mut dims = Vec::with_capacity(meta.layers);
+    let mut d_in = meta.feat;
+    for l in 0..meta.layers {
+        let (_, d_out) = spec(meta, &format!("l{l}.b"))?;
+        dims.push((d_in, d_out));
+        d_in = d_out;
+    }
+    Ok(dims)
+}
+
+/// Forward tape: everything the backward pass re-reads.
+struct Tape {
+    /// Linear input per layer (`agg` for gcn, `[h ‖ agg]` for sage).
+    a: Vec<Vec<f32>>,
+    /// Pre-layernorm linear output per layer (last = logits).
+    z: Vec<Vec<f32>>,
+    mean: Vec<Vec<f32>>,
+    rstd: Vec<Vec<f32>>,
+}
+
+/// `agg[d, :] = Σ_s adj[d, s] · h[s, :]` over the dense padded matrix.
+fn dense_spmm(adj: &[f32], h: &[f32], n: usize, dim: usize, out: &mut [f32]) {
+    for d in 0..n {
+        let row = &mut out[d * dim..(d + 1) * dim];
+        row.fill(0.0);
+        for s in 0..n {
+            let w = adj[d * n + s];
+            if w == 0.0 {
+                continue;
+            }
+            let hs = &h[s * dim..(s + 1) * dim];
+            for (o, &v) in row.iter_mut().zip(hs) {
+                *o += w * v;
+            }
+        }
+    }
+}
+
+/// `z = a @ w + b` (w row-major `[d_in, d_out]`).
+fn dense_linear(
+    a: &[f32],
+    n: usize,
+    d_in: usize,
+    w: &[f32],
+    b: &[f32],
+    d_out: usize,
+    out: &mut [f32],
+) {
+    for i in 0..n {
+        let row = &mut out[i * d_out..(i + 1) * d_out];
+        row.copy_from_slice(b);
+        let ai = &a[i * d_in..(i + 1) * d_in];
+        for (k, &av) in ai.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let wk = &w[k * d_out..(k + 1) * d_out];
+            for (o, &wv) in row.iter_mut().zip(wk) {
+                *o += av * wv;
+            }
+        }
+    }
+}
+
+fn forward(
+    meta: &ArtifactMeta,
+    state: &ModelState,
+    dense: &DenseBatch,
+    seed: i32,
+    dims: &[(usize, usize)],
+) -> Result<Tape> {
+    let n = dense.n_pad;
+    let rate = meta.dropout as f32;
+    let mut tape = Tape {
+        a: Vec::with_capacity(meta.layers),
+        z: Vec::with_capacity(meta.layers),
+        mean: Vec::with_capacity(meta.layers),
+        rstd: Vec::with_capacity(meta.layers),
+    };
+    let mut h = dense.x.clone();
+    for (l, &(d_in, d_out)) in dims.iter().enumerate() {
+        let w = tensor(state, meta, &format!("l{l}.w"))?;
+        let b = tensor(state, meta, &format!("l{l}.b"))?;
+        let a = match meta.model.as_str() {
+            "gcn" => {
+                let mut agg = vec![0.0f32; n * d_in];
+                dense_spmm(&dense.adj, &h, n, d_in, &mut agg);
+                agg
+            }
+            "sage" => {
+                let mut agg = vec![0.0f32; n * d_in];
+                dense_spmm(&dense.adj, &h, n, d_in, &mut agg);
+                let mut cat = vec![0.0f32; n * 2 * d_in];
+                for i in 0..n {
+                    cat[i * 2 * d_in..i * 2 * d_in + d_in]
+                        .copy_from_slice(&h[i * d_in..(i + 1) * d_in]);
+                    cat[i * 2 * d_in + d_in..(i + 1) * 2 * d_in]
+                        .copy_from_slice(&agg[i * d_in..(i + 1) * d_in]);
+                }
+                cat
+            }
+            other => bail!("host oracle: unsupported model {other:?}"),
+        };
+        let a_dim = a.len() / n;
+        let mut z = vec![0.0f32; n * d_out];
+        dense_linear(&a, n, a_dim, w, b, d_out, &mut z);
+        let last = l + 1 == meta.layers;
+        if !last {
+            let g = tensor(state, meta, &format!("l{l}.ln_g"))?;
+            let bl = tensor(state, meta, &format!("l{l}.ln_b"))?;
+            let mut mean = vec![0.0f32; n];
+            let mut rstd = vec![0.0f32; n];
+            h.resize(n * d_out, 0.0);
+            for i in 0..n {
+                let zi = &z[i * d_out..(i + 1) * d_out];
+                let mu = zi.iter().sum::<f32>() / d_out as f32;
+                let var = zi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>()
+                    / d_out as f32;
+                let rs = 1.0 / (var + LN_EPS).sqrt();
+                mean[i] = mu;
+                rstd[i] = rs;
+                for j in 0..d_out {
+                    let y = (zi[j] - mu) * rs * g[j] + bl[j];
+                    let mut v = y.max(0.0);
+                    if rate > 0.0 {
+                        v *= dropout_scale(seed, l as u32, i * d_out + j, rate);
+                    }
+                    h[i * d_out + j] = v;
+                }
+            }
+            tape.mean.push(mean);
+            tape.rstd.push(rstd);
+        } else {
+            tape.mean.push(Vec::new());
+            tape.rstd.push(Vec::new());
+        }
+        tape.a.push(a);
+        tape.z.push(z);
+    }
+    Ok(tape)
+}
+
+/// One forward+backward over the padded dense batch, **accumulating**
+/// (`+=`) the weight-decayed gradients into the caller-owned `grads`
+/// buffer (same contract as the native backends and the reworked
+/// [`super::Runtime::grad_step`]).
+pub fn host_grad_step(
+    meta: &ArtifactMeta,
+    state: &ModelState,
+    dense: &DenseBatch,
+    seed: i32,
+    grads: &mut [f32],
+) -> Result<StepMetrics> {
+    ensure!(
+        grads.len() == meta.param_count,
+        "grad buffer {} != param_count {}",
+        grads.len(),
+        meta.param_count
+    );
+    let n = dense.n_pad;
+    let classes = meta.classes;
+    let rate = meta.dropout as f32;
+    let dims = layer_dims(meta)?;
+    let tape = forward(meta, state, dense, seed, &dims)?;
+
+    // ---- masked softmax-CE loss/grad on the logits ----
+    let logits = &tape.z[meta.layers - 1];
+    let msum: f32 = dense.mask.iter().sum();
+    let inv = 1.0 / msum.max(1.0);
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0.0f32;
+    let mut dz = vec![0.0f32; n * classes];
+    for i in 0..n {
+        if dense.mask[i] == 0.0 {
+            continue;
+        }
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse =
+            row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+        let label = dense.labels[i] as usize;
+        loss_sum += lse - row[label];
+        let mut pred = 0usize;
+        let mut best = row[0];
+        for (c, &v) in row.iter().enumerate().skip(1) {
+            if v > best {
+                best = v;
+                pred = c;
+            }
+        }
+        if pred == label {
+            correct += 1.0;
+        }
+        let dr = &mut dz[i * classes..(i + 1) * classes];
+        for (c, d) in dr.iter_mut().enumerate() {
+            let p = (row[c] - lse).exp();
+            *d = (p - f32::from(c == label)) * inv;
+        }
+    }
+
+    // ---- reverse pass ----
+    let mut dz = dz; // current dL/dz[l] (pre-post-op of layer l)
+    for l in (0..meta.layers).rev() {
+        let (d_in, d_out) = dims[l];
+        let a = &tape.a[l];
+        let a_dim = a.len() / n;
+        let w = tensor(state, meta, &format!("l{l}.w"))?;
+        let (w_off, w_len) = spec(meta, &format!("l{l}.w"))?;
+        let (b_off, b_len) = spec(meta, &format!("l{l}.b"))?;
+        // dW[k, j] += Σ_i a[i, k]·dz[i, j];  db[j] += Σ_i dz[i, j]
+        for i in 0..n {
+            let dzi = &dz[i * d_out..(i + 1) * d_out];
+            for (j, &dv) in dzi.iter().enumerate() {
+                grads[b_off + j] += dv;
+            }
+            let ai = &a[i * a_dim..(i + 1) * a_dim];
+            for (k, &av) in ai.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (j, &dv) in dzi.iter().enumerate() {
+                    grads[w_off + k * d_out + j] += av * dv;
+                }
+            }
+        }
+        debug_assert_eq!(w_len, a_dim * d_out);
+        debug_assert_eq!(b_len, d_out);
+        // da[i, k] = dz[i, :] · w[k, :]
+        let mut da = vec![0.0f32; n * a_dim];
+        for i in 0..n {
+            let dzi = &dz[i * d_out..(i + 1) * d_out];
+            for k in 0..a_dim {
+                let wk = &w[k * d_out..(k + 1) * d_out];
+                da[i * a_dim + k] =
+                    dzi.iter().zip(wk).map(|(&x, &y)| x * y).sum();
+            }
+        }
+        // dh = Âᵀ·dagg (+ the direct half for sage)
+        let mut dh = vec![0.0f32; n * d_in];
+        let dagg_col = if meta.model == "sage" { d_in } else { 0 };
+        if meta.model == "sage" {
+            for i in 0..n {
+                dh[i * d_in..(i + 1) * d_in]
+                    .copy_from_slice(&da[i * a_dim..i * a_dim + d_in]);
+            }
+        }
+        for d in 0..n {
+            let dd = &da[d * a_dim + dagg_col..d * a_dim + dagg_col + d_in];
+            for s in 0..n {
+                let wgt = dense.adj[d * n + s];
+                if wgt == 0.0 {
+                    continue;
+                }
+                let out = &mut dh[s * d_in..(s + 1) * d_in];
+                for (o, &v) in out.iter_mut().zip(dd) {
+                    *o += wgt * v;
+                }
+            }
+        }
+        if l == 0 {
+            break;
+        }
+        // back through layer l-1's layernorm → relu → dropout
+        let pd = d_in; // == dims[l-1].1
+        let pl = l - 1;
+        let z = &tape.z[pl];
+        let mean = &tape.mean[pl];
+        let rstd = &tape.rstd[pl];
+        let g = tensor(state, meta, &format!("l{pl}.ln_g"))?;
+        let bl = tensor(state, meta, &format!("l{pl}.ln_b"))?;
+        let (g_off, _) = spec(meta, &format!("l{pl}.ln_g"))?;
+        let (bl_off, _) = spec(meta, &format!("l{pl}.ln_b"))?;
+        let mut next_dz = vec![0.0f32; n * pd];
+        for i in 0..n {
+            let zi = &z[i * pd..(i + 1) * pd];
+            let mut gx_mean = 0.0f32;
+            let mut gxxh_mean = 0.0f32;
+            let row = &mut next_dz[i * pd..(i + 1) * pd];
+            for j in 0..pd {
+                let xhat = (zi[j] - mean[i]) * rstd[i];
+                let y = xhat * g[j] + bl[j];
+                let mut gr = dh[i * pd + j];
+                if rate > 0.0 {
+                    gr *= dropout_scale(seed, pl as u32, i * pd + j, rate);
+                }
+                if y <= 0.0 {
+                    gr = 0.0;
+                }
+                grads[g_off + j] += gr * xhat;
+                grads[bl_off + j] += gr;
+                let gx = gr * g[j];
+                gx_mean += gx;
+                gxxh_mean += gx * xhat;
+                row[j] = gx; // stash gx; finish after the means
+            }
+            gx_mean /= pd as f32;
+            gxxh_mean /= pd as f32;
+            for j in 0..pd {
+                let xhat = (zi[j] - mean[i]) * rstd[i];
+                row[j] = rstd[i] * (row[j] - gx_mean - xhat * gxxh_mean);
+            }
+        }
+        dz = next_dz;
+    }
+
+    // weight decay on the whole flat vector (model.py applies it after
+    // autodiff, to every parameter including biases and LN)
+    let wd = meta.weight_decay as f32;
+    if wd > 0.0 {
+        for (gv, &p) in grads.iter_mut().zip(&state.params) {
+            *gv += wd * p;
+        }
+    }
+    Ok(StepMetrics {
+        loss: loss_sum * inv,
+        correct,
+        mask_count: msum,
+    })
+}
+
+/// One fused oracle step: gradients + in-place Adam on `state`.
+///
+/// The Adam expressions are written out independently of
+/// [`crate::exec::train::fused_adam`] so the oracle stays a genuinely
+/// separate implementation; both follow `model.py` exactly (1-based
+/// step, `powf` bias correction) and the parity tests pin them
+/// together.
+pub fn host_train_step(
+    meta: &ArtifactMeta,
+    state: &mut ModelState,
+    dense: &DenseBatch,
+    lr: f32,
+    seed: i32,
+) -> Result<StepMetrics> {
+    let mut grads = vec![0.0f32; meta.param_count];
+    let metrics = host_grad_step(meta, state, dense, seed, &mut grads)?;
+    state.step += 1;
+    let t = state.step as f32;
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    for i in 0..state.params.len() {
+        let g = grads[i];
+        state.m[i] = ADAM_B1 * state.m[i] + (1.0 - ADAM_B1) * g;
+        state.v[i] = ADAM_B2 * state.v[i] + (1.0 - ADAM_B2) * g * g;
+        let m_hat = state.m[i] / bc1;
+        let v_hat = state.v[i] / bc2;
+        state.params[i] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
+    }
+    Ok(metrics)
+}

@@ -6,6 +6,7 @@
 //! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
 
+pub mod host;
 pub mod manifest;
 pub mod state;
 
@@ -55,6 +56,11 @@ pub struct Runtime {
     dir: PathBuf,
     pub manifest: Manifest,
     compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Device-fetch staging for [`Self::grad_step`] — reused across
+    /// batches so gradient accumulation performs zero steady-state
+    /// allocations (the caller owns the accumulator, we own the
+    /// transfer buffer).
+    grad_scratch: Vec<f32>,
 }
 
 impl Runtime {
@@ -70,6 +76,7 @@ impl Runtime {
             dir,
             manifest,
             compiled: HashMap::new(),
+            grad_scratch: Vec::new(),
         })
     }
 
@@ -182,19 +189,29 @@ impl Runtime {
         })
     }
 
-    /// Run one forward+backward step WITHOUT the optimizer, returning
-    /// the gradient vector (gradient-accumulation mode, paper Fig. 8).
+    /// Run one forward+backward step WITHOUT the optimizer,
+    /// **accumulating** (`+=`) the gradients into the caller-owned
+    /// `grads` buffer (gradient-accumulation mode, paper Fig. 8).
+    /// The device fetch lands in an internal staging buffer reused
+    /// across batches, so steady-state accumulation allocates nothing.
     pub fn grad_step(
         &mut self,
         meta: &ArtifactMeta,
         state: &ModelState,
         dense: &DenseBatch,
         seed: i32,
-    ) -> Result<(Vec<f32>, StepMetrics)> {
+        grads: &mut [f32],
+    ) -> Result<StepMetrics> {
         debug_assert_eq!(meta.kind, "grad");
+        let p = meta.param_count;
+        anyhow::ensure!(
+            grads.len() == p,
+            "grad buffer {} != param_count {p}",
+            grads.len()
+        );
         let [x, adj, labels, mask] = self.batch_buffers(dense, meta)?;
         let inputs = [
-            self.buf(&state.params, &[meta.param_count])?,
+            self.buf(&state.params, &[p])?,
             self.buf(&[seed], &[])?,
             x,
             adj,
@@ -210,15 +227,19 @@ impl Runtime {
         let (g, l, c, mc) = result
             .to_tuple4()
             .map_err(|e| anyhow!("tuple4: {e}"))?;
-        let grads = g.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
-        Ok((
-            grads,
-            StepMetrics {
-                loss: l.get_first_element().map_err(|e| anyhow!("{e}"))?,
-                correct: c.get_first_element().map_err(|e| anyhow!("{e}"))?,
-                mask_count: mc.get_first_element().map_err(|e| anyhow!("{e}"))?,
-            },
-        ))
+        if self.grad_scratch.len() < p {
+            self.grad_scratch.resize(p, 0.0);
+        }
+        g.copy_raw_to(&mut self.grad_scratch[..p])
+            .map_err(|e| anyhow!("{e}"))?;
+        for (a, &b) in grads.iter_mut().zip(&self.grad_scratch[..p]) {
+            *a += b;
+        }
+        Ok(StepMetrics {
+            loss: l.get_first_element().map_err(|e| anyhow!("{e}"))?,
+            correct: c.get_first_element().map_err(|e| anyhow!("{e}"))?,
+            mask_count: mc.get_first_element().map_err(|e| anyhow!("{e}"))?,
+        })
     }
 
     /// Run one inference step (no dropout, no state mutation).

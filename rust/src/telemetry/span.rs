@@ -91,6 +91,12 @@ pub enum Stage {
     Compaction,
     /// Query resolved (instant; `detail` = latency in µs).
     Complete,
+    /// Training batch materialized into the ring buffer (instant;
+    /// `group` = plan index, `detail` = fill µs).
+    Materialize,
+    /// One optimizer step: forward + backward + Adam (instant;
+    /// `group` = plan index, `detail` = step µs).
+    TrainStep,
 }
 
 impl Stage {
@@ -110,6 +116,8 @@ impl Stage {
             Stage::StoreFault => "store_fault",
             Stage::Compaction => "compaction",
             Stage::Complete => "complete",
+            Stage::Materialize => "materialize",
+            Stage::TrainStep => "train_step",
         }
     }
 
@@ -129,6 +137,8 @@ impl Stage {
             "store_fault" => Stage::StoreFault,
             "compaction" => Stage::Compaction,
             "complete" => Stage::Complete,
+            "materialize" => Stage::Materialize,
+            "train_step" => Stage::TrainStep,
             _ => return None,
         })
     }
@@ -283,6 +293,8 @@ mod tests {
             Stage::StoreFault,
             Stage::Compaction,
             Stage::Complete,
+            Stage::Materialize,
+            Stage::TrainStep,
         ] {
             assert_eq!(Stage::from_name(st.name()), Some(st));
         }

@@ -10,4 +10,7 @@ pub mod metrics;
 pub mod trainer;
 
 pub use lr_schedule::ReduceLROnPlateau;
-pub use trainer::{train, TrainConfig, TrainResult};
+pub use trainer::{
+    host_adam, train, train_native, EpochRecord, SchedulerKind,
+    TrainConfig, TrainResult,
+};

@@ -4,13 +4,18 @@
 //! protocol (App. B) on top of the plan/materialize pipeline
 //! (DESIGN.md §4, §7).
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::batching::{BatchArena, BatchCache, BatchGenerator};
 use crate::datasets::Dataset;
-use crate::exec::{ExecScratch, Executor, ExecutorKind};
+use crate::exec::train::{
+    train_artifact, TrainBatch, TrainExecutorKind, TrainScratch,
+};
+use crate::exec::{ExecScratch, Executor, ExecutorKind, PlanView};
 use crate::pipeline::run_prefetched;
 use crate::runtime::{ArtifactMeta, ModelState, Runtime, StepMetrics};
+use crate::telemetry::span::{NO_QUERY, NO_SHARD};
+use crate::telemetry::{Stage, Tracer};
 use crate::scheduler::{
     batch_distance_matrix, OptimalCycleScheduler, Scheduler,
     SequentialScheduler, ShuffleScheduler, WeightedScheduler,
@@ -50,6 +55,17 @@ pub struct TrainConfig {
     /// host [`Executor`] backend instead of the AOT infer artifact —
     /// no bucket padding, no runtime round-trip (`--val-executor`).
     pub val_executor: Option<ExecutorKind>,
+    /// Native training backend for [`train_native`] (`--executor`).
+    /// Ignored by [`train`], which always steps through the runtime.
+    pub executor: TrainExecutorKind,
+    /// Model hyperparameters for the native path, which synthesizes
+    /// its artifact meta instead of loading one (paper App. B
+    /// defaults). [`train`] takes these from the AOT manifest instead.
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub dropout: f32,
+    pub weight_decay: f32,
 }
 
 impl Default for TrainConfig {
@@ -65,6 +81,12 @@ impl Default for TrainConfig {
             eval_every: 1,
             prefetch_depth: crate::config::DEFAULT_PREFETCH_DEPTH,
             val_executor: None,
+            executor: TrainExecutorKind::Blocked,
+            hidden: 64,
+            layers: 3,
+            heads: 4,
+            dropout: 0.3,
+            weight_decay: 1e-4,
         }
     }
 }
@@ -281,10 +303,10 @@ pub fn train(
                     .wrapping_add((epoch * 10_007 + step_idx) as i32);
                 step_idx += 1;
                 let res = if cfg.grad_accum > 1 {
-                    rt.grad_step(&meta_train, &state, buf, seed).map(|(g, m)| {
-                        for (a, b) in grad_buf.iter_mut().zip(&g) {
-                            *a += b;
-                        }
+                    // gradients accumulate straight into the caller-owned
+                    // buffer — no per-batch Vec from the runtime
+                    rt.grad_step(&meta_train, &state, buf, seed, &mut grad_buf)
+                        .map(|m| {
                         accum_count += 1;
                         if accum_count == cfg.grad_accum {
                             for v in grad_buf.iter_mut() {
@@ -395,5 +417,313 @@ pub fn train(
         cache_bytes,
         overlap_ratio,
         arena_allocations: arena.allocations(),
+    })
+}
+
+/// One ring slot for the native training pipeline: a plan's gathered
+/// features and labels, sparse — no adjacency densification, no
+/// padding. `x`/`labels` ratchet to the epoch's high-water batch size,
+/// so after the first lap the ring performs zero allocations.
+struct NativeBatch {
+    plan: usize,
+    n: usize,
+    num_outputs: usize,
+    x: Vec<f32>,
+    labels: Vec<i32>,
+    /// Fill wall time, recorded on the worker thread and emitted as a
+    /// [`Stage::Materialize`] instant from the consume side (the
+    /// worker closure is `Fn + Sync` and cannot hold the trace buffer).
+    fill_us: u64,
+}
+
+/// Train `cfg.model` entirely on the host through a native
+/// [`crate::exec::TrainExecutor`] — no AOT artifacts, no runtime, no
+/// dense padding (DESIGN.md §16). Mirrors [`train`]'s protocol
+/// (schedulers, plateau LR, early stop, grad accumulation,
+/// ring-prefetched materialization) with the fused sparse step in
+/// place of the runtime round-trip. Validation runs through the
+/// inference [`Executor`] matching the training backend (overridable
+/// via `cfg.val_executor`).
+///
+/// Emits [`Stage::Materialize`] / [`Stage::TrainStep`] instants per
+/// batch when `tracer` is attached (`ibmb train --trace`).
+pub fn train_native(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    generator: &mut dyn BatchGenerator,
+    rng: &mut Rng,
+    tracer: &Tracer,
+) -> Result<TrainResult> {
+    let train_nodes = &ds.splits.train;
+    let val_nodes = &ds.splits.val;
+    anyhow::ensure!(!train_nodes.is_empty(), "empty training set");
+    if cfg.model == "gat" {
+        bail!(
+            "native training supports gcn|sage (the GAT attention VJP \
+             is not implemented); use --executor runtime"
+        );
+    }
+    if cfg.executor == TrainExecutorKind::Runtime {
+        bail!("train_native: --executor runtime goes through training::train");
+    }
+
+    // ---- preprocessing (timed separately, like the paper's tables) ----
+    let t_pre = Timer::start();
+    let mut cache = BatchCache::build(&generator.plan(ds, train_nodes, rng));
+    let val_cache = if generator.is_fixed() && !val_nodes.is_empty() {
+        Some(BatchCache::build(&generator.plan(ds, val_nodes, rng)))
+    } else {
+        None
+    };
+    let preprocess_s = t_pre.elapsed_s();
+    anyhow::ensure!(!cache.is_empty(), "generator produced no batches");
+
+    let meta_train = train_artifact(
+        &cfg.model,
+        ds.feat_dim,
+        ds.num_classes,
+        cfg.hidden,
+        cfg.layers,
+        cfg.heads,
+        cfg.dropout as f64,
+        cfg.weight_decay as f64,
+        cache.max_batch_nodes(),
+    );
+    let texec = cfg.executor.build()?;
+    let mut state = ModelState::init(&meta_train, cfg.seed);
+    let mut scratch = TrainScratch::new();
+    let mut grad_buf = vec![0.0f32; meta_train.param_count];
+
+    // Validation backend: the inference executor matching the training
+    // backend (no padding either), built once and reused every eval.
+    let mut val_exec: Option<(Box<dyn Executor>, ArtifactMeta, ExecScratch)> =
+        if val_nodes.is_empty() {
+            None
+        } else {
+            let kind = cfg.val_executor.unwrap_or(match cfg.executor {
+                TrainExecutorKind::Reference => ExecutorKind::Reference,
+                _ => ExecutorKind::Blocked,
+            });
+            let meta_val = crate::serve::reference_artifact(
+                &cfg.model,
+                ds.feat_dim,
+                ds.num_classes,
+                cfg.hidden,
+                cfg.layers,
+                cfg.heads,
+                cache.max_batch_nodes(),
+            );
+            Some((kind.build()?, meta_val, ExecScratch::new()))
+        };
+
+    let mut sched = make_scheduler(cfg.scheduler, ds, &cache, rng);
+    let mut plateau =
+        super::lr_schedule::ReduceLROnPlateau::paper_defaults(cfg.lr);
+
+    let depth = cfg.prefetch_depth.max(1);
+    let max_nodes = cache.max_batch_nodes();
+    let mut ring: Vec<NativeBatch> = (0..depth)
+        .map(|_| NativeBatch {
+            plan: 0,
+            n: 0,
+            num_outputs: 0,
+            x: Vec::with_capacity(max_nodes * ds.feat_dim),
+            labels: Vec::with_capacity(max_nodes),
+            fill_us: 0,
+        })
+        .collect();
+    let mut tb = tracer.buffer();
+
+    let mut history = Vec::new();
+    let mut best_val_loss = f64::INFINITY;
+    let mut best_val_acc = 0.0f64;
+    let mut bad_epochs = 0usize;
+    let mut lr = cfg.lr;
+    let mut epoch_times = Vec::new();
+    let mut wait_total = 0.0;
+    let mut consume_total = 0.0;
+    let t_train = Timer::start();
+    let cache_bytes = cache.memory_bytes()
+        + val_cache.as_ref().map_or(0, |c| c.memory_bytes());
+
+    let mut epochs_run = 0;
+    for epoch in 0..cfg.epochs {
+        let t_epoch = Timer::start();
+        if !generator.is_fixed() {
+            cache = BatchCache::build(&generator.plan(ds, train_nodes, rng));
+            if cache.is_empty() {
+                continue;
+            }
+            sched = Box::new(ShuffleScheduler {
+                num_batches: cache.len(),
+            });
+        }
+        let order = sched.epoch_order(rng);
+        let mut train_metrics = StepMetrics::default();
+        let mut accum_count = 0usize;
+        let mut step_idx = 0usize;
+        let cache_ref = &cache;
+        let feat = ds.feat_dim;
+        let (stats, ring_back) = run_prefetched(
+            &order,
+            ring,
+            |i, buf: &mut NativeBatch| {
+                let t_fill = Timer::start();
+                buf.plan = i;
+                buf.n = cache_ref.gather_features_into(ds, i, &mut buf.x);
+                cache_ref.gather_labels_into(ds, i, &mut buf.labels);
+                buf.num_outputs = cache_ref.num_outputs(i);
+                buf.fill_us = (t_fill.elapsed_s() * 1e6) as u64;
+            },
+            |_, buf| {
+                tb.instant(
+                    Stage::Materialize,
+                    NO_QUERY,
+                    buf.plan as u64,
+                    NO_SHARD,
+                    buf.fill_us,
+                );
+                let t_step = Timer::start();
+                let view = PlanView {
+                    n: buf.n,
+                    edge_src: cache_ref.edge_src_of(buf.plan),
+                    edge_dst: cache_ref.edge_dst_of(buf.plan),
+                    weights: cache_ref.edge_weights_of(buf.plan),
+                };
+                let sbatch = TrainBatch {
+                    view,
+                    x: &buf.x[..buf.n * feat],
+                    labels: &buf.labels[..buf.n],
+                    num_outputs: buf.num_outputs,
+                };
+                let seed = (cfg.seed as i32)
+                    .wrapping_mul(31)
+                    .wrapping_add((epoch * 10_007 + step_idx) as i32);
+                step_idx += 1;
+                let m = if cfg.grad_accum > 1 {
+                    let m = texec.grad_step(
+                        &meta_train,
+                        &state,
+                        &sbatch,
+                        seed,
+                        &mut grad_buf,
+                        &mut scratch,
+                    );
+                    accum_count += 1;
+                    if accum_count == cfg.grad_accum {
+                        for v in grad_buf.iter_mut() {
+                            *v /= accum_count as f32;
+                        }
+                        host_adam(&mut state, &grad_buf, lr);
+                        grad_buf.fill(0.0);
+                        accum_count = 0;
+                    }
+                    m
+                } else {
+                    texec.train_step(
+                        &meta_train,
+                        &mut state,
+                        &sbatch,
+                        lr,
+                        seed,
+                        &mut scratch,
+                    )
+                };
+                train_metrics.merge(&m);
+                tb.instant(
+                    Stage::TrainStep,
+                    NO_QUERY,
+                    buf.plan as u64,
+                    NO_SHARD,
+                    (t_step.elapsed_s() * 1e6) as u64,
+                );
+            },
+        );
+        ring = ring_back;
+        // flush a trailing partial accumulation group
+        if cfg.grad_accum > 1 && accum_count > 0 {
+            for v in grad_buf.iter_mut() {
+                *v /= accum_count as f32;
+            }
+            host_adam(&mut state, &grad_buf, lr);
+            grad_buf.fill(0.0);
+        }
+        wait_total += stats.wait_s;
+        consume_total += stats.consume_s;
+        epoch_times.push(t_epoch.elapsed_s());
+        epochs_run = epoch + 1;
+
+        // ---- validation (host executor, method-approximated) ----
+        if epoch % cfg.eval_every != 0 && epoch + 1 != cfg.epochs {
+            continue;
+        }
+        let (val_loss, val_acc) = match val_exec.as_mut() {
+            None => (train_metrics.mean_loss(), train_metrics.accuracy()),
+            Some((exec, meta_val, vscratch)) => {
+                let owned_vc;
+                let vc = match val_cache.as_ref() {
+                    Some(c) => c,
+                    None => {
+                        owned_vc = BatchCache::build(
+                            &generator.plan(ds, val_nodes, rng),
+                        );
+                        &owned_vc
+                    }
+                };
+                let report = crate::inference::infer_with_executor(
+                    exec.as_ref(),
+                    meta_val,
+                    ds,
+                    &state,
+                    vc,
+                    vscratch,
+                )?;
+                (report.mean_loss, report.accuracy)
+            }
+        };
+        history.push(EpochRecord {
+            epoch,
+            wall_s: t_train.elapsed_s(),
+            train_loss: train_metrics.mean_loss(),
+            val_loss,
+            val_acc,
+            lr,
+        });
+        best_val_acc = best_val_acc.max(val_acc);
+        lr = plateau.step(val_loss);
+        if val_loss < best_val_loss - 1e-9 {
+            best_val_loss = val_loss;
+            bad_epochs = 0;
+        } else {
+            bad_epochs += 1;
+            if cfg.early_stop > 0 && bad_epochs >= cfg.early_stop {
+                break;
+            }
+        }
+    }
+    tb.flush();
+
+    let mean_epoch_s = if epoch_times.is_empty() {
+        0.0
+    } else {
+        epoch_times.iter().sum::<f64>() / epoch_times.len() as f64
+    };
+    let overlap_ratio = if wait_total + consume_total > 0.0 {
+        consume_total / (wait_total + consume_total)
+    } else {
+        1.0
+    };
+    Ok(TrainResult {
+        history,
+        preprocess_s,
+        mean_epoch_s,
+        state,
+        meta_train,
+        best_val_acc,
+        epochs_run,
+        cache_bytes,
+        overlap_ratio,
+        // the native ring: one slot per prefetch depth, reused forever
+        arena_allocations: depth,
     })
 }

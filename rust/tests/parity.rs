@@ -202,13 +202,10 @@ fn grad_step_and_host_adam_learn() {
         let mut count = 0.0;
         for b in 0..cache.len() {
             cache.materialize_into(&ds, b, &mut dense);
-            let (g, m) = rt
-                .grad_step(&meta, &state, &dense, epoch * 31 + b as i32)
+            let m = rt
+                .grad_step(&meta, &state, &dense, epoch * 31 + b as i32, &mut acc)
                 .expect("grad step");
-            assert!(g.iter().all(|v| v.is_finite()));
-            for (a, gv) in acc.iter_mut().zip(&g) {
-                *a += gv;
-            }
+            assert!(acc.iter().all(|v| v.is_finite()));
             loss_sum += m.loss as f64 * m.mask_count as f64;
             count += m.mask_count as f64;
         }

@@ -1,0 +1,332 @@
+//! Native training backend parity (DESIGN.md §16): the sparse CSR
+//! backends (reference scalar, blocked SIMD) must match the dense
+//! padded oracle (`runtime::host`) within 1e-4 — the only tolerated
+//! divergence is f32 summation order — and the fused-Adam fast path
+//! must match grad_step + host Adam bitwise.
+
+use ibmb::batching::{BatchCache, BatchGenerator, DenseBatch, NodeWiseIbmb};
+use ibmb::datasets::{sbm, Dataset, DatasetSpec};
+use ibmb::exec::train::train_artifact;
+use ibmb::exec::{PlanView, TrainBatch, TrainExecutorKind, TrainScratch};
+use ibmb::runtime::host::{host_grad_step, host_train_step};
+use ibmb::runtime::ModelState;
+use ibmb::training::{self, TrainConfig};
+use ibmb::util::Rng;
+
+const HIDDEN: usize = 8;
+const LAYERS: usize = 2;
+const HEADS: usize = 2;
+const DROPOUT: f64 = 0.3;
+const WD: f64 = 1e-4;
+
+fn tiny_dataset() -> Dataset {
+    let spec = DatasetSpec {
+        nodes: 300,
+        feat_dim: 12,
+        classes: 5,
+        ..DatasetSpec::tiny_for_tests()
+    };
+    sbm::generate(&spec, 99)
+}
+
+fn plan_cache(ds: &Dataset, seed: u64) -> BatchCache {
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: 4,
+        max_outputs_per_batch: 32,
+        node_budget: 128,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed);
+    let cache = BatchCache::build(&gen.plan(ds, &ds.splits.train, &mut rng));
+    assert!(!cache.is_empty());
+    cache
+}
+
+fn meta_for(model: &str, ds: &Dataset, cache: &BatchCache) -> ibmb::runtime::ArtifactMeta {
+    train_artifact(
+        model,
+        ds.feat_dim,
+        ds.num_classes,
+        HIDDEN,
+        LAYERS,
+        HEADS,
+        DROPOUT,
+        WD,
+        cache.max_batch_nodes(),
+    )
+}
+
+/// Gathered sparse batch `i` (what the trainer's prefetch ring holds).
+fn sparse_batch<'a>(
+    ds: &Dataset,
+    cache: &'a BatchCache,
+    i: usize,
+    x: &'a mut Vec<f32>,
+    labels: &'a mut Vec<i32>,
+) -> TrainBatch<'a> {
+    let n = cache.gather_features_into(ds, i, x);
+    cache.gather_labels_into(ds, i, labels);
+    TrainBatch {
+        view: PlanView {
+            n,
+            edge_src: cache.edge_src_of(i),
+            edge_dst: cache.edge_dst_of(i),
+            weights: cache.edge_weights_of(i),
+        },
+        x: &x[..n * ds.feat_dim],
+        labels: &labels[..n],
+        num_outputs: cache.num_outputs(i),
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Both native backends, both models, three consecutive fused steps:
+/// params/m/v track the dense padded oracle within 1e-4, and padding is
+/// provably inert (the oracle runs at `n + 5` with extra zero rows).
+#[test]
+fn native_train_step_matches_dense_oracle() {
+    let ds = tiny_dataset();
+    let cache = plan_cache(&ds, 4);
+    let mut x = Vec::new();
+    let mut labels = Vec::new();
+    for model in ["gcn", "sage"] {
+        let meta = meta_for(model, &ds, &cache);
+        for kind in [TrainExecutorKind::Reference, TrainExecutorKind::Blocked]
+        {
+            let exec = kind.build().expect("native backend");
+            let mut state = ModelState::init(&meta, 21);
+            let mut oracle = state.clone();
+            let mut scratch = TrainScratch::new();
+            for (step, b) in (0..cache.len().min(3)).enumerate() {
+                let batch = sparse_batch(&ds, &cache, b, &mut x, &mut labels);
+                let n = batch.view.n;
+                // oracle at a DIFFERENT padding: extra zero rows must
+                // not change anything
+                let mut dense = DenseBatch::zeros(n + 5, meta.feat);
+                cache.materialize_into(&ds, b, &mut dense);
+                let seed = 1000 + step as i32;
+                // tiny lr: Adam's step-1 update is ~lr·sign(g), so a
+                // summation-order sign flip on a near-zero gradient
+                // element costs at most 2·lr — keep that below the
+                // parity tolerance instead of hoping no element lands
+                // on zero
+                let lr = 1e-5;
+                let om = host_train_step(&meta, &mut oracle, &dense, lr, seed)
+                    .expect("oracle step");
+                let m = exec.train_step(
+                    &meta, &mut state, &batch, lr, seed, &mut scratch,
+                );
+                assert!(
+                    (m.loss - om.loss).abs() < 1e-3,
+                    "{model}/{}: step {step} loss {} vs oracle {}",
+                    exec.name(),
+                    m.loss,
+                    om.loss
+                );
+                assert_eq!(m.mask_count, om.mask_count);
+                assert!(
+                    (m.correct - om.correct).abs() <= 1.0,
+                    "{model}/{}: step {step} correct {} vs oracle {}",
+                    exec.name(),
+                    m.correct,
+                    om.correct
+                );
+                for (name, ours, theirs) in [
+                    ("params", &state.params, &oracle.params),
+                    ("m", &state.m, &oracle.m),
+                    ("v", &state.v, &oracle.v),
+                ] {
+                    let d = max_abs_diff(ours, theirs);
+                    assert!(
+                        d < 1e-4,
+                        "{model}/{}: step {step} {name} diverged by {d}",
+                        exec.name()
+                    );
+                }
+                assert_eq!(state.step, oracle.step);
+            }
+        }
+    }
+}
+
+/// grad_step accumulates (`+=`): two identical calls yield exactly
+/// twice one call (x + x is exact in f32), and the buffer is
+/// caller-owned — no hidden zeroing.
+#[test]
+fn grad_step_accumulates_into_caller_buffer() {
+    let ds = tiny_dataset();
+    let cache = plan_cache(&ds, 5);
+    let meta = meta_for("gcn", &ds, &cache);
+    let state = ModelState::init(&meta, 3);
+    let exec = TrainExecutorKind::Blocked.build().unwrap();
+    let mut scratch = TrainScratch::new();
+    let (mut x, mut labels) = (Vec::new(), Vec::new());
+    let batch = sparse_batch(&ds, &cache, 0, &mut x, &mut labels);
+
+    let mut once = vec![0.0f32; meta.param_count];
+    exec.grad_step(&meta, &state, &batch, 7, &mut once, &mut scratch);
+    assert!(once.iter().any(|&v| v != 0.0), "gradients all zero");
+    let mut twice = vec![0.0f32; meta.param_count];
+    exec.grad_step(&meta, &state, &batch, 7, &mut twice, &mut scratch);
+    exec.grad_step(&meta, &state, &batch, 7, &mut twice, &mut scratch);
+    for (i, (&a, &b)) in once.iter().zip(&twice).enumerate() {
+        assert_eq!(2.0 * a, b, "param {i}: accumulation not exact");
+    }
+}
+
+/// The blocked backward must match the dense oracle's gradients within
+/// 1e-4 (lane-partial summation order is the only divergence), for both
+/// models.
+#[test]
+fn grad_step_matches_dense_oracle() {
+    let ds = tiny_dataset();
+    let cache = plan_cache(&ds, 6);
+    let (mut x, mut labels) = (Vec::new(), Vec::new());
+    for model in ["gcn", "sage"] {
+        let meta = meta_for(model, &ds, &cache);
+        let state = ModelState::init(&meta, 13);
+        let mut scratch = TrainScratch::new();
+        for kind in [TrainExecutorKind::Reference, TrainExecutorKind::Blocked]
+        {
+            let exec = kind.build().unwrap();
+            for b in 0..cache.len().min(2) {
+                let batch = sparse_batch(&ds, &cache, b, &mut x, &mut labels);
+                let mut dense =
+                    DenseBatch::zeros(batch.view.n + 3, meta.feat);
+                cache.materialize_into(&ds, b, &mut dense);
+                let seed = 42 + b as i32;
+                let mut ours = vec![0.0f32; meta.param_count];
+                let mut oracle = vec![0.0f32; meta.param_count];
+                exec.grad_step(
+                    &meta, &state, &batch, seed, &mut ours, &mut scratch,
+                );
+                host_grad_step(&meta, &state, &dense, seed, &mut oracle)
+                    .expect("oracle grads");
+                let d = max_abs_diff(&ours, &oracle);
+                assert!(
+                    d < 1e-4,
+                    "{model}/{}: batch {b} grads diverged by {d}",
+                    exec.name()
+                );
+            }
+        }
+    }
+}
+
+/// Fused Adam (train_step) and the accumulation path (grad_step +
+/// host_adam) are the same per-element expressions — the resulting
+/// states must agree bitwise.
+#[test]
+fn fused_adam_matches_host_adam_bitwise() {
+    let ds = tiny_dataset();
+    let cache = plan_cache(&ds, 7);
+    let meta = meta_for("sage", &ds, &cache);
+    let exec = TrainExecutorKind::Blocked.build().unwrap();
+    let mut scratch = TrainScratch::new();
+    let (mut x, mut labels) = (Vec::new(), Vec::new());
+    let mut fused = ModelState::init(&meta, 17);
+    let mut accum = fused.clone();
+    for b in 0..cache.len().min(3) {
+        let batch = sparse_batch(&ds, &cache, b, &mut x, &mut labels);
+        let seed = 9 + b as i32;
+        exec.train_step(&meta, &mut fused, &batch, 5e-3, seed, &mut scratch);
+        let mut grads = vec![0.0f32; meta.param_count];
+        exec.grad_step(&meta, &accum, &batch, seed, &mut grads, &mut scratch);
+        training::host_adam(&mut accum, &grads, 5e-3);
+        assert_eq!(fused.params, accum.params, "batch {b}: params");
+        assert_eq!(fused.m, accum.m, "batch {b}: m");
+        assert_eq!(fused.v, accum.v, "batch {b}: v");
+        assert_eq!(fused.step, accum.step);
+    }
+}
+
+/// Determinism: the same pinned-seed step twice is bitwise identical,
+/// and reference-vs-blocked stay within 1e-5 on this tiny model.
+#[test]
+fn backends_are_deterministic_and_close() {
+    let ds = tiny_dataset();
+    let cache = plan_cache(&ds, 8);
+    let meta = meta_for("gcn", &ds, &cache);
+    let (mut x, mut labels) = (Vec::new(), Vec::new());
+    let batch = sparse_batch(&ds, &cache, 0, &mut x, &mut labels);
+
+    let run = |kind: TrainExecutorKind| {
+        let exec = kind.build().unwrap();
+        let mut state = ModelState::init(&meta, 31);
+        let mut scratch = TrainScratch::new();
+        // tiny lr bounds a worst-case Adam sign flip (see the oracle
+        // parity test) below the cross-backend tolerance
+        let m = exec.train_step(&meta, &mut state, &batch, 1e-5, 55, &mut scratch);
+        (state, m)
+    };
+    let (s1, m1) = run(TrainExecutorKind::Blocked);
+    let (s2, m2) = run(TrainExecutorKind::Blocked);
+    assert_eq!(s1.params, s2.params, "blocked step not deterministic");
+    assert_eq!(m1.loss, m2.loss);
+    let (sr, mr) = run(TrainExecutorKind::Reference);
+    assert!(max_abs_diff(&s1.params, &sr.params) < 1e-4);
+    assert!((m1.loss - mr.loss).abs() < 1e-5);
+}
+
+/// End-to-end `train_native` smoke: converges on the tiny SBM, runs the
+/// requested epochs, and reports ring-bounded allocations.
+#[test]
+fn train_native_converges() {
+    let ds = tiny_dataset();
+    let mut gen = NodeWiseIbmb {
+        aux_per_output: 4,
+        max_outputs_per_batch: 32,
+        node_budget: 128,
+        ..Default::default()
+    };
+    let cfg = TrainConfig {
+        model: "gcn".into(),
+        epochs: 4,
+        seed: 2,
+        executor: TrainExecutorKind::Blocked,
+        hidden: HIDDEN,
+        layers: LAYERS,
+        heads: HEADS,
+        dropout: DROPOUT as f32,
+        weight_decay: WD as f32,
+        lr: 1e-2,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(2 ^ 0xE9E1);
+    let tracer = ibmb::telemetry::Tracer::disabled();
+    let res = training::train_native(&ds, &cfg, &mut gen, &mut rng, &tracer)
+        .expect("train_native");
+    assert_eq!(res.epochs_run, 4);
+    assert!(!res.history.is_empty());
+    let first = res.history.first().unwrap().train_loss;
+    let last = res.history.last().unwrap().train_loss;
+    assert!(
+        last < first,
+        "native training not learning: {first:.4} -> {last:.4}"
+    );
+    assert!(res.best_val_acc > 0.0);
+    assert_eq!(res.arena_allocations, cfg.prefetch_depth.max(1));
+}
+
+/// GAT has no native attention VJP — the trainer must say so and point
+/// at the runtime path.
+#[test]
+fn train_native_rejects_gat() {
+    let ds = tiny_dataset();
+    let mut gen = NodeWiseIbmb::default();
+    let cfg = TrainConfig {
+        model: "gat".into(),
+        ..Default::default()
+    };
+    let mut rng = Rng::new(1);
+    let tracer = ibmb::telemetry::Tracer::disabled();
+    let err = training::train_native(&ds, &cfg, &mut gen, &mut rng, &tracer)
+        .expect_err("gat must be rejected");
+    assert!(err.to_string().contains("runtime"), "unhelpful error: {err}");
+}

@@ -27,8 +27,14 @@
 # [{plans, v3_load_s, cas_ttfa_s, speedup, full_save_bytes,
 # incr_save_bytes, incr_ratio, resident_bytes}, ...]` — the ≥10x
 # faulted-TTFA and <10% incremental-save gates read `speedup` and
-# `incr_ratio`. No-op (success) when no bench JSONs exist yet —
-# benches are run out of band, not in CI.
+# `incr_ratio`. For the "training" bench (native sparse training
+# backends, DESIGN.md §16) the required keys are `dataset`, `model`,
+# `epochs`, and `runs: [{executor, steps_per_s, epoch_s,
+# speedup_vs_reference, speedup_vs_runtime, final_val_acc}, ...]` —
+# the ≥3x blocked-vs-runtime gate reads `speedup_vs_runtime` and the
+# 0.01 convergence-parity gate reads `final_val_acc`. No-op (success)
+# when no bench JSONs exist yet — benches are run out of band, not in
+# CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
